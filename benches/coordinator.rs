@@ -1,0 +1,87 @@
+//! Coordinator-layer benchmarks: dynamic-batching throughput across
+//! concurrent jobs vs serial submission, arena churn, and wire-codec
+//! throughput.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use els::coordinator::arena::CtArena;
+use els::coordinator::batcher::{BatchConfig, BatchingEngine};
+use els::coordinator::protocol as proto;
+use els::fhe::encoding::encode_int;
+use els::fhe::keys::keygen;
+use els::fhe::params::FvParams;
+use els::fhe::rng::ChaChaRng;
+use els::fhe::{Ciphertext, FvContext};
+use els::runtime::backend::{HeEngine, NativeEngine};
+use els::util::bench::{bench, black_box, header};
+use els::util::json::Json;
+
+fn main() {
+    let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+    let mut rng = ChaChaRng::from_seed(9100);
+    let keys = keygen(&ctx, &mut rng);
+    let m = encode_int(321, ctx.d());
+    let cts: Vec<(Ciphertext, Ciphertext)> = (0..8)
+        .map(|_| {
+            (
+                ctx.encrypt(&m, &keys.pk, &mut rng),
+                ctx.encrypt(&m, &keys.pk, &mut rng),
+            )
+        })
+        .collect();
+
+    header("batching: 4 threads × 8 ct-muls");
+    let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+    for (label, max_batch, wait_ms) in
+        [("batch=1 (no coalescing)", 1usize, 0u64), ("batch=64 wait=2ms", 64, 2)]
+    {
+        let engine = BatchingEngine::new(
+            native.clone(),
+            BatchConfig { max_batch, max_wait: Duration::from_millis(wait_ms) },
+        );
+        bench(label, 1, 3, || {
+            std::thread::scope(|s| {
+                for _ in 0..4 {
+                    let engine = engine.clone();
+                    let cts = &cts;
+                    s.spawn(move || {
+                        let pairs: Vec<_> = cts.iter().map(|(a, b)| (a, b)).collect();
+                        black_box(engine.mul_pairs(&pairs));
+                    });
+                }
+            });
+        });
+        let (muls, _, _, batches) = engine.stats().snapshot();
+        println!("    → {muls} muls in {batches} submit calls");
+        engine.shutdown();
+    }
+
+    header("ciphertext arena");
+    let ct = cts[0].0.clone();
+    bench("arena insert+release ×1000", 1, 20, || {
+        let mut arena = CtArena::new();
+        let mut ids = Vec::with_capacity(100);
+        for _ in 0..10 {
+            for _ in 0..100 {
+                ids.push(arena.insert(ct.clone()));
+            }
+            for id in ids.drain(..) {
+                arena.release(id);
+            }
+        }
+        black_box(arena.high_water_bytes());
+    });
+
+    header("wire codec (one ciphertext)");
+    let json = proto::ct_to_json(&cts[0].0);
+    let text = json.to_string_json();
+    println!("    ciphertext wire size: {:.1} KiB", text.len() as f64 / 1024.0);
+    bench("serialise ct → JSON", 2, 50, || {
+        black_box(proto::ct_to_json(&cts[0].0).to_string_json());
+    });
+    bench("parse JSON → ct", 2, 50, || {
+        let j = Json::parse(&text).unwrap();
+        black_box(proto::ct_from_json(&ctx, &j).unwrap());
+    });
+}

@@ -1,0 +1,92 @@
+//! Homomorphic-operation microbenchmarks: the L1/L3 hot paths (NTT,
+//! polymul native vs XLA-batched, encrypt/decrypt, ct-mul, relin) —
+//! the inputs to the EXPERIMENTS.md §Perf iteration log.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use els::fhe::encoding::encode_int;
+use els::fhe::keys::keygen;
+use els::fhe::params::FvParams;
+use els::fhe::rng::ChaChaRng;
+use els::fhe::FvContext;
+use els::runtime::backend::{HeEngine, NativeEngine};
+use els::runtime::pjrt::XlaEngine;
+use els::util::bench::{bench, black_box, header};
+
+fn main() {
+    header("FHE primitive ops (d=256, Lq=3)");
+    let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+    let mut rng = ChaChaRng::from_seed(9001);
+    let keys = keygen(&ctx, &mut rng);
+
+    // NTT / polymul on both rings.
+    for (ring, label) in [(&ctx.ring_q, "Q (L=3)"), (&ctx.ring_big, "Q∪E (L=7)")] {
+        let a = ring.sample_uniform(&mut rng);
+        let b = ring.sample_uniform(&mut rng);
+        bench(&format!("ntt fwd+inv {label}"), 3, 50, || {
+            let mut t = a.clone();
+            ring.ntt_forward(&mut t);
+            ring.ntt_inverse(&mut t);
+            black_box(&t);
+        });
+        bench(&format!("polymul native {label}"), 3, 50, || {
+            black_box(ring.polymul(&a, &b));
+        });
+    }
+
+    // Encrypt / decrypt / homomorphic ops.
+    let m = encode_int(123_456, ctx.d());
+    let ct_a = ctx.encrypt(&m, &keys.pk, &mut rng);
+    let ct_b = ctx.encrypt(&m, &keys.pk, &mut rng);
+    bench("encrypt", 2, 20, || {
+        black_box(ctx.encrypt(&m, &keys.pk, &mut rng));
+    });
+    bench("decrypt", 2, 20, || {
+        black_box(ctx.decrypt(&ct_a, &keys.sk));
+    });
+    bench("ct add", 2, 100, || {
+        black_box(ctx.add_ct(&ct_a, &ct_b));
+    });
+    bench("plain mul", 2, 20, || {
+        black_box(ctx.mul_plain(&ct_a, &m));
+    });
+    bench("ct mul (tensor+scale)", 2, 10, || {
+        black_box(ctx.mul_no_relin(&ct_a, &ct_b));
+    });
+    let raw = ctx.mul_no_relin(&ct_a, &ct_b);
+    bench("relinearise", 2, 10, || {
+        black_box(ctx.relinearize(&raw, &keys.rk));
+    });
+    bench("ct mul full", 2, 10, || {
+        black_box(ctx.mul_ct(&ct_a, &ct_b, &keys.rk));
+    });
+
+    // Batched engines: native vs XLA (ablation — DESIGN.md §8).
+    header("mul_pairs batching (16 pairs)");
+    let pairs_owned: Vec<_> = (0..16)
+        .map(|_| {
+            (
+                ctx.encrypt(&m, &keys.pk, &mut rng),
+                ctx.encrypt(&m, &keys.pk, &mut rng),
+            )
+        })
+        .collect();
+    let pairs: Vec<_> = pairs_owned.iter().map(|(a, b)| (a, b)).collect();
+    let native = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+    bench("native engine 16×ct-mul", 1, 5, || {
+        black_box(native.mul_pairs(&pairs));
+    });
+    match XlaEngine::new(ctx.clone(), &keys.rk, Path::new("artifacts")) {
+        Ok(xla) => {
+            bench("xla engine 16×ct-mul", 1, 5, || {
+                black_box(xla.mul_pairs(&pairs));
+            });
+            let single: Vec<_> = pairs[..1].to_vec();
+            bench("xla engine 1×ct-mul", 1, 5, || {
+                black_box(xla.mul_pairs(&single));
+            });
+        }
+        Err(e) => println!("(xla benches skipped: {e:#})"),
+    }
+}

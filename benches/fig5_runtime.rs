@@ -1,0 +1,26 @@
+//! Figure 5 / supplementary Figure 2: the encrypted-cost curves.
+//! Runs the real FV pipeline (keygen → encrypt → ELS-GD → decrypt) over
+//! the paper's (P, MMD) grid and the two applications, writing
+//! `results/fig5_costs.csv` and `results/sfig2_application_costs.csv`.
+
+use std::path::Path;
+
+use els::figures;
+use els::util::bench::{bench, header};
+
+fn main() {
+    header("encrypted cost curves (real FV pipeline)");
+    let out = Path::new("results");
+    bench("figures::fig5 (P∈{2,25} × K∈{1..3})", 0, 1, || {
+        figures::run("fig5", out).expect("fig5");
+    });
+    bench("figures::sfig2 (mood N=28 K=2; prostate N=97 K=1)", 0, 1, || {
+        figures::run("sfig2", out).expect("sfig2");
+    });
+    // Print the resulting tables for the bench log.
+    for f in ["fig5_costs.csv", "sfig2_application_costs.csv"] {
+        if let Ok(text) = std::fs::read_to_string(out.join(f)) {
+            println!("\n--- {f} ---\n{text}");
+        }
+    }
+}

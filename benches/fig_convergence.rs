@@ -1,0 +1,20 @@
+//! Regenerates every convergence table/figure (Figures 1–4, 6–8,
+//! Table 1, supp. Fig 1, Lemma 3) and times each — `cargo bench`
+//! therefore reproduces the paper's evaluation artefacts into
+//! `results/`.
+
+use std::path::Path;
+
+use els::figures;
+use els::util::bench::{bench, header};
+
+fn main() {
+    header("paper figure regeneration (CSV into results/)");
+    let out = Path::new("results");
+    for id in ["fig1", "fig2", "fig3", "fig4", "tab1", "fig6", "fig7", "fig8", "sfig1", "lemma3"] {
+        bench(&format!("figures::{id}"), 0, 1, || {
+            figures::run(id, out).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        });
+    }
+    println!("\nCSV written to results/ — see EXPERIMENTS.md for the paper-vs-measured table.");
+}

@@ -1,0 +1,50 @@
+//! Prostate-cancer application (paper §6.2, Figures 7–8): ridge
+//! regression via §4.4 data augmentation on the N = 97, P = 8 design,
+//! fit with ELS-GD-VWT at K = 4, across α ∈ {0, 15, 30}.
+//!
+//!     cargo run --release --example prostate_ridge
+
+use els::data::prostate;
+use els::els::exact::vwt_exact;
+use els::els::float_ref::{ridge, ridge_df, rms};
+use els::els::model::quantise_ridge_augmented;
+use els::els::scaling::ratio_f64;
+use els::els::stepsize::nu_optimal;
+use els::fhe::rng::ChaChaRng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = ChaChaRng::from_seed(1989); // Stamey et al., 1989
+    let (x, y) = prostate::paper_size(&mut rng);
+    let n = x.len();
+    println!("synthetic prostate problem: N = {n}, P = 8 (see DESIGN.md §6)\n");
+
+    println!(
+        "{:>6} {:>6} | {:>60} | {:>9}",
+        "alpha", "df", "coefficients (ELS-GD-VWT, K = 4)", "vs RLS"
+    );
+    for alpha in [0.0f64, 15.0, 30.0] {
+        // §4.4: augment, quantise, fit OLS on the augmented system.
+        let q = quantise_ridge_augmented(&x, &y, alpha, 2);
+        let (xq, yq) = q.dequantised();
+        let nu = nu_optimal(&xq);
+        let (acc, div) = vwt_exact(&q, nu, 4); // exact == encrypted
+        let betas: Vec<f64> = acc.iter().map(|v| ratio_f64(v, &div)).collect();
+        // Reference: closed-form ridge on the quantised original data.
+        let x_orig: Vec<Vec<f64>> = xq[..n].to_vec();
+        let y_orig: Vec<f64> = yq[..n].to_vec();
+        let rls = ridge(&x_orig, &y_orig, alpha);
+        let df = ridge_df(&x_orig, alpha);
+        let coef_str: String =
+            betas.iter().map(|b| format!("{b:+.3}")).collect::<Vec<_>>().join(" ");
+        println!("{alpha:>6.0} {df:>6.2} | {coef_str:>60} | {:>9.4}", rms(&betas, &rls));
+    }
+
+    println!("\ncovariates: {}", prostate::COVARIATES.join(", "));
+    println!(
+        "note: α shrinks ‖β‖ and df(α) = Σ λ/(λ+α); with regularisation the\n\
+         K = 4 encrypted fit tracks RLS closely even before full convergence\n\
+         (paper Figure 8). Absolute values differ from the paper's — the\n\
+         dataset is a structural synthetic substitute."
+    );
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Quickstart: plan parameters, generate keys, encrypt a small
+//! regression problem, fit it entirely on ciphertexts with ELS-GD-VWT,
+//! decrypt, and compare with OLS.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use els::data::synth;
+use els::els::encrypted::{decrypt_coefficients, fit, Accel, FitConfig};
+use els::els::exact::QuantisedData;
+use els::els::float_ref::{linf, ols};
+use els::els::model::encrypt_dataset;
+use els::els::stepsize::nu_optimal;
+use els::fhe::keys::keygen;
+use els::fhe::noise::noise_budget_bits;
+use els::fhe::params::{plan, Algo, PlanRequest};
+use els::fhe::rng::ChaChaRng;
+use els::fhe::FvContext;
+use els::runtime::backend::NativeEngine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The data holder's side: a small regression problem,
+    //    standardised, quantised at φ = 2 (paper §3.1).
+    let mut rng = ChaChaRng::from_seed(2024);
+    let (x, y) = synth::gaussian_regression(&mut rng, 20, 3, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, yq) = q.dequantised();
+    let nu = nu_optimal(&xq); // integer inverse step size ν = 1/δ (§7)
+    let iters = 3;
+
+    // 2. Plan FV parameters guaranteeing correct decryption (§4.5:
+    //    Lemma-3 growth bounds + noise-depth budget + LP11 estimate).
+    let params = plan(
+        &PlanRequest::gd(q.n(), q.p(), iters, 2, nu).with_algo(Algo::GdVwt),
+    )?;
+    println!(
+        "planned: d = {}, q = {} bits, t = 2^{}, λ ≈ {:.0} bits ({:?} profile)",
+        params.d,
+        params.q_bits(),
+        params.t.bit_len() - 1,
+        params.security_bits(),
+        params.profile,
+    );
+    let ctx = FvContext::new(params);
+    let keys = keygen(&ctx, &mut rng);
+
+    // 3. Encrypt the dataset (one FV ciphertext per value).
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    println!(
+        "encrypted {}×{} + {} values → {:.1} MiB of ciphertext",
+        q.n(),
+        q.p(),
+        q.n(),
+        data.size_bytes() as f64 / (1024.0 * 1024.0)
+    );
+
+    // 4. Fit on ciphertexts: K iterations of ELS-GD + the van
+    //    Wijngaarden transformation (§5.2).
+    let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+    let cfg = FitConfig::gd(iters, nu).with_accel(Accel::Vwt);
+    let t0 = std::time::Instant::now();
+    let fitted = fit(&engine, &data, &cfg);
+    println!(
+        "encrypted fit: {:?} (paper MMD = {}, ct-mult depth = {})",
+        t0.elapsed(),
+        fitted.paper_mmd,
+        fitted.noise_depth
+    );
+    for (j, ct) in fitted.betas.iter().enumerate() {
+        println!("  β̃_{j}: noise budget {:.0} bits", noise_budget_bits(&ctx, ct, &keys.sk));
+    }
+
+    // 5. Secret-key holder decrypts and rescales.
+    let betas = decrypt_coefficients(&ctx, &keys.sk, &fitted);
+    let truth = ols(&xq, &yq);
+    println!("\n{:>4} {:>10} {:>10}", "j", "ELS-VWT", "OLS");
+    for j in 0..betas.len() {
+        println!("{j:>4} {:>10.4} {:>10.4}", betas[j], truth[j]);
+    }
+    println!("\n‖β − β_ols‖∞ = {:.4} after {iters} encrypted iterations", linf(&betas, &truth));
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! End-to-end serving driver (DESIGN.md §7): starts the coordinator
+//! with the batching engine (XLA/PJRT backend when `artifacts/` exists,
+//! falling back to the native backend), submits a wave of encrypted
+//! regression jobs over the real TCP wire protocol from concurrent
+//! clients, and reports latency, throughput, batching behaviour and
+//! decrypted accuracy.
+//!
+//!     make artifacts && cargo run --release --example serve_e2e
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use els::coordinator::batcher::{BatchConfig, BatchingEngine};
+use els::coordinator::scheduler::Coordinator;
+use els::coordinator::service::{Client, Server};
+use els::data::synth;
+use els::els::encrypted::{decrypt_coefficients, FitConfig};
+use els::els::exact::{gd_exact, QuantisedData};
+use els::els::float_ref::linf;
+use els::els::model::encrypt_dataset;
+use els::els::stepsize::nu_optimal;
+use els::fhe::keys::keygen;
+use els::fhe::params::FvParams;
+use els::fhe::rng::ChaChaRng;
+use els::fhe::FvContext;
+use els::runtime::backend::{HeEngine, NativeEngine};
+use els::runtime::pjrt::XlaEngine;
+
+const JOBS: usize = 6;
+const N: usize = 6;
+const P: usize = 2;
+const ITERS: usize = 1;
+
+fn main() -> anyhow::Result<()> {
+    // Shared parameter set sized for the workload; d = 256 matches the
+    // shipped artifact manifest so the XLA backend can serve it.
+    let params = FvParams::custom(256, 3, 26);
+    let ctx = FvContext::new(params);
+    let mut rng = ChaChaRng::from_seed(42);
+    let keys = keygen(&ctx, &mut rng);
+
+    // Pick the backend: XLA artifacts if built, else native.
+    let artifact_dir = Path::new("artifacts");
+    let (inner, backend_name): (Arc<dyn HeEngine>, _) =
+        match XlaEngine::new(ctx.clone(), &keys.rk, artifact_dir) {
+            Ok(engine) => (Arc::new(engine), "xla/pjrt"),
+            Err(e) => {
+                eprintln!("[serve_e2e] XLA backend unavailable ({e:#}); using native");
+                (
+                    Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()))),
+                    "native",
+                )
+            }
+        };
+    let engine = BatchingEngine::new(inner, BatchConfig::default());
+    let coord = Coordinator::new(engine.clone(), 4);
+    let mut server = Server::start(coord, "127.0.0.1:0")?;
+    let addr = server.addr.to_string();
+    println!("coordinator up on {addr} (backend: {backend_name}, d={})", ctx.d());
+
+    // Client side: build, encrypt and submit JOBS problems concurrently.
+    let mut workloads = Vec::new();
+    for i in 0..JOBS {
+        let mut r = rng.split(100 + i as u64);
+        let (x, y) = synth::gaussian_regression(&mut r, N, P, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let nu = nu_optimal(&xq);
+        workloads.push((q, nu, r));
+    }
+    let t0 = Instant::now();
+    let results: Vec<(usize, f64, std::time::Duration)> = std::thread::scope(|s| {
+        let handles: Vec<_> = workloads
+            .iter_mut()
+            .enumerate()
+            .map(|(i, (q, nu, r))| {
+                let ctx = ctx.clone();
+                let keys = &keys;
+                let addr = addr.clone();
+                let nu = *nu;
+                s.spawn(move || {
+                    let data = encrypt_dataset(&ctx, &keys.pk, q, r);
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let t = Instant::now();
+                    let id = client.submit(&data, &FitConfig::gd(ITERS, nu), None).expect("submit");
+                    let fit = client.result(&ctx, id).expect("result");
+                    let latency = t.elapsed();
+                    let dec = decrypt_coefficients(&ctx, &keys.sk, &fit);
+                    let expect = gd_exact(q, nu, ITERS).decode_last();
+                    (i, linf(&dec, &expect), latency)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+
+    println!("\n{:>4} {:>12} {:>14}", "job", "latency", "enc-vs-exact");
+    let mut max_err: f64 = 0.0;
+    for (i, err, lat) in &results {
+        println!("{i:>4} {:>12.2?} {err:>14.2e}", lat);
+        max_err = max_err.max(*err);
+    }
+    let (muls, plains, _adds, batches) = engine.stats().snapshot();
+    println!("\n== end-to-end summary ==");
+    println!("backend               : {backend_name}");
+    println!("jobs                  : {JOBS} × (N={N}, P={P}, K={ITERS})");
+    println!("wall clock            : {wall:.2?}");
+    println!("throughput            : {:.2} jobs/s", JOBS as f64 / wall.as_secs_f64());
+    println!("ct-muls / batches     : {muls} / {batches}  (avg batch {:.1})", muls as f64 / batches.max(1) as f64);
+    println!("plaintext muls        : {plains}");
+    println!("max enc-vs-exact drift: {max_err:.2e}");
+    let mut client = Client::connect(&addr)?;
+    println!("server metrics        : {}", client.metrics()?);
+    assert!(max_err < 1e-9, "encrypted results must be exact");
+    server.stop();
+    engine.shutdown();
+    println!("OK");
+    Ok(())
+}

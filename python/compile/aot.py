@@ -1,0 +1,119 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO **text** artifacts the
+Rust PJRT runtime loads (`runtime::pjrt`).
+
+HLO text — not serialized HloModuleProto — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the `xla`
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out ../artifacts [--manifest small]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model, rns  # noqa: E402
+
+# Default manifest: (d, nlimb, batch) triples for both ops.
+#   - d=256 l∈{3,7}: the toy test parameter set (Q and Q∪E bases);
+#   - d=512 l∈{5,11}: the depth-2 test set;
+#   - d=1024 l∈{12,25}: the demo application set.
+MANIFESTS = {
+    "small": {
+        "polymul": [
+            (256, 3, b) for b in (1, 8, 32)
+        ] + [
+            (256, 7, b) for b in (1, 8, 32)
+        ] + [
+            (512, 5, 8),
+            (512, 11, 8),
+        ],
+        "ct_tensor": [
+            (256, 7, b) for b in (1, 8)
+        ],
+    },
+    "apps": {
+        "polymul": [
+            (1024, 12, b) for b in (1, 16)
+        ] + [
+            (1024, 25, b) for b in (1, 16)
+        ],
+        "ct_tensor": [],
+    },
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print_large_constants. The default printer elides big
+    # literals as `constant({...})`, which xla_extension 0.5.1's text
+    # parser silently turns into zeros — the baked NTT twiddle tables
+    # would be destroyed.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # 0.5.1's parser rejects newer metadata attributes (source_end_line).
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constants survived printing"
+    return text
+
+
+def lower_op(op: str, d: int, nlimb: int, batch: int) -> str:
+    if op == "polymul":
+        fn, specs = model.build_polymul(d, nlimb, batch)
+    elif op == "ct_tensor":
+        fn, specs = model.build_ct_tensor(d, nlimb, batch)
+    else:
+        raise ValueError(f"unknown op {op}")
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--manifest", default="small", choices=sorted(MANIFESTS))
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = MANIFESTS[args.manifest]
+    meta: dict = {"prime_bound": rns.RNS_PRIME_BOUND, "ops": []}
+    for op, shapes in manifest.items():
+        for d, nlimb, batch in shapes:
+            name = f"{op}_d{d}_l{nlimb}_b{batch}"
+            path = os.path.join(outdir, f"{name}.hlo.txt")
+            text = lower_op(op, d, nlimb, batch)
+            with open(path, "w") as f:
+                f.write(text)
+            meta["ops"].append(
+                {
+                    "op": op,
+                    "d": d,
+                    "nlimb": nlimb,
+                    "batch": batch,
+                    "file": f"{name}.hlo.txt",
+                    "primes": rns.rns_basis_primes(d, nlimb),
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(outdir, "rns_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {outdir}/rns_meta.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""MXU-path ablation: negacyclic polynomial multiplication as *matrix
+multiplication* (DESIGN.md §4 Hardware-Adaptation).
+
+The primary kernels (`ntt.py`) are O(d log d) VPU integer work. The MXU
+systolic array instead wants dense matmuls with narrow inputs and wide
+accumulation. This module expresses the O(d²) negacyclic convolution as
+exact int8×int8→int32 matmuls — precisely the TPU MXU integer path:
+
+    c = T(a) · b,   T(a)[k, j] = ±a[(k − j) mod d]   (sign from x^d = -1)
+
+Residues are < 2^30, so each operand splits into four 8-bit limbs; the
+16 limb-pair products accumulate exactly in int32 for d ≤ 256 (the
+worst-case partial sum is d·255² < 2^24.02 ≤ int32), and the limb
+recombination happens in int64 modulo p.
+
+This is an *ablation*, not the production path: at FHE ring sizes
+(d ≥ 4096) the O(d²) flop count loses to the NTT even at full MXU
+utilisation (see EXPERIMENTS.md §Perf). It exists to document how the
+paper's compute would map onto the systolic array and to pin the
+numerics of that mapping with tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Number of 8-bit limbs covering 30-bit residues.
+N_LIMBS = 4
+
+#: Largest ring degree with exact int32 accumulation (d·255² < 2^31).
+MAX_D = 256
+
+
+def negacyclic_matrix(a: jnp.ndarray) -> jnp.ndarray:
+    """[d] → [d, d] negacyclic convolution matrix T with
+    `T[k, j] = a[(k−j) mod d]`, negated where `k − j < 0` (x^d = −1).
+
+    Built from gathers so it stays inside one jitted graph.
+    """
+    d = a.shape[0]
+    k = jnp.arange(d)[:, None]
+    j = jnp.arange(d)[None, :]
+    idx = (k - j) % d
+    sign = jnp.where(k >= j, 1, -1).astype(a.dtype)
+    return a[idx] * sign
+
+
+def polymul_mxu_single(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Exact negacyclic `a·b mod (x^d + 1, p)` for one residue plane via
+    limb-split int32 matmuls."""
+    d = a.shape[0]
+    assert d <= MAX_D, f"int32 accumulation only exact for d ≤ {MAX_D}"
+    t = negacyclic_matrix(a)
+    # 8-bit limb decompositions (sign lives in T's entries; split |T|).
+    t_sign = jnp.sign(t).astype(jnp.int32)
+    t_mag = jnp.abs(t)
+    acc = jnp.zeros((d,), dtype=jnp.int64)
+    for la in range(N_LIMBS):
+        t_l = ((t_mag >> (8 * la)) & 255).astype(jnp.int32) * t_sign
+        for lb in range(N_LIMBS):
+            b_l = ((b >> (8 * lb)) & 255).astype(jnp.int32)
+            # The MXU op: int8-range operands, int32 accumulation.
+            part = jnp.matmul(t_l, b_l, preferred_element_type=jnp.int32)
+            shift = 8 * (la + lb)
+            # Recombine in int64 mod p ((2^shift mod p) keeps products
+            # far below 2^63).
+            weight = (1 << shift) % p
+            acc = (acc + part.astype(jnp.int64) * weight) % p
+    return acc
+
+
+def polymul_mxu(a: jnp.ndarray, b: jnp.ndarray, primes) -> jnp.ndarray:
+    """Batched [B, L, D] negacyclic product via the MXU formulation."""
+    assert a.shape == b.shape and a.ndim == 3
+    bsz, nlimb, _ = a.shape
+    out = []
+    for i in range(bsz):
+        planes = [
+            polymul_mxu_single(a[i, l], b[i, l], int(primes[l]))
+            for l in range(nlimb)
+        ]
+        out.append(jnp.stack(planes))
+    return jnp.stack(out)

@@ -1,0 +1,32 @@
+"""Layer-1 Pallas kernel: batched pointwise modular multiplication (the
+NTT-domain Hadamard product). Residues < 2^30 ⇒ int64-exact."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ntt import INTERPRET
+
+
+def _modmul_kernel(x_ref, y_ref, p_ref, o_ref):
+    o_ref[0, 0, :] = (x_ref[0, 0, :] * y_ref[0, 0, :]) % p_ref[0]
+
+
+def modmul(x: jnp.ndarray, y: jnp.ndarray, primes: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise `x∘y mod p_l` over [B, L, D]."""
+    assert x.shape == y.shape and x.ndim == 3
+    bsz, nlimb, d = x.shape
+    return pl.pallas_call(
+        _modmul_kernel,
+        grid=(bsz, nlimb),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, l: (b, l, 0)),
+            pl.BlockSpec((1, 1, d), lambda b, l: (b, l, 0)),
+            pl.BlockSpec((1,), lambda b, l: (l,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, l: (b, l, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x, y, primes)

@@ -1,0 +1,133 @@
+"""Layer-1 Pallas kernels: negacyclic NTT butterfly stages and the
+NTT-domain Hadamard product, batched over [B, L, D] (batch × RNS limb ×
+coefficient).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid step per
+(batch, limb) pair holds a whole limb plane (≤ 128 KiB for d ≤ 16384) in
+VMEM; each radix-2 stage is a lane-parallel masked multiply-add (VPU
+integer work); twiddle tables and moduli stream in as small operands.
+`interpret=True` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels lower to plain HLO (see /opt/xla-example).
+
+All arithmetic is int64; residues are < 2^30 so products never exceed
+2^60 and `%` keeps values canonical (jnp's remainder is non-negative for
+positive moduli).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # Mosaic lowering unavailable on CPU PJRT
+
+
+def _fwd_stage_kernel(x_ref, tw_ref, p_ref, o_ref, *, m: int, t: int):
+    """One Cooley–Tukey stage: groups of 2t, twiddle ψ^bitrev(m+i)."""
+    x = x_ref[0, 0, :].reshape(m, 2, t)
+    p = p_ref[0]
+    tw = tw_ref[...].reshape(m, 1)
+    u = x[:, 0, :]
+    v = (x[:, 1, :] * tw) % p
+    o = jnp.stack([(u + v) % p, (u - v) % p], axis=1)
+    o_ref[0, 0, :] = o.reshape(m * 2 * t)
+
+
+def _inv_stage_kernel(x_ref, tw_ref, p_ref, o_ref, *, h: int, t: int):
+    """One Gentleman–Sande stage: groups of 2t, twiddle ψ^{-bitrev(h+i)}."""
+    x = x_ref[0, 0, :].reshape(h, 2, t)
+    p = p_ref[0]
+    tw = tw_ref[...].reshape(h, 1)
+    u = x[:, 0, :]
+    v = x[:, 1, :]
+    o = jnp.stack([(u + v) % p, ((u - v) * tw) % p], axis=1)
+    o_ref[0, 0, :] = o.reshape(h * 2 * t)
+
+
+def _scale_kernel(x_ref, s_ref, p_ref, o_ref):
+    """Pointwise scale by a per-limb scalar (the final d⁻¹ of the iNTT)."""
+    o_ref[0, 0, :] = (x_ref[0, 0, :] * s_ref[0]) % p_ref[0]
+
+
+def _stage_call(kernel, x, tw, primes, **kw):
+    # `tw` arrives flattened to 1-D [L*m]: the xla_extension 0.5.1 HLO
+    # text parser mis-lays-out ≥2-D s64 constants, so the AOT graphs
+    # must only embed 1-D constant tables (layout-invariant).
+    bsz, nlimb, d = x.shape
+    m = tw.shape[0] // nlimb
+    return pl.pallas_call(
+        functools.partial(kernel, **kw),
+        grid=(bsz, nlimb),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, l: (b, l, 0)),
+            pl.BlockSpec((m,), lambda b, l: (l,)),
+            pl.BlockSpec((1,), lambda b, l: (l,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, l: (b, l, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x, tw, primes)
+
+
+def ntt_forward(x: jnp.ndarray, tables) -> jnp.ndarray:
+    """Forward negacyclic NTT over [B, L, D].
+
+    `tables` is a `RingTables` (see below) carrying per-limb twiddles.
+    """
+    d = x.shape[2]
+    t, m = d, 1
+    while m < d:
+        t //= 2
+        # Twiddles ψ_rev[m : 2m] per limb, flattened → [L·m].
+        tw = tables.psi_rev[:, m : 2 * m].reshape(-1)
+        x = _stage_call(_fwd_stage_kernel, x, tw, tables.primes, m=m, t=t)
+        m *= 2
+    return x
+
+
+def ntt_inverse(x: jnp.ndarray, tables) -> jnp.ndarray:
+    """Inverse negacyclic NTT over [B, L, D] (includes the d⁻¹ scale)."""
+    d = x.shape[2]
+    t, m = 1, d
+    while m > 1:
+        h = m // 2
+        tw = tables.psi_inv_rev[:, h : 2 * h].reshape(-1)
+        x = _stage_call(_inv_stage_kernel, x, tw, tables.primes, h=h, t=t)
+        t *= 2
+        m = h
+    bsz, nlimb, _ = x.shape
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=(bsz, nlimb),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, l: (b, l, 0)),
+            pl.BlockSpec((1,), lambda b, l: (l,)),
+            pl.BlockSpec((1,), lambda b, l: (l,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, l: (b, l, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x, tables.d_inv, tables.primes)
+
+
+class RingTables:
+    """Per-ring constant tables, baked into the AOT graph as literals."""
+
+    def __init__(self, d: int, primes: list[int]):
+        from .. import rns
+
+        self.d = d
+        self.primes_list = list(primes)
+        psi_rev, psi_inv_rev, d_inv = [], [], []
+        for p in primes:
+            f, i, di = rns.ntt_tables(p, d)
+            psi_rev.append(f)
+            psi_inv_rev.append(i)
+            d_inv.append(di)
+        self.primes = jnp.array(primes, dtype=jnp.int64)
+        self.psi_rev = jnp.array(psi_rev, dtype=jnp.int64)
+        self.psi_inv_rev = jnp.array(psi_inv_rev, dtype=jnp.int64)
+        self.d_inv = jnp.array(d_inv, dtype=jnp.int64)

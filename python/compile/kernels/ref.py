@@ -1,0 +1,85 @@
+"""Pure-numpy oracles for the Pallas kernels.
+
+`polymul_ref` is the O(d²) schoolbook negacyclic product mod p — the
+ground truth every kernel and the full AOT graph is validated against
+(the Rust twin is `math::ntt::polymul_naive`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def polymul_ref(a: np.ndarray, b: np.ndarray, p: int) -> np.ndarray:
+    """Negacyclic product `a·b mod (x^d + 1, p)` for 1-D int arrays."""
+    a = np.asarray(a, dtype=object)  # python ints: no overflow
+    b = np.asarray(b, dtype=object)
+    d = a.shape[0]
+    assert b.shape[0] == d
+    out = [0] * d
+    for i in range(d):
+        ai = int(a[i])
+        if ai == 0:
+            continue
+        for j in range(d):
+            prod = ai * int(b[j])
+            k = i + j
+            if k < d:
+                out[k] = (out[k] + prod) % p
+            else:
+                out[k - d] = (out[k - d] - prod) % p
+    return np.array(out, dtype=np.int64)
+
+
+def polymul_ref_batch(a: np.ndarray, b: np.ndarray, primes) -> np.ndarray:
+    """Oracle for the batched [B, L, D] layout."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    assert a.shape == b.shape and a.ndim == 3
+    bsz, nlimb, d = a.shape
+    assert len(primes) == nlimb
+    out = np.zeros_like(a)
+    for i in range(bsz):
+        for l, p in enumerate(primes):
+            out[i, l] = polymul_ref(a[i, l], b[i, l], int(p))
+    return out
+
+
+def ntt_ref(a: np.ndarray, p: int, psi_rev) -> np.ndarray:
+    """Scalar-loop forward negacyclic NTT (mirror of `NttTable::forward`)."""
+    a = [int(v) for v in a]
+    n = len(a)
+    t = n
+    m = 1
+    while m < n:
+        t //= 2
+        for i in range(m):
+            j1 = 2 * i * t
+            s = psi_rev[m + i]
+            for j in range(j1, j1 + t):
+                u, v = a[j], a[j + t] * s % p
+                a[j] = (u + v) % p
+                a[j + t] = (u - v) % p
+        m *= 2
+    return np.array(a, dtype=np.int64)
+
+
+def intt_ref(a: np.ndarray, p: int, psi_inv_rev, d_inv: int) -> np.ndarray:
+    """Scalar-loop inverse negacyclic NTT (mirror of `NttTable::inverse`)."""
+    a = [int(v) for v in a]
+    n = len(a)
+    t = 1
+    m = n
+    while m > 1:
+        h = m // 2
+        j1 = 0
+        for i in range(h):
+            s = psi_inv_rev[h + i]
+            for j in range(j1, j1 + t):
+                u, v = a[j], a[j + t]
+                a[j] = (u + v) % p
+                a[j + t] = (u - v) * s % p
+            j1 += 2 * t
+        t *= 2
+        m = h
+    return np.array([v * d_inv % p for v in a], dtype=np.int64)

@@ -1,0 +1,147 @@
+"""Layer-2 JAX graphs: the batched homomorphic-op compute the Rust
+coordinator dispatches to XLA.
+
+The hot op is `polymul`: batched negacyclic polynomial multiplication in
+RNS form — the inner kernel of every FV ciphertext multiplication
+(tensor products and relinearisation digit products alike). Composed
+from the Layer-1 Pallas kernels so the whole pipeline lowers into a
+single HLO module per (B, L, D) shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.modmul import modmul
+from .kernels.ntt import RingTables, ntt_forward, ntt_inverse
+
+
+def polymul(a: jnp.ndarray, b: jnp.ndarray, tables: RingTables) -> jnp.ndarray:
+    """`a ⊛ b mod (x^d + 1, p_l)` over [B, L, D] (Pallas kernels)."""
+    fa = ntt_forward(a, tables)
+    fb = ntt_forward(b, tables)
+    return ntt_inverse(modmul(fa, fb, tables.primes), tables)
+
+
+# ---- fused (vectorised) variant -----------------------------------------
+#
+# The Pallas grid maps one (batch, limb) pair per step — the right shape
+# for a real TPU, where Mosaic turns grid steps into parallel core work.
+# Under `interpret=True` on CPU-PJRT, however, each grid step lowers to a
+# sequential while-loop iteration with dynamic slices over the whole
+# buffer, which costs O((B·L)²·D) memory traffic per stage. The fused
+# variant below expresses each butterfly stage as one whole-tensor
+# reshape/multiply over [B, L, D] — identical arithmetic (asserted by
+# tests), one fully-vectorised XLA op sequence, no loops. `make
+# artifacts` compiles this as the production `polymul` artifact; the
+# Pallas kernels remain the TPU-lowering reference (EXPERIMENTS.md §Perf).
+
+
+def _fwd_stage_fused(x, tw, primes, m, t):
+    b, l, d = x.shape
+    xr = x.reshape(b, l, m, 2, t)
+    u = xr[:, :, :, 0, :]
+    p = primes[None, :, None, None]
+    v = (xr[:, :, :, 1, :] * tw.reshape(1, l, m, 1)) % p
+    return jnp.stack(((u + v) % p, (u - v) % p), axis=3).reshape(b, l, d)
+
+
+def _inv_stage_fused(x, tw, primes, h, t):
+    b, l, d = x.shape
+    xr = x.reshape(b, l, h, 2, t)
+    u = xr[:, :, :, 0, :]
+    v = xr[:, :, :, 1, :]
+    p = primes[None, :, None, None]
+    return jnp.stack(
+        ((u + v) % p, ((u - v) * tw.reshape(1, l, h, 1)) % p), axis=3
+    ).reshape(b, l, d)
+
+
+def ntt_forward_fused(x, tables):
+    d = x.shape[2]
+    t, m = d, 1
+    while m < d:
+        t //= 2
+        x = _fwd_stage_fused(x, tables.psi_rev[:, m : 2 * m], tables.primes, m, t)
+        m *= 2
+    return x
+
+
+def ntt_inverse_fused(x, tables):
+    d = x.shape[2]
+    t, m = 1, d
+    while m > 1:
+        h = m // 2
+        x = _inv_stage_fused(x, tables.psi_inv_rev[:, h : 2 * h], tables.primes, h, t)
+        t *= 2
+        m = h
+    return (x * tables.d_inv[None, :, None]) % tables.primes[None, :, None]
+
+
+def polymul_fused(a: jnp.ndarray, b: jnp.ndarray, tables: RingTables) -> jnp.ndarray:
+    """Fused `a ⊛ b` over [B, L, D]: same math as `polymul`, vectorised
+    whole-tensor stages instead of Pallas grid steps."""
+    fa = ntt_forward_fused(a, tables)
+    fb = ntt_forward_fused(b, tables)
+    p = tables.primes[None, :, None]
+    return ntt_inverse_fused((fa * fb) % p, tables)
+
+
+def polymul_pair_accum(
+    a0: jnp.ndarray,
+    a1: jnp.ndarray,
+    b0: jnp.ndarray,
+    b1: jnp.ndarray,
+    tables: RingTables,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused BFV tensor product: given ciphertext component batches
+    (a0, a1) × (b0, b1), return (a0b0, a0b1 + a1b0, a1b1) with the four
+    forward NTTs shared — 4 NTTs + 1 iNTT×3 instead of 4 polymuls'
+    8 NTTs + 4 iNTTs."""
+    fa0 = ntt_forward(a0, tables)
+    fa1 = ntt_forward(a1, tables)
+    fb0 = ntt_forward(b0, tables)
+    fb1 = ntt_forward(b1, tables)
+    p = tables.primes
+    c0 = modmul(fa0, fb0, p)
+    mid = (modmul(fa0, fb1, p) + modmul(fa1, fb0, p)) % p[None, :, None]
+    c2 = modmul(fa1, fb1, p)
+    return (
+        ntt_inverse(c0, tables),
+        ntt_inverse(mid, tables),
+        ntt_inverse(c2, tables),
+    )
+
+
+def build_polymul(d: int, nlimb: int, batch: int, fused: bool = True):
+    """Jitted `polymul` closed over the ring tables for (d, nlimb).
+
+    `fused=True` (default, used by the AOT manifest) compiles the
+    vectorised variant; `fused=False` compiles the Pallas-kernel
+    pipeline (TPU-lowering reference / kernel tests)."""
+    from . import rns
+
+    tables = RingTables(d, rns.rns_basis_primes(d, nlimb))
+    impl = polymul_fused if fused else polymul
+
+    @jax.jit
+    def fn(a, b):
+        return (impl(a, b, tables),)
+
+    spec = jax.ShapeDtypeStruct((batch, nlimb, d), jnp.int64)
+    return fn, (spec, spec)
+
+
+def build_ct_tensor(d: int, nlimb: int, batch: int):
+    """Jitted fused ciphertext tensor product for (d, nlimb, batch)."""
+    from . import rns
+
+    tables = RingTables(d, rns.rns_basis_primes(d, nlimb))
+
+    @jax.jit
+    def fn(a0, a1, b0, b1):
+        return polymul_pair_accum(a0, a1, b0, b1, tables)
+
+    spec = jax.ShapeDtypeStruct((batch, nlimb, d), jnp.int64)
+    return fn, (spec, spec, spec, spec)

@@ -1,0 +1,106 @@
+"""RNS basis generation — bit-for-bit mirror of `rust/src/math/primes.rs`.
+
+The Rust runtime and the AOT-compiled XLA artifacts must agree on the
+prime basis for every ring degree. Both sides generate primes
+`p ≡ 1 (mod 2d)`, `p < 2^30`, **descending** from 2^30; the Rust side
+cross-checks `artifacts/rns_meta.json` at load time.
+"""
+
+from __future__ import annotations
+
+RNS_PRIME_BOUND = 1 << 30
+
+_MR_BASES = (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37)
+
+
+def is_prime(n: int) -> bool:
+    """Deterministic Miller–Rabin for n < 3.3e24 (12-base set)."""
+    if n < 2:
+        return False
+    for p in _MR_BASES:
+        if n == p:
+            return True
+        if n % p == 0:
+            return False
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for a in _MR_BASES:
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def ntt_primes_below(below: int, modulus: int, count: int) -> list[int]:
+    """First `count` primes ≡ 1 (mod modulus) strictly below `below`,
+    descending (mirror of `primes::ntt_primes_below`)."""
+    out: list[int] = []
+    c = (below - 2) // modulus * modulus + 1
+    while len(out) < count:
+        assert c > modulus, f"prime supply exhausted (modulus {modulus})"
+        if is_prime(c):
+            out.append(c)
+        c -= modulus
+    return out
+
+
+def rns_basis_primes(d: int, count: int) -> list[int]:
+    """The standard basis for ring degree d (mirror of
+    `primes::rns_basis_primes`)."""
+    assert d & (d - 1) == 0, "ring degree must be a power of two"
+    return ntt_primes_below(RNS_PRIME_BOUND, 2 * d, count)
+
+
+def primitive_root(p: int) -> int:
+    """Smallest generator of Z_p^* (trial-division factoring of p-1)."""
+    n = p - 1
+    factors = []
+    f = 2
+    while f * f <= n:
+        if n % f == 0:
+            factors.append(f)
+            while n % f == 0:
+                n //= f
+        f += 1
+    if n > 1:
+        factors.append(n)
+    for g in range(2, p):
+        if all(pow(g, (p - 1) // q, p) != 1 for q in factors):
+            return g
+    raise AssertionError(f"no primitive root for {p}")
+
+
+def primitive_2d_root(p: int, d: int) -> int:
+    """ψ with ψ^d ≡ -1 (mod p); requires p ≡ 1 (mod 2d)."""
+    order = 2 * d
+    assert (p - 1) % order == 0
+    psi = pow(primitive_root(p), (p - 1) // order, p)
+    assert pow(psi, d, p) == p - 1
+    return psi
+
+
+def bitrev(x: int, bits: int) -> int:
+    return int(bin(x)[2:].zfill(bits)[::-1], 2) if bits else 0
+
+
+def ntt_tables(p: int, d: int):
+    """(psi_rev, psi_inv_rev, d_inv) — mirror of `NttTable::new`."""
+    psi = primitive_2d_root(p, d)
+    psi_inv = pow(psi, p - 2, p)
+    bits = d.bit_length() - 1
+    pow_f, pow_i = [1] * d, [1] * d
+    for i in range(1, d):
+        pow_f[i] = pow_f[i - 1] * psi % p
+        pow_i[i] = pow_i[i - 1] * psi_inv % p
+    psi_rev = [pow_f[bitrev(i, bits)] for i in range(d)]
+    psi_inv_rev = [pow_i[bitrev(i, bits)] for i in range(d)]
+    d_inv = pow(d, p - 2, p)
+    return psi_rev, psi_inv_rev, d_inv

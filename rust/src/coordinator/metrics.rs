@@ -1,0 +1,104 @@
+//! Coordinator metrics: counters and a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency buckets (upper bounds, ms).
+const BUCKET_MS: [u64; 12] = [1, 2, 5, 10, 25, 50, 100, 250, 500, 1000, 5000, 30000];
+
+/// Latency histogram (lock-free).
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; 13],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe(&self, d: Duration) {
+        let ms = d.as_millis() as u64;
+        let idx = BUCKET_MS.iter().position(|&b| ms <= b).unwrap_or(BUCKET_MS.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1000.0 / c as f64
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return *BUCKET_MS.get(i).unwrap_or(&60000) as f64;
+            }
+        }
+        60000.0
+    }
+}
+
+/// All coordinator metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_rejected: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub job_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs: submitted={} completed={} rejected={} failed={} | latency mean={:.1}ms p50≤{:.0}ms p95≤{:.0}ms",
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_rejected.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.job_latency.mean_ms(),
+            self.job_latency.quantile_ms(0.5),
+            self.job_latency.quantile_ms(0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::default();
+        for ms in [1u64, 3, 7, 20, 20, 40, 90, 400, 900, 2000] {
+            h.observe(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.mean_ms() > 100.0);
+        assert!(h.quantile_ms(0.5) <= 50.0);
+        assert!(h.quantile_ms(0.95) >= 500.0);
+        assert!(h.quantile_ms(1.0) >= h.quantile_ms(0.1));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.quantile_ms(0.9), 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! The serving layer (Layer 3): accepts encrypted regression jobs over
+//! a TCP JSON protocol, runs §4.5 admission control, schedules them on
+//! worker threads, and coalesces their homomorphic multiplications into
+//! fused backend batches (native threads or XLA artifact launches).
+//!
+//! - [`job`] — specs and lifecycle.
+//! - [`admission`] — depth/growth guardrails with planner proposals.
+//! - [`batcher`] — cross-job dynamic batching (`BatchingEngine`).
+//! - [`arena`] — ciphertext slot slab with high-water accounting.
+//! - [`scheduler`] — the `Coordinator` itself.
+//! - [`metrics`] — counters and latency histograms.
+//! - [`protocol`] / [`service`] — wire codec, TCP server and client.
+
+pub mod admission;
+pub mod arena;
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod protocol;
+pub mod scheduler;
+pub mod service;
+
+pub use batcher::{BatchConfig, BatchingEngine};
+pub use job::{JobId, JobSpec};
+pub use scheduler::Coordinator;
+pub use service::{Client, Server};

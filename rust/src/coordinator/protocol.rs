@@ -1,0 +1,439 @@
+//! Wire protocol: line-delimited JSON with hex-packed polynomial
+//! payloads (no serde offline; see `util::json`).
+//!
+//! Privacy model (paper §2): the client quantises, encodes and encrypts
+//! locally; only ciphertexts, the public evaluation key and
+//! data-independent config (N, P, K, ν, φ) cross the wire. The secret
+//! key never leaves the client.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::els::encrypted::{Accel, EncryptedFit, FitConfig};
+use crate::els::model::EncryptedDataset;
+use crate::fhe::{Ciphertext, FvContext, RelinKey};
+use crate::math::bigint::BigUint;
+use crate::math::poly::{Rep, RnsPoly};
+use crate::util::json::Json;
+
+// ---- hex helpers -------------------------------------------------------
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+fn to_hex(words: impl Iterator<Item = u64>) -> String {
+    let mut s = String::new();
+    for w in words {
+        for b in w.to_le_bytes() {
+            s.push(HEX[(b >> 4) as usize] as char);
+            s.push(HEX[(b & 15) as usize] as char);
+        }
+    }
+    s
+}
+
+fn from_hex(s: &str) -> Result<Vec<u64>> {
+    let b = s.as_bytes();
+    if b.len() % 16 != 0 {
+        bail!("hex payload length {} not a multiple of 16", b.len());
+    }
+    fn nib(c: u8) -> Result<u64> {
+        match c {
+            b'0'..=b'9' => Ok((c - b'0') as u64),
+            b'a'..=b'f' => Ok((c - b'a' + 10) as u64),
+            b'A'..=b'F' => Ok((c - b'A' + 10) as u64),
+            _ => bail!("invalid hex digit"),
+        }
+    }
+    let mut out = Vec::with_capacity(b.len() / 16);
+    for chunk in b.chunks(16) {
+        let mut w = 0u64;
+        for (i, pair) in chunk.chunks(2).enumerate() {
+            let byte = (nib(pair[0])? << 4) | nib(pair[1])?;
+            w |= byte << (8 * i);
+        }
+        out.push(w);
+    }
+    Ok(out)
+}
+
+// ---- polynomial / ciphertext codecs ------------------------------------
+
+pub fn poly_to_json(p: &RnsPoly) -> Json {
+    Json::obj(vec![
+        ("rep", Json::str(if p.rep == Rep::Ntt { "ntt" } else { "coeff" })),
+        ("hex", Json::Str(to_hex(p.planes.iter().flatten().copied()))),
+    ])
+}
+
+pub fn poly_from_json(ctx: &FvContext, j: &Json) -> Result<RnsPoly> {
+    let ring = &ctx.ring_q;
+    let words = from_hex(j.req("hex")?.as_str().context("hex")?)?;
+    let (l, d) = (ring.nlimbs(), ring.d);
+    if words.len() != l * d {
+        bail!("polynomial payload has {} words, expected {}", words.len(), l * d);
+    }
+    let rep = match j.req("rep")?.as_str() {
+        Some("ntt") => Rep::Ntt,
+        _ => Rep::Coeff,
+    };
+    let planes = (0..l).map(|i| words[i * d..(i + 1) * d].to_vec()).collect();
+    // Validate residues are canonical.
+    let poly = RnsPoly { d, planes, rep };
+    for (plane, &pr) in poly.planes.iter().zip(&ring.basis.primes) {
+        if plane.iter().any(|&v| v >= pr) {
+            bail!("non-canonical residue in payload");
+        }
+    }
+    Ok(poly)
+}
+
+pub fn ct_to_json(ct: &Ciphertext) -> Json {
+    Json::obj(vec![
+        ("depth", Json::Num(ct.ct_depth as f64)),
+        ("polys", Json::Arr(ct.polys.iter().map(poly_to_json).collect())),
+    ])
+}
+
+pub fn ct_from_json(ctx: &FvContext, j: &Json) -> Result<Ciphertext> {
+    let polys: Result<Vec<RnsPoly>> = j
+        .req("polys")?
+        .as_arr()
+        .context("polys")?
+        .iter()
+        .map(|p| poly_from_json(ctx, p))
+        .collect();
+    let polys = polys?;
+    if polys.len() < 2 || polys.len() > 3 {
+        bail!("ciphertext must have 2 or 3 polynomials");
+    }
+    let mut ct = Ciphertext::new(polys);
+    ct.ct_depth = j.get("depth").and_then(|d| d.as_u64()).unwrap_or(0) as u32;
+    Ok(ct)
+}
+
+pub fn dataset_to_json(data: &EncryptedDataset) -> Json {
+    Json::obj(vec![
+        ("phi", Json::Num(data.phi as f64)),
+        (
+            "x",
+            Json::Arr(
+                data.x
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(ct_to_json).collect()))
+                    .collect(),
+            ),
+        ),
+        ("y", Json::Arr(data.y.iter().map(ct_to_json).collect())),
+    ])
+}
+
+pub fn dataset_from_json(ctx: &FvContext, j: &Json) -> Result<EncryptedDataset> {
+    let x: Result<Vec<Vec<Ciphertext>>> = j
+        .req("x")?
+        .as_arr()
+        .context("x")?
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .context("x row")?
+                .iter()
+                .map(|c| ct_from_json(ctx, c))
+                .collect()
+        })
+        .collect();
+    let y: Result<Vec<Ciphertext>> = j
+        .req("y")?
+        .as_arr()
+        .context("y")?
+        .iter()
+        .map(|c| ct_from_json(ctx, c))
+        .collect();
+    let phi = j.req("phi")?.as_u64().context("phi")? as u32;
+    let data = EncryptedDataset { x: x?, y: y?, phi };
+    if data.x.is_empty() || data.x.iter().any(|r| r.len() != data.p()) {
+        bail!("ragged design matrix");
+    }
+    if data.y.len() != data.n() {
+        bail!("response length mismatch");
+    }
+    Ok(data)
+}
+
+pub fn relin_key_to_json(rk: &RelinKey) -> Json {
+    Json::obj(vec![
+        ("b", Json::Arr(rk.b_ntt.iter().map(poly_to_json).collect())),
+        ("a", Json::Arr(rk.a_ntt.iter().map(poly_to_json).collect())),
+    ])
+}
+
+pub fn relin_key_from_json(ctx: &FvContext, j: &Json) -> Result<RelinKey> {
+    let parse = |key: &str| -> Result<Vec<RnsPoly>> {
+        j.req(key)?
+            .as_arr()
+            .context("relin key array")?
+            .iter()
+            .map(|p| poly_from_json(ctx, p))
+            .collect()
+    };
+    let (b, a) = (parse("b")?, parse("a")?);
+    if b.len() != a.len() || b.len() != ctx.relin_ndigits {
+        bail!("relin key digit count mismatch (got {}, need {})", b.len(), ctx.relin_ndigits);
+    }
+    Ok(RelinKey { b_ntt: b, a_ntt: a })
+}
+
+// ---- fit config / results ----------------------------------------------
+
+pub fn accel_to_str(a: Accel) -> &'static str {
+    match a {
+        Accel::None => "gd",
+        Accel::Vwt => "vwt",
+        Accel::Nag => "nag",
+    }
+}
+
+pub fn accel_from_str(s: &str) -> Result<Accel> {
+    match s {
+        "gd" | "none" => Ok(Accel::None),
+        "vwt" => Ok(Accel::Vwt),
+        "nag" => Ok(Accel::Nag),
+        _ => Err(anyhow!("unknown acceleration '{s}' (gd|vwt|nag)")),
+    }
+}
+
+pub fn cfg_to_json(cfg: &FitConfig, cd_updates: Option<usize>) -> Json {
+    let mut fields = vec![
+        ("iters", Json::Num(cfg.iters as f64)),
+        ("nu", Json::Num(cfg.nu as f64)),
+        ("accel", Json::str(accel_to_str(cfg.accel))),
+    ];
+    if let Some(u) = cd_updates {
+        fields.push(("cd_updates", Json::Num(u as f64)));
+    }
+    Json::obj(fields)
+}
+
+pub fn cfg_from_json(j: &Json) -> Result<(FitConfig, Option<usize>)> {
+    let iters = j.req("iters")?.as_usize().context("iters")?;
+    let nu = j.req("nu")?.as_u64().context("nu")?;
+    let accel = accel_from_str(j.req("accel")?.as_str().context("accel")?)?;
+    let cd = j.get("cd_updates").and_then(|v| v.as_usize());
+    Ok((FitConfig { iters, nu, accel, keep_path: false }, cd))
+}
+
+pub fn fit_to_json(fit: &EncryptedFit) -> Json {
+    Json::obj(vec![
+        ("betas", Json::Arr(fit.betas.iter().map(ct_to_json).collect())),
+        ("divisor", Json::str(&fit.divisor.to_decimal())),
+        ("phi", Json::Num(fit.phi as f64)),
+        ("paper_mmd", Json::Num(fit.paper_mmd as f64)),
+        ("noise_depth", Json::Num(fit.noise_depth as f64)),
+    ])
+}
+
+pub fn fit_from_json(ctx: &FvContext, j: &Json) -> Result<EncryptedFit> {
+    let betas: Result<Vec<Ciphertext>> = j
+        .req("betas")?
+        .as_arr()
+        .context("betas")?
+        .iter()
+        .map(|c| ct_from_json(ctx, c))
+        .collect();
+    Ok(EncryptedFit {
+        betas: betas?,
+        divisor: BigUint::from_decimal(j.req("divisor")?.as_str().context("divisor")?)
+            .ok_or_else(|| anyhow!("bad divisor"))?,
+        path: None,
+        phi: j.req("phi")?.as_u64().context("phi")? as u32,
+        paper_mmd: j.req("paper_mmd")?.as_u64().unwrap_or(0) as u32,
+        noise_depth: j.req("noise_depth")?.as_u64().unwrap_or(0) as u32,
+    })
+}
+
+
+// ---- parameter-set / key-file codecs ------------------------------------
+
+pub fn params_to_json(p: &crate::fhe::FvParams) -> Json {
+    Json::obj(vec![
+        ("d", Json::Num(p.d as f64)),
+        ("q_count", Json::Num(p.q_count as f64)),
+        ("ext_count", Json::Num(p.ext_count as f64)),
+        ("t_hex", Json::Str(to_hex(p.t.limbs().iter().copied()))),
+        ("cbd_k", Json::Num(p.cbd_k as f64)),
+        ("relin_w_bits", Json::Num(p.relin_w_bits as f64)),
+        (
+            "profile",
+            Json::str(match p.profile {
+                crate::fhe::SecurityProfile::Toy => "toy",
+                crate::fhe::SecurityProfile::Paper128 => "paper128",
+            }),
+        ),
+    ])
+}
+
+pub fn params_from_json(j: &Json) -> Result<crate::fhe::FvParams> {
+    let t = BigUint::from_limbs(from_hex(j.req("t_hex")?.as_str().context("t_hex")?)?);
+    Ok(crate::fhe::FvParams {
+        d: j.req("d")?.as_usize().context("d")?,
+        q_count: j.req("q_count")?.as_usize().context("q_count")?,
+        ext_count: j.req("ext_count")?.as_usize().context("ext_count")?,
+        t,
+        cbd_k: j.req("cbd_k")?.as_u64().context("cbd_k")? as u32,
+        relin_w_bits: j.req("relin_w_bits")?.as_u64().context("relin_w_bits")? as u32,
+        profile: match j.req("profile")?.as_str() {
+            Some("paper128") => crate::fhe::SecurityProfile::Paper128,
+            _ => crate::fhe::SecurityProfile::Toy,
+        },
+    })
+}
+
+/// Full key-file codec (params + sk + pk + rk). The secret key is
+/// included — this file must stay on the data-holder side; the server
+/// needs only `public_json` (params + pk + rk).
+pub fn keyset_to_json(params: &crate::fhe::FvParams, keys: &crate::fhe::KeySet) -> Json {
+    Json::obj(vec![
+        ("params", params_to_json(params)),
+        ("sk", poly_to_json(&keys.sk.s)),
+        (
+            "pk",
+            Json::obj(vec![
+                ("b", poly_to_json(&keys.pk.b_ntt)),
+                ("a", poly_to_json(&keys.pk.a_ntt)),
+            ]),
+        ),
+        ("rk", relin_key_to_json(&keys.rk)),
+    ])
+}
+
+pub fn keyset_from_json(j: &Json) -> Result<(std::sync::Arc<FvContext>, crate::fhe::KeySet)> {
+    let params = params_from_json(j.req("params")?)?;
+    let ctx = FvContext::new(params);
+    let s = poly_from_json(&ctx, j.req("sk")?)?;
+    let ring = &ctx.ring_q;
+    let mut s_ntt = s.clone();
+    ring.ntt_forward(&mut s_ntt);
+    let s2_ntt = ring.mul_ntt(&s_ntt, &s_ntt);
+    let pk = j.req("pk")?;
+    let keys = crate::fhe::KeySet {
+        sk: crate::fhe::SecretKey { s, s_ntt, s2_ntt },
+        pk: crate::fhe::PublicKey {
+            b_ntt: poly_from_json(&ctx, pk.req("b")?)?,
+            a_ntt: poly_from_json(&ctx, pk.req("a")?)?,
+        },
+        rk: relin_key_from_json(&ctx, j.req("rk")?)?,
+    };
+    Ok((ctx, keys))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::encoding::encode_int;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::FvParams;
+    use crate::fhe::rng::ChaChaRng;
+
+    #[test]
+    fn hex_roundtrip() {
+        let words = vec![0u64, 1, u64::MAX, 0xdead_beef];
+        let hex = to_hex(words.iter().copied());
+        assert_eq!(from_hex(&hex).unwrap(), words);
+        assert!(from_hex("abc").is_err());
+        assert!(from_hex("zz00000000000000").is_err());
+    }
+
+    #[test]
+    fn ciphertext_roundtrip() {
+        let ctx = FvContext::new(FvParams::custom(256, 3, 20));
+        let mut rng = ChaChaRng::from_seed(701);
+        let keys = keygen(&ctx, &mut rng);
+        let mut ct = ctx.encrypt(&encode_int(-12345, ctx.d()), &keys.pk, &mut rng);
+        ct.ct_depth = 3;
+        let j = ct_to_json(&ct);
+        let text = j.to_string_json();
+        let back = ct_from_json(&ctx, &Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.polys, ct.polys);
+        assert_eq!(back.ct_depth, 3);
+        let pt = ctx.decrypt(&back, &keys.sk);
+        assert_eq!(pt.eval_at_2().to_i128(), Some(-12345));
+    }
+
+    #[test]
+    fn rejects_tampered_residues() {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(702);
+        let keys = keygen(&ctx, &mut rng);
+        let ct = ctx.encrypt(&encode_int(1, ctx.d()), &keys.pk, &mut rng);
+        let j = ct_to_json(&ct).to_string_json();
+        // Corrupt: set a residue ≥ prime by flipping high hex digits.
+        let bad = j.replacen("\"hex\":\"", "\"hex\":\"ffffffffffffffff", 1);
+        let parsed = Json::parse(&bad).unwrap();
+        assert!(ct_from_json(&ctx, &parsed).is_err());
+    }
+
+    #[test]
+    fn relin_key_roundtrip() {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(703);
+        let keys = keygen(&ctx, &mut rng);
+        let j = relin_key_to_json(&keys.rk).to_string_json();
+        let back = relin_key_from_json(&ctx, &Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.b_ntt, keys.rk.b_ntt);
+        assert_eq!(back.a_ntt, keys.rk.a_ntt);
+    }
+
+    #[test]
+    fn dataset_roundtrip_and_validation() {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(705);
+        let keys = keygen(&ctx, &mut rng);
+        let q = crate::els::exact::QuantisedData {
+            x: vec![vec![12, -3], vec![7, 99]],
+            y: vec![-5, 41],
+            phi: 2,
+        };
+        let data = crate::els::model::encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        let j = dataset_to_json(&data).to_string_json();
+        let back = dataset_from_json(&ctx, &Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.n(), 2);
+        assert_eq!(back.p(), 2);
+        let pt = ctx.decrypt(&back.x[1][1], &keys.sk);
+        assert_eq!(pt.eval_at_2().to_i128(), Some(99));
+        // Ragged matrices are rejected.
+        let mut bad = Json::parse(&j).unwrap();
+        if let Json::Obj(m) = &mut bad {
+            if let Some(Json::Arr(rows)) = m.get_mut("x") {
+                if let Json::Arr(r0) = &mut rows[0] {
+                    r0.pop();
+                }
+            }
+        }
+        assert!(dataset_from_json(&ctx, &bad).is_err());
+    }
+
+    #[test]
+    fn keyset_roundtrip() {
+        let params = FvParams::custom(256, 2, 16);
+        let ctx = FvContext::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(704);
+        let keys = keygen(&ctx, &mut rng);
+        let j = keyset_to_json(&params, &keys).to_string_json();
+        let (ctx2, keys2) = keyset_from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(ctx2.d(), ctx.d());
+        // Encrypt under original pk, decrypt with restored sk.
+        let ct = ctx.encrypt(&encode_int(77, ctx.d()), &keys.pk, &mut rng);
+        let pt = ctx2.decrypt(&ct, &keys2.sk);
+        assert_eq!(pt.eval_at_2().to_i128(), Some(77));
+    }
+
+    #[test]
+    fn cfg_roundtrip() {
+        let cfg = FitConfig { iters: 5, nu: 42, accel: Accel::Vwt, keep_path: false };
+        let j = cfg_to_json(&cfg, Some(7)).to_string_json();
+        let (back, cd) = cfg_from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.iters, 5);
+        assert_eq!(back.nu, 42);
+        assert_eq!(back.accel, Accel::Vwt);
+        assert_eq!(cd, Some(7));
+        assert!(accel_from_str("bogus").is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! The coordinator: accepts encrypted regression jobs, runs admission
+//! control, and executes them on worker threads over a shared (batching)
+//! engine with bounded concurrency.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::els::encrypted::{self, EncryptedFit};
+use crate::runtime::backend::HeEngine;
+
+use super::admission::{admit, AdmissionRequest};
+use super::job::{Job, JobId, JobSpec, JobState};
+use super::metrics::Metrics;
+
+/// Counting semaphore (no tokio offline).
+struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    fn new(n: usize) -> Self {
+        Semaphore { permits: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    fn release(&self) {
+        *self.permits.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// The job coordinator.
+pub struct Coordinator {
+    engine: Arc<dyn HeEngine>,
+    jobs: Mutex<BTreeMap<JobId, Job>>,
+    done_cv: Condvar,
+    next_id: AtomicU64,
+    sem: Semaphore,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    pub fn new(engine: Arc<dyn HeEngine>, max_concurrent: usize) -> Arc<Self> {
+        Arc::new(Coordinator {
+            engine,
+            jobs: Mutex::new(BTreeMap::new()),
+            done_cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            sem: Semaphore::new(max_concurrent.max(1)),
+            metrics: Arc::new(Metrics::default()),
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<dyn HeEngine> {
+        &self.engine
+    }
+
+    /// Submit a job. Runs admission control synchronously; on success
+    /// the fit executes on a worker thread.
+    pub fn submit(self: &Arc<Self>, spec: JobSpec) -> Result<JobId> {
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let req = AdmissionRequest {
+            n_obs: spec.data.n(),
+            p_vars: spec.data.p(),
+            iters: spec.cfg.iters,
+            phi: spec.data.phi,
+            nu: spec.cfg.nu,
+            accel: spec.cfg.accel,
+            cd_updates: spec.cd_updates,
+        };
+        if let Err(e) = admit(&self.engine.ctx().params, &req) {
+            self.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!(e));
+        }
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.jobs.lock().unwrap().insert(id, Job::new(id));
+        let me = self.clone();
+        std::thread::Builder::new()
+            .name(format!("els-{id}"))
+            .spawn(move || me.run_job(id, spec))
+            .expect("spawning job worker");
+        Ok(id)
+    }
+
+    fn run_job(self: &Arc<Self>, id: JobId, spec: JobSpec) {
+        self.sem.acquire();
+        {
+            let mut jobs = self.jobs.lock().unwrap();
+            if let Some(j) = jobs.get_mut(&id) {
+                j.state = JobState::Running;
+            }
+        }
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            match spec.cd_updates {
+                Some(updates) => {
+                    encrypted::fit_cd(self.engine.as_ref(), &spec.data, spec.cfg.nu, updates)
+                }
+                None => encrypted::fit(self.engine.as_ref(), &spec.data, &spec.cfg),
+            }
+        }));
+        self.sem.release();
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(j) = jobs.get_mut(&id) {
+            j.finished = Some(Instant::now());
+            match result {
+                Ok(fit) => {
+                    self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(lat) = j.latency() {
+                        self.metrics.job_latency.observe(lat);
+                    }
+                    j.state = JobState::Done(fit);
+                }
+                Err(e) => {
+                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    let msg = e
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "job panicked".to_string());
+                    j.state = JobState::Failed(msg);
+                }
+            }
+        }
+        self.done_cv.notify_all();
+    }
+
+    /// Current state label (None if unknown id).
+    pub fn state(&self, id: JobId) -> Option<String> {
+        self.jobs.lock().unwrap().get(&id).map(|j| j.state.label().to_string())
+    }
+
+    /// Block until the job leaves the queue/running states.
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut jobs = self.jobs.lock().unwrap();
+        loop {
+            match jobs.get(&id) {
+                None => return Err(anyhow!("unknown job {id}")),
+                Some(j) => match j.state {
+                    JobState::Done(_) | JobState::Failed(_) => return Ok(()),
+                    _ => {}
+                },
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(anyhow!("timeout waiting for {id}"));
+            }
+            let (guard, _) = self.done_cv.wait_timeout(jobs, deadline - now).unwrap();
+            jobs = guard;
+        }
+    }
+
+    /// Remove and return a finished fit.
+    pub fn take_result(&self, id: JobId) -> Result<EncryptedFit> {
+        let mut jobs = self.jobs.lock().unwrap();
+        match jobs.get(&id).map(|j| j.state.label()) {
+            None => Err(anyhow!("unknown job {id}")),
+            Some("done") => {
+                let job = jobs.remove(&id).unwrap();
+                match job.state {
+                    JobState::Done(fit) => Ok(fit),
+                    _ => unreachable!(),
+                }
+            }
+            Some("failed") => {
+                let job = jobs.remove(&id).unwrap();
+                match job.state {
+                    JobState::Failed(msg) => Err(anyhow!("job failed: {msg}")),
+                    _ => unreachable!(),
+                }
+            }
+            Some(s) => Err(anyhow!("job {id} still {s}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::data::synth;
+    use crate::els::encrypted::{decrypt_coefficients, FitConfig};
+    use crate::els::exact::{self, QuantisedData};
+    use crate::els::float_ref::linf;
+    use crate::els::model::encrypt_dataset;
+    use crate::els::stepsize::nu_optimal;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::{plan, PlanRequest};
+    use crate::fhe::rng::ChaChaRng;
+    use crate::fhe::FvContext;
+    use crate::coordinator::batcher::{BatchConfig, BatchingEngine};
+    use crate::runtime::backend::NativeEngine;
+
+    #[test]
+    fn concurrent_jobs_complete_and_match_exact() {
+        let mut rng = ChaChaRng::from_seed(601);
+        let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let nu = nu_optimal(&xq);
+        let params = plan(&PlanRequest::gd(6, 2, 2, 2, nu)).unwrap();
+        let ctx = FvContext::new(params);
+        let keys = keygen(&ctx, &mut rng);
+        let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+        let engine = BatchingEngine::new(native, BatchConfig::default());
+        let coord = Coordinator::new(engine.clone(), 4);
+
+        let ids: Vec<JobId> = (0..3)
+            .map(|_| {
+                let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+                coord
+                    .submit(JobSpec {
+                        data,
+                        cfg: FitConfig::gd(2, nu),
+                        cd_updates: None,
+                    })
+                    .unwrap()
+            })
+            .collect();
+        let expect = exact::gd_exact(&q, nu, 2).decode_last();
+        for id in ids {
+            coord.wait(id, Duration::from_secs(600)).unwrap();
+            let fit = coord.take_result(id).unwrap();
+            let dec = decrypt_coefficients(&ctx, &keys.sk, &fit);
+            assert!(linf(&dec, &expect) < 1e-9);
+        }
+        assert_eq!(coord.metrics.jobs_completed.load(Ordering::Relaxed), 3);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_at_submit() {
+        let mut rng = ChaChaRng::from_seed(602);
+        let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let nu = 16;
+        let params = plan(&PlanRequest::gd(6, 2, 1, 2, nu)).unwrap();
+        let ctx = FvContext::new(params);
+        let keys = keygen(&ctx, &mut rng);
+        let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+        let coord = Coordinator::new(native, 2);
+        let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        // 10 iterations on 1-iteration params must be rejected.
+        let err = coord
+            .submit(JobSpec { data, cfg: FitConfig::gd(10, nu), cd_updates: None })
+            .unwrap_err();
+        assert!(err.to_string().contains("rejected"), "{err}");
+        assert_eq!(coord.metrics.jobs_rejected.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,216 @@
+//! TCP service: line-delimited JSON requests against a [`Coordinator`].
+//!
+//! Requests (one JSON object per line):
+//! - `{"type":"submit","data":{...},"cfg":{...}}` → `{"ok":true,"id":N}`
+//! - `{"type":"status","id":N}` → `{"ok":true,"state":"running"}`
+//! - `{"type":"result","id":N}` → `{"ok":true,"fit":{...}}` (waits)
+//! - `{"type":"metrics"}` → `{"ok":true,"summary":"...","stats":{...}}`
+//! - `{"type":"ping"}` → `{"ok":true}`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::job::JobId;
+use crate::coordinator::protocol as proto;
+use crate::coordinator::scheduler::Coordinator;
+use crate::els::encrypted::EncryptedFit;
+use crate::els::model::EncryptedDataset;
+use crate::util::json::Json;
+
+/// Running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on a background thread. `addr` may use port 0 for
+    /// an ephemeral port (see `self.addr`).
+    pub fn start(coord: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("els-server".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = coord.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, coord);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let response = match handle_request(&coord, line.trim()) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(&format!("{e:#}"))),
+            ]),
+        };
+        writer.write_all(response.to_string_json().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn handle_request(coord: &Arc<Coordinator>, line: &str) -> Result<Json> {
+    let req = Json::parse(line).context("malformed request JSON")?;
+    let typ = req.req("type")?.as_str().context("type")?;
+    match typ {
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        "submit" => {
+            let ctx = coord.engine().ctx();
+            let data = proto::dataset_from_json(ctx, req.req("data")?)?;
+            let (cfg, cd_updates) = proto::cfg_from_json(req.req("cfg")?)?;
+            let id = coord.submit(crate::coordinator::job::JobSpec {
+                data,
+                cfg,
+                cd_updates,
+            })?;
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("id", Json::Num(id.0 as f64))]))
+        }
+        "status" => {
+            let id = JobId(req.req("id")?.as_u64().context("id")?);
+            let state = coord.state(id).ok_or_else(|| anyhow!("unknown job {id}"))?;
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("state", Json::str(&state))]))
+        }
+        "result" => {
+            let id = JobId(req.req("id")?.as_u64().context("id")?);
+            coord.wait(id, Duration::from_secs(3600))?;
+            let fit = coord.take_result(id)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("fit", proto::fit_to_json(&fit)),
+            ]))
+        }
+        "metrics" => {
+            let (muls, plains, adds, batches) = coord.engine().stats().snapshot();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("summary", Json::str(&coord.metrics.summary())),
+                (
+                    "stats",
+                    Json::obj(vec![
+                        ("ct_muls", Json::Num(muls as f64)),
+                        ("plain_muls", Json::Num(plains as f64)),
+                        ("adds", Json::Num(adds as f64)),
+                        ("batches", Json::Num(batches as f64)),
+                    ]),
+                ),
+            ]))
+        }
+        other => Err(anyhow!("unknown request type '{other}'")),
+    }
+}
+
+/// Blocking client for the wire protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn call(&mut self, req: Json) -> Result<Json> {
+        self.writer.write_all(req.to_string_json().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim()).context("malformed response")?;
+        if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            let msg = resp
+                .get("error")
+                .and_then(|e| e.as_str())
+                .unwrap_or("unknown server error");
+            return Err(anyhow!("server error: {msg}"));
+        }
+        Ok(resp)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.call(Json::obj(vec![("type", Json::str("ping"))])).map(|_| ())
+    }
+
+    pub fn submit(
+        &mut self,
+        data: &EncryptedDataset,
+        cfg: &crate::els::encrypted::FitConfig,
+        cd_updates: Option<usize>,
+    ) -> Result<JobId> {
+        let resp = self.call(Json::obj(vec![
+            ("type", Json::str("submit")),
+            ("data", proto::dataset_to_json(data)),
+            ("cfg", proto::cfg_to_json(cfg, cd_updates)),
+        ]))?;
+        Ok(JobId(resp.req("id")?.as_u64().context("id")?))
+    }
+
+    pub fn status(&mut self, id: JobId) -> Result<String> {
+        let resp = self.call(Json::obj(vec![
+            ("type", Json::str("status")),
+            ("id", Json::Num(id.0 as f64)),
+        ]))?;
+        Ok(resp.req("state")?.as_str().context("state")?.to_string())
+    }
+
+    /// Block until the job finishes and fetch the encrypted fit.
+    pub fn result(&mut self, ctx: &crate::fhe::FvContext, id: JobId) -> Result<EncryptedFit> {
+        let resp = self.call(Json::obj(vec![
+            ("type", Json::str("result")),
+            ("id", Json::Num(id.0 as f64)),
+        ]))?;
+        proto::fit_from_json(ctx, resp.req("fit")?)
+    }
+
+    pub fn metrics(&mut self) -> Result<String> {
+        let resp = self.call(Json::obj(vec![("type", Json::str("metrics"))]))?;
+        Ok(resp.req("summary")?.as_str().context("summary")?.to_string())
+    }
+}

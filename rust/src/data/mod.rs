@@ -1,0 +1,14 @@
+//! Synthetic workload generators matching the paper's §6 experiments.
+//!
+//! The two application datasets (Bonsall et al. mood time-series;
+//! Stamey et al. prostate data) are not shipped; `mood` and `prostate`
+//! generate structurally matched synthetic equivalents (same N, P,
+//! model class and correlation structure) — see DESIGN.md §6
+//! Substitutions for the preservation argument.
+
+pub mod mood;
+pub mod prostate;
+pub mod standardise;
+pub mod synth;
+
+pub use standardise::{standardise_xy, Standardised};

@@ -1,0 +1,119 @@
+//! Synthetic mood-stability workload (substitute for Bonsall et al.
+//! 2012, which is not public).
+//!
+//! The paper models weekly self-reported mood scores of bipolar
+//! patients as an AR(2) process, fit separately pre- and post-treatment
+//! (N = 28 usable observations, P = 2). We generate AR(2) series with a
+//! treatment-induced shift in the autoregressive coefficients
+//! (pre: oscillatory/unstable mood; post: damped), which preserves what
+//! the experiment actually studies — encrypted descent on an AR(2)
+//! lagged design of the paper's size.
+
+use crate::fhe::rng::ChaChaRng;
+
+use super::standardise::standardise_xy;
+
+/// One patient's series and its pre/post AR(2) regression problems.
+#[derive(Clone, Debug)]
+pub struct MoodPatient {
+    pub id: usize,
+    /// Pre-treatment design (lag-1, lag-2) and response.
+    pub pre: (Vec<Vec<f64>>, Vec<f64>),
+    /// Post-treatment design and response.
+    pub post: (Vec<Vec<f64>>, Vec<f64>),
+    /// True AR coefficients used by the generator.
+    pub true_pre: [f64; 2],
+    pub true_post: [f64; 2],
+}
+
+/// Simulate an AR(2) series of length `len` with coefficients `phi`.
+fn ar2_series(rng: &mut ChaChaRng, phi: [f64; 2], len: usize, noise_sd: f64) -> Vec<f64> {
+    let mut s = Vec::with_capacity(len + 20);
+    s.push(rng.next_gaussian());
+    s.push(rng.next_gaussian());
+    for _ in 2..len + 20 {
+        let t = s.len();
+        let v = phi[0] * s[t - 1] + phi[1] * s[t - 2] + noise_sd * rng.next_gaussian();
+        s.push(v);
+    }
+    s.split_off(20) // burn-in
+}
+
+/// Lagged AR(2) design: rows `(y_{t-1}, y_{t-2}) → y_t`. Standardised
+/// and centred per §3.1.
+pub fn ar2_design(series: &[f64]) -> (Vec<Vec<f64>>, Vec<f64>) {
+    assert!(series.len() >= 3);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for t in 2..series.len() {
+        x.push(vec![series[t - 1], series[t - 2]]);
+        y.push(series[t]);
+    }
+    let s = standardise_xy(&x, &y);
+    (s.x, s.y)
+}
+
+/// Generate a cohort of synthetic patients. Each pre/post segment
+/// yields N = 28 regression observations (30 raw points), P = 2 —
+/// exactly the paper's application size.
+pub fn cohort(rng: &mut ChaChaRng, n_patients: usize) -> Vec<MoodPatient> {
+    (0..n_patients)
+        .map(|id| {
+            let mut r = rng.split(id as u64 + 1);
+            // Pre-treatment: near-oscillatory dynamics (mood instability).
+            let pre_phi = [
+                0.2 + 0.2 * r.next_f64(),
+                -0.75 + 0.2 * r.next_f64(),
+            ];
+            // Post-treatment: damped, stabilised dynamics.
+            let post_phi = [0.45 + 0.2 * r.next_f64(), -0.15 + 0.15 * r.next_f64()];
+            let pre_series = ar2_series(&mut r, pre_phi, 30, 1.0);
+            let post_series = ar2_series(&mut r, post_phi, 30, 1.0);
+            MoodPatient {
+                id,
+                pre: ar2_design(&pre_series),
+                post: ar2_design(&post_series),
+                true_pre: pre_phi,
+                true_post: post_phi,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::els::float_ref::ols;
+
+    #[test]
+    fn design_shape_matches_paper() {
+        let mut rng = ChaChaRng::from_seed(91);
+        let patients = cohort(&mut rng, 3);
+        assert_eq!(patients.len(), 3);
+        for p in &patients {
+            assert_eq!(p.pre.0.len(), 28, "N = 28 as in the paper");
+            assert_eq!(p.pre.0[0].len(), 2, "P = 2 (AR(2))");
+            assert_eq!(p.post.1.len(), 28);
+        }
+    }
+
+    #[test]
+    fn ols_recovers_ar_structure() {
+        // With standardisation the sign/ordering of AR coefficients is
+        // preserved even though their scale changes.
+        let mut rng = ChaChaRng::from_seed(92);
+        let phi = [0.5, -0.3];
+        let series = ar2_series(&mut rng, phi, 3000, 1.0);
+        let (x, y) = ar2_design(&series);
+        let b = ols(&x, &y);
+        assert!(b[0] > 0.2, "lag-1 effect positive: {}", b[0]);
+        assert!(b[1] < -0.05, "lag-2 effect negative: {}", b[1]);
+    }
+
+    #[test]
+    fn pre_post_differ() {
+        let mut rng = ChaChaRng::from_seed(93);
+        let p = &cohort(&mut rng, 1)[0];
+        assert!(p.true_pre[1] < p.true_post[1], "treatment damps lag-2");
+    }
+}

@@ -1,0 +1,101 @@
+//! Synthetic prostate-cancer workload (substitute for Stamey et al.
+//! 1989 — we ship no data files).
+//!
+//! The classic dataset has N = 97 patients, response `lpsa` and P = 8
+//! covariates (lcavol, lweight, age, lbph, svi, lcp, gleason, pgg45)
+//! with a well-known correlation structure (e.g. lcavol–lcp ≈ 0.68,
+//! lcp–pgg45 ≈ 0.63). The generator draws a Gaussian design with that
+//! published correlation matrix and a response from the published
+//! OLS-fit-like coefficient profile, preserving what Figures 7–8
+//! measure: convergence and ridge behaviour on an N = 97, P = 8,
+//! moderately collinear design.
+
+use crate::fhe::rng::ChaChaRng;
+
+use super::standardise::standardise_xy;
+use super::synth::correlated_design;
+
+/// Covariate names, in order.
+pub const COVARIATES: [&str; 8] =
+    ["lcavol", "lweight", "age", "lbph", "svi", "lcp", "gleason", "pgg45"];
+
+/// Published (rounded) correlation structure of the standardised
+/// covariates — the collinearity pattern is what drives the paper's
+/// convergence behaviour.
+pub fn correlation_matrix() -> Vec<Vec<f64>> {
+    let c: [[f64; 8]; 8] = [
+        [1.00, 0.28, 0.22, 0.03, 0.54, 0.68, 0.43, 0.43],
+        [0.28, 1.00, 0.35, 0.44, 0.16, 0.16, 0.06, 0.11],
+        [0.22, 0.35, 1.00, 0.35, 0.12, 0.13, 0.27, 0.28],
+        [0.03, 0.44, 0.35, 1.00, -0.09, -0.01, 0.08, 0.08],
+        [0.54, 0.16, 0.12, -0.09, 1.00, 0.67, 0.32, 0.46],
+        [0.68, 0.16, 0.13, -0.01, 0.67, 1.00, 0.51, 0.63],
+        [0.43, 0.06, 0.27, 0.08, 0.32, 0.51, 1.00, 0.75],
+        [0.43, 0.11, 0.28, 0.08, 0.46, 0.63, 0.75, 1.00],
+    ];
+    // Symmetrise-and-lift: add a small ridge to guarantee positive
+    // definiteness of the rounded matrix.
+    let mut m: Vec<Vec<f64>> = c.iter().map(|r| r.to_vec()).collect();
+    for (i, row) in m.iter_mut().enumerate() {
+        row[i] += 0.02;
+    }
+    m
+}
+
+/// Effect profile shaped like the published lpsa fit: lcavol dominates,
+/// svi and lweight matter, lcp slightly negative.
+pub const TRUE_BETA: [f64; 8] = [0.66, 0.27, -0.14, 0.21, 0.31, -0.29, 0.0, 0.27];
+
+/// Generate the synthetic prostate problem: standardised X (N×8) and
+/// centred y.
+pub fn generate(rng: &mut ChaChaRng, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let x = correlated_design(rng, n, &correlation_matrix());
+    let y: Vec<f64> = x
+        .iter()
+        .map(|row| {
+            row.iter().zip(&TRUE_BETA).map(|(a, b)| a * b).sum::<f64>()
+                + 0.7 * rng.next_gaussian()
+        })
+        .collect();
+    let s = standardise_xy(&x, &y);
+    (s.x, s.y)
+}
+
+/// The paper's exact application size.
+pub fn paper_size(rng: &mut ChaChaRng) -> (Vec<Vec<f64>>, Vec<f64>) {
+    generate(rng, 97)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::els::float_ref::{gram_spectrum, ols};
+
+    #[test]
+    fn shape_and_conditioning() {
+        let mut rng = ChaChaRng::from_seed(95);
+        let (x, y) = paper_size(&mut rng);
+        assert_eq!(x.len(), 97);
+        assert_eq!(x[0].len(), 8);
+        assert_eq!(y.len(), 97);
+        let (lmin, lmax) = gram_spectrum(&x);
+        let cond = lmax / lmin;
+        // Collinear but invertible, like the real dataset.
+        assert!(cond > 3.0 && cond < 1e4, "condition number {cond}");
+    }
+
+    #[test]
+    fn dominant_effect_is_lcavol() {
+        let mut rng = ChaChaRng::from_seed(96);
+        let (x, y) = generate(&mut rng, 2000);
+        let b = ols(&x, &y);
+        let max_idx = (0..8).max_by(|&i, &j| b[i].abs().partial_cmp(&b[j].abs()).unwrap()).unwrap();
+        assert_eq!(max_idx, 0, "lcavol dominates: {b:?}");
+    }
+
+    #[test]
+    fn correlation_matrix_is_pd() {
+        // Cholesky must succeed (panics otherwise).
+        let _ = crate::els::float_ref::linalg::cholesky(&correlation_matrix());
+    }
+}

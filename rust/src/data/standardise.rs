@@ -1,0 +1,118 @@
+//! §3.1 preprocessing: covariates standardised (mean 0, sample sd 1),
+//! response centred — performed by the data holder before encoding and
+//! encryption.
+
+/// Standardised data plus the statistics needed to map back.
+#[derive(Clone, Debug)]
+pub struct Standardised {
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+    pub x_mean: Vec<f64>,
+    pub x_sd: Vec<f64>,
+    pub y_mean: f64,
+}
+
+/// Standardise columns of X and centre y.
+pub fn standardise_xy(x: &[Vec<f64>], y: &[f64]) -> Standardised {
+    let n = x.len();
+    assert!(n > 1 && y.len() == n);
+    let p = x[0].len();
+    let mut x_mean = vec![0.0; p];
+    for row in x {
+        for j in 0..p {
+            x_mean[j] += row[j];
+        }
+    }
+    for m in x_mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut x_sd = vec![0.0; p];
+    for row in x {
+        for j in 0..p {
+            x_sd[j] += (row[j] - x_mean[j]).powi(2);
+        }
+    }
+    for s in x_sd.iter_mut() {
+        *s = (*s / (n as f64 - 1.0)).sqrt();
+        if *s == 0.0 {
+            *s = 1.0; // constant column: leave centred
+        }
+    }
+    let y_mean = y.iter().sum::<f64>() / n as f64;
+    let xs: Vec<Vec<f64>> = x
+        .iter()
+        .map(|row| (0..p).map(|j| (row[j] - x_mean[j]) / x_sd[j]).collect())
+        .collect();
+    let ys: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+    Standardised { x: xs, y: ys, x_mean, x_sd, y_mean }
+}
+
+/// Ridge data augmentation (§4.4, eq. 13): append `√α·I` rows to X and
+/// zeros to y. OLS on the augmented data equals RLS on the original.
+pub fn ridge_augment(x: &[Vec<f64>], y: &[f64], alpha: f64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    assert!(alpha >= 0.0);
+    let p = x[0].len();
+    let mut xa = x.to_vec();
+    let mut ya = y.to_vec();
+    let sa = alpha.sqrt();
+    for j in 0..p {
+        let mut row = vec![0.0; p];
+        row[j] = sa;
+        xa.push(row);
+        ya.push(0.0);
+    }
+    (xa, ya)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::els::float_ref::{linf, ols, ridge};
+
+    #[test]
+    fn standardise_properties() {
+        let x = vec![
+            vec![1.0, 10.0],
+            vec![2.0, 30.0],
+            vec![3.0, 20.0],
+            vec![4.0, 40.0],
+        ];
+        let y = vec![1.0, 2.0, 3.0, 4.0];
+        let s = standardise_xy(&x, &y);
+        for j in 0..2 {
+            let mean: f64 = s.x.iter().map(|r| r[j]).sum::<f64>() / 4.0;
+            let var: f64 =
+                s.x.iter().map(|r| (r[j] - mean).powi(2)).sum::<f64>() / 3.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-12);
+        }
+        assert!(s.y.iter().sum::<f64>().abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_column_does_not_blow_up() {
+        let x = vec![vec![5.0, 1.0], vec![5.0, 2.0], vec![5.0, 3.0]];
+        let s = standardise_xy(&x, &[1.0, 2.0, 3.0]);
+        assert!(s.x.iter().all(|r| r[0] == 0.0));
+    }
+
+    #[test]
+    fn augmentation_equals_ridge() {
+        // Paper eq. 14: OLS(X̊, ẙ) == RLS(X, y; α).
+        let x = vec![
+            vec![1.0, 0.5],
+            vec![-0.3, 1.2],
+            vec![0.7, -0.8],
+            vec![-1.5, 0.1],
+            vec![0.4, 0.9],
+        ];
+        let y = vec![1.0, -0.5, 0.3, -1.2, 0.8];
+        for alpha in [0.5, 5.0, 30.0] {
+            let (xa, ya) = ridge_augment(&x, &y, alpha);
+            assert_eq!(xa.len(), 7);
+            let via_aug = ols(&xa, &ya);
+            let direct = ridge(&x, &y, alpha);
+            assert!(linf(&via_aug, &direct) < 1e-10, "α = {alpha}");
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! §6.1 simulation designs: independent and equicorrelated Gaussian
+//! regression problems.
+
+use crate::els::float_ref::linalg::cholesky;
+use crate::fhe::rng::ChaChaRng;
+
+use super::standardise::standardise_xy;
+
+/// Independent design: `β ~ N(0, I)`, `X ~ N(0, I)`,
+/// `y ~ N(Xβ, σ²I)`. Returns standardised covariates and centred
+/// response (as the paper assumes throughout, §3.1).
+pub fn gaussian_regression(
+    rng: &mut ChaChaRng,
+    n: usize,
+    p: usize,
+    noise_sd: f64,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let beta: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+    let x: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..p).map(|_| rng.next_gaussian()).collect())
+        .collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|row| {
+            row.iter().zip(&beta).map(|(a, b)| a * b).sum::<f64>()
+                + noise_sd * rng.next_gaussian()
+        })
+        .collect();
+    let s = standardise_xy(&x, &y);
+    (s.x, s.y)
+}
+
+/// Equicorrelated design (the paper's "Normal copula" with all pairwise
+/// correlations equal to ρ): `X_i = √ρ·z·1 + √(1−ρ)·ε_i`.
+pub fn correlated_regression(
+    rng: &mut ChaChaRng,
+    n: usize,
+    p: usize,
+    rho: f64,
+    noise_sd: f64,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    assert!((0.0..1.0).contains(&rho));
+    let beta: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+    let sr = rho.sqrt();
+    let sc = (1.0 - rho).sqrt();
+    let x: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let z = rng.next_gaussian();
+            (0..p).map(|_| sr * z + sc * rng.next_gaussian()).collect()
+        })
+        .collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|row| {
+            row.iter().zip(&beta).map(|(a, b)| a * b).sum::<f64>()
+                + noise_sd * rng.next_gaussian()
+        })
+        .collect();
+    let s = standardise_xy(&x, &y);
+    (s.x, s.y)
+}
+
+/// Design with an arbitrary correlation matrix (via Cholesky), used by
+/// the prostate-like generator.
+pub fn correlated_design(
+    rng: &mut ChaChaRng,
+    n: usize,
+    corr: &[Vec<f64>],
+) -> Vec<Vec<f64>> {
+    let p = corr.len();
+    let l = cholesky(corr);
+    (0..n)
+        .map(|_| {
+            let z: Vec<f64> = (0..p).map(|_| rng.next_gaussian()).collect();
+            (0..p)
+                .map(|i| (0..=i).map(|k| l[i][k] * z[k]).sum())
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_corr(x: &[Vec<f64>], a: usize, b: usize) -> f64 {
+        let n = x.len() as f64;
+        let (ma, mb) = (
+            x.iter().map(|r| r[a]).sum::<f64>() / n,
+            x.iter().map(|r| r[b]).sum::<f64>() / n,
+        );
+        let (mut num, mut va, mut vb) = (0.0, 0.0, 0.0);
+        for r in x {
+            num += (r[a] - ma) * (r[b] - mb);
+            va += (r[a] - ma).powi(2);
+            vb += (r[b] - mb).powi(2);
+        }
+        num / (va * vb).sqrt()
+    }
+
+    #[test]
+    fn standardised_output() {
+        let mut rng = ChaChaRng::from_seed(81);
+        let (x, y) = gaussian_regression(&mut rng, 200, 3, 1.0);
+        for j in 0..3 {
+            let mean = x.iter().map(|r| r[j]).sum::<f64>() / 200.0;
+            assert!(mean.abs() < 1e-10, "column {j} centred");
+        }
+        assert!(y.iter().sum::<f64>().abs() < 1e-8, "response centred");
+    }
+
+    #[test]
+    fn equicorrelation_close_to_rho() {
+        let mut rng = ChaChaRng::from_seed(82);
+        let (x, _) = correlated_regression(&mut rng, 4000, 4, 0.7, 0.1);
+        for a in 0..4 {
+            for b in a + 1..4 {
+                let c = sample_corr(&x, a, b);
+                assert!((c - 0.7).abs() < 0.06, "corr({a},{b}) = {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_design_matches_target_corr() {
+        let corr = vec![
+            vec![1.0, 0.6, 0.2],
+            vec![0.6, 1.0, 0.4],
+            vec![0.2, 0.4, 1.0],
+        ];
+        let mut rng = ChaChaRng::from_seed(83);
+        let x = correlated_design(&mut rng, 6000, &corr);
+        assert!((sample_corr(&x, 0, 1) - 0.6).abs() < 0.05);
+        assert!((sample_corr(&x, 1, 2) - 0.4).abs() < 0.05);
+        assert!((sample_corr(&x, 0, 2) - 0.2).abs() < 0.05);
+    }
+}

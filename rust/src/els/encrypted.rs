@@ -1,0 +1,377 @@
+//! The encrypted descent drivers (paper §4.1, §5): ELS-GD, ELS-GD-VWT,
+//! ELS-NAG and ELS-CD running entirely on ciphertexts through an
+//! [`HeEngine`].
+//!
+//! Every ciphertext multiplication in an iteration is emitted as one
+//! `mul_pairs` batch — the contract that lets the coordinator/XLA
+//! backends amortise fixed-shape kernel launches (and the native
+//! backend fan across cores).
+
+use crate::fhe::encoding::encode_biguint;
+use crate::fhe::{Ciphertext, FvContext, SecretKey};
+use crate::math::bigint::BigUint;
+use crate::runtime::backend::HeEngine;
+
+use super::mmd;
+use super::model::EncryptedDataset;
+use super::scaling::{CdScaling, GdScaling, NagScaling, VwtScaling};
+
+/// Acceleration mode (paper §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Accel {
+    /// Plain (preconditioned) gradient descent.
+    None,
+    /// Van Wijngaarden transformation on the GD iterates (§5.2).
+    Vwt,
+    /// Nesterov's accelerated gradient (§5.3).
+    Nag,
+}
+
+/// Fit configuration.
+#[derive(Clone, Debug)]
+pub struct FitConfig {
+    /// Iterations K.
+    pub iters: usize,
+    /// Integer inverse step size ν (δ = 1/ν).
+    pub nu: u64,
+    /// Acceleration mode.
+    pub accel: Accel,
+    /// Keep the full iterate path (implied by `Vwt`).
+    pub keep_path: bool,
+}
+
+impl FitConfig {
+    pub fn gd(iters: usize, nu: u64) -> Self {
+        FitConfig { iters, nu, accel: Accel::None, keep_path: false }
+    }
+
+    pub fn with_accel(mut self, accel: Accel) -> Self {
+        self.accel = accel;
+        self
+    }
+}
+
+/// An encrypted fit: coefficient ciphertexts plus decode metadata.
+pub struct EncryptedFit {
+    /// β̃ ciphertexts (one per covariate).
+    pub betas: Vec<Ciphertext>,
+    /// Decode divisor for [`decrypt_coefficients`].
+    pub divisor: BigUint,
+    /// Iterate path (βs per iteration) if requested.
+    pub path: Option<Vec<Vec<Ciphertext>>>,
+    /// Quantisation exponent.
+    pub phi: u32,
+    /// Paper Table-1 MMD of the computation performed.
+    pub paper_mmd: u32,
+    /// Ciphertext-multiplication depth actually consumed.
+    pub noise_depth: u32,
+}
+
+/// Transparent zero ciphertext (decrypts to 0, valid operand).
+fn zero_ct(ctx: &FvContext) -> Ciphertext {
+    Ciphertext::new(vec![ctx.ring_q.zero(), ctx.ring_q.zero()])
+}
+
+/// One GD/NAG gradient step: returns `g_j = Σ_i X̃_ij·r̃_i` where
+/// `r̃ = c_y·ỹ − X̃·β̃` (two `mul_pairs` batches).
+fn gradient_step(
+    engine: &dyn HeEngine,
+    data: &EncryptedDataset,
+    beta: &[Ciphertext],
+    c_y: &BigUint,
+) -> Vec<Ciphertext> {
+    let ctx = engine.ctx();
+    let (n, p) = (data.n(), data.p());
+    let cy_pt = encode_biguint(c_y, ctx.d());
+    // r̃_i = c_y·ỹ_i − Σ_j X̃_ij β̃_j
+    let mut r: Vec<Ciphertext> =
+        data.y.iter().map(|y| engine.mul_plain(y, &cy_pt)).collect();
+    if !beta.is_empty() {
+        let pairs: Vec<(&Ciphertext, &Ciphertext)> = (0..n)
+            .flat_map(|i| (0..p).map(move |j| (&data.x[i][j], &beta[j])))
+            .collect();
+        let prods = engine.mul_pairs(&pairs);
+        for i in 0..n {
+            for j in 0..p {
+                r[i] = engine.sub(&r[i], &prods[i * p + j]);
+            }
+        }
+    }
+    // g_j = Σ_i X̃_ij·r̃_i
+    let r_ref = &r;
+    let pairs: Vec<(&Ciphertext, &Ciphertext)> = (0..n)
+        .flat_map(|i| (0..p).map(move |j| (&data.x[i][j], &r_ref[i])))
+        .collect();
+    let prods = engine.mul_pairs(&pairs);
+    (0..p)
+        .map(|j| {
+            let mut acc = prods[j].clone();
+            for i in 1..n {
+                acc = engine.add(&acc, &prods[i * p + j]);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Fit by ELS-GD (eq. 10), optionally with VWT (eq. 18) or NAG
+/// (eqs. 20a/20b) acceleration.
+pub fn fit(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
+    match cfg.accel {
+        Accel::None | Accel::Vwt => fit_gd(engine, data, cfg),
+        Accel::Nag => fit_nag(engine, data, cfg),
+    }
+}
+
+fn fit_gd(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
+    let ctx = engine.ctx();
+    let p = data.p();
+    let s = GdScaling::new(data.phi, cfg.nu);
+    let keep_path = cfg.keep_path || cfg.accel == Accel::Vwt;
+    let mut beta: Vec<Ciphertext> = Vec::new();
+    let mut path: Vec<Vec<Ciphertext>> = Vec::new();
+    let cc_pt = encode_biguint(&s.c_carry(), ctx.d());
+    for k in 1..=cfg.iters {
+        let g = gradient_step(engine, data, &beta, &s.c_y(k));
+        beta = if beta.is_empty() {
+            g
+        } else {
+            (0..p)
+                .map(|j| engine.add(&engine.mul_plain(&beta[j], &cc_pt), &g[j]))
+                .collect()
+        };
+        if keep_path {
+            path.push(beta.clone());
+        }
+    }
+    let (betas, divisor, paper) = if cfg.accel == Accel::Vwt {
+        // β̃_vwt = Σ_{k≥k*} w_k·β̃^[k] at the unified K-scale.
+        let v = VwtScaling::new(data.phi, cfg.nu, cfg.iters);
+        let mut acc: Vec<Ciphertext> = vec![zero_ct(ctx); p];
+        for k in v.kstar..=cfg.iters {
+            let w = v.weight(k);
+            if w.is_zero() {
+                continue;
+            }
+            let w_pt = encode_biguint(&w, ctx.d());
+            for j in 0..p {
+                let term = engine.mul_plain(&path[k - 1][j], &w_pt);
+                acc[j] = engine.add(&acc[j], &term);
+            }
+        }
+        (acc, v.divisor(), mmd::paper_mmd(Accel::Vwt, cfg.iters))
+    } else {
+        (beta, s.divisor(cfg.iters), mmd::paper_mmd(Accel::None, cfg.iters))
+    };
+    EncryptedFit {
+        noise_depth: betas.iter().map(|b| b.ct_depth).max().unwrap_or(0),
+        betas,
+        divisor,
+        path: if cfg.keep_path { Some(path) } else { None },
+        phi: data.phi,
+        paper_mmd: paper,
+    }
+}
+
+fn fit_nag(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
+    let ctx = engine.ctx();
+    let p = data.p();
+    let s = NagScaling::new(data.phi, cfg.nu, cfg.iters);
+    let cc_pt = encode_biguint(&s.c_carry(), ctx.d());
+    let mut beta: Vec<Ciphertext> = Vec::new();
+    let mut s_prev: Vec<Ciphertext> = vec![zero_ct(ctx); p];
+    let mut path: Vec<Vec<Ciphertext>> = Vec::new();
+    for k in 1..=cfg.iters {
+        let g = gradient_step(engine, data, &beta, &s.c_y(k));
+        // s̃^[k] = c_carry·β̃^[k−1] + g
+        let s_cur: Vec<Ciphertext> = if beta.is_empty() {
+            g
+        } else {
+            (0..p)
+                .map(|j| engine.add(&engine.mul_plain(&beta[j], &cc_pt), &g[j]))
+                .collect()
+        };
+        // β̃^[k] = w1·s̃^[k] − w2·s̃^[k−1] (accelerating extrapolation)
+        let w1_pt = encode_biguint(&s.w1(k), ctx.d());
+        let w2 = s.w2(k);
+        beta = (0..p)
+            .map(|j| {
+                let a = engine.mul_plain(&s_cur[j], &w1_pt);
+                if w2.is_zero() {
+                    a
+                } else {
+                    let w2_pt = encode_biguint(&w2, ctx.d());
+                    engine.sub(&a, &engine.mul_plain(&s_prev[j], &w2_pt))
+                }
+            })
+            .collect();
+        s_prev = s_cur;
+        if cfg.keep_path {
+            path.push(beta.clone());
+        }
+    }
+    EncryptedFit {
+        noise_depth: beta.iter().map(|b| b.ct_depth).max().unwrap_or(0),
+        betas: beta,
+        divisor: s.divisor(cfg.iters),
+        path: if cfg.keep_path { Some(path) } else { None },
+        phi: data.phi,
+        paper_mmd: mmd::paper_mmd(Accel::Nag, cfg.iters),
+    }
+}
+
+/// Fit by ELS-CD (eq. 7, incremental-residual form, cyclic schedule).
+/// `updates` counts individual coordinate updates (K sweeps = K·P).
+pub fn fit_cd(
+    engine: &dyn HeEngine,
+    data: &EncryptedDataset,
+    nu: u64,
+    updates: usize,
+) -> EncryptedFit {
+    let ctx = engine.ctx();
+    let (n, p) = (data.n(), data.p());
+    let s = CdScaling::new(data.phi, nu);
+    let c_pt = encode_biguint(&s.c_step(), ctx.d());
+    let mut beta: Vec<Option<Ciphertext>> = vec![None; p];
+    let mut r: Vec<Ciphertext> = data.y.to_vec();
+    for u in 1..=updates {
+        let j = (u - 1) % p;
+        // ĝ_j = Σ_i X̃_ij·r̃_i
+        let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+            (0..n).map(|i| (&data.x[i][j], &r[i])).collect();
+        let prods = engine.mul_pairs(&pairs);
+        let mut g = prods[0].clone();
+        for pr in prods.iter().skip(1) {
+            g = engine.add(&g, pr);
+        }
+        // Carry all coefficients, add ĝ to coordinate j.
+        for (l, b) in beta.iter_mut().enumerate() {
+            *b = match (b.take(), l == j) {
+                (None, false) => None,
+                (None, true) => Some(g.clone()),
+                (Some(prev), false) => Some(engine.mul_plain(&prev, &c_pt)),
+                (Some(prev), true) => {
+                    Some(engine.add(&engine.mul_plain(&prev, &c_pt), &g))
+                }
+            };
+        }
+        // r̃ ← c·r̃ − X̃_j·ĝ
+        let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+            (0..n).map(|i| (&data.x[i][j], &g)).collect();
+        let xg = engine.mul_pairs(&pairs);
+        r = (0..n)
+            .map(|i| engine.sub(&engine.mul_plain(&r[i], &c_pt), &xg[i]))
+            .collect();
+    }
+    let betas: Vec<Ciphertext> =
+        beta.into_iter().map(|b| b.unwrap_or_else(|| zero_ct(ctx))).collect();
+    EncryptedFit {
+        noise_depth: betas.iter().map(|b| b.ct_depth).max().unwrap_or(0),
+        betas,
+        divisor: s.divisor(updates),
+        path: None,
+        phi: data.phi,
+        paper_mmd: mmd::paper_mmd_cd(updates.div_ceil(p), p),
+    }
+}
+
+/// Secret-key holder: decrypt and rescale the fitted coefficients.
+pub fn decrypt_coefficients(ctx: &FvContext, sk: &SecretKey, fit: &EncryptedFit) -> Vec<f64> {
+    fit.betas
+        .iter()
+        .map(|ct| ctx.decrypt(ct, sk).eval_at_2_scaled(&fit.divisor))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::data::synth;
+    use crate::els::exact::{self, QuantisedData};
+    use crate::els::float_ref::{self, linf};
+    use crate::els::model::encrypt_dataset;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::{plan, Algo, PlanRequest};
+    use crate::fhe::rng::ChaChaRng;
+    use crate::fhe::FvContext;
+    use crate::runtime::backend::NativeEngine;
+
+    struct Setup {
+        ctx: Arc<FvContext>,
+        keys: crate::fhe::KeySet,
+        engine: NativeEngine,
+        data: EncryptedDataset,
+        q: QuantisedData,
+        nu: u64,
+    }
+
+    fn setup(seed: u64, n: usize, p: usize, iters: usize, algo: Algo) -> Setup {
+        let mut rng = ChaChaRng::from_seed(seed);
+        let (x, y) = synth::gaussian_regression(&mut rng, n, p, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let (lmin, lmax) = float_ref::gram_spectrum(&xq);
+        let nu = ((lmin + lmax) / 2.0).ceil() as u64;
+        let mut req = PlanRequest::gd(n, p, iters, 2, nu).with_algo(algo);
+        if algo == Algo::Nag {
+            req.eta_abs_q =
+                crate::els::scaling::NagScaling::new(2, nu, iters).eta_abs();
+        }
+        let params = plan(&req).unwrap();
+        let ctx = FvContext::new(params);
+        let keys = keygen(&ctx, &mut rng);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+        let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        Setup { ctx, keys, engine, data, q, nu }
+    }
+
+    #[test]
+    fn encrypted_gd_equals_exact_simulation() {
+        let s = setup(301, 8, 2, 2, Algo::Gd);
+        let fit = super::fit(&s.engine, &s.data, &FitConfig::gd(2, s.nu));
+        let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
+        let exact = exact::gd_exact(&s.q, s.nu, 2);
+        let expect = exact.decode_last();
+        let d = linf(&dec, &expect);
+        assert!(d < 1e-9, "encrypted vs exact drift: {d} ({dec:?} vs {expect:?})");
+        assert_eq!(fit.paper_mmd, 4);
+        assert_eq!(fit.noise_depth, 3); // 2K−1
+    }
+
+    #[test]
+    fn encrypted_vwt_equals_exact() {
+        let s = setup(302, 6, 2, 3, Algo::GdVwt);
+        let cfg = FitConfig::gd(3, s.nu).with_accel(Accel::Vwt);
+        let fit = super::fit(&s.engine, &s.data, &cfg);
+        let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
+        let (acc, div) = exact::vwt_exact(&s.q, s.nu, 3);
+        let expect: Vec<f64> = acc
+            .iter()
+            .map(|b| crate::els::scaling::ratio_f64(b, &div))
+            .collect();
+        assert!(linf(&dec, &expect) < 1e-9);
+        assert_eq!(fit.paper_mmd, 7); // 2K+1
+    }
+
+    #[test]
+    fn encrypted_nag_equals_exact() {
+        let s = setup(303, 6, 2, 2, Algo::Nag);
+        let cfg = FitConfig::gd(2, s.nu).with_accel(Accel::Nag);
+        let fit = super::fit(&s.engine, &s.data, &cfg);
+        let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
+        let expect = exact::nag_exact(&s.q, s.nu, 2).decode_last();
+        assert!(linf(&dec, &expect) < 1e-9);
+        assert_eq!(fit.paper_mmd, 6); // 3K
+    }
+
+    #[test]
+    fn encrypted_cd_equals_exact() {
+        let s = setup(304, 6, 2, 2, Algo::Cd); // plan depth covers 2·updates
+        let fit = fit_cd(&s.engine, &s.data, s.nu, 2);
+        let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
+        let expect = exact::cd_exact(&s.q, s.nu, 2).decode_last();
+        assert!(linf(&dec, &expect) < 1e-9, "{dec:?} vs {expect:?}");
+    }
+}

@@ -1,0 +1,491 @@
+//! f64 reference implementations: dense linear algebra and the paper's
+//! descent algorithms in exact real arithmetic.
+//!
+//! These serve three roles: (i) the OLS/RLS "truth" every error norm in
+//! the figures is measured against, (ii) the fast backend for the
+//! convergence figures (FHE is exact, so the encrypted iterates equal
+//! these up to data quantisation — which we apply explicitly), and
+//! (iii) the data-holder-side computations the paper assigns to the
+//! plaintext domain (step size via spectral bounds, §7).
+
+/// Dense column-major-free matrix helpers on `Vec<Vec<f64>>` (row major).
+pub mod linalg {
+    /// `Aᵀ`.
+    pub fn transpose(a: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        if a.is_empty() {
+            return Vec::new();
+        }
+        let (n, m) = (a.len(), a[0].len());
+        let mut out = vec![vec![0.0; n]; m];
+        for i in 0..n {
+            for j in 0..m {
+                out[j][i] = a[i][j];
+            }
+        }
+        out
+    }
+
+    /// `A·v`.
+    pub fn matvec(a: &[Vec<f64>], v: &[f64]) -> Vec<f64> {
+        a.iter().map(|row| row.iter().zip(v).map(|(x, y)| x * y).sum()).collect()
+    }
+
+    /// `Aᵀ·v`.
+    pub fn tmatvec(a: &[Vec<f64>], v: &[f64]) -> Vec<f64> {
+        let m = if a.is_empty() { 0 } else { a[0].len() };
+        let mut out = vec![0.0; m];
+        for (row, &vi) in a.iter().zip(v) {
+            for (j, &x) in row.iter().enumerate() {
+                out[j] += x * vi;
+            }
+        }
+        out
+    }
+
+    /// `AᵀA` (symmetric Gram matrix).
+    pub fn gram(a: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let m = if a.is_empty() { 0 } else { a[0].len() };
+        let mut out = vec![vec![0.0; m]; m];
+        for row in a {
+            for j in 0..m {
+                for k in j..m {
+                    out[j][k] += row[j] * row[k];
+                }
+            }
+        }
+        for j in 0..m {
+            for k in 0..j {
+                out[j][k] = out[k][j];
+            }
+        }
+        out
+    }
+
+    /// Solve `A·x = b` by Gauss–Jordan with partial pivoting.
+    /// Panics on (numerically) singular systems.
+    pub fn solve(a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+        let n = a.len();
+        assert!(n > 0 && a[0].len() == n && b.len() == n);
+        let mut m: Vec<Vec<f64>> = a
+            .iter()
+            .zip(b)
+            .map(|(row, &bi)| {
+                let mut r = row.clone();
+                r.push(bi);
+                r
+            })
+            .collect();
+        for col in 0..n {
+            // Pivot.
+            let piv = (col..n)
+                .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())
+                .unwrap();
+            assert!(m[piv][col].abs() > 1e-12, "singular system");
+            m.swap(col, piv);
+            let diag = m[col][col];
+            for x in m[col].iter_mut() {
+                *x /= diag;
+            }
+            for row in 0..n {
+                if row != col && m[row][col] != 0.0 {
+                    let f = m[row][col];
+                    for k in col..=n {
+                        let v = m[col][k];
+                        m[row][k] -= f * v;
+                    }
+                }
+            }
+        }
+        m.into_iter().map(|row| row[n]).collect()
+    }
+
+    /// Eigenvalues of a symmetric matrix by the cyclic Jacobi method.
+    /// Returns eigenvalues sorted ascending.
+    pub fn eigvals_sym(a: &[Vec<f64>]) -> Vec<f64> {
+        let n = a.len();
+        let mut m: Vec<Vec<f64>> = a.to_vec();
+        for _sweep in 0..100 {
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in i + 1..n {
+                    off += m[i][j] * m[i][j];
+                }
+            }
+            if off.sqrt() < 1e-12 {
+                break;
+            }
+            for p in 0..n {
+                for q in p + 1..n {
+                    if m[p][q].abs() < 1e-300 {
+                        continue;
+                    }
+                    let theta = (m[q][q] - m[p][p]) / (2.0 * m[p][q]);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    for k in 0..n {
+                        let (mkp, mkq) = (m[k][p], m[k][q]);
+                        m[k][p] = c * mkp - s * mkq;
+                        m[k][q] = s * mkp + c * mkq;
+                    }
+                    for k in 0..n {
+                        let (mpk, mqk) = (m[p][k], m[q][k]);
+                        m[p][k] = c * mpk - s * mqk;
+                        m[q][k] = s * mpk + c * mqk;
+                    }
+                }
+            }
+        }
+        let mut ev: Vec<f64> = (0..n).map(|i| m[i][i]).collect();
+        ev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ev
+    }
+
+    /// Cholesky factor L (lower) of a positive-definite matrix.
+    pub fn cholesky(a: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let n = a.len();
+        let mut l = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[i][j];
+                for k in 0..j {
+                    s -= l[i][k] * l[j][k];
+                }
+                if i == j {
+                    assert!(s > 0.0, "matrix not positive definite");
+                    l[i][j] = s.sqrt();
+                } else {
+                    l[i][j] = s / l[j][j];
+                }
+            }
+        }
+        l
+    }
+}
+
+use linalg::*;
+
+/// OLS: `β̂ = (XᵀX)⁻¹Xᵀy` via the normal equations.
+pub fn ols(x: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    solve(&gram(x), &tmatvec(x, y))
+}
+
+/// Ridge: `β̂(α) = (XᵀX + αI)⁻¹Xᵀy`.
+pub fn ridge(x: &[Vec<f64>], y: &[f64], alpha: f64) -> Vec<f64> {
+    let mut g = gram(x);
+    for (i, row) in g.iter_mut().enumerate() {
+        row[i] += alpha;
+    }
+    solve(&g, &tmatvec(x, y))
+}
+
+/// Effective degrees of freedom `df(α) = tr(X(XᵀX+αI)⁻¹Xᵀ)`
+/// = Σ λᵢ/(λᵢ+α) (paper Figure 8).
+pub fn ridge_df(x: &[Vec<f64>], alpha: f64) -> f64 {
+    eigvals_sym(&gram(x)).iter().map(|&l| l / (l + alpha)).sum()
+}
+
+/// Spectral extremes (λ_min, λ_max) of `XᵀX`.
+pub fn gram_spectrum(x: &[Vec<f64>]) -> (f64, f64) {
+    let ev = eigvals_sym(&gram(x));
+    (ev[0], ev[ev.len() - 1])
+}
+
+/// The paper §7 data-holder bound `B(m) = ‖(XᵀX)^m‖^{1/m} ≥ S(XᵀX)`
+/// (Frobenius norm; monotone non-increasing in m, → spectral radius).
+pub fn spectral_bound(x: &[Vec<f64>], m: u32) -> f64 {
+    assert!(m >= 1);
+    let g = gram(x);
+    let mut acc = g.clone();
+    for _ in 1..m {
+        // acc = acc · g
+        let p = acc.len();
+        let mut next = vec![vec![0.0; p]; p];
+        for i in 0..p {
+            for k in 0..p {
+                let a = acc[i][k];
+                if a != 0.0 {
+                    for j in 0..p {
+                        next[i][j] += a * g[k][j];
+                    }
+                }
+            }
+        }
+        acc = next;
+    }
+    let frob: f64 = acc.iter().flatten().map(|v| v * v).sum::<f64>().sqrt();
+    frob.powf(1.0 / m as f64)
+}
+
+/// Full GD iterate path: `β^[k] = β^[k-1] + δ·Xᵀ(y − Xβ^[k-1])`,
+/// `β^[0] = 0`, returning `β^[1..=K]`.
+pub fn gd_path(x: &[Vec<f64>], y: &[f64], delta: f64, iters: usize) -> Vec<Vec<f64>> {
+    let p = x[0].len();
+    let mut beta = vec![0.0; p];
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let r: Vec<f64> = matvec(x, &beta).iter().zip(y).map(|(f, &yi)| yi - f).collect();
+        let g = tmatvec(x, &r);
+        for j in 0..p {
+            beta[j] += delta * g[j];
+        }
+        out.push(beta.clone());
+    }
+    out
+}
+
+/// Cyclic coordinate-descent path with the paper's fixed-step variant
+/// (eq. 7): one coordinate per step, cycling 0..P. Returns the iterate
+/// after every *individual coordinate update* (length `iters`).
+pub fn cd_path(x: &[Vec<f64>], y: &[f64], delta: f64, steps: usize) -> Vec<Vec<f64>> {
+    let p = x[0].len();
+    let mut beta = vec![0.0; p];
+    let mut out = Vec::with_capacity(steps);
+    for u in 0..steps {
+        let j = u % p;
+        let r: Vec<f64> = matvec(x, &beta).iter().zip(y).map(|(f, &yi)| yi - f).collect();
+        let gj: f64 = x.iter().zip(&r).map(|(row, &ri)| row[j] * ri).sum();
+        beta[j] += delta * gj;
+        out.push(beta.clone());
+    }
+    out
+}
+
+/// Nesterov momentum coefficients η_k < 0 for k = 1..=K
+/// (λ₀ = 0, λ_k = (1+√(1+4λ_{k-1}²))/2, η_k = (1−λ_k)/λ_{k+1}).
+pub fn nag_etas(iters: usize) -> Vec<f64> {
+    let mut lambda = 0.0f64;
+    let mut lambdas = Vec::with_capacity(iters + 2);
+    lambdas.push(lambda);
+    for _ in 0..=iters + 1 {
+        lambda = (1.0 + (1.0 + 4.0 * lambda * lambda).sqrt()) / 2.0;
+        lambdas.push(lambda);
+    }
+    (1..=iters).map(|k| (1.0 - lambdas[k]) / lambdas[k + 1]).collect()
+}
+
+/// NAG path (eqs. 19a/19b): returns `β^[1..=K]`.
+///
+/// Sign convention: we apply the *accelerating* Nesterov extrapolation
+/// `β^[k] = s^[k] + |η_k|·(s^[k] − s^[k-1])` (equivalently Bubeck's
+/// `x_{s+1} = (1−γ_s)y_{s+1} + γ_s·y_s` with γ_s = η_k < 0). The paper's
+/// eq. (19b) as printed (`+η_k(s−s_prev)`, η_k < 0) reverses the
+/// momentum and demonstrably decelerates; we follow Nesterov.
+pub fn nag_path(x: &[Vec<f64>], y: &[f64], delta: f64, iters: usize) -> Vec<Vec<f64>> {
+    let p = x[0].len();
+    let etas = nag_etas(iters);
+    let mut beta = vec![0.0; p];
+    let mut s_prev = vec![0.0; p];
+    let mut out = Vec::with_capacity(iters);
+    for &eta in etas.iter() {
+        let r: Vec<f64> = matvec(x, &beta).iter().zip(y).map(|(f, &yi)| yi - f).collect();
+        let g = tmatvec(x, &r);
+        let s: Vec<f64> = (0..p).map(|j| beta[j] + delta * g[j]).collect();
+        let m = -eta; // momentum ≥ 0
+        beta = (0..p).map(|j| s[j] + m * (s[j] - s_prev[j])).collect();
+        s_prev = s;
+        out.push(beta.clone());
+    }
+    out
+}
+
+/// Van Wijngaarden transformation (eq. 18) applied to a GD iterate path:
+/// `β_vwt = 2^{-(K-k*)} Σ_{k=k*}^K C(K−k*, k−k*) β^[k]`, `k* = ⌊K/3⌋+1`.
+pub fn vwt_estimate(path: &[Vec<f64>]) -> Vec<f64> {
+    let k_total = path.len();
+    assert!(k_total >= 1);
+    let kstar = k_total / 3 + 1;
+    let p = path[0].len();
+    let m = k_total - kstar; // binomial order
+    let mut acc = vec![0.0; p];
+    // C(m, i) iteratively to avoid overflow for K ≲ 60.
+    let mut coef = 1.0f64;
+    for (i, beta) in path[kstar - 1..].iter().enumerate() {
+        if i > 0 {
+            coef = coef * (m - i + 1) as f64 / i as f64;
+        }
+        for j in 0..p {
+            acc[j] += coef * beta[j];
+        }
+    }
+    let norm = 2f64.powi(m as i32);
+    acc.iter().map(|v| v / norm).collect()
+}
+
+/// RMS deviation between two coefficient vectors (the paper's error
+/// norm w.r.t. OLS).
+pub fn rms(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let s: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (s / a.len() as f64).sqrt()
+}
+
+/// ∞-norm distance.
+pub fn linf(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::fhe::rng::ChaChaRng;
+
+    fn toy_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = ChaChaRng::from_seed(71);
+        synth::gaussian_regression(&mut rng, 60, 4, 0.1)
+    }
+
+    #[test]
+    fn solve_known_system() {
+        let a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let x = linalg::solve(&a, &[5.0, 10.0]);
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_recovers_exact_fit() {
+        // y exactly linear -> OLS must recover coefficients.
+        let x = vec![
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+            vec![2.0, -1.0],
+        ];
+        let beta_true = [3.0, -2.0];
+        let y: Vec<f64> = x.iter().map(|r| r[0] * 3.0 + r[1] * -2.0).collect();
+        let b = ols(&x, &y);
+        assert!(linf(&b, &beta_true) < 1e-10);
+    }
+
+    #[test]
+    fn eigvals_of_diagonal() {
+        let a = vec![
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ];
+        let ev = linalg::eigvals_sym(&a);
+        assert!((ev[0] - 1.0).abs() < 1e-10);
+        assert!((ev[1] - 2.0).abs() < 1e-10);
+        assert!((ev[2] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigvals_match_trace_and_det_2x2() {
+        let a = vec![vec![4.0, 1.0], vec![1.0, 3.0]];
+        let ev = linalg::eigvals_sym(&a);
+        assert!((ev[0] + ev[1] - 7.0).abs() < 1e-10, "trace");
+        assert!((ev[0] * ev[1] - 11.0).abs() < 1e-9, "det");
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = vec![vec![4.0, 2.0], vec![2.0, 3.0]];
+        let l = linalg::cholesky(&a);
+        // L·Lᵀ == A
+        for i in 0..2 {
+            for j in 0..2 {
+                let v: f64 = (0..2).map(|k| l[i][k] * l[j][k]).sum();
+                assert!((v - a[i][j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gd_converges_to_ols() {
+        let (x, y) = toy_data();
+        let truth = ols(&x, &y);
+        let (lmin, lmax) = gram_spectrum(&x);
+        let delta = 2.0 / (lmin + lmax);
+        let path = gd_path(&x, &y, delta, 400);
+        assert!(rms(path.last().unwrap(), &truth) < 1e-8);
+        // Lemma 1: any δ ∈ (0, 2/S) converges; δ beyond diverges.
+        let bad = gd_path(&x, &y, 2.2 / lmax, 200);
+        assert!(rms(bad.last().unwrap(), &truth) > 1.0, "should diverge");
+    }
+
+    #[test]
+    fn cd_converges_to_ols() {
+        let (x, y) = toy_data();
+        let truth = ols(&x, &y);
+        let (lmin, lmax) = gram_spectrum(&x);
+        let path = cd_path(&x, &y, 2.0 / (lmin + lmax), 4 * 400);
+        assert!(rms(path.last().unwrap(), &truth) < 1e-6);
+    }
+
+    #[test]
+    fn nag_beats_gd_at_fixed_iters() {
+        let mut rng = ChaChaRng::from_seed(72);
+        let (x, y) = synth::correlated_regression(&mut rng, 100, 5, 0.7, 0.1);
+        let truth = ols(&x, &y);
+        // NAG's guarantees are for δ = 1/L; compare both methods there.
+        let (_, lmax) = gram_spectrum(&x);
+        let delta = 1.0 / lmax;
+        let k = 25;
+        let gd = gd_path(&x, &y, delta, k);
+        let nag = nag_path(&x, &y, delta, k);
+        let e_gd = rms(gd.last().unwrap(), &truth);
+        let e_nag = rms(nag.last().unwrap(), &truth);
+        assert!(
+            e_nag < e_gd,
+            "unencrypted NAG should beat GD (paper §5.3): {e_nag} vs {e_gd}"
+        );
+    }
+
+    #[test]
+    fn vwt_accelerates_gd() {
+        // Figure 2 right: VWT/GD error ratio < 1.
+        let mut rng = ChaChaRng::from_seed(73);
+        let (x, y) = synth::correlated_regression(&mut rng, 100, 5, 0.1, 0.1);
+        let truth = ols(&x, &y);
+        // VWT damps the oscillatory mode (Lemma 2): with an aggressive
+        // step the dominant eigen-component alternates in sign and the
+        // binomial averaging annihilates it (ratio ≪ 1, paper Fig 2R).
+        let (_, lmax) = gram_spectrum(&x);
+        let path = gd_path(&x, &y, 1.9 / lmax, 10);
+        let vwt = vwt_estimate(&path);
+        let e_vwt = rms(&vwt, &truth);
+        let e_gd = rms(path.last().unwrap(), &truth);
+        assert!(e_vwt < e_gd, "VWT {e_vwt} should beat GD {e_gd}");
+    }
+
+    #[test]
+    fn nag_etas_negative_decreasing() {
+        let etas = nag_etas(10);
+        assert_eq!(etas.len(), 10);
+        assert!(etas[0].abs() < 1e-12, "η₁ = 0");
+        for w in etas.windows(2).skip(1) {
+            assert!(w[1] < w[0], "η decreasing (more momentum)");
+        }
+        assert!(etas.iter().all(|&e| e <= 0.0), "η_k ≤ 0 (paper eq. 19b)");
+    }
+
+    #[test]
+    fn spectral_bound_upper_bounds_radius() {
+        let (x, _) = toy_data();
+        let (_, lmax) = gram_spectrum(&x);
+        let mut prev = f64::INFINITY;
+        for m in [1u32, 2, 4, 8] {
+            let b = spectral_bound(&x, m);
+            assert!(b >= lmax - 1e-6, "B({m}) ≥ S");
+            assert!(b <= prev + 1e-9, "B(m) non-increasing");
+            prev = b;
+        }
+        // §7: B(m) → S(XᵀX)
+        assert!((spectral_bound(&x, 16) - lmax) / lmax < 0.2);
+    }
+
+    #[test]
+    fn ridge_shrinks_norm_and_df() {
+        let (x, y) = toy_data();
+        let b0 = ridge(&x, &y, 0.0);
+        let b30 = ridge(&x, &y, 30.0);
+        let n0: f64 = b0.iter().map(|v| v * v).sum();
+        let n30: f64 = b30.iter().map(|v| v * v).sum();
+        assert!(n30 < n0, "ridge shrinks");
+        assert!((ridge_df(&x, 0.0) - 4.0).abs() < 1e-9, "df(0) = P");
+        assert!(ridge_df(&x, 30.0) < 4.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Inference (§4.3): standard errors of the regression coefficients.
+//!
+//! Homomorphic matrix inversion for `V[β̂] = σ̂²(XᵀX)⁻¹` is intractable,
+//! so the paper proposes the nonparametric bootstrap: resample rows
+//! (resampling indices are public — they carry no information about the
+//! data values) and refit. We provide the fast exact-simulation
+//! bootstrap used for figures/examples, plus the closed-form OLS
+//! standard errors as the reference the bootstrap is validated against.
+
+use crate::fhe::rng::ChaChaRng;
+
+use super::exact::{gd_exact, QuantisedData};
+use super::float_ref::{self, linalg};
+
+/// Closed-form OLS standard errors `√(σ̂²·diag((XᵀX)⁻¹))`.
+pub fn ols_standard_errors(x: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let p = x[0].len();
+    assert!(n > p, "need N > P for σ̂²");
+    let beta = float_ref::ols(x, y);
+    let resid: Vec<f64> = x
+        .iter()
+        .zip(y)
+        .map(|(row, &yi)| yi - row.iter().zip(&beta).map(|(a, b)| a * b).sum::<f64>())
+        .collect();
+    let sigma2 = resid.iter().map(|r| r * r).sum::<f64>() / (n - p) as f64;
+    // diag((XᵀX)⁻¹) via P solves against unit vectors.
+    let g = linalg::gram(x);
+    (0..p)
+        .map(|j| {
+            let mut e = vec![0.0; p];
+            e[j] = 1.0;
+            let col = linalg::solve(&g, &e);
+            (sigma2 * col[j]).sqrt()
+        })
+        .collect()
+}
+
+/// Bootstrap standard errors via the exact encoded-domain GD (the
+/// arithmetic the encrypted run performs). `reps` resamples, `iters`
+/// GD iterations each.
+pub fn bootstrap_se(
+    data: &QuantisedData,
+    nu: u64,
+    iters: usize,
+    reps: usize,
+    rng: &mut ChaChaRng,
+) -> Vec<f64> {
+    let (n, p) = (data.n(), data.p());
+    let mut fits: Vec<Vec<f64>> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let idx: Vec<usize> =
+            (0..n).map(|_| rng.uniform_below(n as u64) as usize).collect();
+        let resampled = QuantisedData {
+            x: idx.iter().map(|&i| data.x[i].clone()).collect(),
+            y: idx.iter().map(|&i| data.y[i]).collect(),
+            phi: data.phi,
+        };
+        fits.push(gd_exact(&resampled, nu, iters).decode_last());
+    }
+    (0..p)
+        .map(|j| {
+            let mean: f64 = fits.iter().map(|f| f[j]).sum::<f64>() / reps as f64;
+            let var: f64 = fits.iter().map(|f| (f[j] - mean).powi(2)).sum::<f64>()
+                / (reps - 1) as f64;
+            var.sqrt()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::els::stepsize::nu_optimal;
+
+    #[test]
+    fn bootstrap_tracks_closed_form() {
+        let mut rng = ChaChaRng::from_seed(241);
+        let (x, y) = synth::gaussian_regression(&mut rng, 120, 3, 0.5);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, yq) = q.dequantised();
+        let closed = ols_standard_errors(&xq, &yq);
+        let nu = nu_optimal(&xq);
+        let boot = bootstrap_se(&q, nu, 40, 60, &mut rng);
+        for j in 0..3 {
+            let ratio = boot[j] / closed[j];
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "bootstrap SE {} vs closed-form {} (j={j})",
+                boot[j],
+                closed[j]
+            );
+        }
+    }
+
+    #[test]
+    fn se_positive_and_scale_with_noise() {
+        let mut rng = ChaChaRng::from_seed(242);
+        let (x, y_lo) = synth::gaussian_regression(&mut rng, 100, 2, 0.1);
+        let se_lo = ols_standard_errors(&x, &y_lo);
+        // Rebuild with larger noise on same X.
+        let y_hi: Vec<f64> =
+            y_lo.iter().map(|&v| v + 2.0 * rng.next_gaussian()).collect();
+        let se_hi = ols_standard_errors(&x, &y_hi);
+        for j in 0..2 {
+            assert!(se_lo[j] > 0.0);
+            assert!(se_hi[j] > se_lo[j]);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Maximum Multiplicative Depth accounting (paper Table 1 and §4.1).
+//!
+//! Two notions are tracked and deliberately kept distinct:
+//!
+//! - **Paper MMD** (Table 1): GD/preconditioned-GD `2K`, GD-VWT `2K+1`,
+//!   NAG `3K`, CD `2KP`. This is the complexity *proxy* every
+//!   complexity-fair figure (2, 4) is plotted against. The paper's
+//!   accounting charges NAG's acceleration step one level per
+//!   iteration (its constants are encoded polynomials whose products
+//!   deepen the evaluated polynomial — footnote 1's degree-based
+//!   definition).
+//! - **Noise depth**: ciphertext×ciphertext multiplications on the
+//!   critical path, which is what actually consumes FV noise budget
+//!   (plaintext-constant multiplications grow noise additively, not
+//!   multiplicatively). GD/NAG: `2K − 1`; CD: `2U − 1` for U updates.
+//!   The parameter planner sizes `q` by this number (plus slack).
+
+use super::encrypted::Accel;
+
+/// Paper Table-1 MMD for `iters` iterations of each algorithm.
+pub fn paper_mmd(accel: Accel, iters: usize) -> u32 {
+    match accel {
+        Accel::None => 2 * iters as u32,
+        Accel::Vwt => 2 * iters as u32 + 1,
+        Accel::Nag => 3 * iters as u32,
+    }
+}
+
+/// Paper MMD for coordinate descent: `2·K·P` (K full sweeps over P
+/// coordinates) — the scalability contrast at the heart of §4.1.
+pub fn paper_mmd_cd(sweeps: usize, p_vars: usize) -> u32 {
+    2 * sweeps as u32 * p_vars as u32
+}
+
+/// Ciphertext-multiplication (noise) depth actually consumed by the
+/// critical path of `iters` GD/NAG iterations.
+pub fn noise_depth(iters: usize) -> u32 {
+    if iters == 0 {
+        0
+    } else {
+        2 * iters as u32 - 1
+    }
+}
+
+/// Noise depth of `updates` CD coordinate updates.
+pub fn noise_depth_cd(updates: usize) -> u32 {
+    if updates == 0 {
+        0
+    } else {
+        2 * updates as u32 - 1
+    }
+}
+
+/// Smallest iteration count whose paper MMD does not exceed `budget` —
+/// used to compare algorithms at *fixed encrypted cost* (Figures 2, 4).
+pub fn iters_within_mmd(accel: Accel, budget: u32) -> usize {
+    match accel {
+        Accel::None => (budget / 2) as usize,
+        Accel::Vwt => (budget.saturating_sub(1) / 2) as usize,
+        Accel::Nag => (budget / 3) as usize,
+    }
+}
+
+/// CD coordinate updates affordable within an MMD budget.
+pub fn cd_updates_within_mmd(budget: u32) -> usize {
+    (budget / 2) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_1_values() {
+        // The exact rows of paper Table 1.
+        for k in 1..=20 {
+            assert_eq!(paper_mmd(Accel::None, k), 2 * k as u32);
+            assert_eq!(paper_mmd(Accel::Vwt, k), 2 * k as u32 + 1);
+            assert_eq!(paper_mmd(Accel::Nag, k), 3 * k as u32);
+        }
+        assert_eq!(paper_mmd_cd(3, 5), 30);
+    }
+
+    #[test]
+    fn cd_grows_with_p_gd_does_not() {
+        // §4.1.2's key scalability claim.
+        let gd_small = paper_mmd(Accel::None, 10);
+        let gd_large = paper_mmd(Accel::None, 10);
+        assert_eq!(gd_small, gd_large, "GD MMD independent of P");
+        assert!(paper_mmd_cd(10, 50) == 10 * paper_mmd_cd(10, 5));
+    }
+
+    #[test]
+    fn fixed_budget_iterations() {
+        // At MMD 12: GD affords 6 iterations, NAG only 4, VWT 5.
+        assert_eq!(iters_within_mmd(Accel::None, 12), 6);
+        assert_eq!(iters_within_mmd(Accel::Nag, 12), 4);
+        assert_eq!(iters_within_mmd(Accel::Vwt, 12), 5);
+        assert_eq!(cd_updates_within_mmd(12), 6);
+    }
+
+    #[test]
+    fn noise_depth_below_paper_mmd() {
+        for k in 1..=10 {
+            assert!(noise_depth(k) <= paper_mmd(Accel::None, k));
+            assert!(noise_depth_cd(k * 3) <= paper_mmd_cd(k, 3));
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Encrypted least squares: the paper's algorithms (§4–§5) in three
+//! interchangeable backends.
+//!
+//! - [`encrypted`] — the real thing: ELS-GD / ELS-GD-VWT / ELS-NAG /
+//!   ELS-CD on FV ciphertexts through a pluggable [`crate::runtime`]
+//!   engine.
+//! - [`exact`] — exact encoded-integer simulation (bit-identical to the
+//!   decryption of the encrypted run; the fast backend for figures).
+//! - [`float_ref`] — f64 reference algorithms + the OLS/RLS truth.
+//! - [`scaling`] — the rescaling constants of eqs. (10), (18), (20).
+//! - [`mmd`] — Table-1 multiplicative-depth accounting.
+//! - [`stepsize`] — Lemma-1 / §7 step-size selection.
+//! - [`predict`] / [`inference`] — §4.2 prediction, §4.3 bootstrap SEs.
+
+pub mod encrypted;
+pub mod exact;
+pub mod float_ref;
+pub mod inference;
+pub mod mmd;
+pub mod model;
+pub mod predict;
+pub mod scaling;
+pub mod stepsize;
+
+pub use encrypted::{decrypt_coefficients, fit, fit_cd, Accel, EncryptedFit, FitConfig};
+pub use exact::QuantisedData;
+pub use model::{encrypt_dataset, EncryptedDataset};

@@ -1,0 +1,115 @@
+//! Encrypted regression datasets: per-value FV ciphertexts of the
+//! quantised design matrix and response (the paper's data layout — one
+//! ciphertext per number).
+
+use crate::fhe::encoding::encode_int;
+use crate::fhe::rng::ChaChaRng;
+use crate::fhe::{Ciphertext, FvContext, PublicKey};
+
+use super::exact::QuantisedData;
+
+/// Encrypted `(X̃, ỹ)`.
+pub struct EncryptedDataset {
+    /// `x[i][j]` encrypts `X̃_ij`.
+    pub x: Vec<Vec<Ciphertext>>,
+    /// `y[i]` encrypts `ỹ_i`.
+    pub y: Vec<Ciphertext>,
+    /// Quantisation exponent φ.
+    pub phi: u32,
+}
+
+impl EncryptedDataset {
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.first().map_or(0, |r| r.len())
+    }
+
+    /// Total ciphertext bytes (the paper's Figure-5 memory metric).
+    pub fn size_bytes(&self) -> usize {
+        self.x
+            .iter()
+            .flatten()
+            .chain(self.y.iter())
+            .map(|c| c.size_bytes())
+            .sum()
+    }
+}
+
+/// Encrypt a quantised dataset under a public key (data-holder side).
+pub fn encrypt_dataset(
+    ctx: &FvContext,
+    pk: &PublicKey,
+    data: &QuantisedData,
+    rng: &mut ChaChaRng,
+) -> EncryptedDataset {
+    let d = ctx.d();
+    let x = data
+        .x
+        .iter()
+        .map(|row| {
+            row.iter()
+                .map(|&v| ctx.encrypt(&encode_int(v, d), pk, rng))
+                .collect()
+        })
+        .collect();
+    let y = data
+        .y
+        .iter()
+        .map(|&v| ctx.encrypt(&encode_int(v, d), pk, rng))
+        .collect();
+    EncryptedDataset { x, y, phi: data.phi }
+}
+
+/// Ridge (§4.4): augment the *quantised* data with `⌊10^φ·√α⌉·e_j` rows
+/// and zero responses, then encrypt. OLS on the augmented ciphertexts
+/// equals RLS on the original data (eq. 14).
+pub fn quantise_ridge_augmented(
+    x: &[Vec<f64>],
+    y: &[f64],
+    alpha: f64,
+    phi: u32,
+) -> QuantisedData {
+    let (xa, ya) = crate::data::standardise::ridge_augment(x, y, alpha);
+    QuantisedData::from_f64(&xa, &ya, phi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::FvParams;
+
+    #[test]
+    fn dataset_shapes_and_decryption() {
+        let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+        let mut rng = ChaChaRng::from_seed(211);
+        let keys = keygen(&ctx, &mut rng);
+        let q = QuantisedData {
+            x: vec![vec![123, -45], vec![-7, 89]],
+            y: vec![100, -200],
+            phi: 2,
+        };
+        let enc = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        assert_eq!(enc.n(), 2);
+        assert_eq!(enc.p(), 2);
+        assert!(enc.size_bytes() > 0);
+        let pt = ctx.decrypt(&enc.x[0][1], &keys.sk);
+        assert_eq!(pt.eval_at_2().to_i128(), Some(-45));
+        let pt = ctx.decrypt(&enc.y[1], &keys.sk);
+        assert_eq!(pt.eval_at_2().to_i128(), Some(-200));
+    }
+
+    #[test]
+    fn ridge_augmentation_rows() {
+        let x = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let y = vec![0.5, -0.5];
+        let q = quantise_ridge_augmented(&x, &y, 9.0, 2);
+        assert_eq!(q.n(), 4); // N + P rows
+        assert_eq!(q.x[2], vec![300, 0]); // √9·10² = 300
+        assert_eq!(q.x[3], vec![0, 300]);
+        assert_eq!(q.y[2], 0);
+    }
+}

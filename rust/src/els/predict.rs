@@ -1,0 +1,99 @@
+//! Encrypted prediction (§4.2): `ỹ* = X̃*ᵀ·β̃^[K]`, a single encrypted
+//! dot product per new observation (+1 MMD), with the common GD scale
+//! factor making rescaling trivial for the key holder.
+
+use crate::fhe::{Ciphertext, FvContext, SecretKey};
+use crate::math::bigint::BigUint;
+use crate::runtime::backend::HeEngine;
+
+use super::encrypted::EncryptedFit;
+
+/// Predict for encrypted new rows `x_new[i][j]` (quantised at the same
+/// φ as the fit). Returns one ciphertext per row.
+pub fn predict(
+    engine: &dyn HeEngine,
+    fit: &EncryptedFit,
+    x_new: &[Vec<Ciphertext>],
+) -> Vec<Ciphertext> {
+    let p = fit.betas.len();
+    let pairs: Vec<(&Ciphertext, &Ciphertext)> = x_new
+        .iter()
+        .flat_map(|row| {
+            assert_eq!(row.len(), p);
+            row.iter().zip(&fit.betas)
+        })
+        .collect();
+    let prods = engine.mul_pairs(&pairs);
+    prods
+        .chunks(p)
+        .map(|chunk| {
+            let mut acc = chunk[0].clone();
+            for c in &chunk[1..] {
+                acc = engine.add(&acc, c);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Divisor for decoded predictions: fit divisor × 10^φ.
+pub fn prediction_divisor(fit: &EncryptedFit) -> BigUint {
+    fit.divisor.mul(&BigUint::pow10(fit.phi))
+}
+
+/// Key-holder decode of predictions.
+pub fn decrypt_predictions(
+    ctx: &FvContext,
+    sk: &SecretKey,
+    fit: &EncryptedFit,
+    preds: &[Ciphertext],
+) -> Vec<f64> {
+    let div = prediction_divisor(fit);
+    preds
+        .iter()
+        .map(|ct| ctx.decrypt(ct, sk).eval_at_2_scaled(&div))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::data::synth;
+    use crate::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+    use crate::els::exact::QuantisedData;
+    use crate::els::float_ref;
+    use crate::els::model::encrypt_dataset;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::{plan, PlanRequest};
+    use crate::fhe::rng::ChaChaRng;
+    use crate::fhe::FvContext;
+    use crate::runtime::backend::NativeEngine;
+
+    #[test]
+    fn encrypted_prediction_matches_decoded_dot_product() {
+        let mut rng = ChaChaRng::from_seed(231);
+        let (x, y) = synth::gaussian_regression(&mut rng, 8, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let nu = crate::els::stepsize::nu_optimal(&xq);
+        let params =
+            plan(&PlanRequest::gd(8, 2, 2, 2, nu).with_extra_depth(1)).unwrap();
+        let ctx = FvContext::new(params);
+        let keys = keygen(&ctx, &mut rng);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+        let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        let f = fit(&engine, &data, &FitConfig::gd(2, nu));
+        // Predict on the first two training rows (already encrypted).
+        let preds = predict(&engine, &f, &data.x[..2].to_vec());
+        let dec = decrypt_predictions(&ctx, &keys.sk, &f, &preds);
+        // Expected: X_quantised · β_decoded.
+        let betas = decrypt_coefficients(&ctx, &keys.sk, &f);
+        for (i, &pred) in dec.iter().enumerate() {
+            let expect: f64 = xq[i].iter().zip(&betas).map(|(a, b)| a * b).sum();
+            assert!((pred - expect).abs() < 1e-9, "row {i}: {pred} vs {expect}");
+        }
+        let _ = float_ref::ols(&xq, &q.dequantised().1);
+    }
+}

@@ -1,0 +1,93 @@
+//! Step-size selection (Lemma 1, §5.1, §7).
+//!
+//! The data holder — who sees the plaintext — chooses the integer
+//! inverse step size ν = 1/δ before encryption:
+//!
+//! - optimal: `δ* = 2/(λ_max + λ_min)` of `XᵀX` (minimises the spectral
+//!   radius of the iteration matrix), so `ν* = ⌈(λ_max + λ_min)/2⌉`;
+//! - without an eigensolver: §7's bound `B(m) = ‖(XᵀX)^m‖^{1/m} ≥ S`,
+//!   giving the safe choice `ν = ⌈B(m)⌉` (since `1/B ≤ 1/λ_max < 2/S`).
+//! - preconditioned (§5.1): with standardised columns `D ≈ N·I`, the
+//!   effective step is `δ/N` — equivalently scaling ν by N.
+
+use super::float_ref::{gram_spectrum, spectral_bound};
+
+/// Optimal integer ν from the exact spectrum.
+pub fn nu_optimal(x: &[Vec<f64>]) -> u64 {
+    let (lmin, lmax) = gram_spectrum(x);
+    ((lmax + lmin) / 2.0).ceil().max(1.0) as u64
+}
+
+/// Safe ν from the §7 norm bound with power m.
+pub fn nu_from_bound(x: &[Vec<f64>], m: u32) -> u64 {
+    spectral_bound(x, m).ceil().max(1.0) as u64
+}
+
+/// A deliberately conservative (slow) ν — used by Figure 1 to show the
+/// unpreconditioned zig-zag: step near the stability boundary of the
+/// *largest* eigenvalue only.
+pub fn nu_naive(x: &[Vec<f64>]) -> u64 {
+    let (_, lmax) = gram_spectrum(x);
+    (lmax / 1.9).ceil().max(1.0) as u64
+}
+
+/// Lemma 1 convergence check: δ = 1/ν must lie in (0, 2/S(XᵀX)).
+pub fn converges(x: &[Vec<f64>], nu: u64) -> bool {
+    let (_, lmax) = gram_spectrum(x);
+    (nu as f64) > lmax / 2.0
+}
+
+/// Optimal spectral radius `S* = (λ_max − λ_min)/(λ_max + λ_min)`
+/// (rate of linear convergence at δ*).
+pub fn optimal_radius(x: &[Vec<f64>]) -> f64 {
+    let (lmin, lmax) = gram_spectrum(x);
+    (lmax - lmin) / (lmax + lmin)
+}
+
+/// Iterations needed to shrink the error by a factor e at the optimal
+/// step (reciprocal average convergence rate; supplementary Figure 1).
+pub fn iters_per_efold(x: &[Vec<f64>]) -> f64 {
+    let r = optimal_radius(x);
+    if r <= 0.0 {
+        1.0
+    } else {
+        -1.0 / r.ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::els::float_ref::{gd_path, ols, rms};
+    use crate::fhe::rng::ChaChaRng;
+
+    #[test]
+    fn optimal_nu_converges_fast() {
+        let mut rng = ChaChaRng::from_seed(221);
+        let (x, y) = synth::gaussian_regression(&mut rng, 80, 4, 0.2);
+        let nu = nu_optimal(&x);
+        assert!(converges(&x, nu));
+        let truth = ols(&x, &y);
+        let path = gd_path(&x, &y, 1.0 / nu as f64, 200);
+        assert!(rms(path.last().unwrap(), &truth) < 1e-6);
+    }
+
+    #[test]
+    fn bound_nu_is_safe_but_slower() {
+        let mut rng = ChaChaRng::from_seed(222);
+        let (x, _) = synth::correlated_regression(&mut rng, 80, 4, 0.5, 0.2);
+        let nu_b = nu_from_bound(&x, 4);
+        let nu_o = nu_optimal(&x);
+        assert!(nu_b >= nu_o, "bound-based step can only be smaller");
+        assert!(converges(&x, nu_b));
+    }
+
+    #[test]
+    fn efold_grows_with_correlation() {
+        let mut rng = ChaChaRng::from_seed(223);
+        let (x_lo, _) = synth::correlated_regression(&mut rng, 200, 5, 0.1, 0.2);
+        let (x_hi, _) = synth::correlated_regression(&mut rng, 200, 5, 0.8, 0.2);
+        assert!(iters_per_efold(&x_hi) > iters_per_efold(&x_lo));
+    }
+}

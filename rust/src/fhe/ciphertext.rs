@@ -1,0 +1,33 @@
+//! FV ciphertexts.
+
+use crate::math::poly::RnsPoly;
+
+/// An FV ciphertext: 2 polynomials (3 transiently, before
+/// relinearisation), always stored in coefficient representation over
+/// the Q basis, plus depth metadata used by admission control and the
+/// paper's MMD accounting.
+#[derive(Clone, Debug)]
+pub struct Ciphertext {
+    pub polys: Vec<RnsPoly>,
+    /// Ciphertext-multiplication depth (noise levels consumed).
+    pub ct_depth: u32,
+}
+
+impl Ciphertext {
+    pub fn new(polys: Vec<RnsPoly>) -> Self {
+        Ciphertext { polys, ct_depth: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.polys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.polys.is_empty()
+    }
+
+    /// Heap bytes (the paper's Figure-5 memory metric).
+    pub fn size_bytes(&self) -> usize {
+        self.polys.iter().map(|p| p.size_bytes()).sum()
+    }
+}

@@ -1,0 +1,209 @@
+//! The FV evaluation context: precomputed rings, moduli and conversions.
+
+use std::sync::Arc;
+
+use crate::math::bigint::{BigInt, BigUint};
+use crate::math::poly::{RingContext, RnsPoly};
+
+use super::params::FvParams;
+use super::plaintext::Plaintext;
+
+/// Precomputation shared by every key, ciphertext and operation under
+/// one parameter set.
+pub struct FvContext {
+    pub params: FvParams,
+    /// Ring over the ciphertext modulus basis Q.
+    pub ring_q: Arc<RingContext>,
+    /// Ring over the joint tensor basis Q ∪ E (used only inside ⊗).
+    pub ring_big: Arc<RingContext>,
+    /// q = Π Q-primes.
+    pub q: BigUint,
+    /// Plaintext modulus t.
+    pub t: BigUint,
+    /// Δ = ⌊q/t⌋.
+    pub delta: BigUint,
+    /// Δ mod each Q-prime (fresh-encryption fast path).
+    pub delta_rns: Vec<u64>,
+    /// Relinearisation digit count ℓ and base w = 2^w_bits.
+    pub relin_ndigits: usize,
+    pub relin_w_bits: u32,
+    /// `log2 t` when t is a power of two (always true for planned
+    /// parameter sets): turns the hot `t·v` big-multiply of the BFV
+    /// scale-and-round into a shift.
+    t_shift: Option<usize>,
+}
+
+impl FvContext {
+    pub fn new(params: FvParams) -> Arc<Self> {
+        let q_primes = params.q_primes();
+        let mut big_primes = q_primes.clone();
+        big_primes.extend(params.ext_primes());
+        let ring_q = RingContext::new(params.d, q_primes.clone());
+        let ring_big = RingContext::new(params.d, big_primes);
+        let q = ring_q.basis.modulus.clone();
+        let t = params.t.clone();
+        let delta = q.div_rem(&t).0;
+        let delta_rns = q_primes.iter().map(|&p| delta.mod_u64(p)).collect();
+        let relin_ndigits = params.relin_ndigits();
+        let relin_w_bits = params.relin_w_bits;
+        let t_shift = if t.is_power_of_two() { Some(t.bit_len() - 1) } else { None };
+        Arc::new(FvContext {
+            params,
+            ring_q,
+            ring_big,
+            q,
+            t,
+            delta,
+            delta_rns,
+            relin_ndigits,
+            relin_w_bits,
+            t_shift,
+        })
+    }
+
+    /// `t·v` via shift when t = 2^k (hot path of ⊗ and decryption).
+    #[inline]
+    fn t_times(&self, v: &crate::math::bigint::BigUint) -> crate::math::bigint::BigUint {
+        match self.t_shift {
+            Some(k) => v.shl_bits(k),
+            None => v.mul(&self.t),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.params.d
+    }
+
+    /// Reduce a plaintext polynomial into Q-basis residues.
+    pub fn pt_to_rns(&self, pt: &Plaintext) -> RnsPoly {
+        assert!(pt.coeffs.len() <= self.d(), "plaintext longer than ring degree");
+        let mut out = self.ring_q.zero();
+        for (l, &p) in self.ring_q.basis.primes.iter().enumerate() {
+            for (i, c) in pt.coeffs.iter().enumerate() {
+                out.planes[l][i] = c.mod_u64(p);
+            }
+        }
+        out
+    }
+
+    /// `Δ·m mod q` in residue form (valid because `p_i | q` makes
+    /// per-plane scaling exact).
+    pub fn delta_times_pt(&self, pt: &Plaintext) -> RnsPoly {
+        let m = self.pt_to_rns(pt);
+        self.ring_q.mul_scalar_rns(&m, &self.delta_rns)
+    }
+
+    /// Lift every coefficient of a coefficient-form polynomial to its
+    /// symmetric big-integer representative.
+    pub fn lift_signed_poly(ring: &RingContext, poly: &RnsPoly) -> Vec<BigInt> {
+        assert_eq!(poly.rep, crate::math::poly::Rep::Coeff);
+        let mut residues = vec![0u64; ring.nlimbs()];
+        (0..ring.d)
+            .map(|i| {
+                for l in 0..ring.nlimbs() {
+                    residues[l] = poly.planes[l][i];
+                }
+                ring.basis.lift_signed(&residues)
+            })
+            .collect()
+    }
+
+    /// Move a polynomial from the Q basis into the joint Q∪E basis
+    /// (exact CRT lift per coefficient).
+    pub fn q_to_big(&self, poly: &RnsPoly) -> RnsPoly {
+        let coeffs = Self::lift_signed_poly(&self.ring_q, poly);
+        let mut out = self.ring_big.zero();
+        for (i, v) in coeffs.iter().enumerate() {
+            for (l, &p) in self.ring_big.basis.primes.iter().enumerate() {
+                out.planes[l][i] = v.mod_u64(p);
+            }
+        }
+        out
+    }
+
+    /// BFV scale-and-round: given a tensor-product polynomial over the
+    /// joint basis, compute `⌊t·v/q⌉ mod q` back in the Q basis.
+    pub fn scale_round_to_q(&self, poly: &RnsPoly) -> RnsPoly {
+        let coeffs = Self::lift_signed_poly(&self.ring_big, poly);
+        let mut out = self.ring_q.zero();
+        for (i, v) in coeffs.iter().enumerate() {
+            let scaled = BigInt { neg: v.neg, mag: self.t_times(&v.mag) }.div_round(&self.q);
+            for (l, &p) in self.ring_q.basis.primes.iter().enumerate() {
+                out.planes[l][i] = scaled.mod_u64(p);
+            }
+        }
+        out
+    }
+
+    /// Round `t·v/q` for a Q-basis polynomial and reduce symmetric mod t
+    /// — the decryption post-processing.
+    pub fn decrypt_scale(&self, poly: &RnsPoly) -> Plaintext {
+        let coeffs = Self::lift_signed_poly(&self.ring_q, poly);
+        let mut pt = Plaintext {
+            coeffs: coeffs
+                .into_iter()
+                .map(|v| {
+                    BigInt { neg: v.neg, mag: self.t_times(&v.mag) }.div_round(&self.q)
+                })
+                .collect(),
+        };
+        pt.reduce_sym(&self.t);
+        pt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::params::FvParams;
+    use crate::fhe::plaintext::Plaintext;
+
+    fn ctx() -> Arc<FvContext> {
+        FvContext::new(FvParams::custom(256, 3, 24))
+    }
+
+    #[test]
+    fn delta_definition() {
+        let c = ctx();
+        // Δ·t ≤ q < (Δ+1)·t
+        let dt = c.delta.mul(&c.t);
+        assert!(dt.cmp_big(&c.q) != std::cmp::Ordering::Greater);
+        assert!(c.delta.add_u64(1).mul(&c.t).cmp_big(&c.q) == std::cmp::Ordering::Greater);
+    }
+
+    #[test]
+    fn pt_to_rns_and_back() {
+        let c = ctx();
+        let pt = Plaintext::from_signed(c.d(), &[1, -1, 0, 5, -7]);
+        let poly = c.pt_to_rns(&pt);
+        let lifted = FvContext::lift_signed_poly(&c.ring_q, &poly);
+        assert_eq!(lifted[0].to_i128(), Some(1));
+        assert_eq!(lifted[1].to_i128(), Some(-1));
+        assert_eq!(lifted[3].to_i128(), Some(5));
+        assert_eq!(lifted[4].to_i128(), Some(-7));
+    }
+
+    #[test]
+    fn q_to_big_preserves_values() {
+        let c = ctx();
+        let pt = Plaintext::from_signed(c.d(), &[3, -4, 123456]);
+        let poly = c.pt_to_rns(&pt);
+        let big = c.q_to_big(&poly);
+        let lifted = FvContext::lift_signed_poly(&c.ring_big, &big);
+        assert_eq!(lifted[0].to_i128(), Some(3));
+        assert_eq!(lifted[1].to_i128(), Some(-4));
+        assert_eq!(lifted[2].to_i128(), Some(123456));
+    }
+
+    #[test]
+    fn decrypt_scale_recovers_delta_multiples() {
+        // v = Δ·m (noise-free) must decode to exactly m.
+        let c = ctx();
+        let pt = Plaintext::from_signed(c.d(), &[1, 0, -1, 9, -13]);
+        let v = c.delta_times_pt(&pt);
+        let out = c.decrypt_scale(&v);
+        for i in 0..8 {
+            assert_eq!(out.coeffs[i].to_i128(), pt.coeffs[i].to_i128(), "coeff {i}");
+        }
+    }
+}

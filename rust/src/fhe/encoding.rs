@@ -1,0 +1,153 @@
+//! §3.1 data representation and encoding.
+//!
+//! Real data is quantised to integers by `ż = ⌊10^φ·z⌉` and each integer
+//! is encoded as a signed-binary polynomial `m(x)` with coefficients in
+//! {-1, 0, 1} such that `m(2) = ż` (§4.5). Decoding evaluates at `x = 2`
+//! and divides by the algorithm's known global scale factor.
+
+use crate::math::bigint::{BigInt, BigUint};
+
+use super::plaintext::Plaintext;
+
+/// Quantise a real value to `⌊10^φ·z⌉`.
+pub fn quantize(z: f64, phi: u32) -> i64 {
+    let scaled = z * 10f64.powi(phi as i32);
+    scaled.round() as i64
+}
+
+/// Inverse of [`quantize`] (the value the algorithm actually sees).
+pub fn dequantize(zq: i64, phi: u32) -> f64 {
+    zq as f64 / 10f64.powi(phi as i32)
+}
+
+/// Signed-binary coefficients of an integer: `Σ c_i 2^i = v`,
+/// `c_i ∈ {-1, 0, 1}` (plain binary of |v| with the sign distributed).
+pub fn int_to_signed_binary(v: i64) -> Vec<i64> {
+    let neg = v < 0;
+    let mut mag = v.unsigned_abs();
+    let mut out = Vec::new();
+    while mag > 0 {
+        let bit = (mag & 1) as i64;
+        out.push(if neg { -bit } else { bit });
+        mag >>= 1;
+    }
+    out
+}
+
+/// Encode an already-quantised integer as a plaintext polynomial.
+pub fn encode_int(v: i64, d: usize) -> Plaintext {
+    let coeffs = int_to_signed_binary(v);
+    assert!(coeffs.len() <= d, "encoded integer exceeds ring degree");
+    Plaintext::from_signed(d, &coeffs)
+}
+
+/// Encode a real value: quantise then binary-decompose.
+pub fn encode_value(z: f64, phi: u32, d: usize) -> Plaintext {
+    encode_int(quantize(z, phi), d)
+}
+
+/// Encode a non-negative big constant (the pre-groupable rescaling
+/// factors like `10^{kφ}·ν̃^{k-1}`, which can exceed u64).
+pub fn encode_biguint(v: &BigUint, d: usize) -> Plaintext {
+    let bits = v.bit_len();
+    assert!(bits <= d, "constant exceeds ring degree");
+    let mut coeffs = vec![BigInt::zero(); d];
+    for (i, c) in coeffs.iter_mut().enumerate().take(bits) {
+        if v.bit(i) {
+            *c = BigInt::from_i64(1);
+        }
+    }
+    Plaintext { coeffs }
+}
+
+/// Encode a signed big constant.
+pub fn encode_bigint(v: &BigInt, d: usize) -> Plaintext {
+    let mut pt = encode_biguint(&v.mag, d);
+    if v.neg {
+        for c in pt.coeffs.iter_mut() {
+            *c = c.neg_value();
+        }
+    }
+    pt
+}
+
+/// Decode: evaluate the message at 2 and divide by the global scale.
+pub fn decode(pt: &Plaintext, scale: &BigUint) -> f64 {
+    pt.eval_at_2_scaled(scale)
+}
+
+/// Decode an integer exactly (no scale division).
+pub fn decode_exact(pt: &Plaintext) -> BigInt {
+    pt.eval_at_2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, PropRunner};
+
+    #[test]
+    fn quantize_examples() {
+        assert_eq!(quantize(1.234, 2), 123);
+        assert_eq!(quantize(1.235, 2), 124); // round half away handled by f64 round
+        assert_eq!(quantize(-0.555, 2), -56);
+        assert_eq!(quantize(0.0, 2), 0);
+        assert_eq!(quantize(3.0, 0), 3);
+    }
+
+    #[test]
+    fn encode_decode_int_roundtrip() {
+        let mut run = PropRunner::new("encoding_int_roundtrip", 500);
+        run.run(|rng| {
+            let v = gen::int_in(rng, -1_000_000_000, 1_000_000_000);
+            let pt = encode_int(v, 64);
+            assert_eq!(decode_exact(&pt).to_i128(), Some(v as i128));
+            // coefficients really are in {-1, 0, 1} and share v's sign
+            for c in &pt.coeffs {
+                assert!(c.mag.to_u64().unwrap_or(2) <= 1);
+            }
+        });
+    }
+
+    #[test]
+    fn encode_value_quantisation_error() {
+        let mut run = PropRunner::new("encoding_value", 300);
+        run.run(|rng| {
+            let z = gen::f64_in(rng, -100.0, 100.0);
+            let phi = 2;
+            let pt = encode_value(z, phi, 64);
+            let back =
+                decode(&pt, &BigUint::from_u64(100)); // scale 10^phi
+            assert!((back - z).abs() <= 0.5 / 100.0 + 1e-12, "z={z} back={back}");
+        });
+    }
+
+    #[test]
+    fn encode_biguint_large_constant() {
+        let v = BigUint::pow10(30); // far beyond u64
+        let pt = encode_biguint(&v, 256);
+        let val = decode_exact(&pt);
+        assert!(!val.neg);
+        assert_eq!(val.mag.to_decimal(), v.to_decimal());
+    }
+
+    #[test]
+    fn encode_bigint_negative() {
+        let v = BigInt::from_i64(-123456789);
+        let pt = encode_bigint(&v, 64);
+        assert_eq!(decode_exact(&pt).to_i128(), Some(-123456789));
+    }
+
+    #[test]
+    fn degree_is_bit_length() {
+        let pt = encode_int(1 << 20, 64);
+        assert_eq!(pt.degree(), 20);
+        assert_eq!(encode_int(0, 16).degree(), -1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds ring degree")]
+    fn overflow_degree_panics() {
+        let _ = encode_int(i64::MAX, 8);
+    }
+}

@@ -1,0 +1,167 @@
+//! Key generation: secret, public and relinearisation keys.
+
+use crate::math::poly::RnsPoly;
+
+use super::context::FvContext;
+use super::rng::ChaChaRng;
+use super::sampler::{sample_error, sample_ternary};
+
+/// Ternary RLWE secret.
+#[derive(Clone)]
+pub struct SecretKey {
+    /// s in coefficient representation (Q basis).
+    pub s: RnsPoly,
+    /// s in NTT representation (hot path for decryption).
+    pub s_ntt: RnsPoly,
+    /// s² in NTT representation (decrypting 3-component ciphertexts).
+    pub s2_ntt: RnsPoly,
+}
+
+/// Standard RLWE public key `(b, a)` with `b = -(a·s + e)`.
+#[derive(Clone)]
+pub struct PublicKey {
+    pub b_ntt: RnsPoly,
+    pub a_ntt: RnsPoly,
+}
+
+/// FV-v1 relinearisation key: for each digit j,
+/// `(b_j, a_j)` with `b_j = -(a_j·s + e_j) + w^j·s²  (mod q)`.
+#[derive(Clone)]
+pub struct RelinKey {
+    pub b_ntt: Vec<RnsPoly>,
+    pub a_ntt: Vec<RnsPoly>,
+}
+
+/// All keys for one party.
+pub struct KeySet {
+    pub sk: SecretKey,
+    pub pk: PublicKey,
+    pub rk: RelinKey,
+}
+
+/// Generate a full key set.
+pub fn keygen(ctx: &FvContext, rng: &mut ChaChaRng) -> KeySet {
+    let ring = &ctx.ring_q;
+
+    // Secret.
+    let s = sample_ternary(ring, rng);
+    let mut s_ntt = s.clone();
+    ring.ntt_forward(&mut s_ntt);
+    let s2_ntt = ring.mul_ntt(&s_ntt, &s_ntt);
+
+    // Public key: a ← U(R_q), e ← χ, b = -(a·s + e).
+    let a = ring.sample_uniform(rng);
+    let mut a_ntt = a.clone();
+    ring.ntt_forward(&mut a_ntt);
+    let e = sample_error(ring, rng, ctx.params.cbd_k);
+    let mut as_prod = ring.mul_ntt(&a_ntt, &s_ntt);
+    ring.ntt_inverse(&mut as_prod);
+    let b = ring.neg(&ring.add(&as_prod, &e));
+    let mut b_ntt = b;
+    ring.ntt_forward(&mut b_ntt);
+    let pk = PublicKey { b_ntt, a_ntt };
+
+    // Relinearisation keys over base-w digits of q.
+    let mut rb = Vec::with_capacity(ctx.relin_ndigits);
+    let mut ra = Vec::with_capacity(ctx.relin_ndigits);
+    // w^j mod each prime, iteratively.
+    let primes = &ring.basis.primes;
+    let mut wj_rns: Vec<u64> = vec![1; primes.len()];
+    let w_mod: Vec<u64> = primes
+        .iter()
+        .map(|&p| {
+            // w = 2^w_bits mod p
+            crate::math::modarith::powmod(2, ctx.relin_w_bits as u64, p)
+        })
+        .collect();
+    for _j in 0..ctx.relin_ndigits {
+        let aj = ring.sample_uniform(rng);
+        let mut aj_ntt = aj.clone();
+        ring.ntt_forward(&mut aj_ntt);
+        let ej = sample_error(ring, rng, ctx.params.cbd_k);
+        let mut ajs = ring.mul_ntt(&aj_ntt, &s_ntt);
+        ring.ntt_inverse(&mut ajs);
+        // w^j·s² in coefficient form.
+        let mut wjs2 = ring.mul_scalar_rns(&s2_ntt, &wj_rns);
+        ring.ntt_inverse(&mut wjs2);
+        let bj = ring.add(&ring.neg(&ring.add(&ajs, &ej)), &wjs2);
+        let mut bj_ntt = bj;
+        ring.ntt_forward(&mut bj_ntt);
+        rb.push(bj_ntt);
+        ra.push(aj_ntt);
+        for (l, &p) in primes.iter().enumerate() {
+            wj_rns[l] = crate::math::modarith::mulmod(wj_rns[l], w_mod[l], p);
+        }
+    }
+
+    KeySet { sk: SecretKey { s, s_ntt, s2_ntt }, pk, rk: RelinKey { b_ntt: rb, a_ntt: ra } }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::context::FvContext;
+    use crate::fhe::params::FvParams;
+    use crate::math::modarith::center;
+
+    #[test]
+    fn public_key_is_rlwe_sample() {
+        // b + a·s = -e must have tiny coefficients.
+        let ctx = FvContext::new(FvParams::custom(256, 3, 20));
+        let mut rng = ChaChaRng::from_seed(31);
+        let keys = keygen(&ctx, &mut rng);
+        let ring = &ctx.ring_q;
+        let sum_ntt = {
+            let prod = ring.mul_ntt(&keys.pk.a_ntt, &keys.sk.s_ntt);
+            ring.add(&keys.pk.b_ntt, &prod)
+        };
+        let mut sum = sum_ntt;
+        ring.ntt_inverse(&mut sum);
+        let bound = ctx.params.cbd_k as i64;
+        for (l, &p) in ring.basis.primes.iter().enumerate() {
+            for &v in &sum.planes[l] {
+                assert!(center(v, p).abs() <= bound, "pk residual too large");
+            }
+        }
+    }
+
+    #[test]
+    fn relin_key_count_matches_digits() {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(32);
+        let keys = keygen(&ctx, &mut rng);
+        assert_eq!(keys.rk.b_ntt.len(), ctx.relin_ndigits);
+        assert_eq!(keys.rk.a_ntt.len(), ctx.relin_ndigits);
+        assert!(ctx.relin_ndigits >= ctx.q.bit_len() / ctx.relin_w_bits as usize);
+    }
+
+    #[test]
+    fn relin_key_encodes_w_powers_of_s2() {
+        // b_j + a_j·s - w^j·s² = -e_j (small).
+        let ctx = FvContext::new(FvParams::custom(256, 3, 20));
+        let mut rng = ChaChaRng::from_seed(33);
+        let keys = keygen(&ctx, &mut rng);
+        let ring = &ctx.ring_q;
+        for j in [0usize, ctx.relin_ndigits - 1] {
+            let prod = ring.mul_ntt(&keys.rk.a_ntt[j], &keys.sk.s_ntt);
+            // w^j mod each prime
+            let wj: Vec<u64> = ring
+                .basis
+                .primes
+                .iter()
+                .map(|&p| {
+                    crate::math::modarith::powmod(2, (ctx.relin_w_bits as u64) * j as u64, p)
+                })
+                .collect();
+            let wjs2 = ring.mul_scalar_rns(&keys.sk.s2_ntt, &wj);
+            let mut res = ring.sub(&ring.add(&keys.rk.b_ntt[j], &prod), &wjs2);
+            ring.ntt_inverse(&mut res);
+            let bound = ctx.params.cbd_k as i64;
+            for (l, &p) in ring.basis.primes.iter().enumerate() {
+                for &v in &res.planes[l] {
+                    assert!(center(v, p).abs() <= bound, "relin digit {j} malformed");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! The Fan–Vercauteren (FV/BFV) fully homomorphic encryption scheme,
+//! implemented from scratch (the paper used the authors'
+//! `HomomorphicEncryption` R package; none of its stack is available
+//! offline, so this is a complete substrate reimplementation).
+//!
+//! Structure:
+//! - [`rng`] / [`sampler`] — ChaCha20 stream + RLWE samplers.
+//! - [`params`] — §4.5 parameter selection: Lemma 3 growth bounds,
+//!   Lindner–Peikert security, noise-depth budgeting.
+//! - [`context`] — precomputed rings/moduli and basis conversions.
+//! - [`keys`] — secret/public/relinearisation key generation.
+//! - [`plaintext`] / [`encoding`] — message ring and §3.1 encoding.
+//! - [`ciphertext`] / [`ops`] — ⊕, ⊗, plaintext ops, relinearisation.
+//! - [`noise`] — exact invariant-noise measurement (diagnostics).
+
+pub mod ciphertext;
+pub mod context;
+pub mod encoding;
+pub mod keys;
+pub mod noise;
+pub mod ops;
+pub mod params;
+pub mod plaintext;
+pub mod rng;
+pub mod sampler;
+
+pub use ciphertext::Ciphertext;
+pub use context::FvContext;
+pub use keys::{keygen, KeySet, PublicKey, RelinKey, SecretKey};
+pub use params::{plan, Algo, FvParams, PlanRequest, SecurityProfile};
+pub use plaintext::Plaintext;

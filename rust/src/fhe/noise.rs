@@ -1,0 +1,71 @@
+//! Exact noise measurement (requires the secret key; test/diagnostic
+//! tool and the empirical validator for the §4.5 parameter planner).
+//!
+//! Uses the *invariant noise* convention: for phase
+//! `v = [c₀ + c₁s]_q = Δm + e`, the quantity `[t·v]_q` equals
+//! `t·e − (q mod t)·m`, whose ∞-norm must stay below `q/2` for correct
+//! decryption. The budget is `log2(q) − log2(2·‖[t·v]_q‖∞)` bits.
+
+use super::ciphertext::Ciphertext;
+use super::context::FvContext;
+use super::keys::SecretKey;
+
+/// Remaining noise budget in bits (≤ 0 means decryption may fail).
+pub fn noise_budget_bits(ctx: &FvContext, ct: &Ciphertext, sk: &SecretKey) -> f64 {
+    let v = ctx.raw_phase(ct, sk);
+    let coeffs = FvContext::lift_signed_poly(&ctx.ring_q, &v);
+    let mut max_bits = 0usize;
+    for c in coeffs {
+        // [t·v]_q symmetric
+        let tv = crate::math::bigint::BigInt { neg: c.neg, mag: c.mag.mul(&ctx.t) };
+        let r = tv.rem_euclid_big(&ctx.q);
+        let sym = if r.cmp_big(&ctx.q.shr_bits(1)) == std::cmp::Ordering::Greater {
+            ctx.q.sub(&r)
+        } else {
+            r
+        };
+        max_bits = max_bits.max(sym.bit_len());
+    }
+    ctx.q.bit_len() as f64 - 1.0 - max_bits as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::FvParams;
+    use crate::fhe::plaintext::Plaintext;
+    use crate::fhe::rng::ChaChaRng;
+
+    #[test]
+    fn budget_decreases_monotonically() {
+        let ctx = FvContext::new(FvParams::custom(512, 5, 16));
+        let mut rng = ChaChaRng::from_seed(61);
+        let keys = keygen(&ctx, &mut rng);
+        let m = Plaintext::from_signed(ctx.d(), &[0, 1, 1]);
+        let fresh = ctx.encrypt(&m, &keys.pk, &mut rng);
+        let b0 = noise_budget_bits(&ctx, &fresh, &keys.sk);
+        let m1 = ctx.mul_ct(&fresh, &fresh, &keys.rk);
+        let b1 = noise_budget_bits(&ctx, &m1, &keys.sk);
+        let m2 = ctx.mul_ct(&m1, &fresh, &keys.rk);
+        let b2 = noise_budget_bits(&ctx, &m2, &keys.sk);
+        assert!(b0 > b1 && b1 > b2, "budgets {b0} {b1} {b2}");
+        assert!(b2 > 0.0, "depth-2 chain should still decrypt");
+    }
+
+    #[test]
+    fn addition_costs_little() {
+        let ctx = FvContext::new(FvParams::custom(256, 3, 20));
+        let mut rng = ChaChaRng::from_seed(62);
+        let keys = keygen(&ctx, &mut rng);
+        let m = Plaintext::from_signed(ctx.d(), &[1]);
+        let c = ctx.encrypt(&m, &keys.pk, &mut rng);
+        let b0 = noise_budget_bits(&ctx, &c, &keys.sk);
+        let mut acc = c.clone();
+        for _ in 0..16 {
+            acc = ctx.add_ct(&acc, &c);
+        }
+        let b1 = noise_budget_bits(&ctx, &acc, &keys.sk);
+        assert!(b0 - b1 < 6.0, "16 additions cost {} bits", b0 - b1);
+    }
+}

@@ -1,0 +1,390 @@
+//! Homomorphic operations: encryption, decryption, ⊕, ⊗, plaintext ops
+//! and relinearisation (textbook FV, RNS ciphertexts, exact bigint
+//! scale-and-round).
+
+use crate::math::poly::{Rep, RnsPoly};
+
+use super::ciphertext::Ciphertext;
+use super::context::FvContext;
+use super::keys::{PublicKey, RelinKey, SecretKey};
+use super::plaintext::Plaintext;
+use super::rng::ChaChaRng;
+use super::sampler::{sample_error, sample_ternary};
+
+impl FvContext {
+    /// Public-key encryption: `(Δm + b·u + e₁, a·u + e₂)`.
+    pub fn encrypt(&self, pt: &Plaintext, pk: &PublicKey, rng: &mut ChaChaRng) -> Ciphertext {
+        let ring = &self.ring_q;
+        let mut u_ntt = sample_ternary(ring, rng);
+        ring.ntt_forward(&mut u_ntt);
+        let e1 = sample_error(ring, rng, self.params.cbd_k);
+        let e2 = sample_error(ring, rng, self.params.cbd_k);
+        let mut c0 = ring.mul_ntt(&pk.b_ntt, &u_ntt);
+        ring.ntt_inverse(&mut c0);
+        ring.add_assign(&mut c0, &e1);
+        ring.add_assign(&mut c0, &self.delta_times_pt(pt));
+        let mut c1 = ring.mul_ntt(&pk.a_ntt, &u_ntt);
+        ring.ntt_inverse(&mut c1);
+        ring.add_assign(&mut c1, &e2);
+        Ciphertext::new(vec![c0, c1])
+    }
+
+    /// Secret-key (symmetric) encryption: `(Δm - (a·s + e), a)`.
+    pub fn encrypt_sym(&self, pt: &Plaintext, sk: &SecretKey, rng: &mut ChaChaRng) -> Ciphertext {
+        let ring = &self.ring_q;
+        let a = ring.sample_uniform(rng);
+        let mut a_ntt = a.clone();
+        ring.ntt_forward(&mut a_ntt);
+        let e = sample_error(ring, rng, self.params.cbd_k);
+        let mut as_prod = ring.mul_ntt(&a_ntt, &sk.s_ntt);
+        ring.ntt_inverse(&mut as_prod);
+        let mut c0 = self.delta_times_pt(pt);
+        c0 = ring.sub(&c0, &ring.add(&as_prod, &e));
+        Ciphertext::new(vec![c0, a])
+    }
+
+    /// Decryption: `⌊t·[c₀ + c₁s (+ c₂s²)]_q / q⌉ mod t`.
+    pub fn decrypt(&self, ct: &Ciphertext, sk: &SecretKey) -> Plaintext {
+        self.decrypt_scale(&self.raw_phase(ct, sk))
+    }
+
+    /// `[c₀ + c₁s (+ c₂s²)]_q` — the decryption phase polynomial (also
+    /// used by the noise meter).
+    pub fn raw_phase(&self, ct: &Ciphertext, sk: &SecretKey) -> RnsPoly {
+        let ring = &self.ring_q;
+        assert!(ct.len() >= 2 && ct.len() <= 3, "ciphertext must have 2 or 3 polys");
+        let mut c1 = ct.polys[1].clone();
+        ring.ntt_forward(&mut c1);
+        let mut v = ring.mul_ntt(&c1, &sk.s_ntt);
+        if ct.len() == 3 {
+            let mut c2 = ct.polys[2].clone();
+            ring.ntt_forward(&mut c2);
+            let c2s2 = ring.mul_ntt(&c2, &sk.s2_ntt);
+            v = ring.add(&v, &c2s2);
+        }
+        ring.ntt_inverse(&mut v);
+        ring.add(&v, &ct.polys[0])
+    }
+
+    /// Homomorphic addition (supports mixed 2/3-component operands).
+    pub fn add_ct(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let ring = &self.ring_q;
+        let n = a.len().max(b.len());
+        let zero = ring.zero();
+        let mut polys = Vec::with_capacity(n);
+        for i in 0..n {
+            let pa = a.polys.get(i).unwrap_or(&zero);
+            let pb = b.polys.get(i).unwrap_or(&zero);
+            polys.push(ring.add(pa, pb));
+        }
+        let mut out = Ciphertext::new(polys);
+        out.ct_depth = a.ct_depth.max(b.ct_depth);
+        out
+    }
+
+    /// Homomorphic subtraction.
+    pub fn sub_ct(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.add_ct(a, &self.neg_ct(b))
+    }
+
+    /// Homomorphic negation.
+    pub fn neg_ct(&self, a: &Ciphertext) -> Ciphertext {
+        let mut out = a.clone();
+        for p in out.polys.iter_mut() {
+            *p = self.ring_q.neg(p);
+        }
+        out
+    }
+
+    /// Add a plaintext: `c₀ += Δ·m`.
+    pub fn add_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        let mut out = a.clone();
+        out.polys[0] = self.ring_q.add(&out.polys[0], &self.delta_times_pt(pt));
+        out
+    }
+
+    /// Multiply by a plaintext polynomial (noise grows by ℓ1(m); message
+    /// degree grows by deg(m); **no** ciphertext-depth level consumed).
+    pub fn mul_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        let ring = &self.ring_q;
+        let mut m_ntt = self.pt_to_rns(pt);
+        ring.ntt_forward(&mut m_ntt);
+        let mut out = a.clone();
+        for p in out.polys.iter_mut() {
+            let mut pn = p.clone();
+            ring.ntt_forward(&mut pn);
+            let mut prod = ring.mul_ntt(&pn, &m_ntt);
+            ring.ntt_inverse(&mut prod);
+            *p = prod;
+        }
+        out
+    }
+
+    /// The BFV tensor product **without** relinearisation: returns a
+    /// 3-component ciphertext. Exposed for tests and for fused
+    /// inner-product accumulation (relinearise once per sum).
+    pub fn mul_no_relin(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        assert_eq!(a.len(), 2, "operands must be relinearised");
+        assert_eq!(b.len(), 2);
+        let big = &self.ring_big;
+        // Lift all four polynomials into the joint basis and NTT them.
+        let mut a0 = self.q_to_big(&a.polys[0]);
+        let mut a1 = self.q_to_big(&a.polys[1]);
+        let mut b0 = self.q_to_big(&b.polys[0]);
+        let mut b1 = self.q_to_big(&b.polys[1]);
+        big.ntt_forward(&mut a0);
+        big.ntt_forward(&mut a1);
+        big.ntt_forward(&mut b0);
+        big.ntt_forward(&mut b1);
+        // Tensor product (exact over the joint basis).
+        let mut c0 = big.mul_ntt(&a0, &b0);
+        let mut c1 = big.add(&big.mul_ntt(&a0, &b1), &big.mul_ntt(&a1, &b0));
+        let mut c2 = big.mul_ntt(&a1, &b1);
+        big.ntt_inverse(&mut c0);
+        big.ntt_inverse(&mut c1);
+        big.ntt_inverse(&mut c2);
+        // Scale each by t/q with exact rounding, back in the Q basis.
+        let polys = vec![
+            self.scale_round_to_q(&c0),
+            self.scale_round_to_q(&c1),
+            self.scale_round_to_q(&c2),
+        ];
+        let mut out = Ciphertext::new(polys);
+        out.ct_depth = a.ct_depth.max(b.ct_depth) + 1;
+        out
+    }
+
+    /// Base-w digit decomposition of a polynomial's canonical
+    /// coefficients: `poly = Σ_j w^j·D_j` with `‖D_j‖∞ < 2^w_bits`.
+    /// Returned in coefficient representation (shared by the native and
+    /// XLA relinearisation paths).
+    pub fn relin_digits(&self, poly: &RnsPoly) -> Vec<RnsPoly> {
+        let ring = &self.ring_q;
+        let mut residues = vec![0u64; ring.nlimbs()];
+        let coeffs: Vec<crate::math::bigint::BigUint> = (0..ring.d)
+            .map(|i| {
+                for l in 0..ring.nlimbs() {
+                    residues[l] = poly.planes[l][i];
+                }
+                ring.basis.lift(&residues)
+            })
+            .collect();
+        let w_bits = self.relin_w_bits as usize;
+        (0..self.relin_ndigits)
+            .map(|j| {
+                // Digit polynomial D_j: every residue plane holds the
+                // same small value (digits < 2^w_bits < every prime).
+                let mut dj = ring.zero();
+                for (i, v) in coeffs.iter().enumerate() {
+                    let digit = v.extract_bits(j * w_bits, w_bits);
+                    for l in 0..ring.nlimbs() {
+                        dj.planes[l][i] = digit;
+                    }
+                }
+                dj
+            })
+            .collect()
+    }
+
+    /// Fold the degree-2 component back onto (c₀, c₁) with the
+    /// relinearisation key (base-w digit decomposition).
+    pub fn relinearize(&self, ct: &Ciphertext, rk: &RelinKey) -> Ciphertext {
+        assert_eq!(ct.len(), 3, "nothing to relinearise");
+        let ring = &self.ring_q;
+        let mut acc0 = ring.zero();
+        acc0.rep = Rep::Ntt;
+        let mut acc1 = acc0.clone();
+        for (j, mut dj) in self.relin_digits(&ct.polys[2]).into_iter().enumerate() {
+            ring.ntt_forward(&mut dj);
+            ring.mul_ntt_acc(&mut acc0, &dj, &rk.b_ntt[j]);
+            ring.mul_ntt_acc(&mut acc1, &dj, &rk.a_ntt[j]);
+        }
+        ring.ntt_inverse(&mut acc0);
+        ring.ntt_inverse(&mut acc1);
+        let mut out = Ciphertext::new(vec![
+            ring.add(&ct.polys[0], &acc0),
+            ring.add(&ct.polys[1], &acc1),
+        ]);
+        out.ct_depth = ct.ct_depth;
+        out
+    }
+
+    /// Full homomorphic multiplication: tensor, scale, relinearise.
+    pub fn mul_ct(&self, a: &Ciphertext, b: &Ciphertext, rk: &RelinKey) -> Ciphertext {
+        self.relinearize(&self.mul_no_relin(a, b), rk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::noise::noise_budget_bits;
+    use crate::fhe::params::FvParams;
+
+    fn setup(d: usize, l: usize, t_bits: usize, seed: u64) -> (Arc<FvContext>, super::super::keys::KeySet, ChaChaRng) {
+        let ctx = FvContext::new(FvParams::custom(d, l, t_bits));
+        let mut rng = ChaChaRng::from_seed(seed);
+        let keys = keygen(&ctx, &mut rng);
+        (ctx, keys, rng)
+    }
+
+    fn pt(ctx: &FvContext, coeffs: &[i64]) -> Plaintext {
+        Plaintext::from_signed(ctx.d(), coeffs)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (ctx, keys, mut rng) = setup(256, 3, 24, 41);
+        let m = pt(&ctx, &[1, -1, 0, 1, 1, 0, -1, 42, -99]);
+        let ct = ctx.encrypt(&m, &keys.pk, &mut rng);
+        let out = ctx.decrypt(&ct, &keys.sk);
+        assert_eq!(out, {
+            let mut e = m.clone();
+            e.reduce_sym(&ctx.t);
+            e
+        });
+        assert!(noise_budget_bits(&ctx, &ct, &keys.sk) > 20.0);
+    }
+
+    #[test]
+    fn symmetric_encryption_roundtrip() {
+        let (ctx, keys, mut rng) = setup(256, 3, 24, 42);
+        let m = pt(&ctx, &[7, 0, -3]);
+        let ct = ctx.encrypt_sym(&m, &keys.sk, &mut rng);
+        assert_eq!(ctx.decrypt(&ct, &keys.sk).coeffs[0].to_i128(), Some(7));
+        assert_eq!(ctx.decrypt(&ct, &keys.sk).coeffs[2].to_i128(), Some(-3));
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let (ctx, keys, mut rng) = setup(256, 3, 24, 43);
+        let (ma, mb) = (pt(&ctx, &[1, 2, -3]), pt(&ctx, &[10, -20, 30]));
+        let ca = ctx.encrypt(&ma, &keys.pk, &mut rng);
+        let cb = ctx.encrypt(&mb, &keys.pk, &mut rng);
+        let sum = ctx.decrypt(&ctx.add_ct(&ca, &cb), &keys.sk);
+        assert_eq!(sum.coeffs[0].to_i128(), Some(11));
+        assert_eq!(sum.coeffs[1].to_i128(), Some(-18));
+        assert_eq!(sum.coeffs[2].to_i128(), Some(27));
+        let diff = ctx.decrypt(&ctx.sub_ct(&ca, &cb), &keys.sk);
+        assert_eq!(diff.coeffs[0].to_i128(), Some(-9));
+    }
+
+    #[test]
+    fn homomorphic_multiplication_matches_message_product() {
+        let (ctx, keys, mut rng) = setup(256, 3, 24, 44);
+        let ma = pt(&ctx, &[1, 1, 0, -1]); // m_a(2) = 1+2-8 = -5
+        let mb = pt(&ctx, &[0, 1, 1]); // m_b(2) = 6
+        let ca = ctx.encrypt(&ma, &keys.pk, &mut rng);
+        let cb = ctx.encrypt(&mb, &keys.pk, &mut rng);
+        let prod = ctx.mul_ct(&ca, &cb, &keys.rk);
+        assert_eq!(prod.ct_depth, 1);
+        let out = ctx.decrypt(&prod, &keys.sk);
+        let mut expect = ma.mul(&mb);
+        expect.reduce_sym(&ctx.t);
+        assert_eq!(out, expect);
+        assert_eq!(out.eval_at_2().to_i128(), Some(-30));
+    }
+
+    #[test]
+    fn three_component_decryption_before_relin() {
+        let (ctx, keys, mut rng) = setup(256, 3, 24, 45);
+        let ma = pt(&ctx, &[3]);
+        let mb = pt(&ctx, &[0, 1]);
+        let ca = ctx.encrypt(&ma, &keys.pk, &mut rng);
+        let cb = ctx.encrypt(&mb, &keys.pk, &mut rng);
+        let raw = ctx.mul_no_relin(&ca, &cb);
+        assert_eq!(raw.len(), 3);
+        let out = ctx.decrypt(&raw, &keys.sk);
+        assert_eq!(out.coeffs[1].to_i128(), Some(3)); // 3·x
+    }
+
+    #[test]
+    fn plaintext_multiplication() {
+        let (ctx, keys, mut rng) = setup(256, 3, 24, 46);
+        let m = pt(&ctx, &[1, 0, -1]); // -3 at 2
+        let c = ctx.encrypt(&m, &keys.pk, &mut rng);
+        let k = pt(&ctx, &[1, 0, 1, 1]); // 13 at 2
+        let out = ctx.decrypt(&ctx.mul_plain(&c, &k), &keys.sk);
+        assert_eq!(out.eval_at_2().to_i128(), Some(-39));
+        // No ciphertext depth consumed.
+        assert_eq!(ctx.mul_plain(&c, &k).ct_depth, 0);
+    }
+
+    #[test]
+    fn add_plain() {
+        let (ctx, keys, mut rng) = setup(256, 3, 24, 47);
+        let m = pt(&ctx, &[5]);
+        let c = ctx.encrypt(&m, &keys.pk, &mut rng);
+        let out = ctx.decrypt(&ctx.add_plain(&c, &pt(&ctx, &[-2, 1])), &keys.sk);
+        assert_eq!(out.coeffs[0].to_i128(), Some(3));
+        assert_eq!(out.coeffs[1].to_i128(), Some(1));
+    }
+
+    #[test]
+    fn depth_two_chain() {
+        // ((a·b)·c) with t small enough to leave budget.
+        let (ctx, keys, mut rng) = setup(512, 5, 16, 48);
+        let ma = pt(&ctx, &[0, 1]); // 2
+        let mb = pt(&ctx, &[1, 1]); // 3
+        let mc = pt(&ctx, &[1, 0, 1]); // 5
+        let ca = ctx.encrypt(&ma, &keys.pk, &mut rng);
+        let cb = ctx.encrypt(&mb, &keys.pk, &mut rng);
+        let cc = ctx.encrypt(&mc, &keys.pk, &mut rng);
+        let ab = ctx.mul_ct(&ca, &cb, &keys.rk);
+        let abc = ctx.mul_ct(&ab, &cc, &keys.rk);
+        assert_eq!(abc.ct_depth, 2);
+        let out = ctx.decrypt(&abc, &keys.sk);
+        assert_eq!(out.eval_at_2().to_i128(), Some(30));
+    }
+
+    #[test]
+    fn mixed_circuit_property() {
+        // Random circuits mixing add, sub, plaintext mul and one ct-mul
+        // must track the reference integer computation exactly.
+        use crate::util::prop::PropRunner;
+        let (ctx, keys, _) = setup(256, 4, 22, 50);
+        let mut run = PropRunner::new("fv_mixed_circuit", 8);
+        run.run(|rng| {
+            let vals: Vec<i64> =
+                (0..3).map(|_| rng.uniform_below(401) as i64 - 200).collect();
+            let cts: Vec<Ciphertext> = vals
+                .iter()
+                .map(|&v| {
+                    ctx.encrypt(&crate::fhe::encoding::encode_int(v, ctx.d()), &keys.pk, rng)
+                })
+                .collect();
+            let k = rng.uniform_below(31) as i64 - 15;
+            let kp = crate::fhe::encoding::encode_int(k, ctx.d());
+            // enc: ((a*b) - c) + k*a   (one ct-mul level)
+            let ab = ctx.mul_ct(&cts[0], &cts[1], &keys.rk);
+            let t1 = ctx.sub_ct(&ab, &cts[2]);
+            let t2 = ctx.mul_plain(&cts[0], &kp);
+            let out = ctx.decrypt(&ctx.add_ct(&t1, &t2), &keys.sk);
+            let expect = (vals[0] as i128) * (vals[1] as i128) - vals[2] as i128
+                + (k as i128) * (vals[0] as i128);
+            assert_eq!(out.eval_at_2().to_i128(), Some(expect));
+        });
+    }
+
+    #[test]
+    fn homomorphism_property_random() {
+        use crate::util::prop::PropRunner;
+        let (ctx, keys, _) = setup(256, 4, 20, 49);
+        let mut run = PropRunner::new("fv_homomorphism", 12);
+        run.run(|rng| {
+            let a = (rng.uniform_below(2001) as i64) - 1000;
+            let b = (rng.uniform_below(2001) as i64) - 1000;
+            let ma = crate::fhe::encoding::encode_int(a, ctx.d());
+            let mb = crate::fhe::encoding::encode_int(b, ctx.d());
+            let ca = ctx.encrypt(&ma, &keys.pk, rng);
+            let cb = ctx.encrypt(&mb, &keys.pk, rng);
+            let sum = ctx.decrypt(&ctx.add_ct(&ca, &cb), &keys.sk);
+            assert_eq!(sum.eval_at_2().to_i128(), Some((a + b) as i128), "add");
+            let prod = ctx.decrypt(&ctx.mul_ct(&ca, &cb, &keys.rk), &keys.sk);
+            assert_eq!(prod.eval_at_2().to_i128(), Some((a as i128) * (b as i128)), "mul");
+        });
+    }
+}

@@ -1,0 +1,201 @@
+//! Plaintext polynomials in the message ring `R_t = Z_t[x]/(x^d + 1)`.
+//!
+//! Messages are polynomials with (potentially huge) signed coefficients,
+//! stored symmetric mod t. Fresh encodings have coefficients in
+//! {-1, 0, 1} (§3.1 binary decomposition with `m(2) = ż`); homomorphic
+//! arithmetic grows both degree and coefficients, exactly as bounded by
+//! the paper's Lemma 3.
+
+use crate::math::bigint::{BigInt, BigUint};
+
+/// A plaintext polynomial: signed coefficients, length = ring degree
+/// (trailing zeros allowed), reduced to the symmetric range mod t.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Plaintext {
+    pub coeffs: Vec<BigInt>,
+}
+
+impl Plaintext {
+    pub fn zero(d: usize) -> Self {
+        Plaintext { coeffs: vec![BigInt::zero(); d] }
+    }
+
+    pub fn from_signed(d: usize, small: &[i64]) -> Self {
+        assert!(small.len() <= d);
+        let mut coeffs = vec![BigInt::zero(); d];
+        for (i, &c) in small.iter().enumerate() {
+            coeffs[i] = BigInt::from_i64(c);
+        }
+        Plaintext { coeffs }
+    }
+
+    /// Degree of the highest nonzero coefficient (-1 for the zero poly).
+    pub fn degree(&self) -> isize {
+        for i in (0..self.coeffs.len()).rev() {
+            if !self.coeffs[i].is_zero() {
+                return i as isize;
+            }
+        }
+        -1
+    }
+
+    /// `max_i |c_i|`.
+    pub fn linf(&self) -> BigUint {
+        let mut best = BigUint::zero();
+        for c in &self.coeffs {
+            if c.mag.cmp_big(&best) == std::cmp::Ordering::Greater {
+                best = c.mag.clone();
+            }
+        }
+        best
+    }
+
+    /// `Σ_i |c_i|` — controls plaintext-multiplication noise growth.
+    pub fn l1(&self) -> BigUint {
+        let mut acc = BigUint::zero();
+        for c in &self.coeffs {
+            acc = acc.add(&c.mag);
+        }
+        acc
+    }
+
+    /// Exact evaluation at x = 2 (the §3.1 decode point).
+    pub fn eval_at_2(&self) -> BigInt {
+        // Horner from the top.
+        let mut acc = BigInt::zero();
+        for c in self.coeffs.iter().rev() {
+            acc = acc.mul_i64(2).add(c);
+        }
+        acc
+    }
+
+    /// Evaluation at 2 divided by an exact big scale, as f64 — the secret
+    /// key holder's final rescaling step. Works even when both numerator
+    /// and denominator far exceed f64 range.
+    pub fn eval_at_2_scaled(&self, divisor: &BigUint) -> f64 {
+        let v = self.eval_at_2();
+        let (nm, ne) = v.mag.to_f64_exp();
+        let (dm, de) = divisor.to_f64_exp();
+        if nm == 0.0 {
+            return 0.0;
+        }
+        let val = (nm / dm) * 2f64.powi((ne - de) as i32);
+        if v.neg {
+            -val
+        } else {
+            val
+        }
+    }
+
+    /// Reduce coefficients into the symmetric range mod t.
+    pub fn reduce_sym(&mut self, t: &BigUint) {
+        let half = t.shr_bits(1);
+        for c in self.coeffs.iter_mut() {
+            let r = c.rem_euclid_big(t);
+            *c = if r.cmp_big(&half) == std::cmp::Ordering::Greater {
+                BigInt { neg: true, mag: t.sub(&r) }
+            } else {
+                BigInt::from_biguint(r)
+            };
+        }
+    }
+
+    /// Message-space addition (no modular reduction — callers reduce).
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.coeffs.len(), other.coeffs.len());
+        Plaintext {
+            coeffs: (0..self.coeffs.len())
+                .map(|i| self.coeffs[i].add(&other.coeffs[i]))
+                .collect(),
+        }
+    }
+
+    /// Message-space negacyclic product (exact, schoolbook) — the oracle
+    /// for what homomorphic multiplication must do to messages.
+    pub fn mul(&self, other: &Self) -> Self {
+        let d = self.coeffs.len();
+        assert_eq!(other.coeffs.len(), d);
+        let mut out = vec![BigInt::zero(); d];
+        for i in 0..d {
+            if self.coeffs[i].is_zero() {
+                continue;
+            }
+            for j in 0..d {
+                if other.coeffs[j].is_zero() {
+                    continue;
+                }
+                let prod = self.coeffs[i].mul(&other.coeffs[j]);
+                let k = i + j;
+                if k < d {
+                    out[k] = out[k].add(&prod);
+                } else {
+                    out[k - d] = out[k - d].sub(&prod); // x^d = -1
+                }
+            }
+        }
+        Plaintext { coeffs: out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_at_2_binary() {
+        // 1 + x + x^3 at 2 = 1 + 2 + 8 = 11.
+        let p = Plaintext::from_signed(8, &[1, 1, 0, 1]);
+        assert_eq!(p.eval_at_2().to_i128(), Some(11));
+        assert_eq!(p.degree(), 3);
+    }
+
+    #[test]
+    fn eval_negative() {
+        let p = Plaintext::from_signed(8, &[-1, -1, 0, -1]);
+        assert_eq!(p.eval_at_2().to_i128(), Some(-11));
+    }
+
+    #[test]
+    fn mul_preserves_eval_at_2() {
+        // As long as no negacyclic wrap happens, (p·q)(2) = p(2)·q(2).
+        let p = Plaintext::from_signed(32, &[1, 0, 1]); // 5
+        let q = Plaintext::from_signed(32, &[1, 1, 1]); // 7
+        let r = p.mul(&q);
+        assert_eq!(r.eval_at_2().to_i128(), Some(35));
+        assert_eq!(r.degree(), 4);
+    }
+
+    #[test]
+    fn negacyclic_wrap_changes_eval() {
+        // Degree overflow wraps with a sign: x^3 · x^1 = -1 in d = 4.
+        let p = Plaintext::from_signed(4, &[0, 0, 0, 1]);
+        let q = Plaintext::from_signed(4, &[0, 1]);
+        let r = p.mul(&q);
+        assert_eq!(r.coeffs[0].to_i128(), Some(-1));
+    }
+
+    #[test]
+    fn linf_l1() {
+        let p = Plaintext::from_signed(8, &[3, -4, 0, 2]);
+        assert_eq!(p.linf().to_u64(), Some(4));
+        assert_eq!(p.l1().to_u64(), Some(9));
+    }
+
+    #[test]
+    fn reduce_sym_wraps() {
+        let t = BigUint::from_u64(7);
+        let mut p = Plaintext::from_signed(4, &[6, -6, 10, 3]);
+        p.reduce_sym(&t);
+        assert_eq!(p.coeffs[0].to_i128(), Some(-1)); // 6 ≡ -1 mod 7
+        assert_eq!(p.coeffs[1].to_i128(), Some(1));
+        assert_eq!(p.coeffs[2].to_i128(), Some(3));
+        assert_eq!(p.coeffs[3].to_i128(), Some(3));
+    }
+
+    #[test]
+    fn scaled_eval() {
+        let p = Plaintext::from_signed(8, &[0, 0, 0, 0, 0, 1]); // 32
+        let v = p.eval_at_2_scaled(&BigUint::from_u64(64));
+        assert!((v - 0.5).abs() < 1e-15);
+    }
+}

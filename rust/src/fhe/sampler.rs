@@ -1,0 +1,104 @@
+//! RLWE noise and secret samplers.
+//!
+//! - Secrets are uniform **ternary** polynomials (coefficients in
+//!   {-1, 0, 1}), the standard choice in FV implementations.
+//! - Errors use an exact **centered binomial** CBD(k): the difference of
+//!   two k-bit popcounts, variance k/2. With the default k = 21 the
+//!   standard deviation is √10.5 ≈ 3.24, matching the σ ≈ 3.2 discrete
+//!   Gaussian used by the paper's `HomomorphicEncryption` R package
+//!   (substituting CBD for a discrete Gaussian is standard practice —
+//!   NewHope/Kyber — and keeps sampling exact, float-free and
+//!   constant-time-friendly).
+
+use crate::math::poly::{RingContext, RnsPoly};
+
+use super::rng::ChaChaRng;
+
+/// Default centered-binomial parameter: CBD(21) → σ = √10.5 ≈ 3.24.
+pub const DEFAULT_CBD_K: u32 = 21;
+
+/// Worst-case error magnitude bound for CBD(k): |e| ≤ k.
+pub fn cbd_bound(k: u32) -> u64 {
+    k as u64
+}
+
+/// One centered-binomial sample in `[-k, k]`.
+pub fn cbd_sample(rng: &mut ChaChaRng, k: u32) -> i64 {
+    assert!(k <= 64);
+    let mask = if k == 64 { u64::MAX } else { (1u64 << k) - 1 };
+    let a = (rng.next_u64() & mask).count_ones() as i64;
+    let b = (rng.next_u64() & mask).count_ones() as i64;
+    a - b
+}
+
+/// Ternary secret polynomial with i.i.d. coefficients in {-1, 0, 1}.
+pub fn sample_ternary(ctx: &RingContext, rng: &mut ChaChaRng) -> RnsPoly {
+    let coeffs: Vec<i64> = (0..ctx.d).map(|_| rng.uniform_below(3) as i64 - 1).collect();
+    ctx.from_signed_coeffs(&coeffs)
+}
+
+/// Error polynomial with i.i.d. CBD(k) coefficients.
+pub fn sample_error(ctx: &RingContext, rng: &mut ChaChaRng, k: u32) -> RnsPoly {
+    let coeffs: Vec<i64> = (0..ctx.d).map(|_| cbd_sample(rng, k)).collect();
+    ctx.from_signed_coeffs(&coeffs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::primes::rns_basis_primes;
+    use crate::math::modarith::center;
+
+    #[test]
+    fn cbd_moments_and_range() {
+        let mut rng = ChaChaRng::from_seed(21);
+        let k = DEFAULT_CBD_K;
+        let n = 100_000;
+        let (mut s1, mut s2) = (0f64, 0f64);
+        for _ in 0..n {
+            let e = cbd_sample(&mut rng, k);
+            assert!(e.unsigned_abs() <= cbd_bound(k), "|e| ≤ k");
+            s1 += e as f64;
+            s2 += (e * e) as f64;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        let expect = k as f64 / 2.0;
+        assert!((var - expect).abs() / expect < 0.05, "var {var} vs {expect}");
+    }
+
+    #[test]
+    fn ternary_distribution() {
+        let ctx = crate::math::poly::RingContext::new(1024, rns_basis_primes(1024, 2));
+        let mut rng = ChaChaRng::from_seed(22);
+        let s = sample_ternary(&ctx, &mut rng);
+        let p = ctx.basis.primes[0];
+        let mut counts = [0usize; 3];
+        for &v in &s.planes[0] {
+            let c = center(v, p);
+            assert!((-1..=1).contains(&c));
+            counts[(c + 1) as usize] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / 1024.0;
+            assert!((frac - 1.0 / 3.0).abs() < 0.08, "frac {frac}");
+        }
+        // Residue planes must agree (same underlying integer).
+        let p1 = ctx.basis.primes[1];
+        for i in 0..ctx.d {
+            assert_eq!(center(s.planes[0][i], p), center(s.planes[1][i], p1));
+        }
+    }
+
+    #[test]
+    fn error_poly_bounded() {
+        let ctx = crate::math::poly::RingContext::new(256, rns_basis_primes(256, 1));
+        let mut rng = ChaChaRng::from_seed(23);
+        let e = sample_error(&ctx, &mut rng, DEFAULT_CBD_K);
+        let p = ctx.basis.primes[0];
+        for &v in &e.planes[0] {
+            assert!(center(v, p).unsigned_abs() <= DEFAULT_CBD_K as u64);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§6) as CSV files — see DESIGN.md §5 for the experiment index.
+//!
+//! Convergence figures use the exact/f64 backends (FHE evaluation is
+//! exact, validated by the integration suite, so convergence behaviour
+//! is identical and reproduction is fast); the computational-cost
+//! figures (fig5, sfig2) run the real encrypted pipeline and measure
+//! wall-clock and ciphertext memory.
+
+mod apps;
+mod enc;
+mod sim;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+/// CSV writer helper.
+pub(crate) struct Csv {
+    path: PathBuf,
+    buf: String,
+}
+
+impl Csv {
+    pub fn new(dir: &Path, name: &str, header: &str) -> Self {
+        let mut buf = String::from(header);
+        buf.push('\n');
+        Csv { path: dir.join(name), buf }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        self.buf.push_str(&fields.join(","));
+        self.buf.push('\n');
+    }
+
+    pub fn finish(self) -> Result<PathBuf> {
+        std::fs::write(&self.path, self.buf)?;
+        Ok(self.path)
+    }
+}
+
+pub(crate) fn f(v: f64) -> String {
+    format!("{v:.6e}")
+}
+
+/// All known experiment ids, in paper order.
+pub const ALL_IDS: [&str; 12] = [
+    "fig1", "fig2", "fig3", "fig4", "fig5", "tab1", "fig6", "fig7", "fig8",
+    "sfig1", "sfig2", "lemma3",
+];
+
+/// Run one experiment; returns the written CSV paths.
+pub fn run(id: &str, out: &Path) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(out)?;
+    match id {
+        "fig1" => sim::fig1(out),
+        "fig2" => sim::fig2(out),
+        "fig3" => sim::fig3(out),
+        "fig4" => sim::fig4(out),
+        "fig5" => enc::fig5(out),
+        "tab1" => sim::tab1(out),
+        "fig6" => apps::fig6(out),
+        "fig7" => apps::fig7(out),
+        "fig8" => apps::fig8(out),
+        "sfig1" => sim::sfig1(out),
+        "sfig2" => enc::sfig2(out),
+        "lemma3" => sim::lemma3(out),
+        _ => bail!("unknown experiment id '{id}' (known: {})", ALL_IDS.join(", ")),
+    }
+}
+
+/// Run every experiment.
+pub fn run_all(out: &Path) -> Result<Vec<PathBuf>> {
+    let mut paths = Vec::new();
+    for id in ALL_IDS {
+        eprintln!("[figures] running {id} ...");
+        paths.extend(run(id, out)?);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        let tmp = std::env::temp_dir().join("els-fig-test");
+        assert!(run("nope", &tmp).is_err());
+    }
+
+    #[test]
+    fn cheap_figures_produce_csv() {
+        let tmp = std::env::temp_dir().join(format!("els-fig-{}", std::process::id()));
+        for id in ["tab1", "sfig1", "lemma3"] {
+            let paths = run(id, &tmp).unwrap();
+            for p in paths {
+                let text = std::fs::read_to_string(&p).unwrap();
+                assert!(text.lines().count() > 1, "{id}: empty CSV");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -1,0 +1,321 @@
+//! Simulation-study figures (paper §6.1): Figures 1–4, Table 1,
+//! supplementary Figure 1, and the Lemma-3 empirical validation.
+//!
+//! Workloads follow the paper exactly: standardised Gaussian designs,
+//! equicorrelated for the correlation sweeps, φ = 2, error norms = RMS
+//! deviation from the f64 OLS solution on the quantised data.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::data::synth;
+use crate::els::exact::QuantisedData;
+use crate::els::float_ref::{
+    cd_path, gd_path, gram_spectrum, nag_path, ols, rms, vwt_estimate,
+};
+use crate::els::mmd;
+use crate::els::stepsize;
+use crate::els::encrypted::Accel;
+use crate::fhe::rng::ChaChaRng;
+
+use super::{f, Csv};
+
+/// Quantise-then-dequantise (the data the encrypted algorithm sees).
+fn quantised(x: &[Vec<f64>], y: &[f64]) -> (Vec<Vec<f64>>, Vec<f64>) {
+    QuantisedData::from_f64(x, y, 2).dequantised()
+}
+
+/// Figure 1: preconditioning smooths the ELS-GD convergence path.
+/// [N = 100, P = 5, ρ = 0.1]
+pub fn fig1(out: &Path) -> Result<Vec<PathBuf>> {
+    let mut rng = ChaChaRng::from_seed(1001);
+    let (x0, y0) = synth::correlated_regression(&mut rng, 100, 5, 0.1, 0.1);
+    let (x, y) = quantised(&x0, &y0);
+    let truth = ols(&x, &y);
+    let mut csv = Csv::new(out, "fig1_paths.csv", "variant,k,beta1,beta2,err_rms");
+    // Naive step: near the stability edge of λ_max — zig-zag path.
+    let (_, lmax) = gram_spectrum(&x);
+    for (variant, delta) in [
+        ("naive", 1.9 / lmax),
+        ("preconditioned", 1.0 / stepsize::nu_optimal(&x) as f64),
+    ] {
+        for (k, beta) in gd_path(&x, &y, delta, 40).iter().enumerate() {
+            csv.row(&[
+                variant.to_string(),
+                (k + 1).to_string(),
+                f(beta[0]),
+                f(beta[1]),
+                f(rms(beta, &truth)),
+            ]);
+        }
+    }
+    // OLS reference row (the full circles in the paper's plot).
+    csv.row(&["ols".into(), "0".into(), f(truth[0]), f(truth[1]), f(0.0)]);
+    Ok(vec![csv.finish()?])
+}
+
+/// Figure 2 left: ELS-CD vs ELS-GD error at fixed MMD;
+/// right: VWT/GD error-norm ratios. [N = 100, P ∈ {5, 50}]
+pub fn fig2(out: &Path) -> Result<Vec<PathBuf>> {
+    let mut left = Csv::new(out, "fig2_left_cd_vs_gd.csv", "p,mmd,err_gd,err_cd");
+    let mut right = Csv::new(out, "fig2_right_vwt_ratio.csv", "p,iters,err_gd,err_vwt,ratio");
+    for p_vars in [5usize, 50] {
+        let mut rng = ChaChaRng::from_seed(1002 + p_vars as u64);
+        let (x0, y0) = synth::correlated_regression(&mut rng, 100, p_vars, 0.1, 0.1);
+        let (x, y) = quantised(&x0, &y0);
+        let truth = ols(&x, &y);
+        let delta = 1.0 / stepsize::nu_optimal(&x) as f64;
+        // Left: at MMD budget m, GD affords m/2 iterations (all P
+        // coordinates each) while CD affords m/2 single-coordinate
+        // updates — the paper's fixed-complexity comparison.
+        let max_mmd = 24u32;
+        let gd = gd_path(&x, &y, delta, mmd::iters_within_mmd(Accel::None, max_mmd));
+        let cd = cd_path(&x, &y, delta, mmd::cd_updates_within_mmd(max_mmd));
+        for m in (2..=max_mmd).step_by(2) {
+            let gk = mmd::iters_within_mmd(Accel::None, m);
+            let ck = mmd::cd_updates_within_mmd(m);
+            left.row(&[
+                p_vars.to_string(),
+                m.to_string(),
+                f(rms(&gd[gk - 1], &truth)),
+                f(rms(&cd[ck - 1], &truth)),
+            ]);
+        }
+        // Right: VWT ratio over K, in the oscillatory regime (Lemma 2)
+        // where the averaging bites.
+        let (_, lmax) = gram_spectrum(&x);
+        let dv = 1.9 / lmax;
+        for iters in 3..=14usize {
+            let path = gd_path(&x, &y, dv, iters);
+            let e_gd = rms(&path[iters - 1], &truth);
+            let e_vwt = rms(&vwt_estimate(&path), &truth);
+            right.row(&[
+                p_vars.to_string(),
+                iters.to_string(),
+                f(e_gd),
+                f(e_vwt),
+                f(e_vwt / e_gd),
+            ]);
+        }
+    }
+    Ok(vec![left.finish()?, right.finish()?])
+}
+
+/// Figure 3: GD-VWT vs NAG convergence per iteration, ρ ∈ {0.3, 0.7}.
+/// [N = 100, P = 5]
+pub fn fig3(out: &Path) -> Result<Vec<PathBuf>> {
+    let mut csv = Csv::new(out, "fig3_vwt_vs_nag.csv", "rho,k,err_gd,err_vwt,err_nag");
+    for (seed, rho) in [(1003u64, 0.3), (1004, 0.7)] {
+        let mut rng = ChaChaRng::from_seed(seed);
+        let (x0, y0) = synth::correlated_regression(&mut rng, 100, 5, rho, 0.1);
+        let (x, y) = quantised(&x0, &y0);
+        let truth = ols(&x, &y);
+        let (_, lmax) = gram_spectrum(&x);
+        for k in 2..=16usize {
+            let path = gd_path(&x, &y, 1.9 / lmax, k);
+            let nag = nag_path(&x, &y, 1.0 / lmax, k);
+            csv.row(&[
+                format!("{rho}"),
+                k.to_string(),
+                f(rms(&path[k - 1], &truth)),
+                f(rms(&vwt_estimate(&path), &truth)),
+                f(rms(&nag[k - 1], &truth)),
+            ]);
+        }
+    }
+    Ok(vec![csv.finish()?])
+}
+
+/// Figure 4: error as a function of **MMD** (complexity-fair): at a
+/// fixed depth budget VWT affords ⌊(m−1)/2⌋ iterations but NAG only
+/// ⌊m/3⌋ — the paper's headline comparison. ρ ∈ {0.3, 0.7}.
+pub fn fig4(out: &Path) -> Result<Vec<PathBuf>> {
+    let mut csv = Csv::new(out, "fig4_error_vs_mmd.csv", "rho,mmd,iters_vwt,err_vwt,iters_nag,err_nag");
+    for (seed, rho) in [(1005u64, 0.3), (1006, 0.7)] {
+        let mut rng = ChaChaRng::from_seed(seed);
+        let (x0, y0) = synth::correlated_regression(&mut rng, 100, 5, rho, 0.1);
+        let (x, y) = quantised(&x0, &y0);
+        let truth = ols(&x, &y);
+        let (_, lmax) = gram_spectrum(&x);
+        for budget in (6..=36u32).step_by(3) {
+            let kv = mmd::iters_within_mmd(Accel::Vwt, budget).max(1);
+            let kn = mmd::iters_within_mmd(Accel::Nag, budget).max(1);
+            let path = gd_path(&x, &y, 1.9 / lmax, kv);
+            let nag = nag_path(&x, &y, 1.0 / lmax, kn);
+            csv.row(&[
+                format!("{rho}"),
+                budget.to_string(),
+                kv.to_string(),
+                f(rms(&vwt_estimate(&path), &truth)),
+                kn.to_string(),
+                f(rms(&nag[kn - 1], &truth)),
+            ]);
+        }
+    }
+    Ok(vec![csv.finish()?])
+}
+
+/// Table 1: MMD accounting.
+pub fn tab1(out: &Path) -> Result<Vec<PathBuf>> {
+    let mut csv = Csv::new(out, "tab1_mmd.csv", "algorithm,mmd_formula,mmd_at_k5,noise_depth_at_k5");
+    csv.row(&[
+        "preconditioned_gd".into(),
+        "2K".into(),
+        mmd::paper_mmd(Accel::None, 5).to_string(),
+        mmd::noise_depth(5).to_string(),
+    ]);
+    csv.row(&[
+        "vwt".into(),
+        "2K+1".into(),
+        mmd::paper_mmd(Accel::Vwt, 5).to_string(),
+        (mmd::noise_depth(5)).to_string(),
+    ]);
+    csv.row(&[
+        "nag".into(),
+        "3K".into(),
+        mmd::paper_mmd(Accel::Nag, 5).to_string(),
+        mmd::noise_depth(5).to_string(),
+    ]);
+    csv.row(&[
+        "cd_p5".into(),
+        "2KP".into(),
+        mmd::paper_mmd_cd(5, 5).to_string(),
+        mmd::noise_depth_cd(25).to_string(),
+    ]);
+    Ok(vec![csv.finish()?])
+}
+
+/// Supplementary Figure 1: iterations to reduce the error by a factor e
+/// grows linearly with P, at any correlation level.
+pub fn sfig1(out: &Path) -> Result<Vec<PathBuf>> {
+    let mut csv = Csv::new(out, "sfig1_iters_vs_p.csv", "rho,p,iters_per_efold");
+    for rho in [0.0, 0.2, 0.5, 0.8] {
+        for p_vars in [2usize, 5, 10, 20, 35, 50] {
+            let mut rng = ChaChaRng::from_seed(1010 + (rho * 10.0) as u64 + p_vars as u64);
+            let (x, _) = synth::correlated_regression(&mut rng, 200, p_vars, rho, 0.1);
+            csv.row(&[
+                format!("{rho}"),
+                p_vars.to_string(),
+                f(stepsize::iters_per_efold(&x)),
+            ]);
+        }
+    }
+    Ok(vec![csv.finish()?])
+}
+
+/// Lemma 3 validation: realised message degree/coefficient magnitudes
+/// vs the lemma's stated bounds and our exact-constant tracker.
+pub fn lemma3(out: &Path) -> Result<Vec<PathBuf>> {
+    use crate::els::exact::gd_exact;
+    use crate::fhe::params::{lemma3_coeff_bounds, lemma3_deg_bound, track_gd_growth};
+    let mut csv = Csv::new(
+        out,
+        "lemma3_bounds.csv",
+        "k,realised_value_bits,tracked_value_bits,lemma3_coeff_bits,lemma3_deg",
+    );
+    let mut rng = ChaChaRng::from_seed(1011);
+    let (x0, y0) = synth::gaussian_regression(&mut rng, 30, 3, 0.2);
+    let q = QuantisedData::from_f64(&x0, &y0, 2);
+    let (xq, _) = q.dequantised();
+    let nu = stepsize::nu_optimal(&xq);
+    let iters = 5;
+    let path = gd_exact(&q, nu, iters);
+    let lemma = lemma3_coeff_bounds(30, 3, iters, 2);
+    for k in 1..=iters {
+        let realised = path.iterates[k - 1]
+            .iter()
+            .map(|b| b.mag.bit_len())
+            .max()
+            .unwrap_or(0);
+        let g = track_gd_growth(30, 3, k, 2, nu);
+        let tracked_value =
+            g.coeff_bound.mul(&crate::math::bigint::BigUint::one().shl_bits(g.deg_bound + 1));
+        csv.row(&[
+            k.to_string(),
+            realised.to_string(),
+            tracked_value.bit_len().to_string(),
+            lemma[k - 1].bit_len().to_string(),
+            lemma3_deg_bound(k, 2).to_string(),
+        ]);
+        // The tracker must dominate realised values (asserted, not just
+        // reported — this is the §4.5 guarantee).
+        assert!(tracked_value.bit_len() >= realised, "bound violated at k={k}");
+    }
+    Ok(vec![csv.finish()?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("els-sim-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fig2_shapes_hold() {
+        // GD must beat CD at equal MMD (the paper's central claim), and
+        // the VWT ratio must be < 1 for most K at P = 5.
+        let dir = tmp();
+        let paths = fig2(&dir).unwrap();
+        let left = std::fs::read_to_string(&paths[0]).unwrap();
+        let mut gd_wins = 0;
+        let mut rows = 0;
+        for line in left.lines().skip(1) {
+            let c: Vec<&str> = line.split(',').collect();
+            let (e_gd, e_cd): (f64, f64) = (c[2].parse().unwrap(), c[3].parse().unwrap());
+            rows += 1;
+            if e_gd <= e_cd {
+                gd_wins += 1;
+            }
+        }
+        assert!(gd_wins * 10 >= rows * 8, "GD should win ≥80% of rows: {gd_wins}/{rows}");
+        let right = std::fs::read_to_string(&paths[1]).unwrap();
+        let p5_ratios: Vec<f64> = right
+            .lines()
+            .skip(1)
+            .filter(|l| l.starts_with("5,"))
+            .map(|l| l.split(',').nth(4).unwrap().parse().unwrap())
+            .collect();
+        let below_one = p5_ratios.iter().filter(|&&r| r < 1.0).count();
+        assert!(below_one * 10 >= p5_ratios.len() * 7, "VWT ratio < 1 mostly: {p5_ratios:?}");
+    }
+
+    #[test]
+    fn fig4_vwt_beats_nag_at_fixed_mmd() {
+        // Paper: ELS-GD-VWT typically outperforms ELS-NAG at fixed MMD
+        // (ρ = 0.3); reversals appear only in high-correlation regimes.
+        let dir = tmp();
+        let paths = fig4(&dir).unwrap();
+        let text = std::fs::read_to_string(&paths[0]).unwrap();
+        let rows: Vec<Vec<String>> = text
+            .lines()
+            .skip(1)
+            .filter(|l| l.starts_with("0.3,"))
+            .map(|l| l.split(',').map(|s| s.to_string()).collect())
+            .collect();
+        let wins = rows
+            .iter()
+            .filter(|c| c[3].parse::<f64>().unwrap() <= c[5].parse::<f64>().unwrap())
+            .count();
+        assert!(wins * 10 >= rows.len() * 6, "VWT should mostly win at ρ=0.3: {wins}/{}", rows.len());
+    }
+
+    #[test]
+    fn sfig1_linear_in_p() {
+        let dir = tmp();
+        let paths = sfig1(&dir).unwrap();
+        let text = std::fs::read_to_string(&paths[0]).unwrap();
+        // For ρ = 0.5 the efold iteration count must increase with P.
+        let vals: Vec<f64> = text
+            .lines()
+            .skip(1)
+            .filter(|l| l.starts_with("0.5,"))
+            .map(|l| l.split(',').nth(2).unwrap().parse().unwrap())
+            .collect();
+        assert!(vals.last().unwrap() > vals.first().unwrap());
+    }
+}

@@ -1,0 +1,43 @@
+//! # `els` — Encrypted Least Squares
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *"Encrypted accelerated least squares regression"*
+//! (Esperança, Aslett & Holmes, AISTATS 2017).
+//!
+//! The library fits ordinary and ridge least squares **directly on
+//! ciphertexts** under a from-scratch implementation of the
+//! Fan–Vercauteren (FV/BFV) fully homomorphic encryption scheme. The
+//! paper's encrypted descent algorithms — ELS-GD, ELS-CD, ELS-NAG — and
+//! the van Wijngaarden transformation (VWT) acceleration are first-class
+//! features, and a coordinator serves batched encrypted regression jobs
+//! with the homomorphic hot path dispatched either to a native Rust
+//! backend or to AOT-compiled XLA executables (authored in JAX/Pallas,
+//! loaded via PJRT).
+//!
+//! ## Layout
+//!
+//! - [`math`] — modular arithmetic, NTT, arbitrary-precision integers,
+//!   RNS/CRT: the polynomial-ring substrate for FV.
+//! - [`fhe`] — the FV cryptosystem: parameters (§4.5 of the paper),
+//!   key generation, encryption, homomorphic operations, noise tracking.
+//! - [`els`] — the paper's regression algorithms in three interchangeable
+//!   backends (encrypted, exact encoded-integer simulation, f64).
+//! - [`data`] — synthetic workload generators matching the paper's
+//!   simulation studies and applications.
+//! - [`runtime`] — homomorphic compute backends: native Rust and
+//!   XLA/PJRT executing AOT artifacts.
+//! - [`coordinator`] — the serving layer: job scheduling, dynamic
+//!   batching of homomorphic ops, ciphertext arena, admission control.
+//! - [`figures`] — regenerates every table and figure of the paper's
+//!   evaluation as CSV.
+//! - [`util`] — offline-build substrates: JSON, CLI parsing, thread
+//!   pool, property-testing and benchmarking harnesses.
+
+pub mod coordinator;
+pub mod data;
+pub mod els;
+pub mod fhe;
+pub mod figures;
+pub mod math;
+pub mod runtime;
+pub mod util;

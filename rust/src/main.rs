@@ -1,0 +1,284 @@
+//! `els` — command-line interface for the encrypted least squares
+//! system.
+//!
+//! ```text
+//! els params   --n 28 --p 2 --iters 2 [--nu 30] [--accel gd|vwt|nag] [--profile toy|paper128]
+//! els keygen   --n 28 --p 2 --iters 2 --nu 30 --out keys.json [--seed 7]
+//! els serve    --keys keys.json [--addr 127.0.0.1:7461] [--xla artifacts] [--max-jobs 4]
+//! els client   --keys keys.json --addr HOST:PORT [--n 8 --p 2 --iters 2] [--accel vwt]
+//! els figures  (--all | --id fig4) [--out results]
+//! els selftest [--xla artifacts]
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use els::coordinator::batcher::{BatchConfig, BatchingEngine};
+use els::coordinator::protocol as proto;
+use els::coordinator::scheduler::Coordinator;
+use els::coordinator::service::{Client, Server};
+use els::data::synth;
+use els::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+use els::els::exact::{self, QuantisedData};
+use els::els::float_ref::{linf, ols};
+use els::els::model::encrypt_dataset;
+use els::els::stepsize::nu_optimal;
+use els::fhe::keys::keygen;
+use els::fhe::params::{plan, Algo, PlanRequest, SecurityProfile};
+use els::fhe::rng::ChaChaRng;
+use els::fhe::FvContext;
+use els::runtime::backend::{HeEngine, NativeEngine};
+use els::runtime::pjrt::XlaEngine;
+use els::util::cli::Args;
+use els::util::json::Json;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("params") => cmd_params(&args),
+        Some("keygen") => cmd_keygen(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some(other) => Err(anyhow!("unknown command '{other}'")),
+        None => {
+            eprintln!("{USAGE}");
+            return;
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "els — encrypted least squares (Esperança, Aslett & Holmes, AISTATS 2017)
+
+commands:
+  params    plan FV parameters for a regression job (§4.5)
+  keygen    plan parameters and write a key file
+  serve     run the coordinator service
+  client    submit an encrypted job (synthetic demo data)
+  figures   regenerate the paper's tables and figures as CSV
+  selftest  end-to-end encrypted fit on this machine
+
+every option has a default; see the doc comment in rust/src/main.rs.";
+
+fn plan_from_args(args: &Args) -> Result<(PlanRequest, u64)> {
+    let n = args.get_usize("n", 28)?;
+    let p = args.get_usize("p", 2)?;
+    let iters = args.get_usize("iters", 2)?;
+    let phi = args.get_u64("phi", 2)? as u32;
+    let nu = args.get_u64("nu", 0)?;
+    let nu = if nu > 0 {
+        nu
+    } else {
+        // Derive from a synthetic dataset of the same shape.
+        let mut rng = ChaChaRng::from_seed(args.get_u64("seed", 7)?);
+        let (x, _) = synth::gaussian_regression(&mut rng, n, p, 0.2);
+        nu_optimal(&x)
+    };
+    let accel = proto::accel_from_str(args.get("accel").unwrap_or("gd"))?;
+    let algo = match accel {
+        els::els::encrypted::Accel::None => Algo::Gd,
+        els::els::encrypted::Accel::Vwt => Algo::GdVwt,
+        els::els::encrypted::Accel::Nag => Algo::Nag,
+    };
+    let profile = match args.get("profile").unwrap_or("toy") {
+        "paper128" => SecurityProfile::Paper128,
+        "toy" => SecurityProfile::Toy,
+        other => bail!("unknown profile '{other}' (toy|paper128)"),
+    };
+    let mut req = PlanRequest::gd(n, p, iters, phi, nu)
+        .with_algo(algo)
+        .with_profile(profile)
+        .with_extra_depth(args.get_u64("extra-depth", 0)? as u32);
+    if algo == Algo::Nag {
+        req.eta_abs_q = els::els::scaling::NagScaling::new(phi, nu, iters).eta_abs();
+    }
+    Ok((req, nu))
+}
+
+fn cmd_params(args: &Args) -> Result<()> {
+    let (req, nu) = plan_from_args(args)?;
+    let params = plan(&req)?;
+    println!(
+        "plan for N={} P={} K={} φ={} ν={nu} ({:?}):",
+        req.n_obs, req.p_vars, req.iters, req.phi, req.algo
+    );
+    println!("  ring degree d        = {}", params.d);
+    println!("  q primes             = {} ({} bits)", params.q_count, params.q_bits());
+    println!("  tensor-basis primes  = {}", params.ext_count);
+    println!("  plaintext modulus t  = 2^{}", params.t.bit_len() - 1);
+    println!(
+        "  relin digits         = {} (w = 2^{})",
+        params.relin_ndigits(),
+        params.relin_w_bits
+    );
+    println!("  LP11 security        ≈ {:.0} bits", params.security_bits());
+    println!("  ct-mult depth needed = {}", req.ct_depth());
+    let mmd = match req.algo {
+        Algo::Cd => els::els::mmd::paper_mmd_cd(req.iters, req.p_vars),
+        Algo::GdVwt => els::els::mmd::paper_mmd(els::els::encrypted::Accel::Vwt, req.iters),
+        Algo::Nag => els::els::mmd::paper_mmd(els::els::encrypted::Accel::Nag, req.iters),
+        Algo::Gd => els::els::mmd::paper_mmd(els::els::encrypted::Accel::None, req.iters),
+    };
+    println!("  paper MMD            = {mmd}");
+    println!(
+        "  ciphertext size      = {:.2} MiB",
+        params.ciphertext_bytes() as f64 / (1024.0 * 1024.0)
+    );
+    Ok(())
+}
+
+fn cmd_keygen(args: &Args) -> Result<()> {
+    let (req, _) = plan_from_args(args)?;
+    let params = plan(&req)?;
+    let ctx = FvContext::new(params.clone());
+    let mut rng = ChaChaRng::from_seed(args.get_u64("seed", 7)?);
+    let keys = keygen(&ctx, &mut rng);
+    let out = args.get("out").unwrap_or("keys.json");
+    std::fs::write(out, proto::keyset_to_json(&params, &keys).to_string_json())?;
+    println!(
+        "wrote {out} (d={}, {} q-primes, λ≈{:.0} bits)",
+        params.d,
+        params.q_count,
+        params.security_bits()
+    );
+    println!("WARNING: this file contains the secret key — keep it on the data-holder side.");
+    Ok(())
+}
+
+fn load_keys(args: &Args) -> Result<(Arc<FvContext>, els::fhe::KeySet)> {
+    let path = args.get("keys").unwrap_or("keys.json");
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path} (run `els keygen` first)"))?;
+    proto::keyset_from_json(&Json::parse(&text)?)
+}
+
+fn make_engine(
+    args: &Args,
+    ctx: Arc<FvContext>,
+    rk: &els::fhe::RelinKey,
+) -> Result<Arc<dyn HeEngine>> {
+    match args.get("xla") {
+        Some(dir) => {
+            let engine = XlaEngine::new(ctx, rk, Path::new(dir))?;
+            eprintln!("[els] using XLA/PJRT backend ({dir})");
+            Ok(Arc::new(engine))
+        }
+        None => Ok(Arc::new(NativeEngine::new(ctx, Arc::new(rk.clone())))),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (ctx, keys) = load_keys(args)?;
+    let inner = make_engine(args, ctx.clone(), &keys.rk)?;
+    let engine = BatchingEngine::new(
+        inner,
+        BatchConfig {
+            max_batch: args.get_usize("max-batch", 64)?,
+            max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
+        },
+    );
+    let coord = Coordinator::new(engine, args.get_usize("max-jobs", 4)?);
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7461");
+    let server = Server::start(coord, addr)?;
+    println!(
+        "els coordinator listening on {} (d={}, {} q-primes)",
+        server.addr,
+        ctx.d(),
+        ctx.params.q_count
+    );
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let (ctx, keys) = load_keys(args)?;
+    let addr = args.req("addr")?;
+    let n = args.get_usize("n", 8)?;
+    let p = args.get_usize("p", 2)?;
+    let iters = args.get_usize("iters", 2)?;
+    let accel = proto::accel_from_str(args.get("accel").unwrap_or("gd"))?;
+    let mut rng = ChaChaRng::from_seed(args.get_u64("data-seed", 99)?);
+    let (x, y) = synth::gaussian_regression(&mut rng, n, p, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, yq) = q.dequantised();
+    let nu = nu_optimal(&xq);
+
+    println!("encrypting {n}×{p} dataset locally ...");
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    let mut client = Client::connect(addr)?;
+    let cfg = FitConfig { iters, nu, accel, keep_path: false };
+    let t0 = std::time::Instant::now();
+    let id = client.submit(&data, &cfg, None)?;
+    println!("submitted as {id}; waiting ...");
+    let fitted = client.result(&ctx, id)?;
+    let wall = t0.elapsed();
+    let dec = decrypt_coefficients(&ctx, &keys.sk, &fitted);
+    let truth = ols(&xq, &yq);
+    println!("decrypted coefficients after {iters} iterations ({wall:.2?}):");
+    for (j, (b, t)) in dec.iter().zip(&truth).enumerate() {
+        println!("  β_{j} = {b:+.4}   (OLS {t:+.4})");
+    }
+    println!("‖β − β_ols‖∞ = {:.4}", linf(&dec, &truth));
+    println!("server metrics: {}", client.metrics()?);
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out = Path::new(args.get("out").unwrap_or("results")).to_path_buf();
+    let paths = if args.flag("all") || args.get("id").is_none() {
+        els::figures::run_all(&out)?
+    } else {
+        els::figures::run(args.req("id")?, &out)?
+    };
+    for p in paths {
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    println!("[1/3] planning parameters + keygen ...");
+    let mut rng = ChaChaRng::from_seed(3);
+    let (x, y) = synth::gaussian_regression(&mut rng, 8, 2, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let params = plan(&PlanRequest::gd(8, 2, 2, 2, nu))?;
+    let ctx = FvContext::new(params);
+    let keys = keygen(&ctx, &mut rng);
+    println!(
+        "      d={}, q={} bits, λ≈{:.0} bits",
+        ctx.d(),
+        ctx.q.bit_len(),
+        ctx.params.security_bits()
+    );
+    println!("[2/3] encrypting + fitting 2 GD iterations ...");
+    let engine = make_engine(args, ctx.clone(), &keys.rk)?;
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    let fitted = fit(engine.as_ref(), &data, &FitConfig::gd(2, nu));
+    println!("[3/3] decrypting + validating against the exact simulation ...");
+    let dec = decrypt_coefficients(&ctx, &keys.sk, &fitted);
+    let expect = exact::gd_exact(&q, nu, 2).decode_last();
+    let drift = linf(&dec, &expect);
+    if drift < 1e-9 {
+        println!("OK: encrypted == exact (drift {drift:.2e}); β = {dec:?}");
+        Ok(())
+    } else {
+        bail!("selftest FAILED: drift {drift}")
+    }
+}

@@ -1,0 +1,790 @@
+//! Arbitrary-precision integers on `u64` limbs (little-endian).
+//!
+//! The FV scheme needs exact arithmetic well beyond `u128`: the plaintext
+//! modulus `t` is sized by the paper's Lemma 3 coefficient-growth bounds
+//! (hundreds of bits for realistic `K`), `Δ = ⌊q/t⌋` mixes the two
+//! moduli, and the BFV multiply performs an exact `⌊t·v/q⌉` rounding on
+//! CRT-lifted tensor-product coefficients. No bignum crate is vendored,
+//! so this module implements the required subset from scratch:
+//! add/sub/mul, shifts, Knuth Algorithm-D division, small-divisor
+//! helpers, decimal/bit conversions, and a signed wrapper.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Unsigned arbitrary-precision integer. Canonical form: no trailing
+/// zero limbs (`0` is the empty limb vector).
+#[derive(Clone, PartialEq, Eq, Default)]
+pub struct BigUint {
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: Vec::new() }
+    }
+
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            BigUint { limbs: vec![v] }
+        }
+    }
+
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        let mut s = BigUint { limbs: vec![lo, hi] };
+        s.normalize();
+        s
+    }
+
+    /// From little-endian limbs (normalizing).
+    pub fn from_limbs(limbs: Vec<u64>) -> Self {
+        let mut s = BigUint { limbs };
+        s.normalize();
+        s
+    }
+
+    pub fn limbs(&self) -> &[u64] {
+        &self.limbs
+    }
+
+    fn normalize(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bit_len(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => 64 * (self.limbs.len() - 1) + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    /// Value of bit `i` (false beyond the top).
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map_or(false, |&l| (l >> off) & 1 == 1)
+    }
+
+    pub fn to_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0]),
+            _ => None,
+        }
+    }
+
+    pub fn to_u128(&self) -> Option<u128> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0] as u128),
+            2 => Some(self.limbs[0] as u128 | (self.limbs[1] as u128) << 64),
+            _ => None,
+        }
+    }
+
+    pub fn cmp_big(&self, other: &Self) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        let n = self.limbs.len().max(other.limbs.len());
+        let mut out = Vec::with_capacity(n + 1);
+        let mut carry = 0u64;
+        for i in 0..n {
+            let a = *self.limbs.get(i).unwrap_or(&0);
+            let b = *other.limbs.get(i).unwrap_or(&0);
+            let (s1, c1) = a.overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    pub fn add_u64(&self, v: u64) -> Self {
+        self.add(&BigUint::from_u64(v))
+    }
+
+    /// `self - other`; panics on underflow.
+    pub fn sub(&self, other: &Self) -> Self {
+        assert!(self.cmp_big(other) != Ordering::Less, "BigUint::sub underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let a = self.limbs[i];
+            let b = *other.limbs.get(i).unwrap_or(&0);
+            let (d1, b1) = a.overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        BigUint::from_limbs(out)
+    }
+
+    /// Schoolbook product. Operands here are at most a few dozen limbs,
+    /// where schoolbook beats fancier algorithms anyway.
+    pub fn mul(&self, other: &Self) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + a as u128 * b as u128 + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] as u128 + carry;
+                out[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    pub fn mul_u64(&self, v: u64) -> Self {
+        if v == 0 || self.is_zero() {
+            return Self::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry = 0u128;
+        for &a in &self.limbs {
+            let cur = a as u128 * v as u128 + carry;
+            out.push(cur as u64);
+            carry = cur >> 64;
+        }
+        if carry > 0 {
+            out.push(carry as u64);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// Fused `self += a * b` (in place), the CRT-lift inner loop.
+    pub fn add_mul_u64(&mut self, a: &Self, b: u64) {
+        if b == 0 || a.is_zero() {
+            return;
+        }
+        let n = a.limbs.len();
+        if self.limbs.len() < n + 1 {
+            self.limbs.resize(n + 1, 0);
+        }
+        let mut carry = 0u128;
+        for i in 0..n {
+            let cur = self.limbs[i] as u128 + a.limbs[i] as u128 * b as u128 + carry;
+            self.limbs[i] = cur as u64;
+            carry = cur >> 64;
+        }
+        let mut k = n;
+        while carry > 0 {
+            if k == self.limbs.len() {
+                self.limbs.push(0);
+            }
+            let cur = self.limbs[k] as u128 + carry;
+            self.limbs[k] = cur as u64;
+            carry = cur >> 64;
+            k += 1;
+        }
+        self.normalize();
+    }
+
+    pub fn shl_bits(&self, bits: usize) -> Self {
+        if self.is_zero() {
+            return Self::zero();
+        }
+        let (limb_shift, bit_shift) = (bits / 64, bits % 64);
+        let mut out = vec![0u64; self.limbs.len() + limb_shift + 1];
+        for (i, &l) in self.limbs.iter().enumerate() {
+            if bit_shift == 0 {
+                out[i + limb_shift] |= l;
+            } else {
+                out[i + limb_shift] |= l << bit_shift;
+                out[i + limb_shift + 1] |= l >> (64 - bit_shift);
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    pub fn shr_bits(&self, bits: usize) -> Self {
+        let (limb_shift, bit_shift) = (bits / 64, bits % 64);
+        if limb_shift >= self.limbs.len() {
+            return Self::zero();
+        }
+        let n = self.limbs.len() - limb_shift;
+        let mut out = vec![0u64; n];
+        for i in 0..n {
+            let lo = self.limbs[i + limb_shift];
+            out[i] = if bit_shift == 0 {
+                lo
+            } else {
+                let hi = *self.limbs.get(i + limb_shift + 1).unwrap_or(&0);
+                (lo >> bit_shift) | (hi << (64 - bit_shift))
+            };
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// Divide by a single limb; returns (quotient, remainder).
+    pub fn div_rem_u64(&self, d: u64) -> (Self, u64) {
+        assert!(d != 0, "division by zero");
+        let mut q = vec![0u64; self.limbs.len()];
+        let mut rem = 0u128;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 64) | self.limbs[i] as u128;
+            q[i] = (cur / d as u128) as u64;
+            rem = cur % d as u128;
+        }
+        (BigUint::from_limbs(q), rem as u64)
+    }
+
+    pub fn mod_u64(&self, d: u64) -> u64 {
+        assert!(d != 0);
+        let mut rem = 0u128;
+        for &l in self.limbs.iter().rev() {
+            rem = ((rem << 64) | l as u128) % d as u128;
+        }
+        rem as u64
+    }
+
+    /// Knuth Algorithm D long division; returns (quotient, remainder).
+    pub fn div_rem(&self, divisor: &Self) -> (Self, Self) {
+        assert!(!divisor.is_zero(), "division by zero");
+        if self.cmp_big(divisor) == Ordering::Less {
+            return (Self::zero(), self.clone());
+        }
+        if divisor.limbs.len() == 1 {
+            let (q, r) = self.div_rem_u64(divisor.limbs[0]);
+            return (q, BigUint::from_u64(r));
+        }
+        // Normalize so the divisor's top limb has its high bit set.
+        let shift = divisor.limbs.last().unwrap().leading_zeros() as usize;
+        let u_big = self.shl_bits(shift);
+        let v = divisor.shl_bits(shift);
+        let n = v.limbs.len();
+        let mut u = u_big.limbs.clone();
+        u.push(0); // u has len m + n + 1
+        let m = u.len() - n - 1;
+        let v_limbs = &v.limbs;
+        let vn1 = v_limbs[n - 1];
+        let vn2 = v_limbs[n - 2];
+        let mut q = vec![0u64; m + 1];
+        for j in (0..=m).rev() {
+            // Estimate q̂ from the top two/three limbs.
+            let num = ((u[j + n] as u128) << 64) | u[j + n - 1] as u128;
+            let mut qhat = num / vn1 as u128;
+            let mut rhat = num % vn1 as u128;
+            loop {
+                if qhat >> 64 != 0
+                    || qhat * vn2 as u128 > ((rhat << 64) | u[j + n - 2] as u128)
+                {
+                    qhat -= 1;
+                    rhat += vn1 as u128;
+                    if rhat >> 64 == 0 {
+                        continue;
+                    }
+                }
+                break;
+            }
+            // Multiply-subtract q̂ · v from u[j .. j+n].
+            let mut borrow = 0i128;
+            let mut carry = 0u128;
+            for i in 0..n {
+                let p = qhat * v_limbs[i] as u128 + carry;
+                carry = p >> 64;
+                let sub = (u[j + i] as i128) - (p as u64 as i128) - borrow;
+                u[j + i] = sub as u64; // wraps correctly (two's complement)
+                borrow = if sub < 0 { 1 } else { 0 };
+            }
+            let sub = (u[j + n] as i128) - (carry as i128) - borrow;
+            u[j + n] = sub as u64;
+            let went_negative = sub < 0;
+            q[j] = qhat as u64;
+            if went_negative {
+                // Add back one multiple of v.
+                q[j] -= 1;
+                let mut carry = 0u128;
+                for i in 0..n {
+                    let s = u[j + i] as u128 + v_limbs[i] as u128 + carry;
+                    u[j + i] = s as u64;
+                    carry = s >> 64;
+                }
+                u[j + n] = u[j + n].wrapping_add(carry as u64);
+            }
+        }
+        let rem = BigUint::from_limbs(u[..n].to_vec()).shr_bits(shift);
+        (BigUint::from_limbs(q), rem)
+    }
+
+    /// `⌊(self + divisor/2) / divisor⌋` — round-to-nearest division
+    /// (ties away from zero), the BFV scale-and-round primitive.
+    pub fn div_round(&self, divisor: &Self) -> Self {
+        let half = divisor.shr_bits(1);
+        self.add(&half).div_rem(divisor).0
+    }
+
+    /// `self mod m` for bigint modulus.
+    pub fn rem_big(&self, m: &Self) -> Self {
+        self.div_rem(m).1
+    }
+
+    /// True iff exactly one bit is set.
+    pub fn is_power_of_two(&self) -> bool {
+        !self.is_zero() && self.limbs.iter().map(|l| l.count_ones()).sum::<u32>() == 1
+    }
+
+    /// Extract `len ≤ 64` bits starting at bit `start` (little-endian),
+    /// i.e. `(self >> start) & ((1 << len) - 1)` — the relinearisation
+    /// digit-decomposition primitive.
+    pub fn extract_bits(&self, start: usize, len: usize) -> u64 {
+        debug_assert!(len >= 1 && len <= 64);
+        let (limb, off) = (start / 64, start % 64);
+        let lo = *self.limbs.get(limb).unwrap_or(&0) >> off;
+        let word = if off == 0 {
+            lo
+        } else {
+            lo | (self.limbs.get(limb + 1).copied().unwrap_or(0) << (64 - off))
+        };
+        if len == 64 {
+            word
+        } else {
+            word & ((1u64 << len) - 1)
+        }
+    }
+
+    /// 10^e.
+    pub fn pow10(e: u32) -> Self {
+        let mut out = Self::one();
+        for _ in 0..e {
+            out = out.mul_u64(10);
+        }
+        out
+    }
+
+    /// self^e (small exponents).
+    pub fn pow(&self, e: u32) -> Self {
+        let mut out = Self::one();
+        for _ in 0..e {
+            out = out.mul(self);
+        }
+        out
+    }
+
+    /// Approximate as `mantissa × 2^exp` with `mantissa ∈ [0.5, 1)`;
+    /// exact for values below 2^53. Used only for final decode /
+    /// reporting, never inside the exact arithmetic.
+    pub fn to_f64_exp(&self) -> (f64, i64) {
+        if self.is_zero() {
+            return (0.0, 0);
+        }
+        let bits = self.bit_len();
+        // Take the top 64 bits.
+        let take = bits.min(64);
+        let top = self.shr_bits(bits - take).to_u64().unwrap();
+        let mant = top as f64 / (1u128 << take) as f64;
+        (mant, bits as i64)
+    }
+
+    /// Lossy f64 value (may overflow to inf for huge numbers).
+    pub fn to_f64(&self) -> f64 {
+        let (m, e) = self.to_f64_exp();
+        m * 2f64.powi(e.min(i32::MAX as i64) as i32)
+    }
+
+    /// Parse a decimal string (digits only).
+    pub fn from_decimal(s: &str) -> Option<Self> {
+        let mut out = Self::zero();
+        for c in s.bytes() {
+            if !c.is_ascii_digit() {
+                return None;
+            }
+            out = out.mul_u64(10).add_u64((c - b'0') as u64);
+        }
+        Some(out)
+    }
+
+    pub fn to_decimal(&self) -> String {
+        if self.is_zero() {
+            return "0".to_string();
+        }
+        let mut digits = Vec::new();
+        let mut cur = self.clone();
+        while !cur.is_zero() {
+            let (q, r) = cur.div_rem_u64(10_000_000_000_000_000_000); // 10^19
+            if q.is_zero() {
+                digits.push(format!("{r}"));
+            } else {
+                digits.push(format!("{r:019}"));
+            }
+            cur = q;
+        }
+        digits.reverse();
+        digits.concat()
+    }
+}
+
+impl fmt::Debug for BigUint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "BigUint({})", self.to_decimal())
+    }
+}
+
+impl fmt::Display for BigUint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_decimal())
+    }
+}
+
+impl PartialOrd for BigUint {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp_big(other))
+    }
+}
+
+impl Ord for BigUint {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_big(other)
+    }
+}
+
+/// Signed arbitrary-precision integer (sign + magnitude).
+#[derive(Clone, PartialEq, Eq, Default)]
+pub struct BigInt {
+    /// True iff the value is strictly negative.
+    pub neg: bool,
+    pub mag: BigUint,
+}
+
+impl BigInt {
+    pub fn zero() -> Self {
+        BigInt { neg: false, mag: BigUint::zero() }
+    }
+
+    pub fn from_i64(v: i64) -> Self {
+        BigInt { neg: v < 0, mag: BigUint::from_u64(v.unsigned_abs()) }
+    }
+
+    pub fn from_i128(v: i128) -> Self {
+        BigInt { neg: v < 0, mag: BigUint::from_u128(v.unsigned_abs()) }
+    }
+
+    pub fn from_biguint(mag: BigUint) -> Self {
+        BigInt { neg: false, mag }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.mag.is_zero()
+    }
+
+    fn canon(mut self) -> Self {
+        if self.mag.is_zero() {
+            self.neg = false;
+        }
+        self
+    }
+
+    pub fn neg_value(&self) -> Self {
+        BigInt { neg: !self.neg && !self.is_zero(), mag: self.mag.clone() }
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        if self.neg == other.neg {
+            BigInt { neg: self.neg, mag: self.mag.add(&other.mag) }.canon()
+        } else {
+            match self.mag.cmp_big(&other.mag) {
+                Ordering::Equal => Self::zero(),
+                Ordering::Greater => {
+                    BigInt { neg: self.neg, mag: self.mag.sub(&other.mag) }.canon()
+                }
+                Ordering::Less => {
+                    BigInt { neg: other.neg, mag: other.mag.sub(&self.mag) }.canon()
+                }
+            }
+        }
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        self.add(&other.neg_value())
+    }
+
+    pub fn mul(&self, other: &Self) -> Self {
+        BigInt { neg: self.neg != other.neg, mag: self.mag.mul(&other.mag) }.canon()
+    }
+
+    pub fn mul_i64(&self, v: i64) -> Self {
+        BigInt { neg: self.neg != (v < 0), mag: self.mag.mul_u64(v.unsigned_abs()) }.canon()
+    }
+
+    /// Round-to-nearest division (ties away from zero).
+    pub fn div_round(&self, divisor: &BigUint) -> Self {
+        BigInt { neg: self.neg, mag: self.mag.div_round(divisor) }.canon()
+    }
+
+    /// Canonical residue in `[0, m)`.
+    pub fn rem_euclid_big(&self, m: &BigUint) -> BigUint {
+        let r = self.mag.rem_big(m);
+        if self.neg && !r.is_zero() {
+            m.sub(&r)
+        } else {
+            r
+        }
+    }
+
+    /// Canonical residue modulo a u64 prime.
+    pub fn mod_u64(&self, p: u64) -> u64 {
+        let r = self.mag.mod_u64(p);
+        if self.neg && r != 0 {
+            p - r
+        } else {
+            r
+        }
+    }
+
+    pub fn cmp_big(&self, other: &Self) -> Ordering {
+        match (self.neg, other.neg) {
+            (false, true) => Ordering::Greater,
+            (true, false) => Ordering::Less,
+            (false, false) => self.mag.cmp_big(&other.mag),
+            (true, true) => other.mag.cmp_big(&self.mag),
+        }
+    }
+
+    pub fn abs_big(&self) -> BigUint {
+        self.mag.clone()
+    }
+
+    pub fn to_i128(&self) -> Option<i128> {
+        let m = self.mag.to_u128()?;
+        if self.neg {
+            if m > i128::MAX as u128 + 1 {
+                None
+            } else {
+                Some((m as i128).wrapping_neg())
+            }
+        } else if m > i128::MAX as u128 {
+            None
+        } else {
+            Some(m as i128)
+        }
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        let v = self.mag.to_f64();
+        if self.neg {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+impl fmt::Debug for BigInt {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "BigInt({}{})", if self.neg { "-" } else { "" }, self.mag.to_decimal())
+    }
+}
+
+impl fmt::Display for BigInt {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", if self.neg { "-" } else { "" }, self.mag.to_decimal())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::rng::ChaChaRng;
+    use crate::util::prop::PropRunner;
+
+    fn rand_big(rng: &mut ChaChaRng, max_limbs: usize) -> BigUint {
+        let n = (rng.next_u64() as usize % max_limbs) + 1;
+        BigUint::from_limbs((0..n).map(|_| rng.next_u64()).collect())
+    }
+
+    #[test]
+    fn u128_roundtrip() {
+        for v in [0u128, 1, u64::MAX as u128, u128::MAX, 1 << 64, (1 << 64) + 5] {
+            assert_eq!(BigUint::from_u128(v).to_u128(), Some(v));
+        }
+    }
+
+    #[test]
+    fn add_sub_against_u128() {
+        let mut run = PropRunner::new("bigint_add_sub", 500);
+        run.run(|rng| {
+            let a = rng.next_u64() as u128 | ((rng.next_u64() as u128) << 32);
+            let b = rng.next_u64() as u128 | ((rng.next_u64() as u128) << 32);
+            let (ba, bb) = (BigUint::from_u128(a), BigUint::from_u128(b));
+            assert_eq!(ba.add(&bb).to_u128(), Some(a + b));
+            let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+            assert_eq!(
+                BigUint::from_u128(hi).sub(&BigUint::from_u128(lo)).to_u128(),
+                Some(hi - lo)
+            );
+        });
+    }
+
+    #[test]
+    fn mul_against_u128() {
+        let mut run = PropRunner::new("bigint_mul", 500);
+        run.run(|rng| {
+            let a = rng.next_u64();
+            let b = rng.next_u64();
+            assert_eq!(
+                BigUint::from_u64(a).mul(&BigUint::from_u64(b)).to_u128(),
+                Some(a as u128 * b as u128)
+            );
+        });
+    }
+
+    #[test]
+    fn div_rem_identity_property() {
+        // For random (a, b): a == q*b + r with r < b. This exercises the
+        // Knuth-D corner cases (normalization, add-back) statistically.
+        let mut run = PropRunner::new("bigint_divrem", 300);
+        run.run(|rng| {
+            let a = rand_big(rng, 8);
+            let mut b = rand_big(rng, 4);
+            if b.is_zero() {
+                b = BigUint::one();
+            }
+            let (q, r) = a.div_rem(&b);
+            assert!(r.cmp_big(&b) == Ordering::Less, "r < b");
+            assert_eq!(q.mul(&b).add(&r), a, "a = q*b + r");
+        });
+    }
+
+    #[test]
+    fn div_rem_addback_case() {
+        // A crafted case that triggers the rare "add back" branch:
+        // u = 2^128 - 1, v = 2^64 + 3.
+        let u = BigUint::from_limbs(vec![u64::MAX, u64::MAX]);
+        let v = BigUint::from_limbs(vec![3, 1]);
+        let (q, r) = u.div_rem(&v);
+        assert_eq!(q.mul(&v).add(&r), u);
+        assert!(r.cmp_big(&v) == Ordering::Less);
+    }
+
+    #[test]
+    fn shifts() {
+        let a = BigUint::from_u128(0xdead_beef_cafe_babe_1234);
+        assert_eq!(a.shl_bits(64).shr_bits(64), a);
+        assert_eq!(a.shl_bits(3).to_u128(), Some(0xdead_beef_cafe_babe_1234 << 3));
+        assert_eq!(a.shr_bits(300), BigUint::zero());
+    }
+
+    #[test]
+    fn div_round_ties() {
+        // 7/2 -> 4 (ties away from zero... 3.5 rounds to 4)
+        let r = BigUint::from_u64(7).div_round(&BigUint::from_u64(2));
+        assert_eq!(r.to_u64(), Some(4));
+        let r = BigUint::from_u64(6).div_round(&BigUint::from_u64(4));
+        assert_eq!(r.to_u64(), Some(2)); // 1.5 -> 2
+        let r = BigUint::from_u64(5).div_round(&BigUint::from_u64(4));
+        assert_eq!(r.to_u64(), Some(1)); // 1.25 -> 1
+    }
+
+    #[test]
+    fn decimal_roundtrip() {
+        for s in ["0", "1", "18446744073709551616", "123456789012345678901234567890"] {
+            let b = BigUint::from_decimal(s).unwrap();
+            assert_eq!(b.to_decimal(), s);
+        }
+        assert_eq!(BigUint::pow10(20).to_decimal(), "100000000000000000000");
+    }
+
+    #[test]
+    fn bit_len_and_bits() {
+        assert_eq!(BigUint::zero().bit_len(), 0);
+        assert_eq!(BigUint::from_u64(1).bit_len(), 1);
+        assert_eq!(BigUint::from_u64(0xff).bit_len(), 8);
+        let b = BigUint::one().shl_bits(200);
+        assert_eq!(b.bit_len(), 201);
+        assert!(b.bit(200) && !b.bit(199) && !b.bit(201));
+    }
+
+    #[test]
+    fn to_f64_exp_accuracy() {
+        let b = BigUint::from_decimal("12345678901234567890123456789").unwrap();
+        let (m, e) = b.to_f64_exp();
+        let approx = m * 2f64.powi(e as i32);
+        let rel = (approx - 1.2345678901234568e28).abs() / 1.2345678901234568e28;
+        assert!(rel < 1e-12, "rel error {rel}");
+    }
+
+    #[test]
+    fn signed_arithmetic() {
+        let a = BigInt::from_i64(-5);
+        let b = BigInt::from_i64(3);
+        assert_eq!(a.add(&b).to_i128(), Some(-2));
+        assert_eq!(a.sub(&b).to_i128(), Some(-8));
+        assert_eq!(a.mul(&b).to_i128(), Some(-15));
+        assert_eq!(a.neg_value().to_i128(), Some(5));
+        assert_eq!(BigInt::zero().neg_value().to_i128(), Some(0));
+    }
+
+    #[test]
+    fn signed_property_vs_i128() {
+        let mut run = PropRunner::new("bigint_signed", 500);
+        run.run(|rng| {
+            let a = rng.next_u64() as i64 as i128 >> (rng.next_u64() % 32);
+            let b = rng.next_u64() as i64 as i128 >> (rng.next_u64() % 32);
+            let (ba, bb) = (BigInt::from_i128(a), BigInt::from_i128(b));
+            assert_eq!(ba.add(&bb).to_i128(), Some(a + b));
+            assert_eq!(ba.sub(&bb).to_i128(), Some(a - b));
+            assert_eq!(ba.mul(&bb).to_i128(), Some(a * b));
+        });
+    }
+
+    #[test]
+    fn rem_euclid_signed() {
+        let m = BigUint::from_u64(7);
+        assert_eq!(BigInt::from_i64(-1).rem_euclid_big(&m).to_u64(), Some(6));
+        assert_eq!(BigInt::from_i64(-14).rem_euclid_big(&m).to_u64(), Some(0));
+        assert_eq!(BigInt::from_i64(15).rem_euclid_big(&m).to_u64(), Some(1));
+        assert_eq!(BigInt::from_i64(-15).mod_u64(7), 6);
+    }
+
+    #[test]
+    fn div_round_signed() {
+        // -7/2 -> -4 (away from zero)
+        let r = BigInt::from_i64(-7).div_round(&BigUint::from_u64(2));
+        assert_eq!(r.to_i128(), Some(-4));
+    }
+}

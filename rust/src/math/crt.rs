@@ -1,0 +1,200 @@
+//! Residue number systems: CRT lift/reduce between residue planes and
+//! big integers.
+//!
+//! Ciphertext polynomials live as one `u64` residue plane per prime
+//! (`RnsBasis`). The BFV multiply needs exact integer arithmetic across
+//! the basis (tensor products in an extended basis, and the `⌊t·v/q⌉`
+//! scale-and-round), which is done by lifting coefficients through the
+//! explicit CRT formula `v = Σ_i [x_i·ŷ_i]_{p_i} · M_i  (mod M)` with
+//! `M_i = M/p_i`, `ŷ_i = M_i^{-1} mod p_i` — all precomputed here.
+
+use super::bigint::{BigInt, BigUint};
+use super::modarith::{invmod_prime, mulmod};
+
+/// A fixed RNS basis: pairwise-distinct primes and CRT precomputation.
+#[derive(Clone, Debug)]
+pub struct RnsBasis {
+    /// The primes `p_i`.
+    pub primes: Vec<u64>,
+    /// `M = Π p_i`.
+    pub modulus: BigUint,
+    /// `M_i = M / p_i`.
+    pub crt_m: Vec<BigUint>,
+    /// `ŷ_i = (M/p_i)^{-1} mod p_i`.
+    pub crt_inv: Vec<u64>,
+    /// Residues of `M_i` mod each `p_j` — used by fast base extension.
+    pub half_modulus: BigUint,
+}
+
+impl RnsBasis {
+    pub fn new(primes: Vec<u64>) -> Self {
+        assert!(!primes.is_empty());
+        let mut modulus = BigUint::one();
+        for &p in &primes {
+            modulus = modulus.mul_u64(p);
+        }
+        let mut crt_m = Vec::with_capacity(primes.len());
+        let mut crt_inv = Vec::with_capacity(primes.len());
+        for &p in &primes {
+            let (mi, rem) = modulus.div_rem_u64(p);
+            debug_assert_eq!(rem, 0);
+            let mi_mod_p = mi.mod_u64(p);
+            crt_m.push(mi);
+            crt_inv.push(invmod_prime(mi_mod_p, p));
+        }
+        let half_modulus = modulus.shr_bits(1);
+        RnsBasis { primes, modulus, crt_m, crt_inv, half_modulus }
+    }
+
+    pub fn len(&self) -> usize {
+        self.primes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.primes.is_empty()
+    }
+
+    /// Total modulus bit length.
+    pub fn bits(&self) -> usize {
+        self.modulus.bit_len()
+    }
+
+    /// CRT-lift one coefficient (residue per prime) to its canonical
+    /// representative in `[0, M)`.
+    pub fn lift(&self, residues: &[u64]) -> BigUint {
+        debug_assert_eq!(residues.len(), self.len());
+        let mut acc = BigUint::zero();
+        for i in 0..self.len() {
+            let c = mulmod(residues[i], self.crt_inv[i], self.primes[i]);
+            acc.add_mul_u64(&self.crt_m[i], c);
+        }
+        // acc < Σ p_i · M_i = L · M, so a few subtractions suffice.
+        while acc.cmp_big(&self.modulus) != std::cmp::Ordering::Less {
+            acc = acc.sub(&self.modulus);
+        }
+        acc
+    }
+
+    /// CRT-lift to the symmetric representative in `(-M/2, M/2]`.
+    pub fn lift_signed(&self, residues: &[u64]) -> BigInt {
+        let v = self.lift(residues);
+        if v.cmp_big(&self.half_modulus) == std::cmp::Ordering::Greater {
+            BigInt { neg: true, mag: self.modulus.sub(&v) }
+        } else {
+            BigInt::from_biguint(v)
+        }
+    }
+
+    /// Reduce an unsigned big integer into residue form.
+    pub fn reduce(&self, v: &BigUint) -> Vec<u64> {
+        self.primes.iter().map(|&p| v.mod_u64(p)).collect()
+    }
+
+    /// Reduce a signed big integer into canonical residue form.
+    pub fn reduce_signed(&self, v: &BigInt) -> Vec<u64> {
+        self.primes.iter().map(|&p| v.mod_u64(p)).collect()
+    }
+
+    /// Reduce an `i64` into canonical residue form.
+    pub fn reduce_i64(&self, v: i64) -> Vec<u64> {
+        self.primes
+            .iter()
+            .map(|&p| {
+                let r = v.rem_euclid(p as i64);
+                r as u64
+            })
+            .collect()
+    }
+
+    /// Concatenate two bases (`self ∪ other`); primes must be disjoint.
+    pub fn join(&self, other: &RnsBasis) -> RnsBasis {
+        let mut primes = self.primes.clone();
+        for &p in &other.primes {
+            assert!(!primes.contains(&p), "bases must be disjoint");
+            primes.push(p);
+        }
+        RnsBasis::new(primes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::primes::rns_basis_primes;
+    use crate::util::prop::{gen, PropRunner};
+
+    fn basis(l: usize) -> RnsBasis {
+        RnsBasis::new(rns_basis_primes(256, l))
+    }
+
+    #[test]
+    fn lift_reduce_roundtrip_small() {
+        let b = basis(3);
+        for v in [0u64, 1, 12345, u64::MAX] {
+            let big = BigUint::from_u64(v);
+            let lifted = b.lift(&b.reduce(&big));
+            assert_eq!(lifted, big.rem_big(&b.modulus));
+        }
+    }
+
+    #[test]
+    fn lift_reduce_roundtrip_property() {
+        let b = basis(5);
+        let mut run = PropRunner::new("crt_roundtrip", 300);
+        run.run(|rng| {
+            // Random value below M via random residues.
+            let residues: Vec<u64> =
+                b.primes.iter().map(|&p| rng.uniform_below(p)).collect();
+            let v = b.lift(&residues);
+            assert!(v.cmp_big(&b.modulus) == std::cmp::Ordering::Less);
+            assert_eq!(b.reduce(&v), residues, "reduce(lift(x)) == x");
+        });
+    }
+
+    #[test]
+    fn signed_lift_symmetry() {
+        let b = basis(4);
+        let mut run = PropRunner::new("crt_signed", 300);
+        run.run(|rng| {
+            let v = gen::int_in(rng, -1_000_000_000, 1_000_000_000);
+            let residues = b.reduce_i64(v);
+            let lifted = b.lift_signed(&residues);
+            assert_eq!(lifted.to_i128(), Some(v as i128));
+        });
+    }
+
+    #[test]
+    fn crt_is_ring_homomorphism() {
+        // lift(a·b mod p_i per-plane) == a·b mod M.
+        let b = basis(4);
+        let mut run = PropRunner::new("crt_homomorphism", 200);
+        run.run(|rng| {
+            let ra: Vec<u64> = b.primes.iter().map(|&p| rng.uniform_below(p)).collect();
+            let rb: Vec<u64> = b.primes.iter().map(|&p| rng.uniform_below(p)).collect();
+            let prod: Vec<u64> = (0..b.len())
+                .map(|i| mulmod(ra[i], rb[i], b.primes[i]))
+                .collect();
+            let va = b.lift(&ra);
+            let vb = b.lift(&rb);
+            let expect = va.mul(&vb).rem_big(&b.modulus);
+            assert_eq!(b.lift(&prod), expect);
+        });
+    }
+
+    #[test]
+    fn join_disjoint_bases() {
+        let q = RnsBasis::new(rns_basis_primes(256, 3));
+        let all = rns_basis_primes(256, 7);
+        let ext = RnsBasis::new(all[3..].to_vec());
+        let joined = q.join(&ext);
+        assert_eq!(joined.len(), 7);
+        assert_eq!(joined.modulus, q.modulus.mul(&ext.modulus));
+    }
+
+    #[test]
+    #[should_panic(expected = "disjoint")]
+    fn join_rejects_overlap() {
+        let b = basis(2);
+        let _ = b.join(&b);
+    }
+}

@@ -1,0 +1,29 @@
+//! Mathematical substrate for the FV cryptosystem.
+//!
+//! Everything the scheme needs that a big-number / NTT library would
+//! normally provide, implemented from scratch (the build is offline and
+//! no such crates are vendored):
+//!
+//! - [`modarith`] — `u64` modular arithmetic (`mulmod`, `powmod`,
+//!   `invmod`) with `u128` intermediates.
+//! - [`primes`] — deterministic Miller–Rabin and NTT-friendly prime
+//!   generation (`p ≡ 1 mod 2d`), mirrored bit-for-bit by
+//!   `python/compile/rns.py` so Rust and the AOT artifacts agree on the
+//!   RNS basis.
+//! - [`ntt`] — in-place negacyclic number-theoretic transform
+//!   (Cooley–Tukey forward / Gentleman–Sande inverse with ψ-twisting
+//!   folded into the tables).
+//! - [`bigint`] — arbitrary-precision unsigned/signed integers (u64
+//!   limbs) with Knuth-D division; used for CRT lifts, the BFV
+//!   scale-and-round, and Lemma-3 bound arithmetic.
+//! - [`crt`] — RNS bases: CRT lift/reduce between residue planes and
+//!   big integers.
+//! - [`poly`] — polynomials in `R_q = Z_q[x]/(x^d + 1)` stored as RNS
+//!   residue planes.
+
+pub mod bigint;
+pub mod crt;
+pub mod modarith;
+pub mod ntt;
+pub mod poly;
+pub mod primes;

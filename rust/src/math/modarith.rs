@@ -1,0 +1,169 @@
+//! Scalar modular arithmetic over `u64` moduli.
+//!
+//! All FV residue planes use primes `p < 2^31`, so products of canonical
+//! residues fit comfortably in `u128`; these helpers are nevertheless
+//! written to be correct for any `u64` modulus.
+
+/// `(a + b) mod m`, assuming `a, b < m`.
+#[inline(always)]
+pub fn addmod(a: u64, b: u64, m: u64) -> u64 {
+    debug_assert!(a < m && b < m);
+    let s = a.wrapping_add(b);
+    if s >= m || s < a {
+        s.wrapping_sub(m)
+    } else {
+        s
+    }
+}
+
+/// `(a - b) mod m`, assuming `a, b < m`.
+#[inline(always)]
+pub fn submod(a: u64, b: u64, m: u64) -> u64 {
+    debug_assert!(a < m && b < m);
+    if a >= b {
+        a - b
+    } else {
+        a.wrapping_sub(b).wrapping_add(m)
+    }
+}
+
+/// `(a * b) mod m` via a `u128` intermediate.
+#[inline(always)]
+pub fn mulmod(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+/// `-a mod m`, assuming `a < m`.
+#[inline(always)]
+pub fn negmod(a: u64, m: u64) -> u64 {
+    if a == 0 {
+        0
+    } else {
+        m - a
+    }
+}
+
+/// `a^e mod m` by square-and-multiply.
+pub fn powmod(mut a: u64, mut e: u64, m: u64) -> u64 {
+    if m == 1 {
+        return 0;
+    }
+    a %= m;
+    let mut acc: u64 = 1;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mulmod(acc, a, m);
+        }
+        a = mulmod(a, a, m);
+        e >>= 1;
+    }
+    acc
+}
+
+/// Modular inverse of `a` modulo prime `p` (Fermat). Panics if `a ≡ 0`.
+pub fn invmod_prime(a: u64, p: u64) -> u64 {
+    assert!(a % p != 0, "invmod_prime: zero has no inverse");
+    powmod(a, p - 2, p)
+}
+
+/// Modular inverse for a general modulus via the extended Euclidean
+/// algorithm. Returns `None` if `gcd(a, m) != 1`.
+pub fn invmod(a: u64, m: u64) -> Option<u64> {
+    let (mut old_r, mut r) = (a as i128, m as i128);
+    let (mut old_s, mut s) = (1i128, 0i128);
+    while r != 0 {
+        let q = old_r / r;
+        let tmp_r = old_r - q * r;
+        old_r = r;
+        r = tmp_r;
+        let tmp_s = old_s - q * s;
+        old_s = s;
+        s = tmp_s;
+    }
+    if old_r != 1 {
+        return None;
+    }
+    let mut inv = old_s % m as i128;
+    if inv < 0 {
+        inv += m as i128;
+    }
+    Some(inv as u64)
+}
+
+/// Centered (symmetric) representative of `a mod m` in
+/// `(-m/2, m/2]`, returned as `i64`. Requires `m < 2^63`.
+#[inline]
+pub fn center(a: u64, m: u64) -> i64 {
+    debug_assert!(a < m && m < (1 << 63));
+    if a > m / 2 {
+        a as i64 - m as i64
+    } else {
+        a as i64
+    }
+}
+
+/// Canonical representative in `[0, m)` of a signed value.
+#[inline]
+pub fn from_signed(v: i64, m: u64) -> u64 {
+    let r = v.rem_euclid(m as i64);
+    r as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let m = 0xffff_fffb; // prime
+        for &(a, b) in &[(0u64, 0u64), (1, m - 1), (m - 1, m - 1), (12345, 67890)] {
+            let s = addmod(a % m, b % m, m);
+            assert_eq!(submod(s, b % m, m), a % m);
+        }
+    }
+
+    #[test]
+    fn addmod_near_u64_max() {
+        // Modulus close to u64::MAX exercises the wrap-detection branch.
+        let m = u64::MAX - 58; // arbitrary large odd modulus
+        assert_eq!(addmod(m - 1, m - 1, m), m - 2);
+        assert_eq!(addmod(m - 1, 1, m), 0);
+    }
+
+    #[test]
+    fn powmod_small_cases() {
+        assert_eq!(powmod(2, 10, 1_000_003), 1024);
+        assert_eq!(powmod(7, 0, 13), 1);
+        assert_eq!(powmod(0, 5, 13), 0);
+        assert_eq!(powmod(5, 1, 1), 0);
+    }
+
+    #[test]
+    fn fermat_inverse() {
+        let p = 998_244_353u64; // NTT prime
+        for a in [1u64, 2, 3, 10, p - 1, 123_456_789] {
+            let inv = invmod_prime(a, p);
+            assert_eq!(mulmod(a, inv, p), 1);
+        }
+    }
+
+    #[test]
+    fn general_inverse() {
+        assert_eq!(invmod(3, 10), Some(7));
+        assert_eq!(invmod(2, 10), None);
+        let m = 1u64 << 32;
+        let a = 0x1234_5679; // odd -> invertible mod 2^32
+        let inv = invmod(a, m).unwrap();
+        assert_eq!(mulmod(a, inv, m), 1);
+    }
+
+    #[test]
+    fn center_and_back() {
+        let m = 101u64;
+        for a in 0..m {
+            let c = center(a, m);
+            assert!(c > -(m as i64) / 2 - 1 && c <= m as i64 / 2);
+            assert_eq!(from_signed(c, m), a);
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Negacyclic number-theoretic transform over `Z_p[x]/(x^d + 1)`.
+//!
+//! Implements the merged-twist radix-2 NTT of Longa & Naehrig: the
+//! ψ-twisting that turns a cyclic convolution into a negacyclic one is
+//! folded into the twiddle tables, so a forward transform, a pointwise
+//! product and an inverse transform compute multiplication modulo
+//! `x^d + 1` directly.
+//!
+//! Forward uses Cooley–Tukey butterflies with `ψ^bitrev(i)` twiddles;
+//! inverse uses Gentleman–Sande with `ψ^{-bitrev(i)}` and a final scale
+//! by `d^{-1}`. This matches the Pallas kernel in
+//! `python/compile/kernels/ntt.py` stage for stage.
+
+use super::modarith::{addmod, invmod_prime, mulmod, submod};
+use super::primes::primitive_2d_root;
+
+/// Shoup modular multiplication by a *precomputed* constant:
+/// given `s_shoup = ⌊s·2^64/p⌋`, computes `x·s mod p` with one widening
+/// multiply and no division (Harvey/Shoup; requires `p < 2^63`).
+#[inline(always)]
+fn mulmod_shoup(x: u64, s: u64, s_shoup: u64, p: u64) -> u64 {
+    let q = ((x as u128 * s_shoup as u128) >> 64) as u64;
+    let r = x.wrapping_mul(s).wrapping_sub(q.wrapping_mul(p));
+    if r >= p {
+        r - p
+    } else {
+        r
+    }
+}
+
+fn shoup_precompute(s: u64, p: u64) -> u64 {
+    (((s as u128) << 64) / p as u128) as u64
+}
+
+/// Precomputed tables for one `(p, d)` pair.
+#[derive(Clone, Debug)]
+pub struct NttTable {
+    /// Prime modulus, `p ≡ 1 (mod 2d)`.
+    pub p: u64,
+    /// Ring degree (power of two).
+    pub d: usize,
+    /// `ψ^bitrev(i)` for the forward transform.
+    psi_rev: Vec<u64>,
+    /// Shoup companions `⌊ψ^bitrev(i)·2^64/p⌋`.
+    psi_rev_shoup: Vec<u64>,
+    /// `ψ^{-bitrev(i)}` for the inverse transform.
+    psi_inv_rev: Vec<u64>,
+    psi_inv_rev_shoup: Vec<u64>,
+    /// `d^{-1} mod p` (+ Shoup companion).
+    d_inv: u64,
+    d_inv_shoup: u64,
+}
+
+fn bitrev(x: usize, bits: u32) -> usize {
+    x.reverse_bits() >> (usize::BITS - bits)
+}
+
+impl NttTable {
+    /// Build tables for degree `d` (power of two) and prime `p ≡ 1 mod 2d`.
+    pub fn new(p: u64, d: usize) -> Self {
+        assert!(d.is_power_of_two() && d >= 2);
+        let psi = primitive_2d_root(p, d);
+        let psi_inv = invmod_prime(psi, p);
+        let bits = d.trailing_zeros();
+        let mut pow = vec![0u64; d];
+        let mut pow_inv = vec![0u64; d];
+        let (mut cur, mut cur_inv) = (1u64, 1u64);
+        for i in 0..d {
+            pow[i] = cur;
+            pow_inv[i] = cur_inv;
+            cur = mulmod(cur, psi, p);
+            cur_inv = mulmod(cur_inv, psi_inv, p);
+        }
+        let mut psi_rev = vec![0u64; d];
+        let mut psi_inv_rev = vec![0u64; d];
+        for i in 0..d {
+            let r = bitrev(i, bits);
+            psi_rev[i] = pow[r];
+            psi_inv_rev[i] = pow_inv[r];
+        }
+        let psi_rev_shoup = psi_rev.iter().map(|&s| shoup_precompute(s, p)).collect();
+        let psi_inv_rev_shoup = psi_inv_rev.iter().map(|&s| shoup_precompute(s, p)).collect();
+        let d_inv = invmod_prime(d as u64, p);
+        NttTable {
+            p,
+            d,
+            psi_rev,
+            psi_rev_shoup,
+            psi_inv_rev,
+            psi_inv_rev_shoup,
+            d_inv,
+            d_inv_shoup: shoup_precompute(d_inv, p),
+        }
+    }
+
+    /// In-place forward negacyclic NTT (coefficient → evaluation order).
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.d);
+        let (p, n) = (self.p, self.d);
+        let mut t = n;
+        let mut m = 1usize;
+        while m < n {
+            t >>= 1;
+            for i in 0..m {
+                let j1 = 2 * i * t;
+                let s = self.psi_rev[m + i];
+                let s_sh = self.psi_rev_shoup[m + i];
+                for j in j1..j1 + t {
+                    let u = a[j];
+                    let v = mulmod_shoup(a[j + t], s, s_sh, p);
+                    a[j] = addmod(u, v, p);
+                    a[j + t] = submod(u, v, p);
+                }
+            }
+            m <<= 1;
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (evaluation → coefficient order).
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.d);
+        let (p, n) = (self.p, self.d);
+        let mut t = 1usize;
+        let mut m = n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            for i in 0..h {
+                let s = self.psi_inv_rev[h + i];
+                let s_sh = self.psi_inv_rev_shoup[h + i];
+                for j in j1..j1 + t {
+                    let u = a[j];
+                    let v = a[j + t];
+                    a[j] = addmod(u, v, p);
+                    a[j + t] = mulmod_shoup(submod(u, v, p), s, s_sh, p);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = mulmod_shoup(*x, self.d_inv, self.d_inv_shoup, p);
+        }
+    }
+
+    /// Negacyclic product `a * b mod (x^d + 1, p)` out of place.
+    pub fn polymul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let mut fa = a.to_vec();
+        let mut fb = b.to_vec();
+        self.forward(&mut fa);
+        self.forward(&mut fb);
+        for i in 0..self.d {
+            fa[i] = mulmod(fa[i], fb[i], self.p);
+        }
+        self.inverse(&mut fa);
+        fa
+    }
+}
+
+/// Schoolbook negacyclic product — the O(d²) oracle used by tests (the
+/// Python twin lives in `python/compile/kernels/ref.py`).
+pub fn polymul_naive(a: &[u64], b: &[u64], p: u64) -> Vec<u64> {
+    let d = a.len();
+    assert_eq!(b.len(), d);
+    let mut out = vec![0u64; d];
+    for i in 0..d {
+        if a[i] == 0 {
+            continue;
+        }
+        for j in 0..d {
+            let prod = mulmod(a[i], b[j], p);
+            let k = i + j;
+            if k < d {
+                out[k] = addmod(out[k], prod, p);
+            } else {
+                out[k - d] = submod(out[k - d], prod, p); // x^d = -1
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::rng::ChaChaRng;
+    use crate::math::primes::rns_basis_primes;
+
+    fn rand_poly(rng: &mut ChaChaRng, d: usize, p: u64) -> Vec<u64> {
+        (0..d).map(|_| rng.uniform_below(p)).collect()
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(7);
+        for d in [4usize, 64, 1024] {
+            let p = rns_basis_primes(d, 1)[0];
+            let t = NttTable::new(p, d);
+            let a = rand_poly(&mut rng, d, p);
+            let mut b = a.clone();
+            t.forward(&mut b);
+            assert_ne!(a, b, "transform should not be identity");
+            t.inverse(&mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn matches_schoolbook() {
+        let mut rng = ChaChaRng::from_seed(8);
+        for d in [4usize, 16, 256] {
+            let p = rns_basis_primes(d, 2)[1];
+            let t = NttTable::new(p, d);
+            let a = rand_poly(&mut rng, d, p);
+            let b = rand_poly(&mut rng, d, p);
+            assert_eq!(t.polymul(&a, &b), polymul_naive(&a, &b, p), "d = {d}");
+        }
+    }
+
+    #[test]
+    fn shoup_matches_plain_mulmod() {
+        use crate::util::prop::PropRunner;
+        let p = rns_basis_primes(64, 1)[0];
+        let mut run = PropRunner::new("shoup_mulmod", 500);
+        run.run(|rng| {
+            let x = rng.uniform_below(p);
+            let s = rng.uniform_below(p);
+            let sh = shoup_precompute(s, p);
+            assert_eq!(mulmod_shoup(x, s, sh, p), mulmod(x, s, p));
+        });
+    }
+
+    #[test]
+    fn negacyclic_wraparound_sign() {
+        // x^{d-1} * x = x^d = -1.
+        let d = 8usize;
+        let p = rns_basis_primes(d, 1)[0];
+        let t = NttTable::new(p, d);
+        let mut a = vec![0u64; d];
+        let mut b = vec![0u64; d];
+        a[d - 1] = 1;
+        b[1] = 1;
+        let c = t.polymul(&a, &b);
+        let mut expect = vec![0u64; d];
+        expect[0] = p - 1;
+        assert_eq!(c, expect);
+    }
+
+    #[test]
+    fn multiplication_by_constant() {
+        let d = 16usize;
+        let p = rns_basis_primes(d, 1)[0];
+        let t = NttTable::new(p, d);
+        let mut rng = ChaChaRng::from_seed(9);
+        let a = rand_poly(&mut rng, d, p);
+        let mut c = vec![0u64; d];
+        c[0] = 3;
+        let out = t.polymul(&a, &c);
+        for i in 0..d {
+            assert_eq!(out[i], mulmod(a[i], 3, p));
+        }
+    }
+
+    #[test]
+    fn linearity_property() {
+        // NTT(a + b) == NTT(a) + NTT(b) pointwise.
+        let d = 64usize;
+        let p = rns_basis_primes(d, 1)[0];
+        let t = NttTable::new(p, d);
+        let mut rng = ChaChaRng::from_seed(10);
+        let a = rand_poly(&mut rng, d, p);
+        let b = rand_poly(&mut rng, d, p);
+        let sum: Vec<u64> = (0..d).map(|i| addmod(a[i], b[i], p)).collect();
+        let (mut fa, mut fb, mut fs) = (a.clone(), b.clone(), sum.clone());
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        t.forward(&mut fs);
+        for i in 0..d {
+            assert_eq!(fs[i], addmod(fa[i], fb[i], p));
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Polynomials in `R_q = Z_q[x]/(x^d + 1)` stored as RNS residue planes.
+//!
+//! A [`RingContext`] bundles the ring degree, an [`RnsBasis`] and the
+//! per-prime NTT tables; an [`RnsPoly`] is one `u64` plane per prime.
+//! Polynomials carry a representation flag: `Coeff` (power basis) or
+//! `Ntt` (evaluation basis). Additions work in either representation
+//! (element-wise in both); multiplications require `Ntt`.
+
+use std::sync::Arc;
+
+use super::crt::RnsBasis;
+use super::modarith::{addmod, mulmod, negmod, submod};
+use super::ntt::NttTable;
+
+/// Representation of a polynomial's planes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rep {
+    /// Power-basis coefficients.
+    Coeff,
+    /// NTT evaluation values.
+    Ntt,
+}
+
+/// Shared ring precomputation: degree, basis, NTT tables.
+#[derive(Debug)]
+pub struct RingContext {
+    pub d: usize,
+    pub basis: RnsBasis,
+    pub tables: Vec<NttTable>,
+}
+
+impl RingContext {
+    pub fn new(d: usize, primes: Vec<u64>) -> Arc<Self> {
+        let tables = primes.iter().map(|&p| NttTable::new(p, d)).collect();
+        Arc::new(RingContext { d, basis: RnsBasis::new(primes), tables })
+    }
+
+    pub fn nlimbs(&self) -> usize {
+        self.basis.len()
+    }
+
+    /// All-zero polynomial in coefficient representation.
+    pub fn zero(&self) -> RnsPoly {
+        RnsPoly {
+            d: self.d,
+            planes: vec![vec![0u64; self.d]; self.nlimbs()],
+            rep: Rep::Coeff,
+        }
+    }
+
+    /// Polynomial from signed coefficients (length ≤ d).
+    pub fn from_signed_coeffs(&self, coeffs: &[i64]) -> RnsPoly {
+        assert!(coeffs.len() <= self.d, "coefficient vector longer than ring degree");
+        let mut poly = self.zero();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for (i, &c) in coeffs.iter().enumerate() {
+                poly.planes[l][i] = c.rem_euclid(p as i64) as u64;
+            }
+        }
+        poly
+    }
+
+    /// Forward NTT in place.
+    pub fn ntt_forward(&self, poly: &mut RnsPoly) {
+        assert_eq!(poly.rep, Rep::Coeff, "poly already in NTT form");
+        for (l, table) in self.tables.iter().enumerate() {
+            table.forward(&mut poly.planes[l]);
+        }
+        poly.rep = Rep::Ntt;
+    }
+
+    /// Inverse NTT in place.
+    pub fn ntt_inverse(&self, poly: &mut RnsPoly) {
+        assert_eq!(poly.rep, Rep::Ntt, "poly not in NTT form");
+        for (l, table) in self.tables.iter().enumerate() {
+            table.inverse(&mut poly.planes[l]);
+        }
+        poly.rep = Rep::Coeff;
+    }
+
+    /// `a + b` (must share representation).
+    pub fn add(&self, a: &RnsPoly, b: &RnsPoly) -> RnsPoly {
+        assert_eq!(a.rep, b.rep);
+        let mut out = a.clone();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for i in 0..self.d {
+                out.planes[l][i] = addmod(out.planes[l][i], b.planes[l][i], p);
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&self, a: &mut RnsPoly, b: &RnsPoly) {
+        assert_eq!(a.rep, b.rep);
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for i in 0..self.d {
+                a.planes[l][i] = addmod(a.planes[l][i], b.planes[l][i], p);
+            }
+        }
+    }
+
+    /// `a - b` (must share representation).
+    pub fn sub(&self, a: &RnsPoly, b: &RnsPoly) -> RnsPoly {
+        assert_eq!(a.rep, b.rep);
+        let mut out = a.clone();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for i in 0..self.d {
+                out.planes[l][i] = submod(out.planes[l][i], b.planes[l][i], p);
+            }
+        }
+        out
+    }
+
+    /// `-a`.
+    pub fn neg(&self, a: &RnsPoly) -> RnsPoly {
+        let mut out = a.clone();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for x in out.planes[l].iter_mut() {
+                *x = negmod(*x, p);
+            }
+        }
+        out
+    }
+
+    /// Pointwise product (both operands must be in NTT form).
+    pub fn mul_ntt(&self, a: &RnsPoly, b: &RnsPoly) -> RnsPoly {
+        assert_eq!(a.rep, Rep::Ntt);
+        assert_eq!(b.rep, Rep::Ntt);
+        let mut out = a.clone();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for i in 0..self.d {
+                out.planes[l][i] = mulmod(out.planes[l][i], b.planes[l][i], p);
+            }
+        }
+        out
+    }
+
+    /// `acc += a ∘ b` fused (NTT form) — inner-product accumulation.
+    pub fn mul_ntt_acc(&self, acc: &mut RnsPoly, a: &RnsPoly, b: &RnsPoly) {
+        assert_eq!(acc.rep, Rep::Ntt);
+        assert_eq!(a.rep, Rep::Ntt);
+        assert_eq!(b.rep, Rep::Ntt);
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for i in 0..self.d {
+                let prod = mulmod(a.planes[l][i], b.planes[l][i], p);
+                acc.planes[l][i] = addmod(acc.planes[l][i], prod, p);
+            }
+        }
+    }
+
+    /// Full negacyclic product of two coefficient-form polynomials.
+    pub fn polymul(&self, a: &RnsPoly, b: &RnsPoly) -> RnsPoly {
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        self.ntt_forward(&mut fa);
+        self.ntt_forward(&mut fb);
+        let mut out = self.mul_ntt(&fa, &fb);
+        self.ntt_inverse(&mut out);
+        out
+    }
+
+    /// Multiply by a small scalar (same representation).
+    pub fn mul_scalar(&self, a: &RnsPoly, s: u64) -> RnsPoly {
+        let mut out = a.clone();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            let sp = s % p;
+            for x in out.planes[l].iter_mut() {
+                *x = mulmod(*x, sp, p);
+            }
+        }
+        out
+    }
+
+    /// Multiply by a scalar given in residue form (one value per prime).
+    pub fn mul_scalar_rns(&self, a: &RnsPoly, s: &[u64]) -> RnsPoly {
+        assert_eq!(s.len(), self.nlimbs());
+        let mut out = a.clone();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for x in out.planes[l].iter_mut() {
+                *x = mulmod(*x, s[l], p);
+            }
+        }
+        out
+    }
+
+    /// Sample a uniform polynomial in `R_q` (coefficient rep).
+    pub fn sample_uniform(&self, rng: &mut crate::fhe::rng::ChaChaRng) -> RnsPoly {
+        let mut out = self.zero();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            rng.fill_uniform_mod(&mut out.planes[l], p);
+        }
+        out
+    }
+}
+
+/// One polynomial: `planes[l][i]` = coefficient i mod prime l.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RnsPoly {
+    pub d: usize,
+    pub planes: Vec<Vec<u64>>,
+    pub rep: Rep,
+}
+
+impl RnsPoly {
+    pub fn is_zero(&self) -> bool {
+        self.planes.iter().all(|pl| pl.iter().all(|&x| x == 0))
+    }
+
+    /// Approximate heap size in bytes (for the fig5 memory accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.planes.len() * self.d * std::mem::size_of::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::rng::ChaChaRng;
+    use crate::math::primes::rns_basis_primes;
+
+    fn ctx(d: usize, l: usize) -> Arc<RingContext> {
+        RingContext::new(d, rns_basis_primes(d, l))
+    }
+
+    #[test]
+    fn add_sub_neg_roundtrip() {
+        let ctx = ctx(64, 3);
+        let mut rng = ChaChaRng::from_seed(11);
+        let a = ctx.sample_uniform(&mut rng);
+        let b = ctx.sample_uniform(&mut rng);
+        let sum = ctx.add(&a, &b);
+        assert_eq!(ctx.sub(&sum, &b), a);
+        let z = ctx.add(&a, &ctx.neg(&a));
+        assert!(z.is_zero());
+    }
+
+    #[test]
+    fn polymul_matches_schoolbook_per_plane() {
+        use crate::math::ntt::polymul_naive;
+        let ctx = ctx(32, 2);
+        let mut rng = ChaChaRng::from_seed(12);
+        let a = ctx.sample_uniform(&mut rng);
+        let b = ctx.sample_uniform(&mut rng);
+        let c = ctx.polymul(&a, &b);
+        for (l, &p) in ctx.basis.primes.iter().enumerate() {
+            assert_eq!(c.planes[l], polymul_naive(&a.planes[l], &b.planes[l], p));
+        }
+    }
+
+    #[test]
+    fn signed_coeff_encoding() {
+        let ctx = ctx(16, 2);
+        let poly = ctx.from_signed_coeffs(&[-1, 0, 1, -5]);
+        for (l, &p) in ctx.basis.primes.iter().enumerate() {
+            assert_eq!(poly.planes[l][0], p - 1);
+            assert_eq!(poly.planes[l][1], 0);
+            assert_eq!(poly.planes[l][2], 1);
+            assert_eq!(poly.planes[l][3], p - 5);
+        }
+    }
+
+    #[test]
+    fn mul_by_one_scalar_is_identity() {
+        let ctx = ctx(32, 3);
+        let mut rng = ChaChaRng::from_seed(13);
+        let a = ctx.sample_uniform(&mut rng);
+        assert_eq!(ctx.mul_scalar(&a, 1), a);
+    }
+
+    #[test]
+    fn fused_accumulate_matches_separate() {
+        let ctx = ctx(32, 2);
+        let mut rng = ChaChaRng::from_seed(14);
+        let mut a = ctx.sample_uniform(&mut rng);
+        let mut b = ctx.sample_uniform(&mut rng);
+        let mut c = ctx.sample_uniform(&mut rng);
+        let mut d = ctx.sample_uniform(&mut rng);
+        ctx.ntt_forward(&mut a);
+        ctx.ntt_forward(&mut b);
+        ctx.ntt_forward(&mut c);
+        ctx.ntt_forward(&mut d);
+        let mut acc = ctx.zero();
+        acc.rep = Rep::Ntt;
+        ctx.mul_ntt_acc(&mut acc, &a, &b);
+        ctx.mul_ntt_acc(&mut acc, &c, &d);
+        let expect = ctx.add(&ctx.mul_ntt(&a, &b), &ctx.mul_ntt(&c, &d));
+        assert_eq!(acc, expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "left: Coeff")]
+    fn mul_requires_ntt_form() {
+        let ctx = ctx(16, 1);
+        let a = ctx.zero();
+        let _ = ctx.mul_ntt(&a, &a);
+    }
+}

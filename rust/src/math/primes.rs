@@ -1,0 +1,174 @@
+//! Primality testing and NTT-friendly prime generation.
+//!
+//! The RNS bases used throughout the library consist of primes
+//! `p ≡ 1 (mod 2d)` with `p < 2^30`, generated **deterministically** in
+//! descending order from `2^30`. The Python AOT pipeline
+//! (`python/compile/rns.py`) mirrors this rule exactly so that compiled
+//! XLA artifacts and the Rust runtime always agree on the basis;
+//! `artifacts/rns_meta.json` is cross-checked at load time.
+
+use super::modarith::{mulmod, powmod};
+
+/// Deterministic Miller–Rabin for `u64` using the canonical 12-base set,
+/// which is provably correct for all inputs below `3.3 × 10^24`.
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for &p in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == p {
+            return true;
+        }
+        if n % p == 0 {
+            return false;
+        }
+    }
+    // n - 1 = d * 2^s with d odd
+    let mut d = n - 1;
+    let mut s = 0u32;
+    while d & 1 == 0 {
+        d >>= 1;
+        s += 1;
+    }
+    'witness: for &a in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = powmod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mulmod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Upper bound (exclusive) for RNS primes: keeping residues below `2^30`
+/// guarantees that `a * b` of canonical residues stays below `2^60`,
+/// which both the Rust native backend and the XLA `i64` kernels rely on.
+pub const RNS_PRIME_BOUND: u64 = 1 << 30;
+
+/// Generate the first `count` primes `p ≡ 1 (mod modulus)` strictly below
+/// `below`, in **descending** order. Panics if the supply is exhausted
+/// (cannot happen for the `d ≤ 2^14` rings used here).
+pub fn ntt_primes_below(below: u64, modulus: u64, count: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(count);
+    // Largest candidate ≡ 1 (mod modulus) strictly below `below`.
+    let mut c = (below - 2) / modulus * modulus + 1;
+    while out.len() < count {
+        assert!(c > modulus, "prime supply exhausted (modulus {modulus})");
+        if is_prime(c) {
+            out.push(c);
+        }
+        c -= modulus;
+    }
+    out
+}
+
+/// The standard RNS basis for ring degree `d`: `count` primes
+/// `p ≡ 1 (mod 2d)` descending from [`RNS_PRIME_BOUND`].
+pub fn rns_basis_primes(d: usize, count: usize) -> Vec<u64> {
+    assert!(d.is_power_of_two(), "ring degree must be a power of two");
+    ntt_primes_below(RNS_PRIME_BOUND, 2 * d as u64, count)
+}
+
+/// Find a generator of the multiplicative group `Z_p^*` (p prime).
+pub fn primitive_root(p: u64) -> u64 {
+    // Factor p - 1 by trial division (fine for 30-bit primes).
+    let mut n = p - 1;
+    let mut factors = Vec::new();
+    let mut f = 2u64;
+    while f * f <= n {
+        if n % f == 0 {
+            factors.push(f);
+            while n % f == 0 {
+                n /= f;
+            }
+        }
+        f += 1;
+    }
+    if n > 1 {
+        factors.push(n);
+    }
+    'outer: for g in 2..p {
+        for &q in &factors {
+            if powmod(g, (p - 1) / q, p) == 1 {
+                continue 'outer;
+            }
+        }
+        return g;
+    }
+    unreachable!("no primitive root found for prime {p}");
+}
+
+/// A primitive `2d`-th root of unity ψ modulo `p` (requires
+/// `p ≡ 1 mod 2d`). Satisfies `ψ^d ≡ -1 (mod p)`.
+pub fn primitive_2d_root(p: u64, d: usize) -> u64 {
+    let order = 2 * d as u64;
+    assert_eq!((p - 1) % order, 0, "p must be ≡ 1 mod 2d");
+    let g = primitive_root(p);
+    let psi = powmod(g, (p - 1) / order, p);
+    debug_assert_eq!(powmod(psi, d as u64, p), p - 1);
+    psi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_primes() {
+        let known = [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43];
+        for n in 0..45u64 {
+            assert_eq!(is_prime(n), known.contains(&n), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn known_composites_and_primes() {
+        assert!(is_prime(998_244_353)); // 119 * 2^23 + 1
+        assert!(is_prime((1 << 30) - 35)); // 2^30 - 35 is prime
+        assert!(!is_prime(1 << 30));
+        assert!(!is_prime(3_215_031_751)); // strong pseudoprime to bases 2,3,5,7
+        assert!(is_prime(0xffff_ffff_ffff_ffc5)); // largest u64 prime
+    }
+
+    #[test]
+    fn ntt_primes_have_right_residue() {
+        for d in [256usize, 1024, 8192] {
+            let ps = rns_basis_primes(d, 8);
+            assert_eq!(ps.len(), 8);
+            for w in ps.windows(2) {
+                assert!(w[0] > w[1], "descending order");
+            }
+            for &p in &ps {
+                assert!(is_prime(p));
+                assert!(p < RNS_PRIME_BOUND);
+                assert_eq!(p % (2 * d as u64), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        // The Python mirror relies on this being stable.
+        let a = rns_basis_primes(4096, 4);
+        let b = rns_basis_primes(4096, 4);
+        assert_eq!(a, b);
+        // First prime below 2^30 with p ≡ 1 mod 8192:
+        assert!(a[0] % 8192 == 1 && is_prime(a[0]));
+    }
+
+    #[test]
+    fn roots_of_unity() {
+        for d in [8usize, 256, 4096] {
+            let p = rns_basis_primes(d, 1)[0];
+            let psi = primitive_2d_root(p, d);
+            assert_eq!(powmod(psi, d as u64, p), p - 1, "ψ^d = -1");
+            assert_eq!(powmod(psi, 2 * d as u64, p), 1, "ψ^2d = 1");
+        }
+    }
+}

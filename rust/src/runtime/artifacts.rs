@@ -1,0 +1,148 @@
+//! AOT artifact registry: discovers `artifacts/*.hlo.txt` via
+//! `rns_meta.json` and cross-checks that the prime bases baked into the
+//! compiled graphs match the Rust generator (they are produced by
+//! mirrored deterministic rules; a mismatch means a stale or foreign
+//! artifact directory and must fail loudly).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::math::primes::rns_basis_primes;
+use crate::util::json::Json;
+
+/// One compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub op: String,
+    pub d: usize,
+    pub nlimb: usize,
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+/// The artifact directory index.
+#[derive(Debug, Default)]
+pub struct ArtifactDir {
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl ArtifactDir {
+    /// Load and validate `dir/rns_meta.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("rns_meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).context("parsing rns_meta.json")?;
+        let mut entries = Vec::new();
+        for op in json.req("ops")?.as_arr().context("ops must be an array")? {
+            let d = op.req("d")?.as_usize().context("d")?;
+            let nlimb = op.req("nlimb")?.as_usize().context("nlimb")?;
+            let batch = op.req("batch")?.as_usize().context("batch")?;
+            let file = op.req("file")?.as_str().context("file")?.to_string();
+            let primes: Vec<u64> = op
+                .req("primes")?
+                .as_arr()
+                .context("primes")?
+                .iter()
+                .filter_map(|p| p.as_u64())
+                .collect();
+            // Cross-check the deterministic prime rule.
+            let expect = rns_basis_primes(d, nlimb);
+            if primes != expect {
+                bail!(
+                    "artifact {file}: baked primes disagree with the Rust \
+                     generator for d={d}, l={nlimb} — stale artifacts?"
+                );
+            }
+            let path = dir.join(&file);
+            if !path.exists() {
+                bail!("artifact file missing: {path:?}");
+            }
+            entries.push(ArtifactMeta {
+                op: op.req("op")?.as_str().context("op")?.to_string(),
+                d,
+                nlimb,
+                batch,
+                path,
+            });
+        }
+        Ok(ArtifactDir { entries })
+    }
+
+    /// All batch variants for an (op, d, nlimb), sorted ascending by
+    /// batch size.
+    pub fn variants(&self, op: &str, d: usize, nlimb: usize) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .entries
+            .iter()
+            .filter(|e| e.op == op && e.d == d && e.nlimb == nlimb)
+            .collect();
+        v.sort_by_key(|e| e.batch);
+        v
+    }
+
+    /// Greedy batch plan: cover `n` jobs with available batch sizes.
+    /// Full batches use the largest size; the remainder uses the
+    /// smallest size that covers it in one (padded) launch — one padded
+    /// launch beats many tiny exact ones. Returns (batch, count_used)
+    /// segments in dispatch order.
+    pub fn plan_batches(sizes: &[usize], mut n: usize) -> Vec<(usize, usize)> {
+        assert!(!sizes.is_empty());
+        let mut sorted = sizes.to_vec();
+        sorted.sort_unstable();
+        let largest = *sorted.last().unwrap();
+        let mut plan = Vec::new();
+        while n > 0 {
+            if let Some(&s) = sorted.iter().find(|&&s| s >= n) {
+                plan.push((s, n));
+                n = 0;
+            } else {
+                plan.push((largest, largest));
+                n -= largest;
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_planning() {
+        // jobs=70 with sizes {1,8,32}: 32+32+... greedy
+        let plan = ArtifactDir::plan_batches(&[1, 8, 32], 70);
+        let total: usize = plan.iter().map(|&(_, used)| used).sum();
+        assert_eq!(total, 70);
+        assert_eq!(plan[0], (32, 32));
+        assert_eq!(plan[1], (32, 32));
+        assert_eq!(plan[2], (8, 6)); // 6 jobs in an 8-batch (2 padded)
+    }
+
+    #[test]
+    fn batch_planning_padding_small() {
+        let plan = ArtifactDir::plan_batches(&[8], 3);
+        assert_eq!(plan, vec![(8, 3)]);
+        let plan = ArtifactDir::plan_batches(&[4, 16], 1);
+        assert_eq!(plan, vec![(4, 1)]);
+    }
+
+    #[test]
+    fn load_real_artifacts_if_present() {
+        // Integration-style: only runs when `make artifacts` has run.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("rns_meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = ArtifactDir::load(&dir).unwrap();
+        assert!(!reg.entries.is_empty());
+        let v = reg.variants("polymul", 256, 7);
+        assert!(!v.is_empty(), "expected d256 l7 polymul artifacts");
+        for w in v.windows(2) {
+            assert!(w[0].batch < w[1].batch);
+        }
+    }
+}

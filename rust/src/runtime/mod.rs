@@ -1,0 +1,16 @@
+//! Homomorphic compute backends.
+//!
+//! - [`backend`] — the `HeEngine` trait (the ELS↔runtime seam) and the
+//!   native Rust engine.
+//! - [`artifacts`] — AOT artifact registry (`rns_meta.json` index with
+//!   deterministic-prime cross-checks).
+//! - [`pjrt`] — the XLA/PJRT engine executing the JAX/Pallas-authored
+//!   `polymul` artifacts.
+
+pub mod artifacts;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifacts::ArtifactDir;
+pub use backend::{HeEngine, NativeEngine, OpStats};
+pub use pjrt::XlaEngine;

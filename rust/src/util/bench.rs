@@ -1,0 +1,101 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! Used by the `benches/*.rs` targets (`harness = false`): warmup, then
+//! timed iterations with mean/min/max reporting, plus a row printer for
+//! table-style end-to-end benches.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}   x{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Print the standard header once per bench binary.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!("{:<48} {:>12} {:>12} {:>12}", "benchmark", "mean", "min", "max");
+}
+
+/// Time `f` over `iters` iterations after `warmup` warmup runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    };
+    stats.report();
+    stats
+}
+
+/// Prevent the optimiser from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench("noop", 1, 5, || {
+            black_box(1 + 1);
+        });
+        assert!(s.min <= s.mean && s.mean <= s.max);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(10)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(10)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(10)).contains("s"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal command-line parsing (no clap offline): subcommand plus
+//! `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: Iterator<Item = String>>(mut argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        // First non-option token is the subcommand.
+        let mut pending: Option<String> = None;
+        for tok in argv.by_ref() {
+            if let Some(key) = pending.take() {
+                if let Some(stripped) = tok.strip_prefix("--") {
+                    // previous option was a flag
+                    args.flags.push(key);
+                    if let Some((k, v)) = stripped.split_once('=') {
+                        args.opts.insert(k.to_string(), v.to_string());
+                    } else {
+                        pending = Some(stripped.to_string());
+                    }
+                } else {
+                    args.opts.insert(key, tok);
+                }
+            } else if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    pending = Some(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                bail!("unexpected positional argument '{tok}'");
+            }
+        }
+        if let Some(key) = pending {
+            args.flags.push(key);
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("figures --id fig2 --out results --all --n=100");
+        assert_eq!(a.command.as_deref(), Some("figures"));
+        assert_eq!(a.get("id"), Some("fig2"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.get("n"), Some("100"));
+        assert!(a.flag("all"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 42 --rho 0.7");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("rho", 0.0).unwrap(), 0.7);
+        assert_eq!(a.get_u64("missing", 9).unwrap(), 9);
+        assert!(a.get_usize("rho", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_and_errors() {
+        let a = parse("cmd --verbose");
+        assert!(a.flag("verbose"));
+        assert!(Args::parse(
+            "cmd pos1 pos2".split_whitespace().map(|t| t.to_string())
+        )
+        .is_err());
+        assert!(parse("cmd").req("x").is_err());
+    }
+}

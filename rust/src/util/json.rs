@@ -1,0 +1,399 @@
+//! Minimal JSON (no serde offline): a recursive-descent parser and a
+//! writer, covering the subset the project needs — `rns_meta.json`,
+//! the coordinator wire protocol, and figure metadata.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at offset {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn idx(&self, i: usize) -> Option<&Json> {
+        match self {
+            Json::Arr(a) => a.get(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|v| *v >= 0.0 && v.fract() == 0.0).map(|v| v as u64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Required-field accessors with contextual errors.
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+    }
+
+    pub fn to_string_json(&self) -> String {
+        let mut out = String::new();
+        write_value(self, &mut out);
+        out
+    }
+
+    /// Builder helpers.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_u64(v: &[u64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    pub fn arr_f64(v: &[f64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at offset {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.i);
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', got '{}' at {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut a = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            a.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                c => bail!("expected ',' or ']', got '{}' at {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("bad \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape at {}", self.i),
+                    }
+                }
+                _ => {
+                    // Collect raw UTF-8 bytes.
+                    let start = self.i - 1;
+                    while self.i < self.b.len()
+                        && self.b[self.i] != b'"'
+                        && self.b[self.i] != b'\\'
+                    {
+                        self.i += 1;
+                    }
+                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().map_err(|_| anyhow!("bad number '{s}'"))?))
+    }
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Json::Str(s) => {
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(out, "\\u{:04x}", c as u32);
+                    }
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        Json::Arr(a) => {
+            out.push('[');
+            for (i, v) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(v, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, v)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(&Json::Str(k.clone()), out);
+                out.push(':');
+                write_value(v, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"ops":[{"d":256,"primes":[1073479681,1073184769]}],"x":null}"#)
+            .unwrap();
+        let ops = j.get("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops[0].get("d").unwrap().as_usize(), Some(256));
+        assert_eq!(
+            ops[0].get("primes").unwrap().idx(0).unwrap().as_u64(),
+            Some(1_073_479_681)
+        );
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"a":[1,2.5,"x",true,null],"b":{"c":-7}}"#;
+        let j = Json::parse(src).unwrap();
+        let out = j.to_string_json();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn unicode_escape() {
+        let j = Json::parse(r#""é""#).unwrap();
+        assert_eq!(j, Json::Str("é".into()));
+    }
+
+    #[test]
+    fn fuzz_roundtrip_property() {
+        // Random nested JSON values must survive print -> parse exactly.
+        use crate::fhe::rng::ChaChaRng;
+        use crate::util::prop::PropRunner;
+        fn gen_value(rng: &mut ChaChaRng, depth: usize) -> Json {
+            match rng.uniform_below(if depth == 0 { 4 } else { 6 }) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.next_u64() & 1 == 1),
+                2 => Json::Num((rng.next_u64() % 1_000_000) as f64 - 500_000.0),
+                3 => Json::Str(format!("s{}\n\"e", rng.next_u64() % 100)),
+                4 => Json::Arr((0..rng.uniform_below(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.uniform_below(4))
+                        .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let mut run = PropRunner::new("json_fuzz", 300);
+        run.run(|rng| {
+            let v = gen_value(rng, 3);
+            let text = v.to_string_json();
+            assert_eq!(Json::parse(&text).unwrap(), v, "{text}");
+        });
+    }
+
+    #[test]
+    fn large_ints_preserved() {
+        // primes < 2^30 are exactly representable in f64
+        let j = Json::parse("1073479681").unwrap();
+        assert_eq!(j.as_u64(), Some(1_073_479_681));
+        assert_eq!(j.to_string_json(), "1073479681");
+    }
+}

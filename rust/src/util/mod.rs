@@ -1,0 +1,6 @@
+//! Offline-build substrates: JSON, CLI, thread pool, prop/bench harnesses.
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;

@@ -1,0 +1,73 @@
+//! Minimal data-parallelism helper (no rayon offline): chunked
+//! `parallel_map` over scoped threads.
+
+/// Map `f` over `items` using up to `available_parallelism` threads.
+/// Preserves input order. Falls back to serial for tiny inputs.
+pub fn parallel_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Send + Sync,
+{
+    let n = items.len();
+    let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    if n <= 1 || workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let workers = workers.min(n);
+    let chunk = n.div_ceil(workers);
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
+    let mut it = items.into_iter();
+    loop {
+        let c: Vec<T> = it.by_ref().take(chunk).collect();
+        if c.is_empty() {
+            break;
+        }
+        chunks.push(c);
+    }
+    let f = &f;
+    let mut results: Vec<Vec<U>> = Vec::with_capacity(chunks.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|c| s.spawn(move || c.into_iter().map(f).collect::<Vec<U>>()))
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(r) => results.push(r),
+                // Preserve the original panic payload.
+                Err(e) => std::panic::resume_unwind(e),
+            }
+        }
+    });
+    results.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map((0..1000).collect::<Vec<_>>(), |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+        assert_eq!(parallel_map(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn propagates_panics() {
+        let _ = parallel_map(vec![1, 2, 3, 4, 5, 6, 7, 8], |x| {
+            if x == 5 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

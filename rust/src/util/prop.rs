@@ -1,0 +1,118 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest`/`quickcheck` are not vendored in this offline build, so
+//! this module provides the subset the test-suite needs: a deterministic
+//! per-property RNG (seeded from the property name so failures are
+//! reproducible), many-case execution with a case-index report on
+//! failure, and helper generators.
+//!
+//! Usage:
+//! ```ignore
+//! let mut run = PropRunner::new("my_property", 500);
+//! run.run(|rng| {
+//!     let x = rng.next_u64();
+//!     assert!(property_holds(x));
+//! });
+//! ```
+
+use crate::fhe::rng::ChaChaRng;
+
+/// Deterministic seed from a property name (FNV-1a).
+fn seed_from_name(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Runs a closure against many deterministic random cases.
+pub struct PropRunner {
+    name: String,
+    cases: usize,
+    seed: u64,
+}
+
+impl PropRunner {
+    pub fn new(name: &str, cases: usize) -> Self {
+        let seed = std::env::var("ELS_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| seed_from_name(name));
+        PropRunner { name: name.to_string(), cases, seed }
+    }
+
+    /// Execute the property once per case. Each case gets its own RNG
+    /// stream so a failing case can be replayed in isolation.
+    pub fn run<F: FnMut(&mut ChaChaRng)>(&mut self, mut prop: F) {
+        for case in 0..self.cases {
+            let mut rng = ChaChaRng::from_seed(self.seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut rng);
+            }));
+            if let Err(e) = result {
+                eprintln!(
+                    "property '{}' failed at case {case}/{} (seed {:#x}); replay with ELS_PROP_SEED={}",
+                    self.name, self.cases, self.seed, self.seed
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+/// Generator helpers shared across property tests.
+pub mod gen {
+    use crate::fhe::rng::ChaChaRng;
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn int_in(rng: &mut ChaChaRng, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + rng.uniform_below(span) as i64
+    }
+
+    /// Uniform choice from a slice.
+    pub fn choice<'a, T>(rng: &mut ChaChaRng, items: &'a [T]) -> &'a T {
+        &items[rng.uniform_below(items.len() as u64) as usize]
+    }
+
+    /// Vector of uniform residues mod `p`.
+    pub fn residues(rng: &mut ChaChaRng, len: usize, p: u64) -> Vec<u64> {
+        (0..len).map(|_| rng.uniform_below(p)).collect()
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_in(rng: &mut ChaChaRng, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * rng.next_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_is_deterministic() {
+        let mut seen1 = Vec::new();
+        PropRunner::new("det_check", 5).run(|rng| seen1.push(rng.next_u64()));
+        let mut seen2 = Vec::new();
+        PropRunner::new("det_check", 5).run(|rng| seen2.push(rng.next_u64()));
+        assert_eq!(seen1, seen2);
+        assert_eq!(seen1.len(), 5);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut run = PropRunner::new("gen_ranges", 200);
+        run.run(|rng| {
+            let v = gen::int_in(rng, -5, 5);
+            assert!((-5..=5).contains(&v));
+            let f = gen::f64_in(rng, 2.0, 3.0);
+            assert!((2.0..3.0).contains(&f));
+            let r = gen::residues(rng, 8, 97);
+            assert!(r.iter().all(|&x| x < 97));
+        });
+    }
+}

@@ -1,0 +1,167 @@
+//! End-to-end encrypted fits across the full algorithm matrix
+//! (GD / GD-VWT / NAG / CD, ridge augmentation, prediction), each
+//! validated against the exact encoded-integer simulation and against
+//! the f64 reference where applicable.
+
+use std::sync::Arc;
+
+use els::data::{mood, synth};
+use els::els::encrypted::{decrypt_coefficients, fit, fit_cd, Accel, FitConfig};
+use els::els::exact::{self, QuantisedData};
+use els::els::float_ref::{self, linf};
+use els::els::model::{encrypt_dataset, quantise_ridge_augmented};
+use els::els::predict;
+use els::els::scaling::ratio_f64;
+use els::els::stepsize::nu_optimal;
+use els::fhe::keys::keygen;
+use els::fhe::noise::noise_budget_bits;
+use els::fhe::params::{plan, Algo, PlanRequest, SecurityProfile};
+use els::fhe::rng::ChaChaRng;
+use els::fhe::FvContext;
+use els::runtime::backend::NativeEngine;
+
+struct World {
+    ctx: Arc<FvContext>,
+    keys: els::fhe::KeySet,
+    engine: NativeEngine,
+    q: QuantisedData,
+    nu: u64,
+    rng: ChaChaRng,
+}
+
+fn world(seed: u64, n: usize, p: usize, iters: usize, algo: Algo, extra_depth: u32) -> World {
+    let mut rng = ChaChaRng::from_seed(seed);
+    let (x, y) = synth::gaussian_regression(&mut rng, n, p, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let mut req = PlanRequest::gd(q.n(), q.p(), iters, 2, nu)
+        .with_algo(algo)
+        .with_extra_depth(extra_depth);
+    if algo == Algo::Nag {
+        req.eta_abs_q = els::els::scaling::NagScaling::new(2, nu, iters).eta_abs();
+    }
+    let ctx = FvContext::new(plan(&req).unwrap());
+    let keys = keygen(&ctx, &mut rng);
+    let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+    World { ctx, keys, engine, q, nu, rng }
+}
+
+#[test]
+fn ridge_augmented_encrypted_fit_matches_rls() {
+    // §4.4: encrypted OLS on augmented data == ridge on original.
+    let mut rng = ChaChaRng::from_seed(811);
+    let (x, y) = synth::gaussian_regression(&mut rng, 8, 2, 0.3);
+    let alpha = 4.0;
+    let q = quantise_ridge_augmented(&x, &y, alpha, 2);
+    assert_eq!(q.n(), 10); // N + P rows
+    let (xq, yq) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let ctx = FvContext::new(plan(&PlanRequest::gd(q.n(), q.p(), 2, 2, nu)).unwrap());
+    let keys = keygen(&ctx, &mut rng);
+    let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    let f = fit(&engine, &data, &FitConfig::gd(2, nu));
+    let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
+    // Must equal the exact simulation on augmented data...
+    let expect = exact::gd_exact(&q, nu, 2).decode_last();
+    assert!(linf(&dec, &expect) < 1e-9);
+    // ...and converge toward the RLS solution of the quantised data.
+    let rls = float_ref::ols(&xq, &yq);
+    let deep = exact::gd_exact(&q, nu, 80).decode_last();
+    assert!(linf(&deep, &rls) < 1e-4, "augmentation drives GD to RLS");
+}
+
+#[test]
+fn prediction_composes_with_vwt_fit() {
+    let mut w = world(812, 8, 2, 3, Algo::GdVwt, 1);
+    let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
+    let cfg = FitConfig::gd(3, w.nu).with_accel(Accel::Vwt);
+    let f = fit(&w.engine, &data, &cfg);
+    let preds = predict::predict(&w.engine, &f, &data.x[..3].to_vec());
+    let dec = predict::decrypt_predictions(&w.ctx, &w.keys.sk, &f, &preds);
+    // Expected: quantised X rows times the decoded VWT coefficients.
+    let (acc, div) = exact::vwt_exact(&w.q, w.nu, 3);
+    let betas: Vec<f64> = acc.iter().map(|b| ratio_f64(b, &div)).collect();
+    let (xq, _) = w.q.dequantised();
+    for i in 0..3 {
+        let expect: f64 = xq[i].iter().zip(&betas).map(|(a, b)| a * b).sum();
+        assert!((dec[i] - expect).abs() < 1e-9, "row {i}");
+    }
+}
+
+#[test]
+fn noise_budget_stays_positive_at_planned_depth() {
+    let mut w = world(813, 6, 2, 3, Algo::Gd, 0);
+    let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
+    let f = fit(&w.engine, &data, &FitConfig::gd(3, w.nu));
+    for (j, ct) in f.betas.iter().enumerate() {
+        let budget = noise_budget_bits(&w.ctx, ct, &w.keys.sk);
+        assert!(budget > 0.0, "β_{j} budget {budget} ≤ 0 at planned depth");
+    }
+}
+
+#[test]
+fn cd_and_gd_agree_on_the_limit_but_differ_in_depth() {
+    let mut w = world(814, 6, 2, 2, Algo::Cd, 0);
+    let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
+    let fc = fit_cd(&w.engine, &data, w.nu, 2);
+    let dec = decrypt_coefficients(&w.ctx, &w.keys.sk, &fc);
+    let expect = exact::cd_exact(&w.q, w.nu, 2).decode_last();
+    assert!(linf(&dec, &expect) < 1e-9);
+    // Depth contrast (§4.1): 2 CD updates = depth 3; 2 GD iterations
+    // would also be depth 3 but update *all* P coordinates each time.
+    assert_eq!(fc.noise_depth, 3);
+}
+
+#[test]
+fn mood_application_end_to_end() {
+    // The paper's first application at its real size (N=28, P=2, K=2),
+    // encrypted end to end with a per-patient fit.
+    let mut rng = ChaChaRng::from_seed(815);
+    let patient = &mood::cohort(&mut rng, 1)[0];
+    let (x, y) = &patient.pre;
+    let q = QuantisedData::from_f64(x, y, 2);
+    let (xq, yq) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let params = plan(&PlanRequest::gd(28, 2, 2, 2, nu)).unwrap();
+    assert_eq!(params.profile, SecurityProfile::Toy);
+    let ctx = FvContext::new(params);
+    let keys = keygen(&ctx, &mut rng);
+    let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    let f = fit(&engine, &data, &FitConfig::gd(2, nu));
+    let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
+    // Paper Figure 6: convergence within 2 iterations (‖·‖∞ ≤ 0.04 of
+    // the eventual limit); we check proximity to the OLS solution.
+    let truth = float_ref::ols(&xq, &yq);
+    let err = linf(&dec, &truth);
+    assert!(err < 0.25, "2-iteration mood fit error vs OLS: {err}");
+    // And exactness versus the simulation, as always.
+    let expect = exact::gd_exact(&q, nu, 2).decode_last();
+    assert!(linf(&dec, &expect) < 1e-9);
+}
+
+#[test]
+fn paper128_profile_parameters_are_secure_and_work() {
+    // Full keygen + 1 encrypted GD iteration under the ≥128-bit LP11
+    // profile (larger ring; this is the slowest test in the suite).
+    let mut rng = ChaChaRng::from_seed(816);
+    let (x, y) = synth::gaussian_regression(&mut rng, 4, 2, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let params = plan(
+        &PlanRequest::gd(4, 2, 1, 2, nu).with_profile(SecurityProfile::Paper128),
+    )
+    .unwrap();
+    assert!(params.security_bits() >= 128.0);
+    let ctx = FvContext::new(params);
+    let keys = keygen(&ctx, &mut rng);
+    let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    let f = fit(&engine, &data, &FitConfig::gd(1, nu));
+    let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
+    let expect = exact::gd_exact(&q, nu, 1).decode_last();
+    assert!(linf(&dec, &expect) < 1e-9);
+}

@@ -1,0 +1,94 @@
+//! End-to-end service test: client encrypts locally, submits over TCP,
+//! server fits on ciphertexts, client decrypts — and the result equals
+//! the exact integer simulation.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use els::coordinator::batcher::{BatchConfig, BatchingEngine};
+use els::coordinator::scheduler::Coordinator;
+use els::coordinator::service::{Client, Server};
+use els::data::synth;
+use els::els::encrypted::FitConfig;
+use els::els::exact::{self, QuantisedData};
+use els::els::float_ref::linf;
+use els::els::model::encrypt_dataset;
+use els::els::stepsize::nu_optimal;
+use els::fhe::keys::keygen;
+use els::fhe::params::{plan, PlanRequest};
+use els::fhe::rng::ChaChaRng;
+use els::fhe::FvContext;
+use els::runtime::backend::NativeEngine;
+
+#[test]
+fn submit_fit_fetch_decrypt_roundtrip() {
+    let mut rng = ChaChaRng::from_seed(801);
+    let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let params = plan(&PlanRequest::gd(6, 2, 2, 2, nu)).unwrap();
+    let ctx = FvContext::new(params);
+    let keys = keygen(&ctx, &mut rng);
+
+    // Server side: engine + coordinator + TCP service (holds pk/rk only).
+    let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+    let engine = BatchingEngine::new(native, BatchConfig::default());
+    let coord = Coordinator::new(engine.clone(), 4);
+    let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // Client side: encrypt locally, submit, poll, fetch, decrypt.
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    let id = client.submit(&data, &FitConfig::gd(2, nu), None).unwrap();
+    // Status eventually progresses.
+    let state = client.status(id).unwrap();
+    assert!(["queued", "running", "done"].contains(&state.as_str()), "{state}");
+    let fit = client.result(&ctx, id).unwrap();
+    let dec = els::els::encrypted::decrypt_coefficients(&ctx, &keys.sk, &fit);
+    let expect = exact::gd_exact(&q, nu, 2).decode_last();
+    assert!(linf(&dec, &expect) < 1e-9, "{dec:?} vs {expect:?}");
+    assert_eq!(fit.paper_mmd, 4);
+
+    // Metrics answer.
+    let m = client.metrics().unwrap();
+    assert!(m.contains("completed=1"), "{m}");
+
+    // Unknown job errors cleanly.
+    assert!(client.status(els::coordinator::job::JobId(999)).is_err());
+
+    server.stop();
+    engine.shutdown();
+    // Server is down: new connections must fail (may take a moment).
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(
+        Client::connect(&addr).and_then(|mut c| c.ping()).is_err(),
+        "server should be stopped"
+    );
+}
+
+#[test]
+fn malformed_requests_get_error_responses() {
+    use std::io::{BufRead, BufReader, Write};
+    let ctx = FvContext::new(els::fhe::params::FvParams::custom(256, 2, 16));
+    let mut rng = ChaChaRng::from_seed(802);
+    let keys = keygen(&ctx, &mut rng);
+    let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk)))
+        as Arc<dyn els::runtime::backend::HeEngine>;
+    let coord = Coordinator::new(native, 1);
+    let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    for bad in ["not json", "{\"type\":\"bogus\"}", "{}"] {
+        w.write_all(bad.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "{line}");
+        assert!(line.contains("error"), "{line}");
+    }
+    server.stop();
+}

@@ -1,0 +1,109 @@
+//! Integration: the XLA/PJRT backend must agree bit-for-bit with the
+//! native Rust backend, and an end-to-end encrypted GD fit through XLA
+//! must equal the exact integer simulation.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use els::data::synth;
+use els::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+use els::els::exact::{self, QuantisedData};
+use els::els::float_ref::linf;
+use els::els::model::encrypt_dataset;
+use els::els::stepsize::nu_optimal;
+use els::fhe::keys::keygen;
+use els::fhe::params::FvParams;
+use els::fhe::rng::ChaChaRng;
+use els::fhe::FvContext;
+use els::runtime::backend::{HeEngine, NativeEngine};
+use els::runtime::pjrt::XlaEngine;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("rns_meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn xla_polymul_matches_native_ntt() {
+    let Some(dir) = artifact_dir() else { return };
+    let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+    let mut rng = ChaChaRng::from_seed(401);
+    let keys = keygen(&ctx, &mut rng);
+    let engine = XlaEngine::new(ctx.clone(), &keys.rk, &dir).unwrap();
+    // Random polynomial batch in the Q ring (3 limbs — artifact exists).
+    let polys: Vec<_> = (0..11)
+        .map(|_| {
+            (
+                ctx.ring_q.sample_uniform(&mut rng),
+                ctx.ring_q.sample_uniform(&mut rng),
+            )
+        })
+        .collect();
+    let jobs: Vec<_> = polys.iter().map(|(a, b)| (a, b)).collect();
+    let got = engine.polymul_batch(&ctx.ring_q, &jobs).unwrap();
+    for (i, (a, b)) in polys.iter().enumerate() {
+        let expect = ctx.ring_q.polymul(a, b);
+        assert_eq!(got[i], expect, "job {i} diverges from native NTT");
+    }
+}
+
+#[test]
+fn xla_mul_pairs_matches_native_engine() {
+    let Some(dir) = artifact_dir() else { return };
+    let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+    let mut rng = ChaChaRng::from_seed(402);
+    let keys = keygen(&ctx, &mut rng);
+    let rk = Arc::new(keys.rk.clone());
+    let native = NativeEngine::new(ctx.clone(), rk.clone());
+    let xla = XlaEngine::new(ctx.clone(), &keys.rk, &dir).unwrap();
+    let values = [(3i64, -7i64), (123, 456), (-1000, 999), (0, 5), (-12, -34)];
+    let cts: Vec<_> = values
+        .iter()
+        .map(|&(a, b)| {
+            (
+                ctx.encrypt(&els::fhe::encoding::encode_int(a, ctx.d()), &keys.pk, &mut rng),
+                ctx.encrypt(&els::fhe::encoding::encode_int(b, ctx.d()), &keys.pk, &mut rng),
+            )
+        })
+        .collect();
+    let pairs: Vec<_> = cts.iter().map(|(a, b)| (a, b)).collect();
+    let out_n = native.mul_pairs(&pairs);
+    let out_x = xla.mul_pairs(&pairs);
+    for (i, &(a, b)) in values.iter().enumerate() {
+        // The two backends perform identical arithmetic — ciphertexts
+        // must be *equal*, not merely decrypt-equal.
+        assert_eq!(out_n[i].polys, out_x[i].polys, "pair {i} ciphertext mismatch");
+        let pt = ctx.decrypt(&out_x[i], &keys.sk);
+        assert_eq!(pt.eval_at_2().to_i128(), Some((a as i128) * (b as i128)));
+    }
+}
+
+#[test]
+fn encrypted_gd_through_xla_equals_exact_sim() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rng = ChaChaRng::from_seed(403);
+    let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    // Custom params matching an available artifact pair (d=256: l=3 Q,
+    // l=7 tensor).
+    let ctx = FvContext::new(FvParams::custom(256, 3, 26));
+    let keys = keygen(&ctx, &mut rng);
+    let engine = XlaEngine::new(ctx.clone(), &keys.rk, &dir).unwrap();
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    let f = fit(&engine, &data, &FitConfig::gd(1, nu));
+    let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
+    let expect = exact::gd_exact(&q, nu, 1).decode_last();
+    let d = linf(&dec, &expect);
+    assert!(d < 1e-9, "XLA-backed encrypted GD drift: {d}");
+    let (_, _, _, batches) = engine.stats().snapshot();
+    assert!(batches >= 2, "expected batched XLA dispatches, got {batches}");
+}
