@@ -32,7 +32,7 @@ fn fit_phase(x: &[Vec<f64>], y: &[f64], iters: usize) -> (Vec<f64>, Vec<f64>, f6
     (enc, truth, err)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> els::util::error::Result<()> {
     let mut rng = ChaChaRng::from_seed(808);
     let cohort = mood::cohort(&mut rng, 6);
     let iters = 2; // paper: convergence within 2 iterations

@@ -12,7 +12,7 @@ use els::els::scaling::ratio_f64;
 use els::els::stepsize::nu_optimal;
 use els::fhe::rng::ChaChaRng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> els::util::error::Result<()> {
     let mut rng = ChaChaRng::from_seed(1989); // Stamey et al., 1989
     let (x, y) = prostate::paper_size(&mut rng);
     let n = x.len();

@@ -19,7 +19,7 @@ use els::fhe::rng::ChaChaRng;
 use els::fhe::FvContext;
 use els::runtime::backend::NativeEngine;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> els::util::error::Result<()> {
     // 1. The data holder's side: a small regression problem,
     //    standardised, quantised at φ = 2 (paper §3.1).
     let mut rng = ChaChaRng::from_seed(2024);

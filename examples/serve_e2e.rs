@@ -32,7 +32,7 @@ const N: usize = 6;
 const P: usize = 2;
 const ITERS: usize = 1;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> els::util::error::Result<()> {
     // Shared parameter set sized for the workload; d = 256 matches the
     // shipped artifact manifest so the XLA backend can serve it.
     let params = FvParams::custom(256, 3, 26);

@@ -1,0 +1,40 @@
+"""Dependency-free subset of the RNS mirror checks (no hypothesis/jax):
+keeps `python -m pytest python/tests` meaningful in offline CI, where
+the property-based and kernel modules are skipped by conftest.py.
+
+The values here are pinned against the Rust generator's unit tests
+(rust/src/math/primes.rs) — the AOT artifacts bake these constants, so
+the two generators must agree bit for bit."""
+
+from compile import rns
+
+
+def test_miller_rabin_known_values():
+    assert rns.is_prime(998244353)  # 119 * 2^23 + 1
+    assert rns.is_prime((1 << 30) - 35)
+    assert not rns.is_prime(1 << 30)
+    assert not rns.is_prime(3215031751)  # strong pseudoprime base 2,3,5,7
+    assert not rns.is_prime(1)
+
+
+def test_basis_mirrors_rust_rules():
+    for d in (256, 1024, 8192):
+        ps = rns.rns_basis_primes(d, 8)
+        assert len(ps) == len(set(ps)) == 8
+        assert ps == sorted(ps, reverse=True), "descending order (Rust mirror)"
+        for p in ps:
+            assert p < rns.RNS_PRIME_BOUND
+            assert p % (2 * d) == 1
+            assert rns.is_prime(p)
+
+
+def test_generation_is_deterministic():
+    assert rns.rns_basis_primes(4096, 4) == rns.rns_basis_primes(4096, 4)
+
+
+def test_primitive_2d_root_orders():
+    for d in (8, 256):
+        p = rns.rns_basis_primes(d, 1)[0]
+        psi = rns.primitive_2d_root(p, d)
+        assert pow(psi, d, p) == p - 1, "psi^d = -1"
+        assert pow(psi, 2 * d, p) == 1, "psi^2d = 1"

@@ -4,11 +4,11 @@
 //! enough for its Lemma-3 message growth, and ring room for the message
 //! degree. Rejections carry the parameter set the planner would need.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 use crate::els::encrypted::Accel;
 use crate::els::mmd;
-use crate::fhe::params::{plan, Algo, FvParams, PlanRequest};
+use crate::fhe::params::{per_level_noise_bits, plan, Algo, FvParams, PlanRequest};
 
 /// Conservative estimate of the ct-mult depth a parameter set supports
 /// (inverse of the planner's sizing formula).
@@ -17,8 +17,8 @@ pub fn supported_depth(params: &FvParams, msg_const_bits: usize) -> u32 {
     let log_d = params.d.trailing_zeros() as usize;
     // Fresh invariant noise ≈ t·2d·B ⇒ t_bits + log d + ~4 bits.
     let fresh = t_bits + log_d + 4;
-    // Each ct-mult multiplies noise by ≈ 2·d·t·ℓ1(const) plus slack.
-    let per_level = t_bits + log_d + msg_const_bits + 6;
+    // Per-level consumption: shared with the planner (fhe::params).
+    let per_level = per_level_noise_bits(t_bits, params.d, msg_const_bits);
     let q_bits = params.q_bits();
     if q_bits <= fresh {
         return 0;

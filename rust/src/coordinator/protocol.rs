@@ -6,7 +6,7 @@
 //! data-independent config (N, P, K, ν, φ) cross the wire. The secret
 //! key never leaves the client.
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::els::encrypted::{Accel, EncryptedFit, FitConfig};
 use crate::els::model::EncryptedDataset;

@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 
 use crate::coordinator::job::JobId;
 use crate::coordinator::protocol as proto;

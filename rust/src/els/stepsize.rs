@@ -84,6 +84,53 @@ mod tests {
     }
 
     #[test]
+    fn nu_optimal_tracks_spectrum_property() {
+        // Lemma 1 / §5.1: ν* = ⌈(λ_max + λ_min)/2⌉ — the integer must
+        // bracket the spectral midpoint and always satisfy the Lemma-1
+        // convergence condition δ = 1/ν < 2/λ_max.
+        use crate::util::prop::PropRunner;
+        let mut run = PropRunner::new("nu_optimal_bounds", 12);
+        run.run(|rng| {
+            let n = 20 + (rng.next_u64() % 60) as usize;
+            let p = 2 + (rng.next_u64() % 4) as usize;
+            let (x, _) = synth::gaussian_regression(rng, n, p, 0.3);
+            let (lmin, lmax) = crate::els::float_ref::gram_spectrum(&x);
+            let mid = (lmin + lmax) / 2.0;
+            let nu = nu_optimal(&x);
+            assert!(nu >= 1);
+            assert!((nu as f64) >= mid && (nu as f64) < mid + 1.0, "ν = ⌈mid⌉");
+            assert!(converges(&x, nu), "optimal ν must satisfy Lemma 1");
+        });
+    }
+
+    #[test]
+    fn planned_parameters_cover_nu_optimal_growth_property() {
+        // §4.5 closes the loop: parameters planned for the data-holder's
+        // ν must dominate the exact message growth of the run — the
+        // plaintext modulus holds the tracked coefficient bound
+        // symmetrically and the ring holds the degree bound.
+        use crate::fhe::params::{plan, track_gd_growth, PlanRequest};
+        use crate::util::prop::PropRunner;
+        let mut run = PropRunner::new("nu_optimal_plan_bounds", 8);
+        run.run(|rng| {
+            let n = 6 + (rng.next_u64() % 20) as usize;
+            let p = 2 + (rng.next_u64() % 3) as usize;
+            let (x, _) = synth::gaussian_regression(rng, n, p, 0.2);
+            let nu = nu_optimal(&x);
+            let iters = 2;
+            let params = plan(&PlanRequest::gd(n, p, iters, 2, nu)).unwrap();
+            let g = track_gd_growth(n, p, iters, 2, nu);
+            let t_need = g.coeff_bound.mul_u64(2).add_u64(1);
+            assert!(
+                params.t.cmp_big(&t_need) != std::cmp::Ordering::Less,
+                "t must hold the §4.5 growth bound symmetrically"
+            );
+            assert!(params.d > g.deg_bound, "ring degree must hold the message degree");
+            assert!(params.q_bits() > params.t.bit_len() + 40, "noise headroom");
+        });
+    }
+
+    #[test]
     fn efold_grows_with_correlation() {
         let mut rng = ChaChaRng::from_seed(223);
         let (x_lo, _) = synth::correlated_regression(&mut rng, 200, 5, 0.1, 0.2);

@@ -54,6 +54,69 @@ mod tests {
     }
 
     #[test]
+    fn positive_budget_implies_correct_decryption_property() {
+        // The §4.5 decryption-correctness invariant, as a property test:
+        // whenever the measured invariant-noise budget is positive, the
+        // decrypted message must equal the exact integer product.
+        use crate::fhe::encoding::encode_int;
+        use crate::util::prop::{gen, PropRunner};
+        let ctx = FvContext::new(FvParams::custom(256, 4, 22));
+        let mut rng = ChaChaRng::from_seed(64);
+        let keys = keygen(&ctx, &mut rng);
+        let mut run = PropRunner::new("noise_budget_correctness", 6);
+        run.run(|rng| {
+            let a = gen::int_in(rng, -1000, 1000);
+            let b = gen::int_in(rng, -1000, 1000);
+            let ca = ctx.encrypt(&encode_int(a, ctx.d()), &keys.pk, rng);
+            let cb = ctx.encrypt(&encode_int(b, ctx.d()), &keys.pk, rng);
+            let prod = ctx.mul_ct(&ca, &cb, &keys.rk);
+            let budget = noise_budget_bits(&ctx, &prod, &keys.sk);
+            assert!(budget > 0.0, "depth-1 product must stay in budget ({budget})");
+            let dec = ctx.decrypt(&prod, &keys.sk);
+            assert_eq!(
+                dec.eval_at_2().to_i128(),
+                Some(a as i128 * b as i128),
+                "positive budget ({budget} bits) must imply exact decryption"
+            );
+        });
+    }
+
+    #[test]
+    fn per_level_budget_loss_matches_planner_model() {
+        // The §4.5 planner sizes q by the shared per-level consumption
+        // model (fhe::params::per_level_noise_bits). Measure the realised
+        // per-level loss on a depth-2 chain and check it stays under the
+        // planner's allowance (with slack), and is not trivially zero.
+        use crate::fhe::params::per_level_noise_bits;
+        let params = FvParams::custom(512, 6, 16);
+        let t_bits = params.t.bit_len();
+        // ℓ1(m) = 2 for the message below — same const-bits rule as the
+        // planner: bits of (ℓ1 − 1).
+        let const_bits = 64 - (2u64 - 1).leading_zeros() as usize;
+        let allowance = per_level_noise_bits(t_bits, params.d, const_bits) as f64;
+        let ctx = FvContext::new(params);
+        let mut rng = ChaChaRng::from_seed(65);
+        let keys = keygen(&ctx, &mut rng);
+        let m = Plaintext::from_signed(ctx.d(), &[0, 1, 1]); // ℓ1 = 2
+        let fresh = ctx.encrypt(&m, &keys.pk, &mut rng);
+        let mut budgets = vec![noise_budget_bits(&ctx, &fresh, &keys.sk)];
+        let mut cur = fresh.clone();
+        for _ in 0..2 {
+            cur = ctx.mul_ct(&cur, &fresh, &keys.rk);
+            budgets.push(noise_budget_bits(&ctx, &cur, &keys.sk));
+        }
+        for w in budgets.windows(2) {
+            let loss = w[0] - w[1];
+            assert!(loss > 2.0, "a ct-mult must consume real budget (loss {loss})");
+            assert!(
+                loss <= allowance + 10.0,
+                "per-level loss {loss} exceeds the planner allowance {allowance}"
+            );
+        }
+        assert!(*budgets.last().unwrap() > 0.0, "depth-2 chain should still decrypt");
+    }
+
+    #[test]
     fn addition_costs_little() {
         let ctx = FvContext::new(FvParams::custom(256, 3, 20));
         let mut rng = ChaChaRng::from_seed(62);

@@ -17,7 +17,7 @@
 //!    consumption sizes the ciphertext modulus `q` for a target
 //!    multiplicative depth without bootstrapping.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 use crate::math::bigint::BigUint;
 use crate::math::primes::rns_basis_primes;
@@ -122,6 +122,16 @@ impl FvParams {
     pub fn ciphertext_bytes(&self) -> usize {
         2 * self.q_count * self.d * 8
     }
+}
+
+/// Noise-budget bits one ciphertext-multiplication level consumes:
+/// each ct-mult multiplies invariant noise by ≈ 2·d·t·ℓ1(const), and
+/// relinearisation/slack adds a few bits. Single source of truth for
+/// the planner ([`plan`]), admission control
+/// ([`crate::coordinator::admission::supported_depth`]) and the noise
+/// test-suite.
+pub fn per_level_noise_bits(t_bits: usize, d: usize, msg_const_bits: usize) -> usize {
+    t_bits + d.trailing_zeros() as usize + msg_const_bits + 6
 }
 
 /// Lemma 3 `n ≡ (φ+1)·log2(10)`, rounded up to an integer bit count.
@@ -422,7 +432,7 @@ pub fn plan(req: &PlanRequest) -> Result<FvParams> {
         let fresh_bits = t_bits + log_d + sigma_bits + 7;
         // Each ct-mul multiplies noise by ≈ 2·d·t·ℓ1(m); plain-const
         // muls add ≈ const_bits per iteration on top.
-        let per_level = t_bits + log_d + const_bits + 6;
+        let per_level = per_level_noise_bits(t_bits, d, const_bits);
         // Relinearisation adds ≈ ℓ·d·w·B once per mul (absorbed into the
         // per-level margin) plus a flat reserve.
         let q_bits = fresh_bits + depth as usize * per_level + 40;

@@ -4,7 +4,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::data::{mood, prostate};
 use crate::els::exact::{gd_exact, vwt_exact, QuantisedData};

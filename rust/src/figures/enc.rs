@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::data::{mood, synth};
 use crate::els::encrypted::{decrypt_coefficients, fit, FitConfig};

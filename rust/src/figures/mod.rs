@@ -13,7 +13,7 @@ mod sim;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 /// CSV writer helper.
 pub(crate) struct Csv {

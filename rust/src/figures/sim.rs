@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::data::synth;
 use crate::els::exact::QuantisedData;

@@ -13,7 +13,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use els::util::error::{anyhow, bail, Context, Result};
 
 use els::coordinator::batcher::{BatchConfig, BatchingEngine};
 use els::coordinator::protocol as proto;

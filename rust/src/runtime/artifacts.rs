@@ -6,7 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::math::primes::rns_basis_primes;
 use crate::util::json::Json;
@@ -134,7 +134,7 @@ mod tests {
         // Integration-style: only runs when `make artifacts` has run.
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("rns_meta.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            eprintln!("SKIPPED: artifacts not built (run `make artifacts`)");
             return;
         }
         let reg = ArtifactDir::load(&dir).unwrap();

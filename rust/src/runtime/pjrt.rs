@@ -2,8 +2,9 @@
 //! artifacts (authored in JAX/Pallas, see `python/compile/`) from the
 //! Rust hot path.
 //!
-//! The engine implements [`HeEngine`] at the `mul_pairs` batching seam:
-//! a batch of ciphertext multiplications becomes
+//! The engine implements [`HeEngine`](crate::runtime::backend::HeEngine)
+//! at the `mul_pairs` batching seam: a batch of ciphertext
+//! multiplications becomes
 //!   1. CRT lifts Q → Q∪E (Rust, thread-parallel),
 //!   2. one padded, fixed-shape `polymul` dispatch per batch segment
 //!      for the 4·B tensor-product products (XLA),
@@ -15,251 +16,320 @@
 //! all access is serialised behind one mutex, and the CPU PJRT plugin
 //! itself is thread-safe, so sharing the engine across coordinator
 //! threads is sound.
+//!
+//! The PJRT bindings (`xla` crate) are not vendorable in the offline
+//! build, so the real engine sits behind the `xla` cargo feature; the
+//! default build ships an API-compatible stub whose constructor returns
+//! an error. Callers that probe for the backend (the benches, the
+//! `serve_e2e` example) fall back to the native engine; the CLI's
+//! explicit `--xla` flag propagates the error and exits, since the user
+//! asked for a backend that isn't available.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "xla")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
+    use crate::fhe::{Ciphertext, FvContext, RelinKey};
+    use crate::math::poly::{Rep, RingContext, RnsPoly};
+    use crate::runtime::artifacts::ArtifactDir;
+    use crate::runtime::backend::{HeEngine, OpStats};
+    use crate::util::error::{bail, Context, Result};
+    use crate::util::pool::parallel_map;
 
-use crate::fhe::{Ciphertext, FvContext, RelinKey};
-use crate::math::poly::{RingContext, Rep, RnsPoly};
-use crate::util::pool::parallel_map;
-
-use super::artifacts::ArtifactDir;
-use super::backend::{HeEngine, OpStats};
-
-struct XlaInner {
-    client: xla::PjRtClient,
-    /// Compiled executable cache keyed by (d, nlimb, batch).
-    exes: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
-    registry: ArtifactDir,
-}
-
-/// The XLA-backed homomorphic engine.
-pub struct XlaEngine {
-    pub ctx: Arc<FvContext>,
-    /// Relinearisation key digits in *coefficient* form (the artifacts
-    /// take coefficient-domain inputs).
-    rk_coeff: Vec<(RnsPoly, RnsPoly)>,
-    inner: Mutex<XlaInner>,
-    stats: OpStats,
-}
-
-// SAFETY: every use of the non-Send PJRT handles goes through
-// `self.inner` (a Mutex); the PJRT CPU plugin is thread-safe.
-unsafe impl Send for XlaEngine {}
-unsafe impl Sync for XlaEngine {}
-
-impl XlaEngine {
-    /// Build from an FV context, relin key and artifact directory.
-    pub fn new(ctx: Arc<FvContext>, rk: &RelinKey, artifact_dir: &Path) -> Result<Self> {
-        let registry = ArtifactDir::load(artifact_dir)?;
-        // Check the two rings this context needs are covered.
-        for (ring, what) in
-            [(&ctx.ring_q, "Q basis"), (&ctx.ring_big, "tensor basis")]
-        {
-            if registry.variants("polymul", ring.d, ring.nlimbs()).is_empty() {
-                bail!(
-                    "no polymul artifact for d={} l={} ({what}); extend the \
-                     manifest in python/compile/aot.py and re-run `make artifacts`",
-                    ring.d,
-                    ring.nlimbs()
-                );
-            }
-        }
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let ring = &ctx.ring_q;
-        let rk_coeff = rk
-            .b_ntt
-            .iter()
-            .zip(&rk.a_ntt)
-            .map(|(b, a)| {
-                let mut bc = b.clone();
-                let mut ac = a.clone();
-                ring.ntt_inverse(&mut bc);
-                ring.ntt_inverse(&mut ac);
-                (bc, ac)
-            })
-            .collect();
-        Ok(XlaEngine {
-            ctx,
-            rk_coeff,
-            inner: Mutex::new(XlaInner { client, exes: HashMap::new(), registry }),
-            stats: OpStats::default(),
-        })
+    struct XlaInner {
+        client: xla::PjRtClient,
+        /// Compiled executable cache keyed by (d, nlimb, batch).
+        exes: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
+        registry: ArtifactDir,
     }
 
-    /// Execute a batch of negacyclic polynomial products on XLA.
-    /// Operands must be coefficient-form polynomials of `ring`.
-    pub fn polymul_batch(
-        &self,
-        ring: &RingContext,
-        jobs: &[(&RnsPoly, &RnsPoly)],
-    ) -> Result<Vec<RnsPoly>> {
-        if jobs.is_empty() {
-            return Ok(Vec::new());
-        }
-        let (d, nlimb) = (ring.d, ring.nlimbs());
-        let mut inner = self.inner.lock().unwrap();
-        let sizes: Vec<usize> = inner
-            .registry
-            .variants("polymul", d, nlimb)
-            .iter()
-            .map(|m| m.batch)
-            .collect();
-        let plan = ArtifactDir::plan_batches(&sizes, jobs.len());
-        let mut out = Vec::with_capacity(jobs.len());
-        let mut cursor = 0usize;
-        for (batch, used) in plan {
-            // Compile (or fetch) the executable for this batch size.
-            let key = (d, nlimb, batch);
-            if !inner.exes.contains_key(&key) {
-                let meta = inner
-                    .registry
-                    .variants("polymul", d, nlimb)
-                    .into_iter()
-                    .find(|m| m.batch == batch)
-                    .unwrap()
-                    .clone();
-                let proto = xla::HloModuleProto::from_text_file(
-                    meta.path.to_str().context("artifact path not UTF-8")?,
-                )
-                .with_context(|| format!("parsing {:?}", meta.path))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = inner
-                    .client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {:?}", meta.path))?;
-                inner.exes.insert(key, exe);
+    /// The XLA-backed homomorphic engine.
+    pub struct XlaEngine {
+        pub ctx: Arc<FvContext>,
+        /// Relinearisation key digits in *coefficient* form (the artifacts
+        /// take coefficient-domain inputs).
+        rk_coeff: Vec<(RnsPoly, RnsPoly)>,
+        inner: Mutex<XlaInner>,
+        stats: OpStats,
+    }
+
+    // SAFETY: every use of the non-Send PJRT handles goes through
+    // `self.inner` (a Mutex); the PJRT CPU plugin is thread-safe.
+    unsafe impl Send for XlaEngine {}
+    unsafe impl Sync for XlaEngine {}
+
+    impl XlaEngine {
+        /// Build from an FV context, relin key and artifact directory.
+        pub fn new(ctx: Arc<FvContext>, rk: &RelinKey, artifact_dir: &Path) -> Result<Self> {
+            let registry = ArtifactDir::load(artifact_dir)?;
+            // Check the two rings this context needs are covered.
+            for (ring, what) in
+                [(&ctx.ring_q, "Q basis"), (&ctx.ring_big, "tensor basis")]
+            {
+                if registry.variants("polymul", ring.d, ring.nlimbs()).is_empty() {
+                    bail!(
+                        "no polymul artifact for d={} l={} ({what}); extend the \
+                         manifest in python/compile/aot.py and re-run `make artifacts`",
+                        ring.d,
+                        ring.nlimbs()
+                    );
+                }
             }
-            // Pack operands as i64 [batch, nlimb, d] (zero-padded).
-            let pack = |side: usize| -> xla::Literal {
-                let mut data = vec![0i64; batch * nlimb * d];
-                for (bi, job) in jobs[cursor..cursor + used].iter().enumerate() {
-                    let poly = if side == 0 { job.0 } else { job.1 };
-                    debug_assert_eq!(poly.rep, Rep::Coeff);
-                    for l in 0..nlimb {
-                        let dst = &mut data[(bi * nlimb + l) * d..(bi * nlimb + l + 1) * d];
-                        for (x, &v) in dst.iter_mut().zip(&poly.planes[l]) {
-                            *x = v as i64;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let ring = &ctx.ring_q;
+            let rk_coeff = rk
+                .b_ntt
+                .iter()
+                .zip(&rk.a_ntt)
+                .map(|(b, a)| {
+                    let mut bc = b.clone();
+                    let mut ac = a.clone();
+                    ring.ntt_inverse(&mut bc);
+                    ring.ntt_inverse(&mut ac);
+                    (bc, ac)
+                })
+                .collect();
+            Ok(XlaEngine {
+                ctx,
+                rk_coeff,
+                inner: Mutex::new(XlaInner { client, exes: HashMap::new(), registry }),
+                stats: OpStats::default(),
+            })
+        }
+
+        /// Execute a batch of negacyclic polynomial products on XLA.
+        /// Operands must be coefficient-form polynomials of `ring`.
+        pub fn polymul_batch(
+            &self,
+            ring: &RingContext,
+            jobs: &[(&RnsPoly, &RnsPoly)],
+        ) -> Result<Vec<RnsPoly>> {
+            if jobs.is_empty() {
+                return Ok(Vec::new());
+            }
+            let (d, nlimb) = (ring.d, ring.nlimbs());
+            let mut inner = self.inner.lock().unwrap();
+            let sizes: Vec<usize> = inner
+                .registry
+                .variants("polymul", d, nlimb)
+                .iter()
+                .map(|m| m.batch)
+                .collect();
+            let plan = ArtifactDir::plan_batches(&sizes, jobs.len());
+            let mut out = Vec::with_capacity(jobs.len());
+            let mut cursor = 0usize;
+            for (batch, used) in plan {
+                // Compile (or fetch) the executable for this batch size.
+                let key = (d, nlimb, batch);
+                if !inner.exes.contains_key(&key) {
+                    let meta = inner
+                        .registry
+                        .variants("polymul", d, nlimb)
+                        .into_iter()
+                        .find(|m| m.batch == batch)
+                        .unwrap()
+                        .clone();
+                    let proto = xla::HloModuleProto::from_text_file(
+                        meta.path.to_str().context("artifact path not UTF-8")?,
+                    )
+                    .with_context(|| format!("parsing {:?}", meta.path))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = inner
+                        .client
+                        .compile(&comp)
+                        .with_context(|| format!("compiling {:?}", meta.path))?;
+                    inner.exes.insert(key, exe);
+                }
+                // Pack operands as i64 [batch, nlimb, d] (zero-padded).
+                let pack = |side: usize| -> xla::Literal {
+                    let mut data = vec![0i64; batch * nlimb * d];
+                    for (bi, job) in jobs[cursor..cursor + used].iter().enumerate() {
+                        let poly = if side == 0 { job.0 } else { job.1 };
+                        debug_assert_eq!(poly.rep, Rep::Coeff);
+                        for l in 0..nlimb {
+                            let dst =
+                                &mut data[(bi * nlimb + l) * d..(bi * nlimb + l + 1) * d];
+                            for (x, &v) in dst.iter_mut().zip(&poly.planes[l]) {
+                                *x = v as i64;
+                            }
                         }
                     }
-                }
-                xla::Literal::vec1(&data)
-                    .reshape(&[batch as i64, nlimb as i64, d as i64])
-                    .expect("reshape literal")
-            };
-            let a_lit = pack(0);
-            let b_lit = pack(1);
-            let exe = inner.exes.get(&key).unwrap();
-            let result = exe
-                .execute::<xla::Literal>(&[a_lit, b_lit])
-                .context("executing polymul artifact")?[0][0]
-                .to_literal_sync()?
-                .to_tuple1()?;
-            let flat = result.to_vec::<i64>()?;
-            self.stats.batches.fetch_add(1, Ordering::Relaxed);
-            for bi in 0..used {
-                let mut poly = ring.zero();
-                for l in 0..nlimb {
-                    let src = &flat[(bi * nlimb + l) * d..(bi * nlimb + l + 1) * d];
-                    for (dst, &v) in poly.planes[l].iter_mut().zip(src) {
-                        debug_assert!(v >= 0);
-                        *dst = v as u64;
+                    xla::Literal::vec1(&data)
+                        .reshape(&[batch as i64, nlimb as i64, d as i64])
+                        .expect("reshape literal")
+                };
+                let a_lit = pack(0);
+                let b_lit = pack(1);
+                let exe = inner.exes.get(&key).unwrap();
+                let result = exe
+                    .execute::<xla::Literal>(&[a_lit, b_lit])
+                    .context("executing polymul artifact")?[0][0]
+                    .to_literal_sync()?
+                    .to_tuple1()?;
+                let flat = result.to_vec::<i64>()?;
+                self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                for bi in 0..used {
+                    let mut poly = ring.zero();
+                    for l in 0..nlimb {
+                        let src = &flat[(bi * nlimb + l) * d..(bi * nlimb + l + 1) * d];
+                        for (dst, &v) in poly.planes[l].iter_mut().zip(src) {
+                            debug_assert!(v >= 0);
+                            *dst = v as u64;
+                        }
                     }
+                    out.push(poly);
                 }
-                out.push(poly);
+                cursor += used;
             }
-            cursor += used;
+            Ok(out)
         }
-        Ok(out)
-    }
-}
-
-impl HeEngine for XlaEngine {
-    fn ctx(&self) -> &FvContext {
-        &self.ctx
     }
 
-    fn stats(&self) -> &OpStats {
-        &self.stats
-    }
-
-    fn mul_pairs(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext> {
-        if pairs.is_empty() {
-            return Vec::new();
+    impl HeEngine for XlaEngine {
+        fn ctx(&self) -> &FvContext {
+            &self.ctx
         }
-        self.stats.ct_muls.fetch_add(pairs.len() as u64, Ordering::Relaxed);
-        let ctx = &self.ctx;
-        // 1. CRT-lift all four components of every pair (thread-parallel).
-        let lifted: Vec<[RnsPoly; 4]> = parallel_map(pairs.to_vec(), |(a, b)| {
-            assert_eq!(a.len(), 2, "operands must be relinearised");
-            assert_eq!(b.len(), 2);
-            [
-                ctx.q_to_big(&a.polys[0]),
-                ctx.q_to_big(&a.polys[1]),
-                ctx.q_to_big(&b.polys[0]),
-                ctx.q_to_big(&b.polys[1]),
-            ]
-        });
-        // 2. Tensor products: 4 polymuls per pair in one XLA stream.
-        let jobs: Vec<(&RnsPoly, &RnsPoly)> = lifted
-            .iter()
-            .flat_map(|q| {
-                [(&q[0], &q[2]), (&q[0], &q[3]), (&q[1], &q[2]), (&q[1], &q[3])]
-            })
-            .collect();
-        let prods = self
-            .polymul_batch(&ctx.ring_big, &jobs)
-            .expect("XLA polymul dispatch failed");
-        // 3. Scale-and-round back to Q (thread-parallel).
-        let scaled: Vec<[RnsPoly; 3]> = parallel_map(
-            prods.chunks(4).map(|c| c.to_vec()).collect::<Vec<_>>(),
-            |c| {
-                let c1 = ctx.ring_big.add(&c[1], &c[2]);
+
+        fn stats(&self) -> &OpStats {
+            &self.stats
+        }
+
+        fn mul_pairs(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext> {
+            if pairs.is_empty() {
+                return Vec::new();
+            }
+            self.stats.ct_muls.fetch_add(pairs.len() as u64, Ordering::Relaxed);
+            let ctx = &self.ctx;
+            // 1. CRT-lift all four components of every pair (thread-parallel).
+            let lifted: Vec<[RnsPoly; 4]> = parallel_map(pairs.to_vec(), |(a, b)| {
+                assert_eq!(a.len(), 2, "operands must be relinearised");
+                assert_eq!(b.len(), 2);
                 [
-                    ctx.scale_round_to_q(&c[0]),
-                    ctx.scale_round_to_q(&c1),
-                    ctx.scale_round_to_q(&c[3]),
+                    ctx.q_to_big(&a.polys[0]),
+                    ctx.q_to_big(&a.polys[1]),
+                    ctx.q_to_big(&b.polys[0]),
+                    ctx.q_to_big(&b.polys[1]),
                 ]
-            },
-        );
-        // 4. Relinearisation: digit products through XLA, accumulated
-        //    in Rust.
-        let digits: Vec<Vec<RnsPoly>> =
-            parallel_map(scaled.iter().map(|s| s[2].clone()).collect::<Vec<_>>(), |c2| {
-                ctx.relin_digits(&c2)
             });
-        let relin_jobs: Vec<(&RnsPoly, &RnsPoly)> = digits
-            .iter()
-            .flat_map(|ds| {
-                ds.iter().zip(&self.rk_coeff).flat_map(|(dj, (bj, aj))| {
-                    [(dj, bj), (dj, aj)]
+            // 2. Tensor products: 4 polymuls per pair in one XLA stream.
+            let jobs: Vec<(&RnsPoly, &RnsPoly)> = lifted
+                .iter()
+                .flat_map(|q| {
+                    [(&q[0], &q[2]), (&q[0], &q[3]), (&q[1], &q[2]), (&q[1], &q[3])]
                 })
-            })
-            .collect();
-        let relin_prods = self
-            .polymul_batch(&ctx.ring_q, &relin_jobs)
-            .expect("XLA relin dispatch failed");
-        let ell = ctx.relin_ndigits;
-        let ring = &ctx.ring_q;
-        scaled
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                let mut c0 = s[0].clone();
-                let mut c1 = s[1].clone();
-                let base = i * 2 * ell;
-                for j in 0..ell {
-                    ring.add_assign(&mut c0, &relin_prods[base + 2 * j]);
-                    ring.add_assign(&mut c1, &relin_prods[base + 2 * j + 1]);
-                }
-                let mut ct = Ciphertext::new(vec![c0, c1]);
-                ct.ct_depth = pairs[i].0.ct_depth.max(pairs[i].1.ct_depth) + 1;
-                ct
-            })
-            .collect()
+                .collect();
+            let prods = self
+                .polymul_batch(&ctx.ring_big, &jobs)
+                .expect("XLA polymul dispatch failed");
+            // 3. Scale-and-round back to Q (thread-parallel).
+            let scaled: Vec<[RnsPoly; 3]> = parallel_map(
+                prods.chunks(4).map(|c| c.to_vec()).collect::<Vec<_>>(),
+                |c| {
+                    let c1 = ctx.ring_big.add(&c[1], &c[2]);
+                    [
+                        ctx.scale_round_to_q(&c[0]),
+                        ctx.scale_round_to_q(&c1),
+                        ctx.scale_round_to_q(&c[3]),
+                    ]
+                },
+            );
+            // 4. Relinearisation: digit products through XLA, accumulated
+            //    in Rust.
+            let digits: Vec<Vec<RnsPoly>> = parallel_map(
+                scaled.iter().map(|s| s[2].clone()).collect::<Vec<_>>(),
+                |c2| ctx.relin_digits(&c2),
+            );
+            let relin_jobs: Vec<(&RnsPoly, &RnsPoly)> = digits
+                .iter()
+                .flat_map(|ds| {
+                    ds.iter().zip(&self.rk_coeff).flat_map(|(dj, (bj, aj))| {
+                        [(dj, bj), (dj, aj)]
+                    })
+                })
+                .collect();
+            let relin_prods = self
+                .polymul_batch(&ctx.ring_q, &relin_jobs)
+                .expect("XLA relin dispatch failed");
+            let ell = ctx.relin_ndigits;
+            let ring = &ctx.ring_q;
+            scaled
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let mut c0 = s[0].clone();
+                    let mut c1 = s[1].clone();
+                    let base = i * 2 * ell;
+                    for j in 0..ell {
+                        ring.add_assign(&mut c0, &relin_prods[base + 2 * j]);
+                        ring.add_assign(&mut c1, &relin_prods[base + 2 * j + 1]);
+                    }
+                    let mut ct = Ciphertext::new(vec![c0, c1]);
+                    ct.ct_depth = pairs[i].0.ct_depth.max(pairs[i].1.ct_depth) + 1;
+                    ct
+                })
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use std::path::Path;
+    use std::sync::Arc;
+
+    use crate::fhe::{Ciphertext, FvContext, RelinKey};
+    use crate::math::poly::{RingContext, RnsPoly};
+    use crate::runtime::backend::{HeEngine, OpStats};
+    use crate::util::error::{bail, Result};
+
+    /// Stub engine for builds without PJRT bindings. Construction always
+    /// fails, so callers fall back to
+    /// [`NativeEngine`](crate::runtime::backend::NativeEngine); the type
+    /// still implements the full engine surface so call sites compile
+    /// unchanged.
+    pub struct XlaEngine {
+        /// Public for parity with the `xla`-feature engine's surface.
+        pub ctx: Arc<FvContext>,
+        stats: OpStats,
+    }
+
+    impl XlaEngine {
+        /// Always errors: the `xla` feature (and its vendored PJRT
+        /// bindings) are required for the real engine.
+        pub fn new(_ctx: Arc<FvContext>, _rk: &RelinKey, artifact_dir: &Path) -> Result<Self> {
+            bail!(
+                "XLA/PJRT backend not compiled in (artifact dir {artifact_dir:?}); \
+                 rebuild with `--features xla` and vendored PJRT bindings, or use \
+                 the native backend"
+            )
+        }
+
+        /// Stub of the batched polynomial product.
+        pub fn polymul_batch(
+            &self,
+            _ring: &RingContext,
+            _jobs: &[(&RnsPoly, &RnsPoly)],
+        ) -> Result<Vec<RnsPoly>> {
+            bail!("XLA/PJRT backend not compiled in")
+        }
+    }
+
+    impl HeEngine for XlaEngine {
+        fn ctx(&self) -> &FvContext {
+            &self.ctx
+        }
+
+        fn stats(&self) -> &OpStats {
+            &self.stats
+        }
+
+        fn mul_pairs(&self, _pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext> {
+            unreachable!("stub XlaEngine cannot be constructed")
+        }
+    }
+}
+
+pub use imp::XlaEngine;

@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 /// Parsed command line.
 #[derive(Debug, Default)]

@@ -1,0 +1,166 @@
+//! Minimal error-handling substrate (no `anyhow` offline).
+//!
+//! Mirrors the subset of the `anyhow` API the crate uses so the build
+//! has zero crates.io dependencies:
+//!
+//! - [`Error`] — an opaque, message-carrying error type. Any
+//!   `std::error::Error` converts into it via `?`.
+//! - [`Result`] — `Result<T, Error>` alias with a defaultable error.
+//! - [`anyhow!`] / [`bail!`] — format-style construction and early
+//!   return.
+//! - [`Context`] — `.context(...)` / `.with_context(...)` on both
+//!   `Result` and `Option`, prepending a description to the cause.
+//!
+//! The context chain is flattened into one string eagerly (`"ctx: cause"`),
+//! so `{e}` and `{e:#}` both print the full chain.
+
+use std::fmt;
+
+/// Opaque error: a flattened message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error`: that is what makes the blanket `From` below
+// coherent next to core's reflexive `impl From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+/// Attach context to the error branch of a `Result` or to a `None`.
+pub trait Context<T> {
+    /// Prepend `ctx` to the error message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Lazily computed variant of [`Context::context`].
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        let e: Error = "x".parse::<u64>().unwrap_err().into();
+        assert!(e.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn macro_forms() {
+        let plain = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let key = "nu";
+        let inline = anyhow!("missing option --{key}");
+        assert_eq!(inline.to_string(), "missing option --nu");
+        let args = anyhow!("{} + {}", 1, 2);
+        assert_eq!(args.to_string(), "1 + 2");
+        let wrapped = anyhow!(plain);
+        assert_eq!(wrapped.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(trigger: bool) -> Result<u32> {
+            if trigger {
+                bail!("boom {}", 42);
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 42");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("writing header").unwrap_err();
+        assert!(e.to_string().starts_with("writing header: "));
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing field 'd'").unwrap_err().to_string(), "missing field 'd'");
+        let lazy: Option<u32> = None;
+        let e = lazy.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+        // Context on our own Error keeps chaining.
+        let e = fails_io().context("loading keys").unwrap_err();
+        assert!(e.to_string().starts_with("loading keys: "));
+        // `{:#}` (anyhow chain format) is accepted and prints the chain.
+        assert!(format!("{e:#}").starts_with("loading keys: "));
+    }
+}

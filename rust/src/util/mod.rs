@@ -1,6 +1,8 @@
-//! Offline-build substrates: JSON, CLI, thread pool, prop/bench harnesses.
+//! Offline-build substrates: errors, JSON, CLI, thread pool, prop/bench
+//! harnesses.
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -9,12 +9,29 @@ where
     U: Send,
     F: Fn(T) -> U + Send + Sync,
 {
+    let workers =
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    parallel_map_workers(items, workers, f)
+}
+
+/// [`parallel_map`] with an explicit worker budget. `workers` is
+/// clamped to `[1, items.len()]`, so any value (0, or more workers than
+/// items) is safe; `workers <= 1`, empty and single-element inputs run
+/// serially on the caller thread.
+pub fn parallel_map_workers<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Send + Sync,
+{
     let n = items.len();
-    let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
-    if n <= 1 || workers <= 1 {
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if n == 1 || workers == 1 {
         return items.into_iter().map(f).collect();
     }
-    let workers = workers.min(n);
     let chunk = n.div_ceil(workers);
     let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
     let mut it = items.into_iter();
@@ -28,6 +45,8 @@ where
     let f = &f;
     let mut results: Vec<Vec<U>> = Vec::with_capacity(chunks.len());
     std::thread::scope(|s| {
+        // Spawn everything first, then join in spawn order — joining
+        // in order is what preserves the input order in `results`.
         let handles: Vec<_> = chunks
             .into_iter()
             .map(|c| s.spawn(move || c.into_iter().map(f).collect::<Vec<U>>()))
@@ -54,10 +73,37 @@ mod tests {
     }
 
     #[test]
+    fn preserves_order_for_every_worker_count() {
+        // Sweep worker counts around the chunking edge cases: 1 (serial),
+        // even/odd splits, workers == n, workers > n, and absurd values.
+        let n = 101usize;
+        let expect: Vec<usize> = (0..n).map(|x| x * x).collect();
+        for workers in [0usize, 1, 2, 3, 7, 16, 100, 101, 102, 10_000] {
+            let out =
+                parallel_map_workers((0..n).collect::<Vec<_>>(), workers, |x| x * x);
+            assert_eq!(out, expect, "workers = {workers}");
+        }
+    }
+
+    #[test]
     fn empty_and_single() {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), |x| x);
         assert!(out.is_empty());
         assert_eq!(parallel_map(vec![7], |x| x + 1), vec![8]);
+        // Explicit-worker variants of the same edges.
+        let out: Vec<i32> = parallel_map_workers(Vec::<i32>::new(), 8, |x| x);
+        assert!(out.is_empty());
+        let out: Vec<i32> = parallel_map_workers(Vec::<i32>::new(), 0, |x| x);
+        assert!(out.is_empty());
+        assert_eq!(parallel_map_workers(vec![7], 64, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn workers_beyond_items_use_one_item_chunks() {
+        // With workers ≥ n every chunk has exactly one element; order
+        // must still come back intact.
+        let out = parallel_map_workers((0..8).collect::<Vec<_>>(), 64, |x| x + 1);
+        assert_eq!(out, (1..9).collect::<Vec<_>>());
     }
 
     #[test]
@@ -65,6 +111,17 @@ mod tests {
     fn propagates_panics() {
         let _ = parallel_map(vec![1, 2, 3, 4, 5, 6, 7, 8], |x| {
             if x == 5 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn propagates_panics_with_explicit_workers() {
+        let _ = parallel_map_workers(vec![1, 2, 3, 4], 4, |x| {
+            if x == 3 {
                 panic!("boom");
             }
             x

@@ -2,7 +2,9 @@
 //! native Rust backend, and an end-to-end encrypted GD fit through XLA
 //! must equal the exact integer simulation.
 //!
-//! Requires `make artifacts` (skips with a notice otherwise).
+//! Requires the `xla` cargo feature *and* `make artifacts`; every test
+//! prints an explicit `SKIPPED` marker and passes otherwise, so tier-1
+//! stays deterministic on machines without the JAX/Pallas toolchain.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -20,12 +22,28 @@ use els::fhe::FvContext;
 use els::runtime::backend::{HeEngine, NativeEngine};
 use els::runtime::pjrt::XlaEngine;
 
+/// Locate usable AOT artifacts, or explain exactly why the test is
+/// skipped. Returning `None` makes the caller pass vacuously — with a
+/// marker on stderr, never a failure — so tier-1 is deterministic on
+/// machines without the JAX/Pallas toolchain.
 fn artifact_dir() -> Option<PathBuf> {
+    if !cfg!(feature = "xla") {
+        eprintln!(
+            "SKIPPED: built without the `xla` feature (PJRT runtime is a stub); \
+             running these tests requires vendoring the `xla` PJRT bindings as a \
+             dependency and rebuilding with `--features xla`"
+        );
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("rns_meta.json").exists() {
         Some(dir)
     } else {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        eprintln!(
+            "SKIPPED: no AOT artifacts at {} (run `make artifacts` with the \
+             JAX/Pallas toolchain first)",
+            dir.display()
+        );
         None
     }
 }
