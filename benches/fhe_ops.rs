@@ -1,18 +1,34 @@
 //! Homomorphic-operation microbenchmarks: the L1/L3 hot paths (NTT,
 //! polymul native vs XLA-batched, encrypt/decrypt, ct-mul, relin) —
 //! the inputs to the EXPERIMENTS.md §Perf iteration log.
+//!
+//! The `mul_pairs` section runs the same 1/4/16-pair batches on both
+//! arithmetic backends (full-RNS default vs the exact-bigint oracle)
+//! and writes the comparison to `BENCH_fhe_ops.json` — the bench
+//! trajectory the ROADMAP tracks for the `mul_pairs` cost centre.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use els::fhe::encoding::encode_int;
 use els::fhe::keys::keygen;
-use els::fhe::params::FvParams;
+use els::fhe::params::{FvParams, MulBackend};
 use els::fhe::rng::ChaChaRng;
-use els::fhe::FvContext;
+use els::fhe::{Ciphertext, FvContext};
 use els::runtime::backend::{HeEngine, NativeEngine};
 use els::runtime::pjrt::XlaEngine;
-use els::util::bench::{bench, black_box, header};
+use els::util::bench::{bench, black_box, header, BenchStats};
+use els::util::json::Json;
+
+fn stats_json(s: &BenchStats) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&s.name)),
+        ("iters", Json::Num(s.iters as f64)),
+        ("mean_ns", Json::Num(s.mean.as_nanos() as f64)),
+        ("min_ns", Json::Num(s.min.as_nanos() as f64)),
+        ("max_ns", Json::Num(s.max.as_nanos() as f64)),
+    ])
+}
 
 fn main() {
     header("FHE primitive ops (d=256, Lq=3)");
@@ -20,8 +36,13 @@ fn main() {
     let mut rng = ChaChaRng::from_seed(9001);
     let keys = keygen(&ctx, &mut rng);
 
-    // NTT / polymul on both rings.
-    for (ring, label) in [(&ctx.ring_q, "Q (L=3)"), (&ctx.ring_big, "Q∪E (L=7)")] {
+    // NTT / polymul on all three rings.
+    for (ring, what) in [
+        (&ctx.ring_q, "Q"),
+        (&ctx.ring_big, "Q∪E oracle"),
+        (&ctx.ring_ext, "B∪m_sk"),
+    ] {
+        let label = format!("{what} (L={})", ring.nlimbs());
         let a = ring.sample_uniform(&mut rng);
         let b = ring.sample_uniform(&mut rng);
         bench(&format!("ntt fwd+inv {label}"), 3, 50, || {
@@ -51,19 +72,22 @@ fn main() {
     bench("plain mul", 2, 20, || {
         black_box(ctx.mul_plain(&ct_a, &m));
     });
-    bench("ct mul (tensor+scale)", 2, 10, || {
-        black_box(ctx.mul_no_relin(&ct_a, &ct_b));
+    bench("ct mul rns (tensor+scale)", 2, 10, || {
+        black_box(ctx.mul_no_relin_rns(&ct_a, &ct_b));
+    });
+    bench("ct mul bigint (tensor+scale)", 2, 10, || {
+        black_box(ctx.mul_no_relin_bigint(&ct_a, &ct_b));
     });
     let raw = ctx.mul_no_relin(&ct_a, &ct_b);
-    bench("relinearise", 2, 10, || {
+    bench("relinearise (RNS gadget)", 2, 10, || {
         black_box(ctx.relinearize(&raw, &keys.rk));
     });
     bench("ct mul full", 2, 10, || {
         black_box(ctx.mul_ct(&ct_a, &ct_b, &keys.rk));
     });
 
-    // Batched engines: native vs XLA (ablation — DESIGN.md §8).
-    header("mul_pairs batching (16 pairs)");
+    // mul_pairs: full-RNS vs exact-bigint oracle on 1/4/16-pair batches.
+    header("mul_pairs: full-RNS vs bigint oracle");
     let pairs_owned: Vec<_> = (0..16)
         .map(|_| {
             (
@@ -72,13 +96,47 @@ fn main() {
             )
         })
         .collect();
-    let pairs: Vec<_> = pairs_owned.iter().map(|(a, b)| (a, b)).collect();
-    let native = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
-    bench("native engine 16×ct-mul", 1, 5, || {
-        black_box(native.mul_pairs(&pairs));
-    });
+    let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+        pairs_owned.iter().map(|(a, b)| (a, b)).collect();
+    let rk = Arc::new(keys.rk.clone());
+    let rns = NativeEngine::with_backend(ctx.clone(), rk.clone(), MulBackend::FullRns);
+    let big = NativeEngine::with_backend(ctx.clone(), rk.clone(), MulBackend::ExactBigint);
+    let mut comparison: Vec<Json> = Vec::new();
+    for &n in &[1usize, 4, 16] {
+        let batch = &pairs[..n];
+        let s_rns = bench(&format!("native rns {n}×ct-mul"), 1, 5, || {
+            black_box(rns.mul_pairs(batch));
+        });
+        let s_big = bench(&format!("native bigint {n}×ct-mul"), 1, 5, || {
+            black_box(big.mul_pairs(batch));
+        });
+        let speedup = s_big.mean.as_nanos() as f64 / s_rns.mean.as_nanos().max(1) as f64;
+        println!("  -> {n}-pair speedup rns/bigint: {speedup:.2}x");
+        comparison.push(Json::obj(vec![
+            ("pairs", Json::Num(n as f64)),
+            ("full_rns", stats_json(&s_rns)),
+            ("exact_bigint", stats_json(&s_big)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("bench", Json::str("fhe_ops::mul_pairs")),
+        ("status", Json::str("measured")),
+        ("d", Json::Num(ctx.d() as f64)),
+        ("q_count", Json::Num(ctx.params.q_count as f64)),
+        ("ext_count", Json::Num(ctx.params.ext_count as f64)),
+        ("t_bits", Json::Num((ctx.t.bit_len() - 1) as f64)),
+        ("batches", Json::Arr(comparison)),
+    ]);
+    match std::fs::write("BENCH_fhe_ops.json", report.to_string_json()) {
+        Ok(()) => println!("wrote BENCH_fhe_ops.json"),
+        Err(e) => println!("(could not write BENCH_fhe_ops.json: {e})"),
+    }
+
+    // Batched engines: native vs XLA (ablation — DESIGN.md §8).
     match XlaEngine::new(ctx.clone(), &keys.rk, Path::new("artifacts")) {
         Ok(xla) => {
+            header("mul_pairs batching: XLA");
             bench("xla engine 16×ct-mul", 1, 5, || {
                 black_box(xla.mul_pairs(&pairs));
             });

@@ -33,6 +33,9 @@ cargo build --release
 note "tier-1: cargo test -q"
 cargo test -q
 
+note "tier-1 (oracle backend): ELS_MUL_BACKEND=bigint cargo test -q"
+ELS_MUL_BACKEND=bigint cargo test -q
+
 note "cargo bench (toy profile; must not panic)"
 cargo bench
 

@@ -1,9 +1,18 @@
-"""RNS basis generation — bit-for-bit mirror of `rust/src/math/primes.rs`.
+"""RNS basis generation and base conversion — bit-for-bit mirror of
+`rust/src/math/primes.rs` and `rust/src/math/baseconv.rs`.
 
 The Rust runtime and the AOT-compiled XLA artifacts must agree on the
 prime basis for every ring degree. Both sides generate primes
 `p ≡ 1 (mod 2d)`, `p < 2^30`, **descending** from 2^30; the Rust side
 cross-checks `artifacts/rns_meta.json` at load time.
+
+The base-conversion helpers mirror the full-RNS multiply subsystem:
+`base_convert_signed` (fast base extension with the 64-bit fixed-point
+α correction) and `shenoy_convert` (exact Shenoy–Kumaresan conversion
+whose redundant-modulus residue plays the role of the γ-correction for
+the fast conversion's overshoot). The fixed-point arithmetic is the
+exact integer computation the Rust side performs in `u128`, so the two
+implementations agree bit for bit.
 """
 
 from __future__ import annotations
@@ -104,3 +113,116 @@ def ntt_tables(p: int, d: int):
     psi_inv_rev = [pow_i[bitrev(i, bits)] for i in range(d)]
     d_inv = pow(d, p - 2, p)
     return psi_rev, psi_inv_rev, d_inv
+
+
+# ---- base conversion (mirror of rust/src/math/baseconv.rs) -------------
+
+
+def crt_residues(v: int, primes: list[int]) -> list[int]:
+    """Canonical residues of (possibly negative) v in each plane."""
+    return [v % p for p in primes]
+
+
+def base_convert_signed(
+    residues: list[int], src: list[int], tgt: list[int]
+) -> list[int]:
+    """Fast base conversion of the *centered* representative.
+
+    Given residues of x in the source basis (product M), returns the
+    residues mod each target prime of the centered representative
+    x_c ∈ (−M/2, M/2]. Uses the explicit CRT sum Σ y_i·M_i − α·M with
+    the overshoot α recovered by 64-bit fixed-point accumulation of
+    Σ y_i/p_i, rounded to nearest — the exact computation the Rust
+    `BaseConverter` performs in `u128`. Exact whenever x_c is not
+    within M·len(src)/2^64 of the ±M/2 boundary (and off by one
+    multiple of M otherwise, which the FV noise analysis absorbs).
+    """
+    assert len(residues) == len(src)
+    m_i = []  # M/p_i
+    prod = 1
+    for p in src:
+        prod *= p
+    y = []
+    s_fix = 0  # Σ ⌊y_i·2^64/p_i⌋, exact u128 mirror
+    for x, p in zip(residues, src):
+        mi = prod // p
+        yi = x * pow(mi % p, p - 2, p) % p
+        m_i.append(mi)
+        y.append(yi)
+        s_fix += (yi << 64) // p
+    alpha = (s_fix + (1 << 63)) >> 64
+    return [
+        (sum(yi * (mi % t) for yi, mi in zip(y, m_i)) - alpha * (prod % t)) % t
+        for t in tgt
+    ]
+
+
+def shenoy_convert(
+    residues_b: list[int],
+    residue_msk: int,
+    b_primes: list[int],
+    msk: int,
+    tgt: list[int],
+) -> list[int]:
+    """Exact Shenoy–Kumaresan base conversion B → tgt.
+
+    `residue_msk` is the redundant-modulus residue of the true signed
+    value x (|x| < B/2, carried through the pipeline alongside the B
+    planes); it corrects the fast conversion's overshoot exactly:
+    α′ = (Σ y_j·B_j − x) · B^{-1} mod m_sk equals the true overshoot
+    count α + [x < 0] < len(B) ≪ m_sk, so the subtraction below
+    reconstructs the centered representative with pure integer
+    arithmetic (the γ-correction role of the redundant modulus).
+    """
+    assert len(residues_b) == len(b_primes)
+    b_prod = 1
+    for p in b_primes:
+        b_prod *= p
+    y = []
+    s_msk = 0
+    for x, p in zip(residues_b, b_primes):
+        bj = b_prod // p
+        yj = x * pow(bj % p, p - 2, p) % p
+        y.append(yj)
+        s_msk += yj * (bj % msk)
+    alpha = (
+        (s_msk - residue_msk) * pow(b_prod % msk, msk - 2, msk) % msk
+    )
+    assert alpha <= len(b_primes), "S-K overshoot out of range"
+    return [
+        (
+            sum(yj * ((b_prod // p) % t) for yj, p in zip(y, b_primes))
+            - alpha * (b_prod % t)
+        )
+        % t
+        for t in tgt
+    ]
+
+
+def scale_round_rns(
+    v_q: list[int],
+    v_ext: list[int],
+    v_msk: int,
+    t: int,
+    q_primes: list[int],
+    b_primes: list[int],
+    msk: int,
+) -> list[int]:
+    """Full-RNS ⌊t·v/q⌉ mod q (mirror of `fhe/rns_mul.rs`).
+
+    `v` is known on Q (v_q), on the extension basis B (v_ext) and on
+    the redundant modulus (v_msk). Computes z = centered [t·v]_q from
+    the Q planes, extends it to B∪{m_sk}, forms r = (t·v − z)/q by
+    exact division in the extension planes, and converts r back to Q
+    via `shenoy_convert`.
+    """
+    z_q = [tv * vi % p for tv, vi, p in ((t % p, vi, p) for vi, p in zip(v_q, q_primes))]
+    z_ext = base_convert_signed(z_q, q_primes, b_primes + [msk])
+    q_prod = 1
+    for p in q_primes:
+        q_prod *= p
+    r_planes = []
+    for vi, zi, p in zip(v_ext + [v_msk], z_ext, b_primes + [msk]):
+        num = (t % p) * vi % p - zi
+        r_planes.append(num * pow(q_prod % p, p - 2, p) % p)
+    return shenoy_convert(r_planes[:-1], r_planes[-1], b_primes, msk, q_primes)

@@ -53,3 +53,40 @@ def test_tables_shapes():
     assert len(f) == d and len(i) == d
     assert f[0] == 1 and i[0] == 1
     assert dinv * d % p == 1
+
+
+@given(
+    d_log=st.integers(min_value=5, max_value=8),
+    l_src=st.integers(2, 4),
+    l_tgt=st.integers(1, 4),
+    frac=st.fractions(min_value=-1, max_value=1),
+)
+@settings(max_examples=40, deadline=None)
+def test_base_convert_signed_property(d_log, l_src, l_tgt, frac):
+    d = 1 << d_log
+    ps = rns.rns_basis_primes(d, l_src + l_tgt)
+    src, tgt = ps[:l_src], ps[l_src:]
+    m = 1
+    for p in src:
+        m *= p
+    # Any |x| < M/4 (inside the fixed-point guard band) converts exactly.
+    x = int(frac * (m // 4 - 1))
+    got = rns.base_convert_signed([x % p for p in src], src, tgt)
+    assert got == [x % t for t in tgt]
+
+
+@given(
+    l_b=st.integers(2, 5),
+    frac=st.fractions(min_value=-1, max_value=1),
+)
+@settings(max_examples=40, deadline=None)
+def test_shenoy_convert_property(l_b, frac):
+    ps = rns.rns_basis_primes(256, l_b + 3)
+    b, msk, tgt = ps[:l_b], ps[l_b], ps[l_b + 1 :]
+    bprod = 1
+    for p in b:
+        bprod *= p
+    # Exact over the whole symmetric range — no guard band needed.
+    x = int(frac * (bprod // 2 - 1))
+    got = rns.shenoy_convert([x % p for p in b], x % msk, b, msk, tgt)
+    assert got == [x % t for t in tgt]

@@ -38,3 +38,74 @@ def test_primitive_2d_root_orders():
         psi = rns.primitive_2d_root(p, d)
         assert pow(psi, d, p) == p - 1, "psi^d = -1"
         assert pow(psi, 2 * d, p) == 1, "psi^2d = 1"
+
+
+def test_base_convert_signed_exact_small_values():
+    src = rns.rns_basis_primes(256, 3)
+    tgt = rns.rns_basis_primes(256, 7)[3:]
+    for v in (-10**12, -65537, -1, 0, 1, 7, 123456789, 10**14):
+        got = rns.base_convert_signed([v % p for p in src], src, tgt)
+        assert got == [v % t for t in tgt], f"v={v}"
+
+
+def test_base_convert_signed_exact_inside_guard_band():
+    import random
+
+    src = rns.rns_basis_primes(64, 4)
+    tgt = rns.rns_basis_primes(64, 9)[4:]
+    m = 1
+    for p in src:
+        m *= p
+    rnd = random.Random(11)
+    for _ in range(300):
+        # |x| < M/4: inside the fixed-point guard band, conversion is exact.
+        x = rnd.randrange(-(m // 4), m // 4)
+        got = rns.base_convert_signed([x % p for p in src], src, tgt)
+        assert got == [x % t for t in tgt]
+
+
+def test_shenoy_convert_exact_everywhere():
+    import random
+
+    b = rns.rns_basis_primes(128, 5)
+    more = rns.rns_basis_primes(128, 9)
+    msk, tgt = more[5], more[6:]
+    bprod = 1
+    for p in b:
+        bprod *= p
+    rnd = random.Random(12)
+    # Exact over the whole symmetric range, boundaries included — the
+    # redundant-modulus (γ-style) correction has no approximation.
+    cases = [rnd.randrange(-(bprod // 2) + 1, bprod // 2) for _ in range(300)]
+    cases += [0, 1, -1, bprod // 2, -(bprod // 2) + 1]
+    for x in cases:
+        got = rns.shenoy_convert([x % p for p in b], x % msk, b, msk, tgt)
+        assert got == [x % t for t in tgt], f"x={x}"
+
+
+def test_scale_round_rns_matches_exact_rounding():
+    import random
+
+    all_primes = rns.rns_basis_primes(64, 9)
+    qp, bp, msk = all_primes[:3], all_primes[3:8], all_primes[8]
+    q = 1
+    for p in qp:
+        q *= p
+    bprod = 1
+    for p in bp:
+        bprod *= p
+    t = 1 << 24
+    d = 64
+    lim = d * q * q // 4  # the tensor-coefficient range the bases are sized for
+    assert t * (lim // q) < bprod // 2, "extension basis must cover the range"
+    rnd = random.Random(13)
+    for _ in range(200):
+        v = rnd.randrange(-lim, lim)
+        out = rns.scale_round_rns(
+            [v % p for p in qp], [v % p for p in bp], v % msk, t, qp, bp, msk
+        )
+        exact = (2 * t * v + q) // (2 * q)  # round to nearest
+        for o, p in zip(out, qp):
+            diff = (o - exact) % p
+            diff = diff - p if diff > p // 2 else diff
+            assert abs(diff) <= 1, f"v={v}: off by {diff}"

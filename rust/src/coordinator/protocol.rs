@@ -259,7 +259,13 @@ pub fn params_to_json(p: &crate::fhe::FvParams) -> Json {
         ("ext_count", Json::Num(p.ext_count as f64)),
         ("t_hex", Json::Str(to_hex(p.t.limbs().iter().copied()))),
         ("cbd_k", Json::Num(p.cbd_k as f64)),
-        ("relin_w_bits", Json::Num(p.relin_w_bits as f64)),
+        (
+            "mul_backend",
+            Json::str(match p.mul_backend {
+                crate::fhe::MulBackend::ExactBigint => "bigint",
+                crate::fhe::MulBackend::FullRns => "rns",
+            }),
+        ),
         (
             "profile",
             Json::str(match p.profile {
@@ -278,7 +284,15 @@ pub fn params_from_json(j: &Json) -> Result<crate::fhe::FvParams> {
         ext_count: j.req("ext_count")?.as_usize().context("ext_count")?,
         t,
         cbd_k: j.req("cbd_k")?.as_u64().context("cbd_k")? as u32,
-        relin_w_bits: j.req("relin_w_bits")?.as_u64().context("relin_w_bits")? as u32,
+        // Absent ⇒ the process default (the key file predates the
+        // backend field or defers the choice to the server); anything
+        // else must fail loudly, not silently fall back.
+        mul_backend: match j.get("mul_backend").and_then(|v| v.as_str()) {
+            Some("bigint") => crate::fhe::MulBackend::ExactBigint,
+            Some("rns") => crate::fhe::MulBackend::FullRns,
+            None => crate::fhe::MulBackend::from_env(),
+            Some(other) => bail!("unknown mul_backend '{other}' (rns|bigint)"),
+        },
         profile: match j.req("profile")?.as_str() {
             Some("paper128") => crate::fhe::SecurityProfile::Paper128,
             _ => crate::fhe::SecurityProfile::Toy,

@@ -5,8 +5,9 @@ use std::sync::Arc;
 use crate::math::bigint::{BigInt, BigUint};
 use crate::math::poly::{RingContext, RnsPoly};
 
-use super::params::FvParams;
+use super::params::{FvParams, MulBackend};
 use super::plaintext::Plaintext;
+use super::rns_mul::RnsMulPrecomp;
 
 /// Precomputation shared by every key, ciphertext and operation under
 /// one parameter set.
@@ -14,8 +15,11 @@ pub struct FvContext {
     pub params: FvParams,
     /// Ring over the ciphertext modulus basis Q.
     pub ring_q: Arc<RingContext>,
-    /// Ring over the joint tensor basis Q ∪ E (used only inside ⊗).
+    /// Ring over the joint tensor basis Q ∪ E (the bigint-oracle ⊗).
     pub ring_big: Arc<RingContext>,
+    /// Ring over the extension basis B ∪ {m_sk} (`m_sk` last) — the
+    /// full-RNS ⊗ working basis.
+    pub ring_ext: Arc<RingContext>,
     /// q = Π Q-primes.
     pub q: BigUint,
     /// Plaintext modulus t.
@@ -24,9 +28,10 @@ pub struct FvContext {
     pub delta: BigUint,
     /// Δ mod each Q-prime (fresh-encryption fast path).
     pub delta_rns: Vec<u64>,
-    /// Relinearisation digit count ℓ and base w = 2^w_bits.
+    /// Relinearisation digit count (one per Q limb — the RNS gadget).
     pub relin_ndigits: usize,
-    pub relin_w_bits: u32,
+    /// Base-conversion tables for the full-RNS multiply.
+    pub rns: RnsMulPrecomp,
     /// `log2 t` when t is a power of two (always true for planned
     /// parameter sets): turns the hot `t·v` big-multiply of the BFV
     /// scale-and-round into a shift.
@@ -38,27 +43,45 @@ impl FvContext {
         let q_primes = params.q_primes();
         let mut big_primes = q_primes.clone();
         big_primes.extend(params.ext_primes());
+        let mut ext_all = params.rns_ext_primes();
+        ext_all.push(params.msk_prime());
         let ring_q = RingContext::new(params.d, q_primes.clone());
         let ring_big = RingContext::new(params.d, big_primes);
+        let ring_ext = RingContext::new(params.d, ext_all);
         let q = ring_q.basis.modulus.clone();
         let t = params.t.clone();
         let delta = q.div_rem(&t).0;
         let delta_rns = q_primes.iter().map(|&p| delta.mod_u64(p)).collect();
         let relin_ndigits = params.relin_ndigits();
-        let relin_w_bits = params.relin_w_bits;
+        let rns = RnsMulPrecomp::new(&ring_q, &ring_ext, &t);
         let t_shift = if t.is_power_of_two() { Some(t.bit_len() - 1) } else { None };
         Arc::new(FvContext {
             params,
             ring_q,
             ring_big,
+            ring_ext,
             q,
             t,
             delta,
             delta_rns,
             relin_ndigits,
-            relin_w_bits,
+            rns,
             t_shift,
         })
+    }
+
+    /// A context identical to this one except for the multiply backend
+    /// (keys remain compatible, since they live entirely in the Q
+    /// basis). This is how the parity tests and benches run both
+    /// pipelines against one key set. When the backend already
+    /// matches, the same context is returned — no ring/table rebuild.
+    pub fn with_backend(self: Arc<Self>, backend: MulBackend) -> Arc<Self> {
+        if backend == self.params.mul_backend {
+            return self;
+        }
+        let mut params = self.params.clone();
+        params.mul_backend = backend;
+        FvContext::new(params)
     }
 
     /// `t·v` via shift when t = 2^k (hot path of ⊗ and decryption).

@@ -24,8 +24,9 @@ pub struct PublicKey {
     pub a_ntt: RnsPoly,
 }
 
-/// FV-v1 relinearisation key: for each digit j,
-/// `(b_j, a_j)` with `b_j = -(a_j·s + e_j) + w^j·s²  (mod q)`.
+/// FV-v1 relinearisation key over the per-limb RNS gadget: for each
+/// Q limb i, `(b_i, a_i)` with `b_i = -(a_i·s + e_i) + g_i·s² (mod q)`
+/// where `g_i = q/q_i mod q` (zero on every residue plane except i).
 #[derive(Clone)]
 pub struct RelinKey {
     pub b_ntt: Vec<RnsPoly>,
@@ -61,37 +62,32 @@ pub fn keygen(ctx: &FvContext, rng: &mut ChaChaRng) -> KeySet {
     ring.ntt_forward(&mut b_ntt);
     let pk = PublicKey { b_ntt, a_ntt };
 
-    // Relinearisation keys over base-w digits of q.
+    // Relinearisation keys over the per-limb RNS gadget: digit i
+    // encodes g_i·s² with g_i = q/q_i mod q, whose residue vector is
+    // zero except [q/q_i]_{q_i} on plane i.
     let mut rb = Vec::with_capacity(ctx.relin_ndigits);
     let mut ra = Vec::with_capacity(ctx.relin_ndigits);
-    // w^j mod each prime, iteratively.
     let primes = &ring.basis.primes;
-    let mut wj_rns: Vec<u64> = vec![1; primes.len()];
-    let w_mod: Vec<u64> = primes
-        .iter()
-        .map(|&p| {
-            // w = 2^w_bits mod p
-            crate::math::modarith::powmod(2, ctx.relin_w_bits as u64, p)
-        })
-        .collect();
-    for _j in 0..ctx.relin_ndigits {
-        let aj = ring.sample_uniform(rng);
-        let mut aj_ntt = aj.clone();
-        ring.ntt_forward(&mut aj_ntt);
-        let ej = sample_error(ring, rng, ctx.params.cbd_k);
-        let mut ajs = ring.mul_ntt(&aj_ntt, &s_ntt);
-        ring.ntt_inverse(&mut ajs);
-        // w^j·s² in coefficient form.
-        let mut wjs2 = ring.mul_scalar_rns(&s2_ntt, &wj_rns);
-        ring.ntt_inverse(&mut wjs2);
-        let bj = ring.add(&ring.neg(&ring.add(&ajs, &ej)), &wjs2);
-        let mut bj_ntt = bj;
-        ring.ntt_forward(&mut bj_ntt);
-        rb.push(bj_ntt);
-        ra.push(aj_ntt);
-        for (l, &p) in primes.iter().enumerate() {
-            wj_rns[l] = crate::math::modarith::mulmod(wj_rns[l], w_mod[l], p);
-        }
+    for i in 0..ctx.relin_ndigits {
+        let ai = ring.sample_uniform(rng);
+        let mut ai_ntt = ai.clone();
+        ring.ntt_forward(&mut ai_ntt);
+        let ei = sample_error(ring, rng, ctx.params.cbd_k);
+        let mut ais = ring.mul_ntt(&ai_ntt, &s_ntt);
+        ring.ntt_inverse(&mut ais);
+        // g_i·s² in coefficient form.
+        let gi_rns: Vec<u64> = primes
+            .iter()
+            .enumerate()
+            .map(|(l, &p)| if l == i { ring.basis.crt_m[i].mod_u64(p) } else { 0 })
+            .collect();
+        let mut gis2 = ring.mul_scalar_rns(&s2_ntt, &gi_rns);
+        ring.ntt_inverse(&mut gis2);
+        let bi = ring.add(&ring.neg(&ring.add(&ais, &ei)), &gis2);
+        let mut bi_ntt = bi;
+        ring.ntt_forward(&mut bi_ntt);
+        rb.push(bi_ntt);
+        ra.push(ai_ntt);
     }
 
     KeySet { sk: SecretKey { s, s_ntt, s2_ntt }, pk, rk: RelinKey { b_ntt: rb, a_ntt: ra } }
@@ -132,34 +128,36 @@ mod tests {
         let keys = keygen(&ctx, &mut rng);
         assert_eq!(keys.rk.b_ntt.len(), ctx.relin_ndigits);
         assert_eq!(keys.rk.a_ntt.len(), ctx.relin_ndigits);
-        assert!(ctx.relin_ndigits >= ctx.q.bit_len() / ctx.relin_w_bits as usize);
+        // One digit per RNS limb of q.
+        assert_eq!(ctx.relin_ndigits, ctx.params.q_count);
     }
 
     #[test]
-    fn relin_key_encodes_w_powers_of_s2() {
-        // b_j + a_j·s - w^j·s² = -e_j (small).
+    fn relin_key_encodes_gadget_multiples_of_s2() {
+        // b_i + a_i·s - g_i·s² = -e_i (small), with g_i = q/q_i mod q.
         let ctx = FvContext::new(FvParams::custom(256, 3, 20));
         let mut rng = ChaChaRng::from_seed(33);
         let keys = keygen(&ctx, &mut rng);
         let ring = &ctx.ring_q;
-        for j in [0usize, ctx.relin_ndigits - 1] {
-            let prod = ring.mul_ntt(&keys.rk.a_ntt[j], &keys.sk.s_ntt);
-            // w^j mod each prime
-            let wj: Vec<u64> = ring
+        for i in [0usize, ctx.relin_ndigits - 1] {
+            let prod = ring.mul_ntt(&keys.rk.a_ntt[i], &keys.sk.s_ntt);
+            let gi: Vec<u64> = ring
                 .basis
                 .primes
                 .iter()
-                .map(|&p| {
-                    crate::math::modarith::powmod(2, (ctx.relin_w_bits as u64) * j as u64, p)
-                })
+                .map(|&p| ring.basis.crt_m[i].mod_u64(p))
                 .collect();
-            let wjs2 = ring.mul_scalar_rns(&keys.sk.s2_ntt, &wj);
-            let mut res = ring.sub(&ring.add(&keys.rk.b_ntt[j], &prod), &wjs2);
+            // g_i vanishes on every plane except i.
+            for (l, &g) in gi.iter().enumerate() {
+                assert_eq!(g == 0, l != i, "gadget residue structure");
+            }
+            let gis2 = ring.mul_scalar_rns(&keys.sk.s2_ntt, &gi);
+            let mut res = ring.sub(&ring.add(&keys.rk.b_ntt[i], &prod), &gis2);
             ring.ntt_inverse(&mut res);
             let bound = ctx.params.cbd_k as i64;
             for (l, &p) in ring.basis.primes.iter().enumerate() {
                 for &v in &res.planes[l] {
-                    assert!(center(v, p).abs() <= bound, "relin digit {j} malformed");
+                    assert!(center(v, p).abs() <= bound, "relin digit {i} malformed");
                 }
             }
         }

@@ -11,6 +11,9 @@
 //! - [`keys`] — secret/public/relinearisation key generation.
 //! - [`plaintext`] / [`encoding`] — message ring and §3.1 encoding.
 //! - [`ciphertext`] / [`ops`] — ⊕, ⊗, plaintext ops, relinearisation.
+//! - [`rns_mul`] — the full-RNS ⊗ pipeline (default
+//!   [`MulBackend`](params::MulBackend)): base extension,
+//!   residue-plane scale-and-round, Shenoy–Kumaresan back conversion.
 //! - [`noise`] — exact invariant-noise measurement (diagnostics).
 
 pub mod ciphertext;
@@ -22,10 +25,11 @@ pub mod ops;
 pub mod params;
 pub mod plaintext;
 pub mod rng;
+pub mod rns_mul;
 pub mod sampler;
 
 pub use ciphertext::Ciphertext;
 pub use context::FvContext;
 pub use keys::{keygen, KeySet, PublicKey, RelinKey, SecretKey};
-pub use params::{plan, Algo, FvParams, PlanRequest, SecurityProfile};
+pub use params::{plan, Algo, FvParams, MulBackend, PlanRequest, SecurityProfile};
 pub use plaintext::Plaintext;

@@ -1,12 +1,20 @@
 //! Homomorphic operations: encryption, decryption, ⊕, ⊗, plaintext ops
-//! and relinearisation (textbook FV, RNS ciphertexts, exact bigint
-//! scale-and-round).
+//! and relinearisation (textbook FV, RNS ciphertexts).
+//!
+//! The ⊗ tensor/scale pipeline dispatches on the context's
+//! [`MulBackend`]: the default full-RNS path
+//! ([`FvContext::mul_no_relin_rns`], see `fhe/rns_mul.rs`) and the
+//! exact-bigint oracle ([`FvContext::mul_no_relin_bigint`]).
+//! Relinearisation uses the per-limb RNS gadget on both backends, so
+//! [`FvContext::relin_digits`] never lifts.
 
+use crate::math::modarith::mulmod;
 use crate::math::poly::{Rep, RnsPoly};
 
 use super::ciphertext::Ciphertext;
 use super::context::FvContext;
 use super::keys::{PublicKey, RelinKey, SecretKey};
+use super::params::MulBackend;
 use super::plaintext::Plaintext;
 use super::rng::ChaChaRng;
 use super::sampler::{sample_error, sample_ternary};
@@ -123,7 +131,18 @@ impl FvContext {
     /// The BFV tensor product **without** relinearisation: returns a
     /// 3-component ciphertext. Exposed for tests and for fused
     /// inner-product accumulation (relinearise once per sum).
+    /// Dispatches on the context's [`MulBackend`].
     pub fn mul_no_relin(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        match self.params.mul_backend {
+            MulBackend::FullRns => self.mul_no_relin_rns(a, b),
+            MulBackend::ExactBigint => self.mul_no_relin_bigint(a, b),
+        }
+    }
+
+    /// The exact-bigint tensor product (per-coefficient CRT lifts into
+    /// the joint Q∪E basis, exact `⌊t·v/q⌉`). Kept as the correctness
+    /// oracle for the full-RNS pipeline.
+    pub fn mul_no_relin_bigint(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         assert_eq!(a.len(), 2, "operands must be relinearised");
         assert_eq!(b.len(), 2);
         let big = &self.ring_big;
@@ -154,40 +173,32 @@ impl FvContext {
         out
     }
 
-    /// Base-w digit decomposition of a polynomial's canonical
-    /// coefficients: `poly = Σ_j w^j·D_j` with `‖D_j‖∞ < 2^w_bits`.
-    /// Returned in coefficient representation (shared by the native and
-    /// XLA relinearisation paths).
+    /// Per-limb RNS gadget decomposition: `poly = Σ_i D_i·(q/q_i)
+    /// (mod q)` with `D_i = [poly·(q/q_i)^{-1}]_{q_i}` read straight
+    /// off residue plane `i` — `‖D_i‖∞ < q_i < 2^30`, no CRT lift.
+    /// Returned in coefficient representation (shared by the native
+    /// and XLA relinearisation paths).
     pub fn relin_digits(&self, poly: &RnsPoly) -> Vec<RnsPoly> {
+        debug_assert_eq!(poly.rep, Rep::Coeff);
         let ring = &self.ring_q;
-        let mut residues = vec![0u64; ring.nlimbs()];
-        let coeffs: Vec<crate::math::bigint::BigUint> = (0..ring.d)
+        let primes = &ring.basis.primes;
+        (0..ring.nlimbs())
             .map(|i| {
-                for l in 0..ring.nlimbs() {
-                    residues[l] = poly.planes[l][i];
-                }
-                ring.basis.lift(&residues)
-            })
-            .collect();
-        let w_bits = self.relin_w_bits as usize;
-        (0..self.relin_ndigits)
-            .map(|j| {
-                // Digit polynomial D_j: every residue plane holds the
-                // same small value (digits < 2^w_bits < every prime).
-                let mut dj = ring.zero();
-                for (i, v) in coeffs.iter().enumerate() {
-                    let digit = v.extract_bits(j * w_bits, w_bits);
-                    for l in 0..ring.nlimbs() {
-                        dj.planes[l][i] = digit;
+                let (qi, inv) = (primes[i], ring.basis.crt_inv[i]);
+                let mut di = ring.zero();
+                for c in 0..ring.d {
+                    let digit = mulmod(poly.planes[i][c], inv, qi);
+                    for (l, &p) in primes.iter().enumerate() {
+                        di.planes[l][c] = digit % p;
                     }
                 }
-                dj
+                di
             })
             .collect()
     }
 
     /// Fold the degree-2 component back onto (c₀, c₁) with the
-    /// relinearisation key (base-w digit decomposition).
+    /// relinearisation key (per-limb RNS gadget decomposition).
     pub fn relinearize(&self, ct: &Ciphertext, rk: &RelinKey) -> Ciphertext {
         assert_eq!(ct.len(), 3, "nothing to relinearise");
         let ring = &self.ring_q;

@@ -24,6 +24,38 @@ use crate::math::primes::rns_basis_primes;
 
 use super::sampler::DEFAULT_CBD_K;
 
+/// Which ciphertext-multiplication pipeline [`crate::fhe::FvContext`]
+/// dispatches to (see `fhe/rns_mul.rs` and ROADMAP's `mul_pairs` cost
+/// note).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MulBackend {
+    /// Per-coefficient bigint CRT lifts with exact `⌊t·v/q⌉` rounding —
+    /// the original pipeline, kept as the cross-backend correctness
+    /// oracle (`ELS_MUL_BACKEND=bigint` forces it suite-wide in CI).
+    ExactBigint,
+    /// Full-RNS pipeline (default): fast base extension, residue-plane
+    /// tensor product and scale-and-round, Shenoy–Kumaresan conversion
+    /// back — zero bigint allocations per multiply.
+    #[default]
+    FullRns,
+}
+
+impl MulBackend {
+    /// Process-wide default, overridable via `ELS_MUL_BACKEND`
+    /// (`bigint`/`oracle` or `rns`). Used by the CI oracle gate, so a
+    /// typo must fail loudly rather than silently test the default
+    /// backend twice.
+    pub fn from_env() -> Self {
+        match std::env::var("ELS_MUL_BACKEND").as_deref() {
+            Ok("bigint") | Ok("oracle") | Ok("exact") => MulBackend::ExactBigint,
+            Ok("rns") | Ok("fullrns") | Ok("") | Err(_) => MulBackend::FullRns,
+            Ok(other) => {
+                panic!("unknown ELS_MUL_BACKEND '{other}' (expected rns|bigint)")
+            }
+        }
+    }
+}
+
 /// How strictly to enforce the LP11 security floor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SecurityProfile {
@@ -41,15 +73,18 @@ pub struct FvParams {
     pub d: usize,
     /// Number of RNS primes in the ciphertext modulus `q`.
     pub q_count: usize,
-    /// Number of extension primes for the multiplication tensor basis
-    /// (must satisfy `q·ext > d·q²`, i.e. `ext > d·q`).
+    /// Number of extension primes for the bigint-oracle tensor basis
+    /// (`q·ext > d·q²`, i.e. `ext > d·q`). The full-RNS pipeline uses
+    /// the longer [`rns_ext_primes`](Self::rns_ext_primes) superset,
+    /// sized separately so enlarging it never bloats the oracle ring
+    /// (or invalidates `polymul` artifacts keyed on its limb count).
     pub ext_count: usize,
     /// Plaintext modulus.
     pub t: BigUint,
     /// Centered-binomial error parameter (σ = √(k/2)).
     pub cbd_k: u32,
-    /// Relinearisation digit size `w = 2^relin_w_bits`.
-    pub relin_w_bits: u32,
+    /// Ciphertext-multiplication pipeline this set runs on.
+    pub mul_backend: MulBackend,
     /// The profile this set was planned under.
     pub profile: SecurityProfile,
 }
@@ -63,7 +98,7 @@ impl FvParams {
             ext_count: 0,
             t: BigUint::one().shl_bits(t_bits),
             cbd_k: DEFAULT_CBD_K,
-            relin_w_bits: 16,
+            mul_backend: MulBackend::from_env(),
             profile: SecurityProfile::Toy,
         };
         params.ext_count = params.required_ext_count();
@@ -81,6 +116,26 @@ impl FvParams {
         all[self.q_count..].to_vec()
     }
 
+    /// Extension primes of the full-RNS multiply basis `B`: a superset
+    /// of [`ext_primes`](Self::ext_primes) (same descending sequence)
+    /// sized so the `⌊t·v/q⌉` output (`|r| ≤ t·d·q/4`) fits `B`
+    /// symmetrically with slack; see
+    /// [`required_rns_ext_count`](Self::required_rns_ext_count).
+    pub fn rns_ext_primes(&self) -> Vec<u64> {
+        let all = rns_basis_primes(self.d, self.q_count + self.required_rns_ext_count());
+        all[self.q_count..].to_vec()
+    }
+
+    /// The redundant Shenoy–Kumaresan modulus `m_sk`: the next prime in
+    /// the same deterministic sequence after the full-RNS extension
+    /// basis, so it is NTT-friendly and disjoint from Q∪B (hence also
+    /// from the oracle's E ⊆ B) by construction.
+    pub fn msk_prime(&self) -> u64 {
+        *rns_basis_primes(self.d, self.q_count + self.required_rns_ext_count() + 1)
+            .last()
+            .unwrap()
+    }
+
     pub fn q(&self) -> BigUint {
         let mut q = BigUint::one();
         for p in self.q_primes() {
@@ -94,11 +149,26 @@ impl FvParams {
     }
 
     /// Minimum extension primes so that `q_ext > d·q` (tensor-product
-    /// coefficients `≤ d·q²/2` then fit the joint basis symmetrically).
+    /// coefficients `≤ d·q²/4` then fit the joint oracle basis
+    /// symmetrically).
     pub fn required_ext_count(&self) -> usize {
         let target_bits = self.q_bits() + self.d.trailing_zeros() as usize + 2;
         // Primes are just under 2^30; be conservative with 29 bits each.
         target_bits.div_ceil(29)
+    }
+
+    /// Minimum primes in the full-RNS extension basis `B`, covering
+    /// both the tensor range (`B > d·q`, as for the oracle) and the
+    /// scale-and-round range (`B > t·d·q/2`, since the `⌊t·v/q⌉`
+    /// output lives in `B` before the Shenoy–Kumaresan conversion
+    /// back). The `+2` bits of slack keep the fast forward extension's
+    /// fixed-point correction provably exact for the scale-and-round
+    /// operand.
+    pub fn required_rns_ext_count(&self) -> usize {
+        let target_bits =
+            self.q_bits() + self.t.bit_len() + self.d.trailing_zeros() as usize + 2;
+        // Never smaller than the oracle basis, so E stays a prefix of B.
+        target_bits.div_ceil(29).max(self.ext_count).max(self.required_ext_count())
     }
 
     /// Error standard deviation σ = √(k/2).
@@ -113,9 +183,12 @@ impl FvParams {
         7.2 * self.d as f64 / log_q_over_sigma - 110.0
     }
 
-    /// Number of relinearisation digits ℓ = ⌈q_bits / w_bits⌉.
+    /// Number of relinearisation digits: one per RNS limb of `q`. The
+    /// gadget is the CRT decomposition `c₂ = Σ_i [c₂·(q/q_i)^{-1}]_{q_i}
+    /// ·(q/q_i) mod q`, whose digits (`< 2^30`) are read straight off
+    /// the residue planes — no lift, no base-w carry chains.
     pub fn relin_ndigits(&self) -> usize {
-        self.q_bits().div_ceil(self.relin_w_bits as usize)
+        self.q_count
     }
 
     /// Bytes of one ciphertext (2 polys × limbs × d × 8B).
@@ -433,8 +506,11 @@ pub fn plan(req: &PlanRequest) -> Result<FvParams> {
         // Each ct-mul multiplies noise by ≈ 2·d·t·ℓ1(m); plain-const
         // muls add ≈ const_bits per iteration on top.
         let per_level = per_level_noise_bits(t_bits, d, const_bits);
-        // Relinearisation adds ≈ ℓ·d·w·B once per mul (absorbed into the
-        // per-level margin) plus a flat reserve.
+        // The flat reserve absorbs the additive per-mul terms: RNS
+        // relinearisation (≈ L·d·2^30·B, dwarfed by the first level's
+        // multiplicative growth) and the full-RNS pipeline's ±1
+        // approximate-conversion roundings per component (≾ d² on the
+        // phase, likewise below the per-level terms).
         let q_bits = fresh_bits + depth as usize * per_level + 40;
         let q_count = q_bits.div_ceil(29);
 
@@ -456,7 +532,7 @@ pub fn plan(req: &PlanRequest) -> Result<FvParams> {
                 ext_count: 0,
                 t: BigUint::one().shl_bits(t_bits),
                 cbd_k: DEFAULT_CBD_K,
-                relin_w_bits: 16,
+                mul_backend: MulBackend::from_env(),
                 profile: req.profile,
             };
             params.ext_count = params.required_ext_count();
@@ -546,13 +622,20 @@ mod tests {
         assert!(p.d >= 256 && p.d.is_power_of_two());
         // q must be comfortably larger than t.
         assert!(p.q_bits() > p.t.bit_len() + 40);
-        // Extension basis large enough for the tensor product.
+        // Oracle extension basis large enough for the tensor product.
         let ext_bits: usize = p
             .ext_primes()
             .iter()
             .map(|&pr| 64 - pr.leading_zeros() as usize - 1)
             .sum();
         assert!(ext_bits >= p.q_bits() + p.d.trailing_zeros() as usize);
+        // Full-RNS extension basis also covers the scale-and-round
+        // output (|r| ≤ t·d·q/4), and extends the oracle basis.
+        let rns_ext = p.rns_ext_primes();
+        let rns_ext_bits: usize =
+            rns_ext.iter().map(|&pr| 64 - pr.leading_zeros() as usize - 1).sum();
+        assert!(rns_ext_bits >= p.q_bits() + p.t.bit_len() + p.d.trailing_zeros() as usize);
+        assert_eq!(&rns_ext[..p.ext_count], &p.ext_primes()[..], "E ⊆ B prefix");
         // Ring degree covers the message degree bound.
         assert!(p.d > track_gd_growth(28, 2, 2, 2, 64).deg_bound);
     }
@@ -577,13 +660,30 @@ mod tests {
     }
 
     #[test]
-    fn primes_are_distinct_between_q_and_ext() {
+    fn primes_are_distinct_between_q_ext_and_msk() {
         let p = FvParams::custom(512, 3, 40);
         let q = p.q_primes();
-        let e = p.ext_primes();
+        let e = p.rns_ext_primes();
         assert!(p.ext_count > 0);
+        assert!(e.len() >= p.ext_count);
         for x in &e {
             assert!(!q.contains(x));
         }
+        let msk = p.msk_prime();
+        assert!(!q.contains(&msk) && !e.contains(&msk));
+        assert_eq!(msk % (2 * p.d as u64), 1, "m_sk must be NTT-friendly");
+    }
+
+    #[test]
+    fn relin_digit_count_is_limb_count() {
+        let p = FvParams::custom(256, 4, 20);
+        assert_eq!(p.relin_ndigits(), 4);
+    }
+
+    #[test]
+    fn backend_default_is_full_rns() {
+        // `MulBackend::default()` is the compiled-in default; from_env
+        // may differ when the CI oracle gate sets ELS_MUL_BACKEND.
+        assert_eq!(MulBackend::default(), MulBackend::FullRns);
     }
 }

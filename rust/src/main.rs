@@ -4,10 +4,10 @@
 //! ```text
 //! els params   --n 28 --p 2 --iters 2 [--nu 30] [--accel gd|vwt|nag] [--profile toy|paper128]
 //! els keygen   --n 28 --p 2 --iters 2 --nu 30 --out keys.json [--seed 7]
-//! els serve    --keys keys.json [--addr 127.0.0.1:7461] [--xla artifacts] [--max-jobs 4]
+//! els serve    --keys keys.json [--addr 127.0.0.1:7461] [--xla artifacts] [--backend rns|bigint] [--max-jobs 4]
 //! els client   --keys keys.json --addr HOST:PORT [--n 8 --p 2 --iters 2] [--accel vwt]
 //! els figures  (--all | --id fig4) [--out results]
-//! els selftest [--xla artifacts]
+//! els selftest [--xla artifacts] [--backend rns|bigint]
 //! ```
 
 use std::path::Path;
@@ -120,10 +120,10 @@ fn cmd_params(args: &Args) -> Result<()> {
     println!("  tensor-basis primes  = {}", params.ext_count);
     println!("  plaintext modulus t  = 2^{}", params.t.bit_len() - 1);
     println!(
-        "  relin digits         = {} (w = 2^{})",
-        params.relin_ndigits(),
-        params.relin_w_bits
+        "  relin digits         = {} (per-limb RNS gadget)",
+        params.relin_ndigits()
     );
+    println!("  mul backend          = {:?}", params.mul_backend);
     println!("  LP11 security        ≈ {:.0} bits", params.security_bits());
     println!("  ct-mult depth needed = {}", req.ct_depth());
     let mmd = match req.algo {
@@ -170,6 +170,16 @@ fn make_engine(
     ctx: Arc<FvContext>,
     rk: &els::fhe::RelinKey,
 ) -> Result<Arc<dyn HeEngine>> {
+    // Arithmetic backend: default full-RNS; `--backend bigint` forces
+    // the exact-bigint oracle (ELS_MUL_BACKEND overrides the default).
+    let ctx = match args.get("backend") {
+        Some("bigint") | Some("oracle") => {
+            ctx.with_backend(els::fhe::MulBackend::ExactBigint)
+        }
+        Some("rns") => ctx.with_backend(els::fhe::MulBackend::FullRns),
+        Some(other) => bail!("unknown backend '{other}' (rns|bigint)"),
+        None => ctx,
+    };
     match args.get("xla") {
         Some(dir) => {
             let engine = XlaEngine::new(ctx, rk, Path::new(dir))?;

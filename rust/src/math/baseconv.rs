@@ -1,0 +1,368 @@
+//! Fast RNS base conversion: moving values between residue bases
+//! without per-coefficient big-integer CRT lifts.
+//!
+//! Two converters cover the full-RNS BFV multiply
+//! ([`crate::fhe::rns_mul`]):
+//!
+//! - [`BaseConverter`] — the *forward* extension `Q → B ∪ {m_sk}`. The
+//!   explicit CRT sum `Σ_i y_i·M_i` (with `y_i = [x_i·ŷ_i]_{p_i}` and
+//!   the `M_i mod p_j` residue tables precomputed) overshoots the true
+//!   value by `α·M` for some `0 ≤ α < L`; the overshoot is recovered by
+//!   64-bit fixed-point accumulation of `Σ y_i/p_i` in `u128`, rounded
+//!   to nearest, which simultaneously selects the **centered**
+//!   representative in `(−M/2, M/2]`. The correction is exact whenever
+//!   the value is at least `L·M/2^64` away from the ±M/2 boundary —
+//!   a `≥ 2^56` relative margin — and a boundary miss only shifts the
+//!   operand by one multiple of `M`, which the FV noise analysis
+//!   absorbs (see `fhe/rns_mul.rs`).
+//! - [`ShenoyConverter`] — the *exact* Shenoy–Kumaresan conversion
+//!   back `B → Q`. The pipeline carries a redundant-modulus residue
+//!   plane `m_sk` alongside `B`, so the overshoot is recovered with
+//!   pure integer arithmetic: `α′ = [(Σ y_j·B_j − x)·B^{-1}]_{m_sk}`
+//!   equals `α + [x < 0] ≤ L_B ≪ m_sk` exactly (the redundant modulus
+//!   plays the γ-correction role). No fixed point, no boundary cases.
+//!
+//! Both are mirrored bit-for-bit by `python/compile/rns.py`
+//! (`base_convert_signed`, `shenoy_convert`).
+
+use super::modarith::{invmod_prime, mulmod, submod};
+
+/// Accumulator headroom: `Σ y_i·m_i < L·2^60` must fit `u128`, and the
+/// fixed-point sum `Σ ⌊y_i·2^64/p_i⌋ < L·2^64` must too.
+const MAX_SOURCE_LIMBS: usize = 256;
+
+/// Product of a prime set modulo `m`, skipping index `skip`
+/// (`usize::MAX` to include all). Avoids bigint at table-build time.
+fn prod_mod(primes: &[u64], skip: usize, m: u64) -> u64 {
+    let mut acc = 1u64 % m;
+    for (i, &p) in primes.iter().enumerate() {
+        if i != skip {
+            acc = mulmod(acc, p % m, m);
+        }
+    }
+    acc
+}
+
+/// Fast base extension with the fixed-point overshoot correction.
+///
+/// Converts the centered representative of a value given by its
+/// residues in a source basis (product `M`) into residues modulo each
+/// target prime. Source and target primes must be disjoint.
+#[derive(Clone, Debug)]
+pub struct BaseConverter {
+    src: Vec<u64>,
+    tgt: Vec<u64>,
+    /// `ŷ_i = (M/p_i)^{-1} mod p_i`.
+    src_hat_inv: Vec<u64>,
+    /// `m_table[i][t]` — residues of `M_i = M/p_i` mod each target
+    /// prime (the table `crt.rs` reserves a doc slot for).
+    m_table: Vec<Vec<u64>>,
+    /// `M mod t` per target prime.
+    src_mod_tgt: Vec<u64>,
+}
+
+impl BaseConverter {
+    pub fn new(src: &[u64], tgt: &[u64]) -> Self {
+        assert!(!src.is_empty() && !tgt.is_empty());
+        assert!(src.len() <= MAX_SOURCE_LIMBS, "source basis too large");
+        for p in src.iter().chain(tgt) {
+            assert!(*p < 1 << 30, "RNS primes must stay below 2^30");
+        }
+        for t in tgt {
+            assert!(!src.contains(t), "bases must be disjoint");
+        }
+        let src_hat_inv = (0..src.len())
+            .map(|i| invmod_prime(prod_mod(src, i, src[i]), src[i]))
+            .collect();
+        let m_table = (0..src.len())
+            .map(|i| tgt.iter().map(|&t| prod_mod(src, i, t)).collect())
+            .collect();
+        let src_mod_tgt = tgt.iter().map(|&t| prod_mod(src, usize::MAX, t)).collect();
+        BaseConverter {
+            src: src.to_vec(),
+            tgt: tgt.to_vec(),
+            src_hat_inv,
+            m_table,
+            src_mod_tgt,
+        }
+    }
+
+    /// Convert one coefficient. `y` is source-length scratch (avoids
+    /// re-allocating inside the polynomial loop).
+    #[inline]
+    fn convert_one(&self, residues: impl Fn(usize) -> u64, y: &mut [u64], out: &mut [u64]) {
+        // y_i = [x_i·ŷ_i]_{p_i}, accumulating Σ y_i/p_i in 64-bit
+        // fixed point (each term exact to 2^-64, downward).
+        let mut s_fix: u128 = 0;
+        for (i, &p) in self.src.iter().enumerate() {
+            let yi = mulmod(residues(i), self.src_hat_inv[i], p);
+            y[i] = yi;
+            s_fix += ((yi as u128) << 64) / p as u128;
+        }
+        // Round to nearest: recovers the overshoot α and selects the
+        // centered representative in one step.
+        let alpha = ((s_fix + (1u128 << 63)) >> 64) as u64;
+        for (t, &p) in self.tgt.iter().enumerate() {
+            // Σ y_i·[M_i]_p in one u128 accumulator (products < 2^60,
+            // ≤ 256 terms), single reduction at the end.
+            let mut acc: u128 = 0;
+            for (i, &yi) in y.iter().enumerate() {
+                acc += yi as u128 * self.m_table[i][t] as u128;
+            }
+            let v = (acc % p as u128) as u64;
+            out[t] = submod(v, mulmod(alpha, self.src_mod_tgt[t], p), p);
+        }
+    }
+
+    /// Convert every coefficient of a plane-major polynomial
+    /// (`src_planes[l][c]` = coefficient `c` mod source prime `l`) into
+    /// the target planes.
+    pub fn convert_signed(&self, src_planes: &[Vec<u64>], out_planes: &mut [Vec<u64>]) {
+        assert_eq!(src_planes.len(), self.src.len());
+        assert_eq!(out_planes.len(), self.tgt.len());
+        let d = src_planes[0].len();
+        let mut y = vec![0u64; self.src.len()];
+        let mut out = vec![0u64; self.tgt.len()];
+        for c in 0..d {
+            self.convert_one(|i| src_planes[i][c], &mut y, &mut out);
+            for (t, &v) in out.iter().enumerate() {
+                out_planes[t][c] = v;
+            }
+        }
+    }
+
+    /// Single-value conversion (tests and the Python-mirror contract).
+    pub fn convert_value(&self, residues: &[u64]) -> Vec<u64> {
+        assert_eq!(residues.len(), self.src.len());
+        let mut y = vec![0u64; self.src.len()];
+        let mut out = vec![0u64; self.tgt.len()];
+        self.convert_one(|i| residues[i], &mut y, &mut out);
+        out
+    }
+}
+
+/// Exact Shenoy–Kumaresan base conversion `B → tgt` using a redundant
+/// modulus `m_sk` carried alongside the `B` planes.
+///
+/// The caller must guarantee `|x| < B/2` (the extension basis is sized
+/// so the `⌊t·v/q⌉` output has ≥ 3 bits of slack) and supply `x mod
+/// m_sk` exactly — both hold by construction in the multiply pipeline.
+#[derive(Clone, Debug)]
+pub struct ShenoyConverter {
+    b: Vec<u64>,
+    msk: u64,
+    tgt: Vec<u64>,
+    /// `(B/b_j)^{-1} mod b_j`.
+    b_hat_inv: Vec<u64>,
+    /// `(B/b_j) mod m_sk`.
+    b_hat_mod_msk: Vec<u64>,
+    /// `b_hat_mod_tgt[j][t] = (B/b_j) mod tgt_t`.
+    b_hat_mod_tgt: Vec<Vec<u64>>,
+    /// `B^{-1} mod m_sk`.
+    b_inv_mod_msk: u64,
+    /// `B mod tgt_t`.
+    b_mod_tgt: Vec<u64>,
+}
+
+impl ShenoyConverter {
+    pub fn new(b: &[u64], msk: u64, tgt: &[u64]) -> Self {
+        assert!(!b.is_empty() && !tgt.is_empty());
+        assert!(b.len() <= MAX_SOURCE_LIMBS, "source basis too large");
+        assert!(!b.contains(&msk) && !tgt.contains(&msk), "m_sk must be fresh");
+        for t in tgt {
+            assert!(!b.contains(t), "bases must be disjoint");
+        }
+        let b_hat_inv = (0..b.len())
+            .map(|j| invmod_prime(prod_mod(b, j, b[j]), b[j]))
+            .collect();
+        let b_hat_mod_msk: Vec<u64> = (0..b.len()).map(|j| prod_mod(b, j, msk)).collect();
+        let b_hat_mod_tgt = (0..b.len())
+            .map(|j| tgt.iter().map(|&t| prod_mod(b, j, t)).collect())
+            .collect();
+        let b_inv_mod_msk = invmod_prime(prod_mod(b, usize::MAX, msk), msk);
+        let b_mod_tgt = tgt.iter().map(|&t| prod_mod(b, usize::MAX, t)).collect();
+        ShenoyConverter {
+            b: b.to_vec(),
+            msk,
+            tgt: tgt.to_vec(),
+            b_hat_inv,
+            b_hat_mod_msk,
+            b_hat_mod_tgt,
+            b_inv_mod_msk,
+            b_mod_tgt,
+        }
+    }
+
+    #[inline]
+    fn convert_one(
+        &self,
+        residues: impl Fn(usize) -> u64,
+        res_msk: u64,
+        y: &mut [u64],
+        out: &mut [u64],
+    ) {
+        // y_j and the fast-conversion image of x at the redundant
+        // modulus: Σ y_j·B_j ≡ x + (α + [x<0])·B (mod m_sk).
+        let mut s_msk: u128 = 0;
+        for (j, &p) in self.b.iter().enumerate() {
+            let yj = mulmod(residues(j), self.b_hat_inv[j], p);
+            y[j] = yj;
+            s_msk += yj as u128 * self.b_hat_mod_msk[j] as u128;
+        }
+        let s_msk = (s_msk % self.msk as u128) as u64;
+        // γ-correction: the exact overshoot count, ≤ L_B ≪ m_sk.
+        let alpha = mulmod(submod(s_msk, res_msk, self.msk), self.b_inv_mod_msk, self.msk);
+        debug_assert!(alpha as usize <= self.b.len(), "S-K overshoot out of range");
+        for (t, &p) in self.tgt.iter().enumerate() {
+            let mut acc: u128 = 0;
+            for (j, &yj) in y.iter().enumerate() {
+                acc += yj as u128 * self.b_hat_mod_tgt[j][t] as u128;
+            }
+            let v = (acc % p as u128) as u64;
+            out[t] = submod(v, mulmod(alpha, self.b_mod_tgt[t], p), p);
+        }
+    }
+
+    /// Convert plane-major `B` planes plus the `m_sk` plane into the
+    /// target planes (exact for every coefficient).
+    pub fn convert(
+        &self,
+        b_planes: &[Vec<u64>],
+        msk_plane: &[u64],
+        out_planes: &mut [Vec<u64>],
+    ) {
+        assert_eq!(b_planes.len(), self.b.len());
+        assert_eq!(out_planes.len(), self.tgt.len());
+        let d = msk_plane.len();
+        let mut y = vec![0u64; self.b.len()];
+        let mut out = vec![0u64; self.tgt.len()];
+        for c in 0..d {
+            self.convert_one(|j| b_planes[j][c], msk_plane[c], &mut y, &mut out);
+            for (t, &v) in out.iter().enumerate() {
+                out_planes[t][c] = v;
+            }
+        }
+    }
+
+    /// Single-value conversion (tests and the Python-mirror contract).
+    pub fn convert_value(&self, residues: &[u64], res_msk: u64) -> Vec<u64> {
+        assert_eq!(residues.len(), self.b.len());
+        let mut y = vec![0u64; self.b.len()];
+        let mut out = vec![0u64; self.tgt.len()];
+        self.convert_one(|j| residues[j], res_msk, &mut y, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::bigint::BigInt;
+    use crate::math::crt::RnsBasis;
+    use crate::math::primes::rns_basis_primes;
+    use crate::util::prop::PropRunner;
+
+    fn split(d: usize, l_src: usize, l_tgt: usize) -> (Vec<u64>, Vec<u64>, u64) {
+        let all = rns_basis_primes(d, l_src + l_tgt + 1);
+        (
+            all[..l_src].to_vec(),
+            all[l_src..l_src + l_tgt].to_vec(),
+            all[l_src + l_tgt],
+        )
+    }
+
+    #[test]
+    fn forward_conversion_matches_signed_lift() {
+        let (src, tgt, _) = split(256, 4, 5);
+        let conv = BaseConverter::new(&src, &tgt);
+        let basis = RnsBasis::new(src.clone());
+        let tgt_basis = RnsBasis::new(tgt.clone());
+        let mut run = PropRunner::new("baseconv_forward", 400);
+        run.run(|rng| {
+            // |x| < M/4 keeps the value inside the fixed-point guard
+            // band (the pipeline's operands always have that headroom).
+            let residues: Vec<u64> = src.iter().map(|&p| rng.uniform_below(p)).collect();
+            let v = basis.lift(&residues).shr_bits(2);
+            for neg in [false, true] {
+                let x = BigInt { neg: neg && !v.is_zero(), mag: v.clone() };
+                let got = conv.convert_value(&basis.reduce_signed(&x));
+                assert_eq!(got, tgt_basis.reduce_signed(&x), "neg = {neg}");
+            }
+        });
+    }
+
+    #[test]
+    fn forward_conversion_small_values_exact() {
+        let (src, tgt, _) = split(256, 3, 4);
+        let conv = BaseConverter::new(&src, &tgt);
+        let basis = RnsBasis::new(src.clone());
+        for v in [-1_000_000i64, -7, -1, 0, 1, 5, 123_456_789] {
+            let got = conv.convert_value(&basis.reduce_i64(v));
+            let expect: Vec<u64> =
+                tgt.iter().map(|&p| v.rem_euclid(p as i64) as u64).collect();
+            assert_eq!(got, expect, "v = {v}");
+        }
+    }
+
+    #[test]
+    fn shenoy_conversion_is_exact_everywhere() {
+        let (b, tgt, msk) = split(256, 5, 3);
+        let conv = ShenoyConverter::new(&b, msk, &tgt);
+        let b_basis = RnsBasis::new(b.clone());
+        let tgt_basis = RnsBasis::new(tgt.clone());
+        let mut run = PropRunner::new("baseconv_shenoy", 400);
+        run.run(|rng| {
+            // Any value in (−B/2, B/2], including right at the
+            // boundary — S-K has no boundary cases.
+            let residues: Vec<u64> = b.iter().map(|&p| rng.uniform_below(p)).collect();
+            let x = b_basis.lift_signed(&residues);
+            let res_msk = x.mod_u64(msk);
+            let got = conv.convert_value(&residues, res_msk);
+            assert_eq!(got, tgt_basis.reduce_signed(&x));
+        });
+    }
+
+    #[test]
+    fn shenoy_handles_negative_extremes() {
+        let (b, tgt, msk) = split(256, 4, 2);
+        let conv = ShenoyConverter::new(&b, msk, &tgt);
+        let b_basis = RnsBasis::new(b.clone());
+        // −(B/2 − 1): deep negative, maximal overshoot correction.
+        let half = b_basis.half_modulus.clone();
+        let x = BigInt { neg: true, mag: half.sub(&crate::math::bigint::BigUint::one()) };
+        let residues = b_basis.reduce_signed(&x);
+        let got = conv.convert_value(&residues, x.mod_u64(msk));
+        let expect: Vec<u64> = tgt.iter().map(|&p| x.mod_u64(p)).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn poly_conversion_matches_per_value() {
+        let (src, tgt, msk) = split(64, 3, 3);
+        let mut tgt_all = tgt.clone();
+        tgt_all.push(msk);
+        let conv = BaseConverter::new(&src, &tgt_all);
+        let d = 64;
+        let mut rng = crate::fhe::rng::ChaChaRng::from_seed(77);
+        let src_planes: Vec<Vec<u64>> = src
+            .iter()
+            .map(|&p| (0..d).map(|_| rng.uniform_below(p)).collect())
+            .collect();
+        let mut out = vec![vec![0u64; d]; tgt_all.len()];
+        conv.convert_signed(&src_planes, &mut out);
+        for c in 0..d {
+            let residues: Vec<u64> = (0..src.len()).map(|i| src_planes[i][c]).collect();
+            let expect = conv.convert_value(&residues);
+            for t in 0..tgt_all.len() {
+                assert_eq!(out[t][c], expect[t], "coeff {c} target {t}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "disjoint")]
+    fn rejects_overlapping_bases() {
+        let primes = rns_basis_primes(256, 3);
+        let _ = BaseConverter::new(&primes, &primes);
+    }
+}

@@ -22,7 +22,11 @@ pub struct RnsBasis {
     pub crt_m: Vec<BigUint>,
     /// `ŷ_i = (M/p_i)^{-1} mod p_i`.
     pub crt_inv: Vec<u64>,
-    /// Residues of `M_i` mod each `p_j` — used by fast base extension.
+    /// `⌊M/2⌋` — the symmetric-representative threshold for
+    /// [`lift_signed`](Self::lift_signed). (The `M_i mod p_j` residue
+    /// tables used by fast base extension live in
+    /// [`crate::math::baseconv::BaseConverter`], which is keyed per
+    /// source→target basis pair rather than per basis.)
     pub half_modulus: BigUint,
 }
 

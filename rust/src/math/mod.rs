@@ -18,9 +18,14 @@
 //!   scale-and-round, and Lemma-3 bound arithmetic.
 //! - [`crt`] — RNS bases: CRT lift/reduce between residue planes and
 //!   big integers.
+//! - [`baseconv`] — fast RNS base conversion (fixed-point-corrected
+//!   forward extension, exact Shenoy–Kumaresan back conversion with a
+//!   redundant modulus); the allocation-free substrate of the full-RNS
+//!   multiply pipeline.
 //! - [`poly`] — polynomials in `R_q = Z_q[x]/(x^d + 1)` stored as RNS
 //!   residue planes.
 
+pub mod baseconv;
 pub mod bigint;
 pub mod crt;
 pub mod modarith;

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::fhe::{Ciphertext, FvContext, Plaintext, RelinKey};
+use crate::fhe::{Ciphertext, FvContext, MulBackend, Plaintext, RelinKey};
 use crate::util::pool::parallel_map;
 
 /// Operation counters (fig5 instrumentation and batching diagnostics).
@@ -70,6 +70,9 @@ pub trait HeEngine: Send + Sync {
 }
 
 /// Pure-Rust engine: thread-parallel `mul_ct` over the pair batch.
+/// The arithmetic backend (full-RNS vs exact-bigint oracle) rides on
+/// the context's [`MulBackend`]; [`NativeEngine::with_backend`]
+/// overrides it at construction.
 pub struct NativeEngine {
     pub ctx: Arc<FvContext>,
     pub rk: Arc<RelinKey>,
@@ -79,6 +82,13 @@ pub struct NativeEngine {
 impl NativeEngine {
     pub fn new(ctx: Arc<FvContext>, rk: Arc<RelinKey>) -> Self {
         NativeEngine { ctx, rk, stats: OpStats::default() }
+    }
+
+    /// Build with an explicit multiply backend (parity tests, benches,
+    /// the CLI's `--backend` flag). Keys stay valid across backends —
+    /// they live entirely in the Q basis.
+    pub fn with_backend(ctx: Arc<FvContext>, rk: Arc<RelinKey>, backend: MulBackend) -> Self {
+        NativeEngine { ctx: ctx.with_backend(backend), rk, stats: OpStats::default() }
     }
 }
 

@@ -3,8 +3,10 @@
 //! Rust hot path.
 //!
 //! The engine implements [`HeEngine`](crate::runtime::backend::HeEngine)
-//! at the `mul_pairs` batching seam: a batch of ciphertext
-//! multiplications becomes
+//! at the `mul_pairs` batching seam (always via the exact-bigint
+//! tensor basis — the artifact set predates the full-RNS native
+//! pipeline; lowering the base-conversion path to XLA is an open
+//! ROADMAP item): a batch of ciphertext multiplications becomes
 //!   1. CRT lifts Q → Q∪E (Rust, thread-parallel),
 //!   2. one padded, fixed-shape `polymul` dispatch per batch segment
 //!      for the 4·B tensor-product products (XLA),

@@ -15,7 +15,7 @@ use els::els::scaling::ratio_f64;
 use els::els::stepsize::nu_optimal;
 use els::fhe::keys::keygen;
 use els::fhe::noise::noise_budget_bits;
-use els::fhe::params::{plan, Algo, PlanRequest, SecurityProfile};
+use els::fhe::params::{plan, Algo, MulBackend, PlanRequest, SecurityProfile};
 use els::fhe::rng::ChaChaRng;
 use els::fhe::FvContext;
 use els::runtime::backend::NativeEngine;
@@ -140,6 +140,93 @@ fn mood_application_end_to_end() {
     // And exactness versus the simulation, as always.
     let expect = exact::gd_exact(&q, nu, 2).decode_last();
     assert!(linf(&dec, &expect) < 1e-9);
+}
+
+#[test]
+fn gd_and_nag_fits_decrypt_identically_across_backends() {
+    // The cross-backend parity oracle at full e2e scope: the same
+    // encrypted dataset and keys, fitted once on the full-RNS pipeline
+    // and once on the exact-bigint oracle, must decrypt to *identical*
+    // plaintext coefficient polynomials (both also equal the exact
+    // integer simulation, as the other tests in this file assert).
+    for (seed, algo, accel) in [
+        (821u64, Algo::Gd, Accel::None),
+        (822, Algo::Nag, Accel::Nag),
+    ] {
+        let mut w = world(seed, 6, 2, 2, algo, 0);
+        let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
+        let cfg = FitConfig::gd(2, w.nu).with_accel(accel);
+        let rk = Arc::new(w.keys.rk.clone());
+        let eng_rns =
+            NativeEngine::with_backend(w.ctx.clone(), rk.clone(), MulBackend::FullRns);
+        let eng_big =
+            NativeEngine::with_backend(w.ctx.clone(), rk.clone(), MulBackend::ExactBigint);
+        let fit_rns = fit(&eng_rns, &data, &cfg);
+        let fit_big = fit(&eng_big, &data, &cfg);
+        assert_eq!(fit_rns.betas.len(), fit_big.betas.len());
+        for (j, (br, bb)) in fit_rns.betas.iter().zip(&fit_big.betas).enumerate() {
+            let pr = w.ctx.decrypt(br, &w.keys.sk);
+            let pb = w.ctx.decrypt(bb, &w.keys.sk);
+            assert_eq!(pr, pb, "{algo:?}: β_{j} decrypts differ across backends");
+        }
+        let dec_rns = decrypt_coefficients(&w.ctx, &w.keys.sk, &fit_rns);
+        let dec_big = decrypt_coefficients(&w.ctx, &w.keys.sk, &fit_big);
+        assert_eq!(dec_rns, dec_big, "{algo:?}: decoded coefficients differ");
+    }
+}
+
+#[test]
+fn random_products_decrypt_equally_across_planner_depths() {
+    // Property: random ct×ct product chains, driven to each planner
+    // depth, decrypt identically under both backends. Plans for GD
+    // K=1 and K=2 give noise budgets for depths 2 and 4; we chain
+    // fresh multiplications to exactly those depths.
+    for (seed, iters) in [(831u64, 1usize), (832, 2)] {
+        let mut rng = ChaChaRng::from_seed(seed);
+        let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let nu = nu_optimal(&xq);
+        let params = plan(&PlanRequest::gd(6, 2, iters, 2, nu)).unwrap();
+        let depth = 2 * iters; // the planner's ct-mult depth for GD
+        let ctx_rns = FvContext::new(params).with_backend(MulBackend::FullRns);
+        let ctx_big = ctx_rns.clone().with_backend(MulBackend::ExactBigint);
+        let keys = keygen(&ctx_rns, &mut rng);
+        for case in 0..3 {
+            let enc = |v: i64, rng: &mut ChaChaRng| {
+                ctx_rns.encrypt(
+                    &els::fhe::encoding::encode_int(v, ctx_rns.d()),
+                    &keys.pk,
+                    rng,
+                )
+            };
+            // Small factors keep the chained message (and its ℓ1, which
+            // drives noise growth) inside the GD plan's per-level model.
+            let mut vals: Vec<i64> = Vec::new();
+            let mut cts = Vec::new();
+            for _ in 0..=depth {
+                let v = (rng.uniform_below(7) as i64) - 3;
+                vals.push(v);
+                cts.push(enc(v, &mut rng));
+            }
+            let mut acc_rns = cts[0].clone();
+            let mut acc_big = cts[0].clone();
+            let mut expect = vals[0] as i128;
+            for k in 1..=depth {
+                acc_rns = ctx_rns.mul_ct(&acc_rns, &cts[k], &keys.rk);
+                acc_big = ctx_big.mul_ct(&acc_big, &cts[k], &keys.rk);
+                expect *= vals[k] as i128;
+                let dr = ctx_rns.decrypt(&acc_rns, &keys.sk);
+                let db = ctx_big.decrypt(&acc_big, &keys.sk);
+                assert_eq!(dr, db, "case {case}: backends diverge at depth {k}");
+                assert_eq!(
+                    dr.eval_at_2().to_i128(),
+                    Some(expect),
+                    "case {case}: wrong product at depth {k}"
+                );
+            }
+        }
+    }
 }
 
 #[test]
