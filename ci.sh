@@ -37,7 +37,19 @@ note "tier-1 (oracle backend): ELS_MUL_BACKEND=bigint cargo test -q"
 ELS_MUL_BACKEND=bigint cargo test -q
 
 note "cargo bench (toy profile; must not panic)"
+# fhe_ops overwrites BENCH_fhe_ops.json — stash the committed baseline
+# for the regression gate below.
+bench_baseline="$(mktemp)"
+trap 'rm -f "$bench_baseline"' EXIT
+cp BENCH_fhe_ops.json "$bench_baseline"
 cargo bench
+
+if command -v python3 >/dev/null 2>&1; then
+    note "bench-regression gate (mul_pairs vs committed baseline)"
+    python3 python/tools/bench_check.py "$bench_baseline" BENCH_fhe_ops.json
+else
+    note "SKIPPED: python3 not installed — bench-regression gate not run"
+fi
 
 if command -v python3 >/dev/null 2>&1 && python3 -c 'import pytest' >/dev/null 2>&1; then
     note "pytest python/tests"

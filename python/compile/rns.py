@@ -115,6 +115,61 @@ def ntt_tables(p: int, d: int):
     return psi_rev, psi_inv_rev, d_inv
 
 
+# ---- reduction constants (mirror of rust/src/math/modarith.rs) ---------
+
+_U64_MASK = (1 << 64) - 1
+
+
+def shoup_precompute(s: int, p: int) -> int:
+    """`⌊s·2^64/p⌋` — the Shoup companion of an invariant operand
+    (mirror of `modarith::shoup_precompute`; requires s < p < 2^63)."""
+    assert 0 <= s < p < 1 << 63
+    return (s << 64) // p
+
+
+def mulmod_shoup_lazy(x: int, s: int, s_shoup: int, p: int) -> int:
+    """The lazy Shoup product in `[0, 2p)` — exact wrapping-u64 mirror
+    of `modarith::mulmod_shoup_lazy` (valid for any x < 2^64)."""
+    assert 0 <= x <= _U64_MASK
+    q = (x * s_shoup) >> 64
+    return (x * s - q * p) & _U64_MASK
+
+
+def mulmod_shoup(x: int, s: int, s_shoup: int, p: int) -> int:
+    """`x·s mod p` via the precomputed companion (result in [0, p))."""
+    r = mulmod_shoup_lazy(x, s, s_shoup, p)
+    return r - p if r >= p else r
+
+
+def barrett_constant(m: int) -> tuple[int, int]:
+    """`(r_hi, r_lo)` words of `r = ⌊2^128/m⌋` — mirror of
+    `modarith::BarrettConstant::new` (requires 2 ≤ m < 2^62)."""
+    assert 2 <= m < 1 << 62
+    r = (1 << 128) // m
+    return r >> 64, r & _U64_MASK
+
+
+def barrett_reduce(x: int, m: int, r_hi: int, r_lo: int) -> int:
+    """`x mod m` for any x < 2^128 via the 128-bit reciprocal — the
+    quotient estimate `⌊x·r/2^128⌋` is exact in the Rust mul-high
+    formula, so `(x*r) >> 128` mirrors it bit for bit."""
+    assert 0 <= x < 1 << 128
+    q = (x * ((r_hi << 64) | r_lo)) >> 128
+    rem = x - q * m  # q ≤ x/m, so this never underflows
+    return rem - m if rem >= m else rem
+
+
+def barrett_div_rem(x: int, m: int, r_hi: int, r_lo: int) -> tuple[int, int]:
+    """Exact `(⌊x/m⌋, x mod m)` — mirror of `BarrettConstant::div_rem`
+    (the division-free fixed-point `⌊y_i·2^64/p_i⌋` path)."""
+    q = (x * ((r_hi << 64) | r_lo)) >> 128
+    rem = x - q * m
+    if rem >= m:
+        rem -= m
+        q += 1
+    return q, rem
+
+
 # ---- base conversion (mirror of rust/src/math/baseconv.rs) -------------
 
 

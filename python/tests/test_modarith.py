@@ -1,0 +1,80 @@
+"""Dependency-free mirror checks for the Barrett/Shoup reduction
+primitives (`rust/src/math/modarith.rs` ↔ `compile/rns.py`).
+
+The Rust side replaces every hot-loop `u128 %` with precomputed-constant
+multiplication; these tests pin the precompute math (Shoup companions,
+128-bit Barrett reciprocals) and the reduction identities against plain
+integer arithmetic, across random 31-bit primes and the edge operands
+(0, 1, m−1) the Rust property suite also sweeps.
+"""
+
+import random
+
+from compile import rns
+
+
+def _random_31bit_prime(rnd: random.Random) -> int:
+    m = ((1 << 30) + rnd.randrange(1 << 30)) | 1
+    while not rns.is_prime(m):
+        m += 2
+    return m
+
+
+def test_shoup_matches_naive_mulmod():
+    rnd = random.Random(301)
+    for _ in range(200):
+        p = _random_31bit_prime(rnd)
+        for s in (0, 1, p - 1, rnd.randrange(p)):
+            sh = rns.shoup_precompute(s, p)
+            # Lazy butterflies feed operands up to 4p.
+            for x in (0, 1, p - 1, rnd.randrange(4 * p)):
+                assert rns.mulmod_shoup(x, s, sh, p) == x * s % p
+                lazy = rns.mulmod_shoup_lazy(x, s, sh, p)
+                assert lazy < 2 * p, "lazy Shoup must stay under 2p"
+                assert lazy % p == x * s % p
+
+
+def test_barrett_matches_naive_mulmod():
+    rnd = random.Random(302)
+    for _ in range(200):
+        m = _random_31bit_prime(rnd)
+        r_hi, r_lo = rns.barrett_constant(m)
+        for a in (0, 1, m - 1, rnd.randrange(m)):
+            for b in (0, 1, m - 1, rnd.randrange(m)):
+                assert rns.barrett_reduce(a * b, m, r_hi, r_lo) == a * b % m
+
+
+def test_barrett_reduce_and_div_rem_full_u128_range():
+    rnd = random.Random(303)
+    for _ in range(200):
+        m = _random_31bit_prime(rnd)
+        r_hi, r_lo = rns.barrett_constant(m)
+        xs = [0, 1, m - 1, m, (1 << 128) - 1, rnd.randrange(1 << 128)]
+        for x in xs:
+            assert rns.barrett_reduce(x, m, r_hi, r_lo) == x % m
+            q, r = rns.barrett_div_rem(x, m, r_hi, r_lo)
+            assert (q, r) == (x // m, x % m)
+        # The fixed-point use: ⌊y·2^64/p⌋ for canonical y.
+        y = rnd.randrange(m)
+        assert rns.barrett_div_rem(y << 64, m, r_hi, r_lo)[0] == (y << 64) // m
+
+
+def test_barrett_constant_word_split_is_exact():
+    # The hi/lo word split must reassemble to ⌊2^128/m⌋ — the form the
+    # Rust struct stores.
+    for m in (2, 3, (1 << 30) - 35, (1 << 62) - 57):
+        r_hi, r_lo = rns.barrett_constant(m)
+        assert (r_hi << 64) | r_lo == (1 << 128) // m
+        assert 0 <= r_hi < 1 << 64 and 0 <= r_lo < 1 << 64
+
+
+def test_lazy_butterfly_bounds_largest_basis():
+    # The Harvey invariants for the largest RNS primes: 4p fits u64,
+    # and the u128 relinearisation accumulator has headroom for far
+    # more limbs than any supported q_count (mirror of the Rust
+    # `lazy_accumulator_headroom_at_max_terms` test).
+    for d in (256, 8192):
+        p = rns.rns_basis_primes(d, 1)[0]
+        assert 4 * p <= (1 << 64) - 1
+    max_terms = 1 << 32  # poly::MAX_NTT_ACC_TERMS
+    assert max_terms * (rns.RNS_PRIME_BOUND - 1) ** 2 < 1 << 128

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the `mul_pairs` hot path (dep-free).
+
+Compares a fresh `cargo bench --bench fhe_ops` report against the
+committed baseline `BENCH_fhe_ops.json` and fails (exit 1) if any
+mul_pairs batch regressed beyond the threshold. The **hard gate** is
+the machine-relative full-RNS-vs-bigint speedup ratio of each batch
+(both backends run in the same process on the same machine, so the
+ratio is stable across runner hardware); absolute full_rns mean_ns
+drift is reported as a WARNING only, since cross-machine wall-clock
+comparisons flake on runner variance. While the committed baseline is
+still the pending-first-toolchain-run stub, the gate SKIPs loudly
+(exit 0) — there is nothing to regress against until the first
+measured run is committed.
+
+Usage: bench_check.py BASELINE_JSON FRESH_JSON [--threshold=0.15]
+       (--threshold 0.15 is also accepted)
+
+Exit codes: 0 = ok or skip, 1 = regression, 2 = bad invocation/input.
+"""
+
+import json
+import sys
+
+DEFAULT_THRESHOLD = 0.15
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_check: ERROR: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def parse_args(argv):
+    """Returns (positional_args, threshold) or exits 2."""
+    positional, threshold = [], DEFAULT_THRESHOLD
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a.startswith("--threshold"):
+            if "=" in a:
+                raw = a.split("=", 1)[1]
+            elif i + 1 < len(argv):
+                i += 1
+                raw = argv[i]
+            else:
+                print("bench_check: ERROR: --threshold needs a value", file=sys.stderr)
+                sys.exit(2)
+            try:
+                threshold = float(raw)
+            except ValueError:
+                print(f"bench_check: ERROR: bad threshold {raw!r}", file=sys.stderr)
+                sys.exit(2)
+        elif a.startswith("--"):
+            print(f"bench_check: ERROR: unknown option {a!r}", file=sys.stderr)
+            sys.exit(2)
+        else:
+            positional.append(a)
+        i += 1
+    if len(positional) != 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    return positional, threshold
+
+
+def main(argv):
+    (baseline_path, fresh_path), threshold = parse_args(argv)
+    baseline, fresh = load(baseline_path), load(fresh_path)
+
+    if baseline.get("status") != "measured" or not baseline.get("batches"):
+        print(
+            "bench_check: SKIP — baseline is still the pending stub "
+            f"(status={baseline.get('status')!r}); commit the first measured "
+            "BENCH_fhe_ops.json to arm the regression gate."
+        )
+        return 0
+    if fresh.get("status") != "measured" or not fresh.get("batches"):
+        print(
+            "bench_check: ERROR: fresh report is not a measured run "
+            f"(status={fresh.get('status')!r}) — did cargo bench --bench "
+            "fhe_ops run?",
+            file=sys.stderr,
+        )
+        return 2
+
+    base_by_pairs = {b["pairs"]: b for b in baseline["batches"]}
+    fresh_pairs = {b["pairs"] for b in fresh["batches"]}
+    failures, lines = [], []
+    # A baseline batch with no fresh counterpart means the gated
+    # surface itself disappeared — that must fail, not silently pass.
+    for n in sorted(base_by_pairs):
+        if n not in fresh_pairs:
+            lines.append(f"  {int(n):>3}-pair: in baseline but MISSING from fresh run")
+            failures.append(n)
+    for batch in fresh["batches"]:
+        n = batch["pairs"]
+        base = base_by_pairs.get(n)
+        if base is None:
+            lines.append(f"  {int(n):>3}-pair: no baseline batch — skipped")
+            continue
+        old_ratio = base["exact_bigint"]["mean_ns"] / max(base["full_rns"]["mean_ns"], 1)
+        new_ratio = batch["exact_bigint"]["mean_ns"] / max(batch["full_rns"]["mean_ns"], 1)
+        verdict = "OK"
+        # Hard gate: the full-RNS advantage over the in-run bigint
+        # oracle must not shrink beyond the threshold.
+        if new_ratio < old_ratio * (1.0 - threshold):
+            verdict = "REGRESSION"
+            failures.append(n)
+        lines.append(
+            f"  {int(n):>3}-pair rns/bigint speedup: {old_ratio:.2f}x -> "
+            f"{new_ratio:.2f}x ({new_ratio / old_ratio - 1.0:+.1%})  {verdict}"
+        )
+        # Advisory only: absolute wall clock is machine-dependent.
+        old_ns = base["full_rns"]["mean_ns"]
+        new_ns = batch["full_rns"]["mean_ns"]
+        if old_ns > 0 and new_ns / old_ns > 1.0 + threshold:
+            lines.append(
+                f"      WARNING: full_rns mean {old_ns:.0f} ns -> {new_ns:.0f} ns "
+                f"({new_ns / old_ns - 1.0:+.1%}) — not gated (cross-machine noise)"
+            )
+    print(f"bench_check: mul_pairs vs baseline (threshold {threshold:.0%}):")
+    print("\n".join(lines))
+    if failures:
+        print(
+            f"bench_check: FAIL — {len(failures)} batch(es) went missing or "
+            f"lost more than {threshold:.0%} of their full-RNS speedup: "
+            f"{sorted(int(n) for n in failures)}",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench_check: gate green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

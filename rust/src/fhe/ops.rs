@@ -6,9 +6,10 @@
 //! ([`FvContext::mul_no_relin_rns`], see `fhe/rns_mul.rs`) and the
 //! exact-bigint oracle ([`FvContext::mul_no_relin_bigint`]).
 //! Relinearisation uses the per-limb RNS gadget on both backends, so
-//! [`FvContext::relin_digits`] never lifts.
+//! [`FvContext::relin_digits`] never lifts; the key-limb inner
+//! products accumulate lazily in `u128` and pay one Barrett reduction
+//! per coefficient for the whole digit sum.
 
-use crate::math::modarith::mulmod;
 use crate::math::poly::{Rep, RnsPoly};
 
 use super::ciphertext::Ciphertext;
@@ -181,15 +182,15 @@ impl FvContext {
     pub fn relin_digits(&self, poly: &RnsPoly) -> Vec<RnsPoly> {
         debug_assert_eq!(poly.rep, Rep::Coeff);
         let ring = &self.ring_q;
-        let primes = &ring.basis.primes;
         (0..ring.nlimbs())
             .map(|i| {
-                let (qi, inv) = (primes[i], ring.basis.crt_inv[i]);
+                let inv = &ring.basis.crt_inv_shoup[i];
                 let mut di = ring.zero();
                 for c in 0..ring.d {
-                    let digit = mulmod(poly.planes[i][c], inv, qi);
-                    for (l, &p) in primes.iter().enumerate() {
-                        di.planes[l][c] = digit % p;
+                    let digit = inv.mul(poly.planes[i][c]);
+                    for (l, br) in ring.basis.barrett.iter().enumerate() {
+                        di.planes[l][c] =
+                            if digit < br.modulus() { digit } else { br.reduce(digit as u128) };
                     }
                 }
                 di
@@ -198,18 +199,21 @@ impl FvContext {
     }
 
     /// Fold the degree-2 component back onto (c₀, c₁) with the
-    /// relinearisation key (per-limb RNS gadget decomposition).
+    /// relinearisation key (per-limb RNS gadget decomposition). The
+    /// digit×key-limb products accumulate unreduced in `u128`; the
+    /// whole sum pays one Barrett reduction per coefficient.
     pub fn relinearize(&self, ct: &Ciphertext, rk: &RelinKey) -> Ciphertext {
         assert_eq!(ct.len(), 3, "nothing to relinearise");
         let ring = &self.ring_q;
-        let mut acc0 = ring.zero();
-        acc0.rep = Rep::Ntt;
-        let mut acc1 = acc0.clone();
+        let mut lazy0 = ring.ntt_accumulator();
+        let mut lazy1 = ring.ntt_accumulator();
         for (j, mut dj) in self.relin_digits(&ct.polys[2]).into_iter().enumerate() {
             ring.ntt_forward(&mut dj);
-            ring.mul_ntt_acc(&mut acc0, &dj, &rk.b_ntt[j]);
-            ring.mul_ntt_acc(&mut acc1, &dj, &rk.a_ntt[j]);
+            ring.acc_mul_ntt(&mut lazy0, &dj, &rk.b_ntt[j]);
+            ring.acc_mul_ntt(&mut lazy1, &dj, &rk.a_ntt[j]);
         }
+        let mut acc0 = ring.acc_reduce(&lazy0);
+        let mut acc1 = ring.acc_reduce(&lazy1);
         ring.ntt_inverse(&mut acc0);
         ring.ntt_inverse(&mut acc1);
         let mut out = Ciphertext::new(vec![

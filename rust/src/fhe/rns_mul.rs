@@ -27,7 +27,7 @@
 
 use crate::math::baseconv::{BaseConverter, ShenoyConverter};
 use crate::math::bigint::BigUint;
-use crate::math::modarith::{invmod_prime, mulmod, submod};
+use crate::math::modarith::{invmod_prime, submod, ShoupConstant};
 use crate::math::poly::{RingContext, RnsPoly};
 
 use super::ciphertext::Ciphertext;
@@ -41,12 +41,13 @@ pub struct RnsMulPrecomp {
     pub fwd: BaseConverter,
     /// B → Q exact Shenoy–Kumaresan back conversion.
     pub back: ShenoyConverter,
-    /// `t mod q_i` per Q prime.
-    pub t_mod_q: Vec<u64>,
+    /// `t mod q_i` per Q prime (Shoup form — invariant across the
+    /// per-coefficient `t·v` loops).
+    pub t_mod_q: Vec<ShoupConstant>,
     /// `t mod p` per extension-ring prime (B order, then `m_sk`).
-    pub t_mod_ext: Vec<u64>,
-    /// `q^{-1} mod p` per extension-ring prime.
-    pub q_inv_ext: Vec<u64>,
+    pub t_mod_ext: Vec<ShoupConstant>,
+    /// `q^{-1} mod p` per extension-ring prime (Shoup form).
+    pub q_inv_ext: Vec<ShoupConstant>,
 }
 
 impl RnsMulPrecomp {
@@ -60,11 +61,12 @@ impl RnsMulPrecomp {
         let q = &ring_q.basis.modulus;
         let fwd = BaseConverter::new(q_primes, ext_primes);
         let back = ShenoyConverter::new(&ext_primes[..lb], ext_primes[lb], q_primes);
-        let t_mod_q = q_primes.iter().map(|&p| t.mod_u64(p)).collect();
-        let t_mod_ext = ext_primes.iter().map(|&p| t.mod_u64(p)).collect();
+        let t_mod_q = q_primes.iter().map(|&p| ShoupConstant::new(t.mod_u64(p), p)).collect();
+        let t_mod_ext =
+            ext_primes.iter().map(|&p| ShoupConstant::new(t.mod_u64(p), p)).collect();
         let q_inv_ext = ext_primes
             .iter()
-            .map(|&p| invmod_prime(q.mod_u64(p), p))
+            .map(|&p| ShoupConstant::new(invmod_prime(q.mod_u64(p), p), p))
             .collect();
         RnsMulPrecomp { fwd, back, t_mod_q, t_mod_ext, q_inv_ext }
     }
@@ -91,11 +93,10 @@ impl FvContext {
         let d = rq.d;
         // z = [t·v]_q per Q plane (canonical residues of the centered z).
         let mut z_planes = vec![vec![0u64; d]; rq.nlimbs()];
-        for (i, &p) in rq.basis.primes.iter().enumerate() {
-            let tm = self.rns.t_mod_q[i];
+        for (i, tm) in self.rns.t_mod_q.iter().enumerate() {
             let (src, dst) = (&c_q.planes[i], &mut z_planes[i]);
             for c in 0..d {
-                dst[c] = mulmod(tm, src[c], p);
+                dst[c] = tm.mul(src[c]);
             }
         }
         // Extend z to B ∪ {m_sk} (centered: |z| ≤ q/2).
@@ -105,12 +106,12 @@ impl FvContext {
         // division, since t·v ≡ z (mod q) as integers.
         let mut r_planes = vec![vec![0u64; d]; re.nlimbs()];
         for (e, &p) in re.basis.primes.iter().enumerate() {
-            let tm = self.rns.t_mod_ext[e];
-            let qi = self.rns.q_inv_ext[e];
+            let tm = &self.rns.t_mod_ext[e];
+            let qi = &self.rns.q_inv_ext[e];
             let (src, zs, dst) = (&c_ext.planes[e], &z_ext[e], &mut r_planes[e]);
             for c in 0..d {
-                let tv = mulmod(tm, src[c], p);
-                dst[c] = mulmod(submod(tv, zs[c], p), qi, p);
+                let tv = tm.mul(src[c]);
+                dst[c] = qi.mul(submod(tv, zs[c], p));
             }
         }
         // Exact Shenoy–Kumaresan conversion back to Q.

@@ -25,7 +25,7 @@
 //! Both are mirrored bit-for-bit by `python/compile/rns.py`
 //! (`base_convert_signed`, `shenoy_convert`).
 
-use super::modarith::{invmod_prime, mulmod, submod};
+use super::modarith::{invmod_prime, mulmod, submod, BarrettConstant, ShoupConstant};
 
 /// Accumulator headroom: `Σ y_i·m_i < L·2^60` must fit `u128`, and the
 /// fixed-point sum `Σ ⌊y_i·2^64/p_i⌋ < L·2^64` must too.
@@ -52,13 +52,19 @@ fn prod_mod(primes: &[u64], skip: usize, m: u64) -> u64 {
 pub struct BaseConverter {
     src: Vec<u64>,
     tgt: Vec<u64>,
-    /// `ŷ_i = (M/p_i)^{-1} mod p_i`.
-    src_hat_inv: Vec<u64>,
+    /// `ŷ_i = (M/p_i)^{-1} mod p_i` with Shoup companions — the
+    /// invariant operand of the per-coefficient `x_i·ŷ_i` products.
+    src_hat_inv: Vec<ShoupConstant>,
+    /// Barrett reciprocal per source prime: exact `⌊y_i·2^64/p_i⌋`
+    /// for the fixed-point α accumulation, no hardware division.
+    src_barrett: Vec<BarrettConstant>,
     /// `m_table[i][t]` — residues of `M_i = M/p_i` mod each target
     /// prime (the table `crt.rs` reserves a doc slot for).
     m_table: Vec<Vec<u64>>,
-    /// `M mod t` per target prime.
-    src_mod_tgt: Vec<u64>,
+    /// `M mod t` per target prime (Shoup form, multiplied by α).
+    src_mod_tgt: Vec<ShoupConstant>,
+    /// Barrett reciprocal per target prime (accumulator flush).
+    tgt_barrett: Vec<BarrettConstant>,
 }
 
 impl BaseConverter {
@@ -72,18 +78,27 @@ impl BaseConverter {
             assert!(!src.contains(t), "bases must be disjoint");
         }
         let src_hat_inv = (0..src.len())
-            .map(|i| invmod_prime(prod_mod(src, i, src[i]), src[i]))
+            .map(|i| {
+                ShoupConstant::new(invmod_prime(prod_mod(src, i, src[i]), src[i]), src[i])
+            })
             .collect();
+        let src_barrett = src.iter().map(|&p| BarrettConstant::new(p)).collect();
         let m_table = (0..src.len())
             .map(|i| tgt.iter().map(|&t| prod_mod(src, i, t)).collect())
             .collect();
-        let src_mod_tgt = tgt.iter().map(|&t| prod_mod(src, usize::MAX, t)).collect();
+        let src_mod_tgt = tgt
+            .iter()
+            .map(|&t| ShoupConstant::new(prod_mod(src, usize::MAX, t), t))
+            .collect();
+        let tgt_barrett = tgt.iter().map(|&t| BarrettConstant::new(t)).collect();
         BaseConverter {
             src: src.to_vec(),
             tgt: tgt.to_vec(),
             src_hat_inv,
+            src_barrett,
             m_table,
             src_mod_tgt,
+            tgt_barrett,
         }
     }
 
@@ -92,25 +107,26 @@ impl BaseConverter {
     #[inline]
     fn convert_one(&self, residues: impl Fn(usize) -> u64, y: &mut [u64], out: &mut [u64]) {
         // y_i = [x_i·ŷ_i]_{p_i}, accumulating Σ y_i/p_i in 64-bit
-        // fixed point (each term exact to 2^-64, downward).
+        // fixed point (each term exact to 2^-64, downward — the Barrett
+        // div_rem quotient is bit-identical to the former `u128 /`).
         let mut s_fix: u128 = 0;
-        for (i, &p) in self.src.iter().enumerate() {
-            let yi = mulmod(residues(i), self.src_hat_inv[i], p);
+        for (i, sc) in self.src_hat_inv.iter().enumerate() {
+            let yi = sc.mul(residues(i));
             y[i] = yi;
-            s_fix += ((yi as u128) << 64) / p as u128;
+            s_fix += self.src_barrett[i].div_rem((yi as u128) << 64).0;
         }
         // Round to nearest: recovers the overshoot α and selects the
         // centered representative in one step.
         let alpha = ((s_fix + (1u128 << 63)) >> 64) as u64;
         for (t, &p) in self.tgt.iter().enumerate() {
             // Σ y_i·[M_i]_p in one u128 accumulator (products < 2^60,
-            // ≤ 256 terms), single reduction at the end.
+            // ≤ 256 terms), single Barrett reduction at the end.
             let mut acc: u128 = 0;
             for (i, &yi) in y.iter().enumerate() {
                 acc += yi as u128 * self.m_table[i][t] as u128;
             }
-            let v = (acc % p as u128) as u64;
-            out[t] = submod(v, mulmod(alpha, self.src_mod_tgt[t], p), p);
+            let v = self.tgt_barrett[t].reduce(acc);
+            out[t] = submod(v, self.src_mod_tgt[t].mul(alpha), p);
         }
     }
 
@@ -152,16 +168,20 @@ pub struct ShenoyConverter {
     b: Vec<u64>,
     msk: u64,
     tgt: Vec<u64>,
-    /// `(B/b_j)^{-1} mod b_j`.
-    b_hat_inv: Vec<u64>,
+    /// `(B/b_j)^{-1} mod b_j` (Shoup form — invariant operand).
+    b_hat_inv: Vec<ShoupConstant>,
     /// `(B/b_j) mod m_sk`.
     b_hat_mod_msk: Vec<u64>,
     /// `b_hat_mod_tgt[j][t] = (B/b_j) mod tgt_t`.
     b_hat_mod_tgt: Vec<Vec<u64>>,
-    /// `B^{-1} mod m_sk`.
-    b_inv_mod_msk: u64,
-    /// `B mod tgt_t`.
-    b_mod_tgt: Vec<u64>,
+    /// `B^{-1} mod m_sk` (Shoup form).
+    b_inv_mod_msk: ShoupConstant,
+    /// `B mod tgt_t` (Shoup form, multiplied by α′).
+    b_mod_tgt: Vec<ShoupConstant>,
+    /// Barrett reciprocal of `m_sk` (redundant-plane accumulator flush).
+    msk_barrett: BarrettConstant,
+    /// Barrett reciprocal per target prime (accumulator flush).
+    tgt_barrett: Vec<BarrettConstant>,
 }
 
 impl ShenoyConverter {
@@ -173,14 +193,20 @@ impl ShenoyConverter {
             assert!(!b.contains(t), "bases must be disjoint");
         }
         let b_hat_inv = (0..b.len())
-            .map(|j| invmod_prime(prod_mod(b, j, b[j]), b[j]))
+            .map(|j| ShoupConstant::new(invmod_prime(prod_mod(b, j, b[j]), b[j]), b[j]))
             .collect();
         let b_hat_mod_msk: Vec<u64> = (0..b.len()).map(|j| prod_mod(b, j, msk)).collect();
         let b_hat_mod_tgt = (0..b.len())
             .map(|j| tgt.iter().map(|&t| prod_mod(b, j, t)).collect())
             .collect();
-        let b_inv_mod_msk = invmod_prime(prod_mod(b, usize::MAX, msk), msk);
-        let b_mod_tgt = tgt.iter().map(|&t| prod_mod(b, usize::MAX, t)).collect();
+        let b_inv_mod_msk =
+            ShoupConstant::new(invmod_prime(prod_mod(b, usize::MAX, msk), msk), msk);
+        let b_mod_tgt = tgt
+            .iter()
+            .map(|&t| ShoupConstant::new(prod_mod(b, usize::MAX, t), t))
+            .collect();
+        let msk_barrett = BarrettConstant::new(msk);
+        let tgt_barrett = tgt.iter().map(|&t| BarrettConstant::new(t)).collect();
         ShenoyConverter {
             b: b.to_vec(),
             msk,
@@ -190,6 +216,8 @@ impl ShenoyConverter {
             b_hat_mod_tgt,
             b_inv_mod_msk,
             b_mod_tgt,
+            msk_barrett,
+            tgt_barrett,
         }
     }
 
@@ -204,22 +232,22 @@ impl ShenoyConverter {
         // y_j and the fast-conversion image of x at the redundant
         // modulus: Σ y_j·B_j ≡ x + (α + [x<0])·B (mod m_sk).
         let mut s_msk: u128 = 0;
-        for (j, &p) in self.b.iter().enumerate() {
-            let yj = mulmod(residues(j), self.b_hat_inv[j], p);
+        for (j, sc) in self.b_hat_inv.iter().enumerate() {
+            let yj = sc.mul(residues(j));
             y[j] = yj;
             s_msk += yj as u128 * self.b_hat_mod_msk[j] as u128;
         }
-        let s_msk = (s_msk % self.msk as u128) as u64;
+        let s_msk = self.msk_barrett.reduce(s_msk);
         // γ-correction: the exact overshoot count, ≤ L_B ≪ m_sk.
-        let alpha = mulmod(submod(s_msk, res_msk, self.msk), self.b_inv_mod_msk, self.msk);
+        let alpha = self.b_inv_mod_msk.mul(submod(s_msk, res_msk, self.msk));
         debug_assert!(alpha as usize <= self.b.len(), "S-K overshoot out of range");
         for (t, &p) in self.tgt.iter().enumerate() {
             let mut acc: u128 = 0;
             for (j, &yj) in y.iter().enumerate() {
                 acc += yj as u128 * self.b_hat_mod_tgt[j][t] as u128;
             }
-            let v = (acc % p as u128) as u64;
-            out[t] = submod(v, mulmod(alpha, self.b_mod_tgt[t], p), p);
+            let v = self.tgt_barrett[t].reduce(acc);
+            out[t] = submod(v, self.b_mod_tgt[t].mul(alpha), p);
         }
     }
 

@@ -9,7 +9,7 @@
 //! `M_i = M/p_i`, `ŷ_i = M_i^{-1} mod p_i` — all precomputed here.
 
 use super::bigint::{BigInt, BigUint};
-use super::modarith::{invmod_prime, mulmod};
+use super::modarith::{invmod_prime, BarrettConstant, ShoupConstant};
 
 /// A fixed RNS basis: pairwise-distinct primes and CRT precomputation.
 #[derive(Clone, Debug)]
@@ -22,6 +22,13 @@ pub struct RnsBasis {
     pub crt_m: Vec<BigUint>,
     /// `ŷ_i = (M/p_i)^{-1} mod p_i`.
     pub crt_inv: Vec<u64>,
+    /// Shoup companions of `ŷ_i` — every per-coefficient CRT/gadget
+    /// product `x·ŷ_i mod p_i` (the lift loop, `relin_digits`) is an
+    /// invariant-operand multiply.
+    pub crt_inv_shoup: Vec<ShoupConstant>,
+    /// Barrett reciprocal per prime — the plane-wide division-free
+    /// path for variable×variable products and accumulator flushes.
+    pub barrett: Vec<BarrettConstant>,
     /// `⌊M/2⌋` — the symmetric-representative threshold for
     /// [`lift_signed`](Self::lift_signed). (The `M_i mod p_j` residue
     /// tables used by fast base extension live in
@@ -39,15 +46,20 @@ impl RnsBasis {
         }
         let mut crt_m = Vec::with_capacity(primes.len());
         let mut crt_inv = Vec::with_capacity(primes.len());
+        let mut crt_inv_shoup = Vec::with_capacity(primes.len());
+        let mut barrett = Vec::with_capacity(primes.len());
         for &p in &primes {
             let (mi, rem) = modulus.div_rem_u64(p);
             debug_assert_eq!(rem, 0);
             let mi_mod_p = mi.mod_u64(p);
+            let inv = invmod_prime(mi_mod_p, p);
             crt_m.push(mi);
-            crt_inv.push(invmod_prime(mi_mod_p, p));
+            crt_inv.push(inv);
+            crt_inv_shoup.push(ShoupConstant::new(inv, p));
+            barrett.push(BarrettConstant::new(p));
         }
         let half_modulus = modulus.shr_bits(1);
-        RnsBasis { primes, modulus, crt_m, crt_inv, half_modulus }
+        RnsBasis { primes, modulus, crt_m, crt_inv, crt_inv_shoup, barrett, half_modulus }
     }
 
     pub fn len(&self) -> usize {
@@ -69,7 +81,7 @@ impl RnsBasis {
         debug_assert_eq!(residues.len(), self.len());
         let mut acc = BigUint::zero();
         for i in 0..self.len() {
-            let c = mulmod(residues[i], self.crt_inv[i], self.primes[i]);
+            let c = self.crt_inv_shoup[i].mul(residues[i]);
             acc.add_mul_u64(&self.crt_m[i], c);
         }
         // acc < Σ p_i · M_i = L · M, so a few subtractions suffice.
@@ -124,6 +136,7 @@ impl RnsBasis {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::math::modarith::mulmod;
     use crate::math::primes::rns_basis_primes;
     use crate::util::prop::{gen, PropRunner};
 

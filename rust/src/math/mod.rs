@@ -5,14 +5,17 @@
 //! no such crates are vendored):
 //!
 //! - [`modarith`] — `u64` modular arithmetic (`mulmod`, `powmod`,
-//!   `invmod`) with `u128` intermediates.
+//!   `invmod`) with `u128` intermediates, plus the division-free
+//!   reduction primitives every hot loop uses: Shoup multiplication by
+//!   invariant operands and 128-bit-reciprocal Barrett reduction.
 //! - [`primes`] — deterministic Miller–Rabin and NTT-friendly prime
 //!   generation (`p ≡ 1 mod 2d`), mirrored bit-for-bit by
 //!   `python/compile/rns.py` so Rust and the AOT artifacts agree on the
 //!   RNS basis.
 //! - [`ntt`] — in-place negacyclic number-theoretic transform
 //!   (Cooley–Tukey forward / Gentleman–Sande inverse with ψ-twisting
-//!   folded into the tables).
+//!   folded into the tables, lazy-reduction butterflies in
+//!   `[0, 4p)`/`[0, 2p)`).
 //! - [`bigint`] — arbitrary-precision unsigned/signed integers (u64
 //!   limbs) with Knuth-D division; used for CRT lifts, the BFV
 //!   scale-and-round, and Lemma-3 bound arithmetic.

@@ -3,6 +3,27 @@
 //! All FV residue planes use primes `p < 2^31`, so products of canonical
 //! residues fit comfortably in `u128`; these helpers are nevertheless
 //! written to be correct for any `u64` modulus.
+//!
+//! Three reduction strategies coexist, chosen by what is invariant:
+//!
+//! - [`mulmod`] — the division-based fallback. Correct for any modulus;
+//!   used only in cold setup code (table builds, key generation,
+//!   primality testing), never in per-coefficient loops.
+//! - **Shoup** ([`mulmod_shoup`], [`ShoupConstant`]) — when one operand
+//!   `s` is invariant across a loop (twiddle factors, `M_i mod p_j`
+//!   tables, `(q/q_i)^{-1}` gadget factors), precompute
+//!   `⌊s·2^64/p⌋` once and every product costs one widening multiply
+//!   plus two wrapping multiplies. The lazy variant returns `[0, 2p)`
+//!   for the Harvey NTT butterflies.
+//! - **Barrett** ([`BarrettConstant`]) — when only the *modulus* is
+//!   invariant (variable×variable products, `u128` accumulator
+//!   flushes), precompute `⌊2^128/m⌋` once and reduce any `u128` with
+//!   two mul-highs and one conditional subtraction. Its `div_rem` also
+//!   exposes the exact quotient, which replaces the `u128` divisions
+//!   of the base-conversion fixed-point α machinery.
+//!
+//! The precompute math is mirrored bit-for-bit by
+//! `python/compile/rns.py` (`shoup_precompute`, `barrett_constant`, …).
 
 /// `(a + b) mod m`, assuming `a, b < m`.
 #[inline(always)]
@@ -31,6 +52,171 @@ pub fn submod(a: u64, b: u64, m: u64) -> u64 {
 #[inline(always)]
 pub fn mulmod(a: u64, b: u64, m: u64) -> u64 {
     ((a as u128 * b as u128) % m as u128) as u64
+}
+
+/// Widening 64×64 → 128 product.
+#[inline(always)]
+fn mul_wide(a: u64, b: u64) -> u128 {
+    a as u128 * b as u128
+}
+
+/// `⌊s·2^64/p⌋` — the Shoup companion of an invariant operand `s`.
+/// Requires `s < p < 2^63` (the headroom [`mulmod_shoup`] needs for its
+/// single conditional subtraction).
+pub fn shoup_precompute(s: u64, p: u64) -> u64 {
+    assert!(s < p && p < 1 << 63, "shoup_precompute requires s < p < 2^63");
+    (((s as u128) << 64) / p as u128) as u64
+}
+
+/// Shoup modular multiplication by a *precomputed* constant: given
+/// `s_shoup = ⌊s·2^64/p⌋`, computes `x·s mod p` with one widening
+/// multiply and no division (Harvey/Shoup). Valid for **any** `x`
+/// (in particular the `[0, 4p)` lazy butterfly values), result in
+/// `[0, p)`.
+#[inline(always)]
+pub fn mulmod_shoup(x: u64, s: u64, s_shoup: u64, p: u64) -> u64 {
+    let r = mulmod_shoup_lazy(x, s, s_shoup, p);
+    if r >= p {
+        r - p
+    } else {
+        r
+    }
+}
+
+/// The lazy Shoup product: same contract as [`mulmod_shoup`] but skips
+/// the final conditional subtraction, returning a value in `[0, 2p)` —
+/// the form the lazy-reduction NTT butterflies consume directly.
+#[inline(always)]
+pub fn mulmod_shoup_lazy(x: u64, s: u64, s_shoup: u64, p: u64) -> u64 {
+    let q = (mul_wide(x, s_shoup) >> 64) as u64;
+    x.wrapping_mul(s).wrapping_sub(q.wrapping_mul(p))
+}
+
+/// An invariant multiplicand bundled with its Shoup companion **and**
+/// the modulus it was precomputed for (a companion is meaningless
+/// under any other modulus, so carrying `p` removes a whole class of
+/// mismatched-plane bugs) — the table-entry form used by the base
+/// converters and the RNS-multiply precomputation (`NttTable` keeps
+/// parallel `Vec<u64>` pairs instead, for its two-array butterfly
+/// layout; both go through [`mulmod_shoup`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ShoupConstant {
+    s: u64,
+    s_shoup: u64,
+    p: u64,
+}
+
+impl ShoupConstant {
+    /// Precompute the companion of `s` modulo `p` (`s < p < 2^63`).
+    pub fn new(s: u64, p: u64) -> Self {
+        ShoupConstant { s, s_shoup: shoup_precompute(s, p), p }
+    }
+
+    /// The raw constant `s`.
+    #[inline(always)]
+    pub fn value(&self) -> u64 {
+        self.s
+    }
+
+    /// The modulus the companion was precomputed for.
+    #[inline(always)]
+    pub fn modulus(&self) -> u64 {
+        self.p
+    }
+
+    /// `x·s mod p`, result in `[0, p)`.
+    #[inline(always)]
+    pub fn mul(&self, x: u64) -> u64 {
+        mulmod_shoup(x, self.s, self.s_shoup, self.p)
+    }
+
+    /// `x·s mod p` lazily, result in `[0, 2p)`.
+    #[inline(always)]
+    pub fn mul_lazy(&self, x: u64) -> u64 {
+        mulmod_shoup_lazy(x, self.s, self.s_shoup, self.p)
+    }
+}
+
+/// Barrett reduction constants for a fixed modulus `m`: the 128-bit
+/// reciprocal `r = ⌊2^128/m⌋` stored as hi/lo words. [`Self::reduce`]
+/// maps any `u128` into `[0, m)` with two 64×64 mul-high blocks and a
+/// single conditional subtraction — no hardware division. This is the
+/// variable×variable counterpart of the Shoup path: use it when only
+/// the modulus is loop-invariant (pointwise NTT products, flushing
+/// `u128` accumulators).
+#[derive(Clone, Copy, Debug)]
+pub struct BarrettConstant {
+    m: u64,
+    r_hi: u64,
+    r_lo: u64,
+}
+
+impl BarrettConstant {
+    /// Requires `2 ≤ m < 2^62` (so the `< 2m` pre-correction remainder
+    /// fits `u64`). Every RNS plane prime (`< 2^30`) qualifies.
+    pub fn new(m: u64) -> Self {
+        assert!(m >= 2 && m < 1 << 62, "Barrett modulus out of range");
+        let r = if m.is_power_of_two() {
+            1u128 << (128 - m.trailing_zeros())
+        } else {
+            // m ∤ 2^128, so ⌊(2^128 − 1)/m⌋ = ⌊2^128/m⌋.
+            u128::MAX / m as u128
+        };
+        BarrettConstant { m, r_hi: (r >> 64) as u64, r_lo: r as u64 }
+    }
+
+    /// The modulus this constant reduces by.
+    #[inline(always)]
+    pub fn modulus(&self) -> u64 {
+        self.m
+    }
+
+    /// `⌊x·r/2^128⌋` — exact, via the 128×128 mul-high. With
+    /// `r = ⌊2^128/m⌋` this is `⌊x/m⌋` or `⌊x/m⌋ − 1`.
+    #[inline(always)]
+    fn quotient_estimate(&self, x: u128) -> u128 {
+        let (x_hi, x_lo) = ((x >> 64) as u64, x as u64);
+        let lo_lo = mul_wide(x_lo, self.r_lo);
+        let hi_lo = mul_wide(x_hi, self.r_lo);
+        let lo_hi = mul_wide(x_lo, self.r_hi);
+        let hi_hi = mul_wide(x_hi, self.r_hi);
+        let mid = (lo_lo >> 64) + (hi_lo & u64::MAX as u128) + (lo_hi & u64::MAX as u128);
+        hi_hi + (hi_lo >> 64) + (lo_hi >> 64) + (mid >> 64)
+    }
+
+    /// `x mod m` for any `u128` (in particular products of canonical
+    /// residues and lazy accumulator sums), result in `[0, m)`.
+    #[inline(always)]
+    pub fn reduce(&self, x: u128) -> u64 {
+        let q = self.quotient_estimate(x);
+        // q ∈ {⌊x/m⌋ − 1, ⌊x/m⌋}, so the remainder is < 2m < 2^63.
+        let r = x.wrapping_sub(q.wrapping_mul(self.m as u128)) as u64;
+        if r >= self.m {
+            r - self.m
+        } else {
+            r
+        }
+    }
+
+    /// Exact `(⌊x/m⌋, x mod m)` — division without hardware division.
+    /// Replaces the `u128 /` in the base-conversion fixed-point
+    /// accumulation (`⌊y_i·2^64/p_i⌋`) bit for bit.
+    #[inline(always)]
+    pub fn div_rem(&self, x: u128) -> (u128, u64) {
+        let mut q = self.quotient_estimate(x);
+        let mut r = x.wrapping_sub(q.wrapping_mul(self.m as u128)) as u64;
+        if r >= self.m {
+            r -= self.m;
+            q += 1;
+        }
+        (q, r)
+    }
+
+    /// `(a·b) mod m` via the precomputed reciprocal.
+    #[inline(always)]
+    pub fn mulmod(&self, a: u64, b: u64) -> u64 {
+        self.reduce(mul_wide(a, b))
+    }
 }
 
 /// `-a mod m`, assuming `a < m`.
@@ -155,6 +341,100 @@ mod tests {
         let a = 0x1234_5679; // odd -> invertible mod 2^32
         let inv = invmod(a, m).unwrap();
         assert_eq!(mulmod(a, inv, m), 1);
+    }
+
+    /// A uniformly random 31-bit prime in `[2^30, 2^31)`
+    /// (advance-to-next-prime from a random odd start) — one bit above
+    /// the 2^30 RNS production bound, so the headroom claims are
+    /// exercised strictly beyond what the planes ever use.
+    fn random_31bit_prime(rng: &mut crate::fhe::rng::ChaChaRng) -> u64 {
+        let mut m = ((1u64 << 30) + rng.uniform_below(1 << 30)) | 1;
+        while !crate::math::primes::is_prime(m) {
+            m += 2;
+        }
+        m
+    }
+
+    #[test]
+    fn barrett_matches_naive_mulmod() {
+        use crate::util::prop::PropRunner;
+        let mut run = PropRunner::new("barrett_mulmod", 300);
+        run.run(|rng| {
+            let m = random_31bit_prime(rng);
+            let br = BarrettConstant::new(m);
+            let (ra, rb) = (rng.uniform_below(m), rng.uniform_below(m));
+            for &a in &[0u64, 1, m - 1, ra] {
+                for &b in &[0u64, 1, m - 1, rb] {
+                    assert_eq!(br.mulmod(a, b), mulmod(a, b, m), "a={a} b={b} m={m}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn barrett_reduce_and_div_rem_any_u128() {
+        use crate::util::prop::PropRunner;
+        let mut run = PropRunner::new("barrett_div_rem", 300);
+        run.run(|rng| {
+            let m = random_31bit_prime(rng);
+            let br = BarrettConstant::new(m);
+            let x = ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128;
+            for &x in &[0u128, 1, m as u128 - 1, m as u128, u128::MAX, x] {
+                assert_eq!(br.reduce(x) as u128, x % m as u128, "x={x} m={m}");
+                let (q, r) = br.div_rem(x);
+                assert_eq!(q, x / m as u128, "x={x} m={m}");
+                assert_eq!(r as u128, x % m as u128);
+            }
+            // The fixed-point use: ⌊y·2^64/p⌋ for canonical y.
+            let y = rng.uniform_below(m);
+            assert_eq!(br.div_rem((y as u128) << 64).0, ((y as u128) << 64) / m as u128);
+        });
+    }
+
+    #[test]
+    fn shoup_matches_naive_mulmod() {
+        use crate::util::prop::PropRunner;
+        let mut run = PropRunner::new("shoup_mulmod", 300);
+        run.run(|rng| {
+            let m = random_31bit_prime(rng);
+            let rs = rng.uniform_below(m);
+            // Lazy butterflies feed operands up to 4p, so test x beyond m too.
+            let rx = rng.uniform_below(4 * m);
+            for &s in &[0u64, 1, m - 1, rs] {
+                let sc = ShoupConstant::new(s, m);
+                assert_eq!(sc.value(), s);
+                for &x in &[0u64, 1, m - 1, rx] {
+                    let expect = mulmod(x, s, m);
+                    assert_eq!(sc.mul(x), expect, "x={x} s={s} m={m}");
+                    let lazy = sc.mul_lazy(x);
+                    assert!(lazy < 2 * m, "lazy Shoup must stay under 2p");
+                    assert_eq!(lazy % m, expect);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn barrett_handles_power_of_two_and_range_edges() {
+        for m in [2u64, 4, 1 << 31, (1 << 62) - 57, 3, (1 << 62) - 1] {
+            let br = BarrettConstant::new(m);
+            assert_eq!(br.modulus(), m);
+            for x in [0u128, 1, m as u128, m as u128 * m as u128 + 5, u128::MAX] {
+                assert_eq!(br.reduce(x) as u128, x % m as u128, "x={x} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "Barrett modulus out of range")]
+    fn barrett_rejects_oversized_modulus() {
+        let _ = BarrettConstant::new(1 << 62);
+    }
+
+    #[test]
+    #[should_panic(expected = "shoup_precompute requires")]
+    fn shoup_rejects_non_canonical_operand() {
+        let _ = ShoupConstant::new(17, 17);
     }
 
     #[test]

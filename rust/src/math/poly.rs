@@ -9,8 +9,16 @@
 use std::sync::Arc;
 
 use super::crt::RnsBasis;
-use super::modarith::{addmod, mulmod, negmod, submod};
+use super::modarith::{addmod, negmod, submod, ShoupConstant};
 use super::ntt::NttTable;
+
+/// Hard cap on the number of `acc_mul_ntt` terms an [`NttAccumulator`]
+/// may absorb before [`acc_reduce`](RingContext::acc_reduce): plane
+/// products of canonical residues are `< 2^60` (primes `< 2^30`), so
+/// `2^68` terms would be safe — `2^32` is a comfortably conservative
+/// bound that still dwarfs any realistic limb count. (`u64`, not
+/// `usize`: `1 << 32` must stay representable on 32-bit targets.)
+pub const MAX_NTT_ACC_TERMS: u64 = 1 << 32;
 
 /// Representation of a polynomial's planes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -127,25 +135,71 @@ impl RingContext {
         assert_eq!(a.rep, Rep::Ntt);
         assert_eq!(b.rep, Rep::Ntt);
         let mut out = a.clone();
-        for (l, &p) in self.basis.primes.iter().enumerate() {
+        for (l, br) in self.basis.barrett.iter().enumerate() {
             for i in 0..self.d {
-                out.planes[l][i] = mulmod(out.planes[l][i], b.planes[l][i], p);
+                out.planes[l][i] = br.mulmod(out.planes[l][i], b.planes[l][i]);
             }
         }
         out
     }
 
-    /// `acc += a ∘ b` fused (NTT form) — inner-product accumulation.
+    /// `acc += a ∘ b` fused (NTT form) — inner-product accumulation
+    /// with one Barrett reduction per product. For sums of many terms,
+    /// prefer the lazy [`NttAccumulator`] (`acc_mul_ntt`/`acc_reduce`),
+    /// which pays a single reduction per coefficient for the whole sum.
     pub fn mul_ntt_acc(&self, acc: &mut RnsPoly, a: &RnsPoly, b: &RnsPoly) {
         assert_eq!(acc.rep, Rep::Ntt);
         assert_eq!(a.rep, Rep::Ntt);
         assert_eq!(b.rep, Rep::Ntt);
-        for (l, &p) in self.basis.primes.iter().enumerate() {
+        for (l, br) in self.basis.barrett.iter().enumerate() {
+            let p = br.modulus();
             for i in 0..self.d {
-                let prod = mulmod(a.planes[l][i], b.planes[l][i], p);
+                let prod = br.mulmod(a.planes[l][i], b.planes[l][i]);
                 acc.planes[l][i] = addmod(acc.planes[l][i], prod, p);
             }
         }
+    }
+
+    /// Fresh all-zero lazy accumulator for NTT-domain inner products.
+    pub fn ntt_accumulator(&self) -> NttAccumulator {
+        NttAccumulator {
+            d: self.d,
+            planes: vec![vec![0u128; self.d]; self.nlimbs()],
+            terms: 0,
+        }
+    }
+
+    /// `acc += a ∘ b` with **no** modular reduction: canonical-residue
+    /// products (`< 2^60`) are summed in `u128`, so the whole
+    /// inner-product sum — e.g. all relinearisation limbs — costs one
+    /// reduction per coefficient at [`acc_reduce`](Self::acc_reduce)
+    /// instead of one per limb.
+    pub fn acc_mul_ntt(&self, acc: &mut NttAccumulator, a: &RnsPoly, b: &RnsPoly) {
+        assert_eq!(a.rep, Rep::Ntt);
+        assert_eq!(b.rep, Rep::Ntt);
+        assert_eq!(acc.d, self.d);
+        assert!((acc.terms as u64) < MAX_NTT_ACC_TERMS, "NTT accumulator would overflow u128");
+        for (l, plane) in acc.planes.iter_mut().enumerate() {
+            let (pa, pb) = (&a.planes[l], &b.planes[l]);
+            for i in 0..self.d {
+                plane[i] += pa[i] as u128 * pb[i] as u128;
+            }
+        }
+        acc.terms += 1;
+    }
+
+    /// Flush a lazy accumulator: one Barrett reduction per coefficient
+    /// brings every plane back to canonical residues (NTT rep).
+    pub fn acc_reduce(&self, acc: &NttAccumulator) -> RnsPoly {
+        assert_eq!(acc.d, self.d);
+        let mut out = self.zero();
+        out.rep = Rep::Ntt;
+        for (l, br) in self.basis.barrett.iter().enumerate() {
+            for i in 0..self.d {
+                out.planes[l][i] = br.reduce(acc.planes[l][i]);
+            }
+        }
+        out
     }
 
     /// Full negacyclic product of two coefficient-form polynomials.
@@ -159,25 +213,29 @@ impl RingContext {
         out
     }
 
-    /// Multiply by a small scalar (same representation).
+    /// Multiply by a small scalar (same representation). The scalar is
+    /// invariant across the plane, so one Shoup precompute per prime
+    /// makes the per-coefficient loop division-free.
     pub fn mul_scalar(&self, a: &RnsPoly, s: u64) -> RnsPoly {
         let mut out = a.clone();
         for (l, &p) in self.basis.primes.iter().enumerate() {
-            let sp = s % p;
+            let sc = ShoupConstant::new(s % p, p);
             for x in out.planes[l].iter_mut() {
-                *x = mulmod(*x, sp, p);
+                *x = sc.mul(*x);
             }
         }
         out
     }
 
-    /// Multiply by a scalar given in residue form (one value per prime).
+    /// Multiply by a scalar given in residue form (one canonical value
+    /// per prime).
     pub fn mul_scalar_rns(&self, a: &RnsPoly, s: &[u64]) -> RnsPoly {
         assert_eq!(s.len(), self.nlimbs());
         let mut out = a.clone();
         for (l, &p) in self.basis.primes.iter().enumerate() {
+            let sc = ShoupConstant::new(s[l], p);
             for x in out.planes[l].iter_mut() {
-                *x = mulmod(*x, s[l], p);
+                *x = sc.mul(*x);
             }
         }
         out
@@ -190,6 +248,25 @@ impl RingContext {
             rng.fill_uniform_mod(&mut out.planes[l], p);
         }
         out
+    }
+}
+
+/// A lazily-accumulated NTT-domain inner product: `u128` sums of
+/// residue products per coefficient, reduced once by
+/// [`RingContext::acc_reduce`]. Created by
+/// [`RingContext::ntt_accumulator`]; the term counter enforces the
+/// (enormous) `u128` headroom bound [`MAX_NTT_ACC_TERMS`].
+#[derive(Clone, Debug)]
+pub struct NttAccumulator {
+    d: usize,
+    planes: Vec<Vec<u128>>,
+    terms: usize,
+}
+
+impl NttAccumulator {
+    /// Number of `acc_mul_ntt` terms absorbed so far.
+    pub fn terms(&self) -> usize {
+        self.terms
     }
 }
 
@@ -285,6 +362,54 @@ mod tests {
         ctx.mul_ntt_acc(&mut acc, &c, &d);
         let expect = ctx.add(&ctx.mul_ntt(&a, &b), &ctx.mul_ntt(&c, &d));
         assert_eq!(acc, expect);
+    }
+
+    #[test]
+    fn lazy_accumulator_matches_eager_path() {
+        // The u128 lazy accumulator must agree with the per-term
+        // reduced mul_ntt_acc across many limbs.
+        let ctx = ctx(32, 3);
+        let mut rng = ChaChaRng::from_seed(15);
+        let mut lazy = ctx.ntt_accumulator();
+        let mut eager = ctx.zero();
+        eager.rep = Rep::Ntt;
+        for _ in 0..8 {
+            let mut a = ctx.sample_uniform(&mut rng);
+            let mut b = ctx.sample_uniform(&mut rng);
+            ctx.ntt_forward(&mut a);
+            ctx.ntt_forward(&mut b);
+            ctx.acc_mul_ntt(&mut lazy, &a, &b);
+            ctx.mul_ntt_acc(&mut eager, &a, &b);
+        }
+        assert_eq!(lazy.terms(), 8);
+        assert_eq!(ctx.acc_reduce(&lazy), eager);
+    }
+
+    #[test]
+    fn lazy_accumulator_headroom_at_max_terms() {
+        // Worst case per coefficient: MAX_NTT_ACC_TERMS products of
+        // (2^30 − 1)² — the sum must fit u128 with room to spare.
+        let max_prod = ((crate::math::primes::RNS_PRIME_BOUND - 1) as u128).pow(2);
+        let total = max_prod.checked_mul(MAX_NTT_ACC_TERMS as u128);
+        assert!(total.is_some(), "u128 accumulator bound violated");
+        // And a dense worst-case accumulation reduces correctly.
+        let ctx = ctx(4, 2);
+        let mut worst = ctx.zero();
+        worst.rep = Rep::Ntt;
+        for (l, &p) in ctx.basis.primes.iter().enumerate() {
+            for x in worst.planes[l].iter_mut() {
+                *x = p - 1;
+            }
+        }
+        let mut acc = ctx.ntt_accumulator();
+        for _ in 0..100 {
+            ctx.acc_mul_ntt(&mut acc, &worst, &worst);
+        }
+        let reduced = ctx.acc_reduce(&acc);
+        for (l, &p) in ctx.basis.primes.iter().enumerate() {
+            let expect = (100u128 * (p as u128 - 1) * (p as u128 - 1) % p as u128) as u64;
+            assert!(reduced.planes[l].iter().all(|&x| x == expect));
+        }
     }
 
     #[test]
