@@ -69,9 +69,22 @@ fn main() {
     bench("ct add", 2, 100, || {
         black_box(ctx.add_ct(&ct_a, &ct_b));
     });
-    bench("plain mul", 2, 20, || {
+    // mul_plain: cold (encode + NTT the operand every call, Coeff
+    // ciphertext) vs cached (PlaintextNtt operand, NTT-resident
+    // ciphertext — the steady state of the GD/NAG loops).
+    let s_plain_cold = bench("plain mul cold", 2, 20, || {
         black_box(ctx.mul_plain(&ct_a, &m));
     });
+    let m_cached = ctx.prepare_plaintext(&m);
+    let ct_resident = ctx.mul_plain_prepared(&ct_a, &m_cached);
+    assert!(ct_resident.is_ntt_resident());
+    let s_plain_cached = bench("plain mul cached+resident", 2, 20, || {
+        black_box(ctx.mul_plain_prepared(&ct_resident, &m_cached));
+    });
+    println!(
+        "  -> cached/resident mul_plain speedup: {:.2}x",
+        s_plain_cold.mean.as_nanos() as f64 / s_plain_cached.mean.as_nanos().max(1) as f64
+    );
     bench("ct mul rns (tensor+scale)", 2, 10, || {
         black_box(ctx.mul_no_relin_rns(&ct_a, &ct_b));
     });
@@ -119,6 +132,29 @@ fn main() {
             ("speedup", Json::Num(speedup)),
         ]));
     }
+    // End-to-end GD iteration: the paper's per-iteration cost centre
+    // (two mul_pairs batches + cached plaintext muls + adds), on a
+    // small encrypted dataset through the native engine.
+    header("gd_iteration end-to-end (N=6, P=2, K=1)");
+    let s_gd = {
+        use els::data::synth;
+        use els::els::encrypted::{fit, FitConfig};
+        use els::els::exact::QuantisedData;
+        use els::els::model::encrypt_dataset;
+        use els::fhe::params::{plan, PlanRequest};
+        let mut rng = ChaChaRng::from_seed(9002);
+        let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let nu = els::els::stepsize::nu_optimal(&q.dequantised().0);
+        let gd_ctx = FvContext::new(plan(&PlanRequest::gd(6, 2, 1, 2, nu)).unwrap());
+        let gd_keys = keygen(&gd_ctx, &mut rng);
+        let engine = NativeEngine::new(gd_ctx.clone(), Arc::new(gd_keys.rk.clone()));
+        let data = encrypt_dataset(&gd_ctx, &gd_keys.pk, &q, &mut rng);
+        bench("gd_iteration (fit K=1)", 1, 5, || {
+            black_box(fit(&engine, &data, &FitConfig::gd(1, nu)));
+        })
+    };
+
     let report = Json::obj(vec![
         ("bench", Json::str("fhe_ops::mul_pairs")),
         ("status", Json::str("measured")),
@@ -127,6 +163,14 @@ fn main() {
         ("ext_count", Json::Num(ctx.params.ext_count as f64)),
         ("t_bits", Json::Num((ctx.t.bit_len() - 1) as f64)),
         ("batches", Json::Arr(comparison)),
+        (
+            "mul_plain",
+            Json::obj(vec![
+                ("cold", stats_json(&s_plain_cold)),
+                ("cached", stats_json(&s_plain_cached)),
+            ]),
+        ),
+        ("gd_iteration", stats_json(&s_gd)),
     ]);
     match std::fs::write("BENCH_fhe_ops.json", report.to_string_json()) {
         Ok(()) => println!("wrote BENCH_fhe_ops.json"),

@@ -36,6 +36,9 @@ cargo test -q
 note "tier-1 (oracle backend): ELS_MUL_BACKEND=bigint cargo test -q"
 ELS_MUL_BACKEND=bigint cargo test -q
 
+note "tier-1 (serial pool): ELS_POOL_WORKERS=1 cargo test -q"
+ELS_POOL_WORKERS=1 cargo test -q
+
 note "cargo bench (toy profile; must not panic)"
 # fhe_ops overwrites BENCH_fhe_ops.json — stash the committed baseline
 # for the regression gate below.

@@ -13,6 +13,13 @@ still the pending-first-toolchain-run stub, the gate SKIPs loudly
 (exit 0) — there is nothing to regress against until the first
 measured run is committed.
 
+Beyond mul_pairs, the report also carries a `mul_plain` section
+(cold vs cached-operand timings — the cold/cached ratio is the same
+machine-relative design as the backend speedup) and a `gd_iteration`
+end-to-end timing. Both are tracked **warn-only** until a measured
+baseline containing them lands; they never fail the gate (gd_iteration
+has no in-run relative pair at all, so it stays advisory forever).
+
 Usage: bench_check.py BASELINE_JSON FRESH_JSON [--threshold=0.15]
        (--threshold 0.15 is also accepted)
 
@@ -121,6 +128,47 @@ def main(argv):
                 f"      WARNING: full_rns mean {old_ns:.0f} ns -> {new_ns:.0f} ns "
                 f"({new_ns / old_ns - 1.0:+.1%}) — not gated (cross-machine noise)"
             )
+    # mul_plain cold/cached ratio — warn-only (new metric; promote to a
+    # hard gate once a few CI runs confirm the ratio is stable).
+    base_mp, fresh_mp = baseline.get("mul_plain"), fresh.get("mul_plain")
+    if base_mp and not fresh_mp:
+        lines.append(
+            "  mul_plain: WARNING — baseline has this section but the fresh "
+            "run does not (did the bench stop measuring it?)"
+        )
+    elif fresh_mp and not base_mp:
+        lines.append(
+            "  mul_plain: no baseline section yet — tracked warn-only until "
+            "a measured baseline containing it is committed"
+        )
+    elif base_mp and fresh_mp:
+        old_ratio = base_mp["cold"]["mean_ns"] / max(base_mp["cached"]["mean_ns"], 1)
+        new_ratio = fresh_mp["cold"]["mean_ns"] / max(fresh_mp["cached"]["mean_ns"], 1)
+        verdict = "OK"
+        if new_ratio < old_ratio * (1.0 - threshold):
+            verdict = "WARNING: cached-operand advantage shrank (not gated yet)"
+        lines.append(
+            f"  mul_plain cold/cached speedup: {old_ratio:.2f}x -> "
+            f"{new_ratio:.2f}x ({new_ratio / old_ratio - 1.0:+.1%})  {verdict}"
+        )
+    # gd_iteration — absolute wall clock only, advisory forever.
+    base_gd, fresh_gd = baseline.get("gd_iteration"), fresh.get("gd_iteration")
+    if base_gd and not fresh_gd:
+        lines.append(
+            "  gd_iteration: WARNING — baseline has this section but the "
+            "fresh run does not (did the bench stop measuring it?)"
+        )
+    elif fresh_gd and not base_gd:
+        lines.append("  gd_iteration: no baseline section yet — tracked warn-only")
+    elif base_gd and fresh_gd:
+        old_ns, new_ns = base_gd["mean_ns"], fresh_gd["mean_ns"]
+        note = ""
+        if old_ns > 0 and new_ns / old_ns > 1.0 + threshold:
+            note = "  WARNING: slower (not gated — cross-machine noise)"
+        lines.append(
+            f"  gd_iteration mean: {old_ns:.0f} ns -> {new_ns:.0f} ns "
+            f"({new_ns / max(old_ns, 1) - 1.0:+.1%}){note}"
+        )
     print(f"bench_check: mul_pairs vs baseline (threshold {threshold:.0%}):")
     print("\n".join(lines))
     if failures:

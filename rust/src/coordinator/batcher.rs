@@ -14,7 +14,7 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::fhe::{Ciphertext, FvContext, Plaintext};
+use crate::fhe::{Ciphertext, FvContext, Plaintext, PlaintextNtt};
 use crate::runtime::backend::{HeEngine, OpStats};
 
 struct WorkItem {
@@ -151,6 +151,13 @@ impl HeEngine for BatchingEngine {
         // Plaintext muls are cheap; run them inline on the caller thread.
         self.stats.plain_muls.fetch_add(1, Ordering::Relaxed);
         self.inner.ctx().mul_plain(a, pt)
+    }
+
+    fn mul_plain_prepared(&self, a: &Ciphertext, m: &PlaintextNtt) -> Ciphertext {
+        // Cached-operand plaintext muls are pure pointwise passes —
+        // inline on the caller thread, never through the dispatcher.
+        self.stats.plain_muls.fetch_add(1, Ordering::Relaxed);
+        self.inner.ctx().mul_plain_prepared(a, m)
     }
 }
 

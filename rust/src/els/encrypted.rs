@@ -74,6 +74,10 @@ fn zero_ct(ctx: &FvContext) -> Ciphertext {
 
 /// One GD/NAG gradient step: returns `g_j = Σ_i X̃_ij·r̃_i` where
 /// `r̃ = c_y·ỹ − X̃·β̃` (two `mul_pairs` batches).
+///
+/// `c_y` changes every iteration, but within one step it multiplies
+/// all N response ciphertexts — so it is NTT-cached once here and the
+/// N multiplies are pure pointwise passes.
 fn gradient_step(
     engine: &dyn HeEngine,
     data: &EncryptedDataset,
@@ -82,10 +86,10 @@ fn gradient_step(
 ) -> Vec<Ciphertext> {
     let ctx = engine.ctx();
     let (n, p) = (data.n(), data.p());
-    let cy_pt = encode_biguint(c_y, ctx.d());
+    let cy_pt = engine.prepare_plaintext(&encode_biguint(c_y, ctx.d()));
     // r̃_i = c_y·ỹ_i − Σ_j X̃_ij β̃_j
     let mut r: Vec<Ciphertext> =
-        data.y.iter().map(|y| engine.mul_plain(y, &cy_pt)).collect();
+        data.y.iter().map(|y| engine.mul_plain_prepared(y, &cy_pt)).collect();
     if !beta.is_empty() {
         let pairs: Vec<(&Ciphertext, &Ciphertext)> = (0..n)
             .flat_map(|i| (0..p).map(move |j| (&data.x[i][j], &beta[j])))
@@ -130,14 +134,16 @@ fn fit_gd(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> En
     let keep_path = cfg.keep_path || cfg.accel == Accel::Vwt;
     let mut beta: Vec<Ciphertext> = Vec::new();
     let mut path: Vec<Vec<Ciphertext>> = Vec::new();
-    let cc_pt = encode_biguint(&s.c_carry(), ctx.d());
+    // The carry constant is iteration-invariant: NTT-cached once for
+    // the whole fit (P multiplies per iteration, K iterations).
+    let cc_pt = engine.prepare_plaintext(&encode_biguint(&s.c_carry(), ctx.d()));
     for k in 1..=cfg.iters {
         let g = gradient_step(engine, data, &beta, &s.c_y(k));
         beta = if beta.is_empty() {
             g
         } else {
             (0..p)
-                .map(|j| engine.add(&engine.mul_plain(&beta[j], &cc_pt), &g[j]))
+                .map(|j| engine.add(&engine.mul_plain_prepared(&beta[j], &cc_pt), &g[j]))
                 .collect()
         };
         if keep_path {
@@ -153,9 +159,10 @@ fn fit_gd(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> En
             if w.is_zero() {
                 continue;
             }
-            let w_pt = encode_biguint(&w, ctx.d());
+            // w_k is per-k but multiplies all P path ciphertexts.
+            let w_pt = engine.prepare_plaintext(&encode_biguint(&w, ctx.d()));
             for j in 0..p {
-                let term = engine.mul_plain(&path[k - 1][j], &w_pt);
+                let term = engine.mul_plain_prepared(&path[k - 1][j], &w_pt);
                 acc[j] = engine.add(&acc[j], &term);
             }
         }
@@ -177,7 +184,8 @@ fn fit_nag(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> E
     let ctx = engine.ctx();
     let p = data.p();
     let s = NagScaling::new(data.phi, cfg.nu, cfg.iters);
-    let cc_pt = encode_biguint(&s.c_carry(), ctx.d());
+    // Iteration-invariant carry constant: cached once for the fit.
+    let cc_pt = engine.prepare_plaintext(&encode_biguint(&s.c_carry(), ctx.d()));
     let mut beta: Vec<Ciphertext> = Vec::new();
     let mut s_prev: Vec<Ciphertext> = vec![zero_ct(ctx); p];
     let mut path: Vec<Vec<Ciphertext>> = Vec::new();
@@ -188,20 +196,27 @@ fn fit_nag(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> E
             g
         } else {
             (0..p)
-                .map(|j| engine.add(&engine.mul_plain(&beta[j], &cc_pt), &g[j]))
+                .map(|j| engine.add(&engine.mul_plain_prepared(&beta[j], &cc_pt), &g[j]))
                 .collect()
         };
-        // β̃^[k] = w1·s̃^[k] − w2·s̃^[k−1] (accelerating extrapolation)
-        let w1_pt = encode_biguint(&s.w1(k), ctx.d());
+        // β̃^[k] = w1·s̃^[k] − w2·s̃^[k−1] (accelerating extrapolation).
+        // w1/w2 are per-k but multiply all P coordinates: cache each
+        // once per iteration instead of transforming P times.
+        let w1_pt = engine.prepare_plaintext(&encode_biguint(&s.w1(k), ctx.d()));
         let w2 = s.w2(k);
+        let w2_pt = if w2.is_zero() {
+            None
+        } else {
+            Some(engine.prepare_plaintext(&encode_biguint(&w2, ctx.d())))
+        };
         beta = (0..p)
             .map(|j| {
-                let a = engine.mul_plain(&s_cur[j], &w1_pt);
-                if w2.is_zero() {
-                    a
-                } else {
-                    let w2_pt = encode_biguint(&w2, ctx.d());
-                    engine.sub(&a, &engine.mul_plain(&s_prev[j], &w2_pt))
+                let a = engine.mul_plain_prepared(&s_cur[j], &w1_pt);
+                match &w2_pt {
+                    None => a,
+                    Some(w2_pt) => {
+                        engine.sub(&a, &engine.mul_plain_prepared(&s_prev[j], w2_pt))
+                    }
                 }
             })
             .collect();
@@ -231,7 +246,9 @@ pub fn fit_cd(
     let ctx = engine.ctx();
     let (n, p) = (data.n(), data.p());
     let s = CdScaling::new(data.phi, nu);
-    let c_pt = encode_biguint(&s.c_step(), ctx.d());
+    // The step constant is update-invariant and multiplies P + N
+    // ciphertexts per update: cached once for the whole fit.
+    let c_pt = engine.prepare_plaintext(&encode_biguint(&s.c_step(), ctx.d()));
     let mut beta: Vec<Option<Ciphertext>> = vec![None; p];
     let mut r: Vec<Ciphertext> = data.y.to_vec();
     for u in 1..=updates {
@@ -249,9 +266,9 @@ pub fn fit_cd(
             *b = match (b.take(), l == j) {
                 (None, false) => None,
                 (None, true) => Some(g.clone()),
-                (Some(prev), false) => Some(engine.mul_plain(&prev, &c_pt)),
+                (Some(prev), false) => Some(engine.mul_plain_prepared(&prev, &c_pt)),
                 (Some(prev), true) => {
-                    Some(engine.add(&engine.mul_plain(&prev, &c_pt), &g))
+                    Some(engine.add(&engine.mul_plain_prepared(&prev, &c_pt), &g))
                 }
             };
         }
@@ -260,7 +277,7 @@ pub fn fit_cd(
             (0..n).map(|i| (&data.x[i][j], &g)).collect();
         let xg = engine.mul_pairs(&pairs);
         r = (0..n)
-            .map(|i| engine.sub(&engine.mul_plain(&r[i], &c_pt), &xg[i]))
+            .map(|i| engine.sub(&engine.mul_plain_prepared(&r[i], &c_pt), &xg[i]))
             .collect();
     }
     let betas: Vec<Ciphertext> =

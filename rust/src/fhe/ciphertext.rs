@@ -1,11 +1,19 @@
 //! FV ciphertexts.
 
-use crate::math::poly::RnsPoly;
+use crate::math::poly::{Rep, RnsPoly};
 
 /// An FV ciphertext: 2 polynomials (3 transiently, before
-/// relinearisation), always stored in coefficient representation over
-/// the Q basis, plus depth metadata used by admission control and the
-/// paper's MMD accounting.
+/// relinearisation) over the Q basis, plus depth metadata used by
+/// admission control and the paper's MMD accounting.
+///
+/// Each component carries its own [`Rep`] and may legally live in
+/// either representation between operations: fresh encryptions are
+/// `Coeff`, while `mul_plain_prepared` and relinearised `mul_pairs`
+/// products stay **NTT-resident** so consecutive pointwise operations
+/// (adds, cached plaintext multiplies) pay zero transforms. Only the
+/// `rns_mul` base-conversion boundary and decryption force `Coeff`
+/// (lazily, per component). All operations are exact in both domains,
+/// so residency never changes decrypted values.
 #[derive(Clone, Debug)]
 pub struct Ciphertext {
     pub polys: Vec<RnsPoly>,
@@ -29,5 +37,11 @@ impl Ciphertext {
     /// Heap bytes (the paper's Figure-5 memory metric).
     pub fn size_bytes(&self) -> usize {
         self.polys.iter().map(|p| p.size_bytes()).sum()
+    }
+
+    /// True when every component is NTT-resident (diagnostics and the
+    /// transform-budget tests).
+    pub fn is_ntt_resident(&self) -> bool {
+        self.polys.iter().all(|p| p.rep == Rep::Ntt)
     }
 }

@@ -116,6 +116,16 @@ impl FvContext {
         self.ring_q.mul_scalar_rns(&m, &self.delta_rns)
     }
 
+    /// Cache a plaintext operand in NTT form (one forward transform,
+    /// ever). The result is `Arc`-shared, so cloning it per call or
+    /// per thread is free; see
+    /// [`mul_plain_prepared`](Self::mul_plain_prepared).
+    pub fn prepare_plaintext(&self, pt: &Plaintext) -> crate::fhe::plaintext::PlaintextNtt {
+        let mut m = self.pt_to_rns(pt);
+        self.ring_q.ensure_ntt(&mut m);
+        crate::fhe::plaintext::PlaintextNtt { m_ntt: std::sync::Arc::new(m) }
+    }
+
     /// Lift every coefficient of a coefficient-form polynomial to its
     /// symmetric big-integer representative.
     pub fn lift_signed_poly(ring: &RingContext, poly: &RnsPoly) -> Vec<BigInt> {

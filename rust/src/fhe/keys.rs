@@ -50,21 +50,24 @@ pub fn keygen(ctx: &FvContext, rng: &mut ChaChaRng) -> KeySet {
     ring.ntt_forward(&mut s_ntt);
     let s2_ntt = ring.mul_ntt(&s_ntt, &s_ntt);
 
-    // Public key: a ← U(R_q), e ← χ, b = -(a·s + e).
+    // Public key: a ← U(R_q), e ← χ, b = -(a·s + e). The key only
+    // ever lives in NTT form, so the whole identity is evaluated in
+    // the evaluation domain — the error is transformed *forward* once
+    // instead of round-tripping a·s through an inverse and b back
+    // through a forward (NTT is linear, so the sample is identical).
     let a = ring.sample_uniform(rng);
     let mut a_ntt = a.clone();
     ring.ntt_forward(&mut a_ntt);
-    let e = sample_error(ring, rng, ctx.params.cbd_k);
-    let mut as_prod = ring.mul_ntt(&a_ntt, &s_ntt);
-    ring.ntt_inverse(&mut as_prod);
-    let b = ring.neg(&ring.add(&as_prod, &e));
-    let mut b_ntt = b;
-    ring.ntt_forward(&mut b_ntt);
+    let mut e_ntt = sample_error(ring, rng, ctx.params.cbd_k);
+    ring.ntt_forward(&mut e_ntt);
+    let b_ntt = ring.neg(&ring.add(&ring.mul_ntt(&a_ntt, &s_ntt), &e_ntt));
     let pk = PublicKey { b_ntt, a_ntt };
 
     // Relinearisation keys over the per-limb RNS gadget: digit i
     // encodes g_i·s² with g_i = q/q_i mod q, whose residue vector is
-    // zero except [q/q_i]_{q_i} on plane i.
+    // zero except [q/q_i]_{q_i} on plane i. Same all-NTT evaluation:
+    // one forward per error sample, no cancelling inverse/forward
+    // pairs on a_i·s or g_i·s².
     let mut rb = Vec::with_capacity(ctx.relin_ndigits);
     let mut ra = Vec::with_capacity(ctx.relin_ndigits);
     let primes = &ring.basis.primes;
@@ -72,20 +75,16 @@ pub fn keygen(ctx: &FvContext, rng: &mut ChaChaRng) -> KeySet {
         let ai = ring.sample_uniform(rng);
         let mut ai_ntt = ai.clone();
         ring.ntt_forward(&mut ai_ntt);
-        let ei = sample_error(ring, rng, ctx.params.cbd_k);
-        let mut ais = ring.mul_ntt(&ai_ntt, &s_ntt);
-        ring.ntt_inverse(&mut ais);
-        // g_i·s² in coefficient form.
+        let mut ei_ntt = sample_error(ring, rng, ctx.params.cbd_k);
+        ring.ntt_forward(&mut ei_ntt);
+        let ais_ntt = ring.mul_ntt(&ai_ntt, &s_ntt);
         let gi_rns: Vec<u64> = primes
             .iter()
             .enumerate()
             .map(|(l, &p)| if l == i { ring.basis.crt_m[i].mod_u64(p) } else { 0 })
             .collect();
-        let mut gis2 = ring.mul_scalar_rns(&s2_ntt, &gi_rns);
-        ring.ntt_inverse(&mut gis2);
-        let bi = ring.add(&ring.neg(&ring.add(&ais, &ei)), &gis2);
-        let mut bi_ntt = bi;
-        ring.ntt_forward(&mut bi_ntt);
+        let gis2_ntt = ring.mul_scalar_rns(&s2_ntt, &gi_rns);
+        let bi_ntt = ring.add(&ring.neg(&ring.add(&ais_ntt, &ei_ntt)), &gis2_ntt);
         rb.push(bi_ntt);
         ra.push(ai_ntt);
     }

@@ -32,4 +32,4 @@ pub use ciphertext::Ciphertext;
 pub use context::FvContext;
 pub use keys::{keygen, KeySet, PublicKey, RelinKey, SecretKey};
 pub use params::{plan, Algo, FvParams, MulBackend, PlanRequest, SecurityProfile};
-pub use plaintext::Plaintext;
+pub use plaintext::{Plaintext, PlaintextNtt};

@@ -58,45 +58,66 @@ impl FvContext {
     }
 
     /// `[c₀ + c₁s (+ c₂s²)]_q` — the decryption phase polynomial (also
-    /// used by the noise meter).
+    /// used by the noise meter). Accepts any component residency: an
+    /// NTT-resident `c₁`/`c₂` skips its forward transform, a
+    /// NTT-resident `c₀` pays one lazy inverse. Always returns `Coeff`
+    /// (the CRT lift that follows needs power-basis coefficients).
     pub fn raw_phase(&self, ct: &Ciphertext, sk: &SecretKey) -> RnsPoly {
         let ring = &self.ring_q;
         assert!(ct.len() >= 2 && ct.len() <= 3, "ciphertext must have 2 or 3 polys");
-        let mut c1 = ct.polys[1].clone();
-        ring.ntt_forward(&mut c1);
-        let mut v = ring.mul_ntt(&c1, &sk.s_ntt);
+        let c1 = ring.ntt_form(&ct.polys[1]);
+        let mut v = ring.mul_ntt(c1.as_ref(), &sk.s_ntt);
         if ct.len() == 3 {
-            let mut c2 = ct.polys[2].clone();
-            ring.ntt_forward(&mut c2);
-            let c2s2 = ring.mul_ntt(&c2, &sk.s2_ntt);
+            let c2 = ring.ntt_form(&ct.polys[2]);
+            let c2s2 = ring.mul_ntt(c2.as_ref(), &sk.s2_ntt);
             v = ring.add(&v, &c2s2);
         }
         ring.ntt_inverse(&mut v);
-        ring.add(&v, &ct.polys[0])
+        ring.add(&v, ring.coeff_form(&ct.polys[0]).as_ref())
     }
 
-    /// Homomorphic addition (supports mixed 2/3-component operands).
-    pub fn add_ct(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
-        let ring = &self.ring_q;
+    /// Shared component-matching walk for ⊕/⊖ (supports mixed 2/3-
+    /// component operands and mixed per-component residency):
+    /// plane-wise, no zero-polynomial temporaries — `both` combines
+    /// components present on both sides, `only_b` handles a component
+    /// `b` has and `a` lacks (identity for add, negation for sub).
+    fn zip_ct(
+        &self,
+        a: &Ciphertext,
+        b: &Ciphertext,
+        both: impl Fn(&RnsPoly, &RnsPoly) -> RnsPoly,
+        only_b: impl Fn(&RnsPoly) -> RnsPoly,
+    ) -> Ciphertext {
         let n = a.len().max(b.len());
-        let zero = ring.zero();
         let mut polys = Vec::with_capacity(n);
         for i in 0..n {
-            let pa = a.polys.get(i).unwrap_or(&zero);
-            let pb = b.polys.get(i).unwrap_or(&zero);
-            polys.push(ring.add(pa, pb));
+            polys.push(match (a.polys.get(i), b.polys.get(i)) {
+                (Some(pa), Some(pb)) => both(pa, pb),
+                (Some(pa), None) => pa.clone(),
+                (None, Some(pb)) => only_b(pb),
+                (None, None) => unreachable!("component below max(len)"),
+            });
         }
         let mut out = Ciphertext::new(polys);
         out.ct_depth = a.ct_depth.max(b.ct_depth);
         out
     }
 
-    /// Homomorphic subtraction.
-    pub fn sub_ct(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
-        self.add_ct(a, &self.neg_ct(b))
+    /// Homomorphic addition.
+    pub fn add_ct(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let ring = &self.ring_q;
+        self.zip_ct(a, b, |pa, pb| ring.add_mixed(pa, pb), |pb| pb.clone())
     }
 
-    /// Homomorphic negation.
+    /// Homomorphic subtraction — without materialising a negated
+    /// temporary ciphertext.
+    pub fn sub_ct(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let ring = &self.ring_q;
+        self.zip_ct(a, b, |pa, pb| ring.sub_mixed(pa, pb), |pb| ring.neg(pb))
+    }
+
+    /// Homomorphic negation (representation-agnostic: negation is
+    /// element-wise in both domains).
     pub fn neg_ct(&self, a: &Ciphertext) -> Ciphertext {
         let mut out = a.clone();
         for p in out.polys.iter_mut() {
@@ -105,26 +126,38 @@ impl FvContext {
         out
     }
 
-    /// Add a plaintext: `c₀ += Δ·m`.
+    /// Add a plaintext: `c₀ += Δ·m` (if `c₀` is NTT-resident the Δ·m
+    /// term is transformed instead, keeping the residency).
     pub fn add_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
         let mut out = a.clone();
-        out.polys[0] = self.ring_q.add(&out.polys[0], &self.delta_times_pt(pt));
+        out.polys[0] = self.ring_q.add_mixed(&out.polys[0], &self.delta_times_pt(pt));
         out
     }
 
     /// Multiply by a plaintext polynomial (noise grows by ℓ1(m); message
     /// degree grows by deg(m); **no** ciphertext-depth level consumed).
+    /// One-shot form: encodes + transforms the plaintext here. For
+    /// operands reused across calls, cache with
+    /// [`prepare_plaintext`](Self::prepare_plaintext) and call
+    /// [`mul_plain_prepared`](Self::mul_plain_prepared).
     pub fn mul_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        self.mul_plain_prepared(a, &self.prepare_plaintext(pt))
+    }
+
+    /// Multiply by a cached NTT-form plaintext operand: zero transforms
+    /// on the plaintext, at most one forward per ciphertext component
+    /// that is not already NTT-resident, and **no inverse** — the
+    /// product stays NTT-resident for the next pointwise op.
+    pub fn mul_plain_prepared(
+        &self,
+        a: &Ciphertext,
+        m: &crate::fhe::plaintext::PlaintextNtt,
+    ) -> Ciphertext {
         let ring = &self.ring_q;
-        let mut m_ntt = self.pt_to_rns(pt);
-        ring.ntt_forward(&mut m_ntt);
         let mut out = a.clone();
         for p in out.polys.iter_mut() {
-            let mut pn = p.clone();
-            ring.ntt_forward(&mut pn);
-            let mut prod = ring.mul_ntt(&pn, &m_ntt);
-            ring.ntt_inverse(&mut prod);
-            *p = prod;
+            ring.ensure_ntt(p);
+            *p = ring.mul_ntt(p, &m.m_ntt);
         }
         out
     }
@@ -140,18 +173,37 @@ impl FvContext {
         }
     }
 
+    /// [`mul_no_relin`](Self::mul_no_relin) with caller-owned scratch
+    /// and an intra-multiply worker budget (full-RNS backend only; the
+    /// bigint oracle ignores both).
+    pub fn mul_no_relin_with(
+        &self,
+        a: &Ciphertext,
+        b: &Ciphertext,
+        scratch: &mut crate::fhe::rns_mul::MulScratch,
+        workers: usize,
+    ) -> Ciphertext {
+        match self.params.mul_backend {
+            MulBackend::FullRns => self.mul_no_relin_rns_with(a, b, scratch, workers),
+            MulBackend::ExactBigint => self.mul_no_relin_bigint(a, b),
+        }
+    }
+
     /// The exact-bigint tensor product (per-coefficient CRT lifts into
     /// the joint Q∪E basis, exact `⌊t·v/q⌉`). Kept as the correctness
     /// oracle for the full-RNS pipeline.
     pub fn mul_no_relin_bigint(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         assert_eq!(a.len(), 2, "operands must be relinearised");
         assert_eq!(b.len(), 2);
+        let rq = &self.ring_q;
         let big = &self.ring_big;
-        // Lift all four polynomials into the joint basis and NTT them.
-        let mut a0 = self.q_to_big(&a.polys[0]);
-        let mut a1 = self.q_to_big(&a.polys[1]);
-        let mut b0 = self.q_to_big(&b.polys[0]);
-        let mut b1 = self.q_to_big(&b.polys[1]);
+        // Lift all four polynomials into the joint basis and NTT them
+        // (the CRT lift needs power-basis coefficients, so NTT-resident
+        // operands are lazily brought back first).
+        let mut a0 = self.q_to_big(rq.coeff_form(&a.polys[0]).as_ref());
+        let mut a1 = self.q_to_big(rq.coeff_form(&a.polys[1]).as_ref());
+        let mut b0 = self.q_to_big(rq.coeff_form(&b.polys[0]).as_ref());
+        let mut b1 = self.q_to_big(rq.coeff_form(&b.polys[1]).as_ref());
         big.ntt_forward(&mut a0);
         big.ntt_forward(&mut a1);
         big.ntt_forward(&mut b0);
@@ -201,32 +253,52 @@ impl FvContext {
     /// Fold the degree-2 component back onto (c₀, c₁) with the
     /// relinearisation key (per-limb RNS gadget decomposition). The
     /// digit×key-limb products accumulate unreduced in `u128`; the
-    /// whole sum pays one Barrett reduction per coefficient.
+    /// whole sum pays one Barrett reduction per coefficient. The
+    /// result stays **NTT-resident**: instead of inverse-transforming
+    /// the two accumulators, the two tensor components are forward-
+    /// transformed into them (same transform count, and the product is
+    /// immediately consumable by the pointwise ops that follow it in
+    /// the descent loops).
     pub fn relinearize(&self, ct: &Ciphertext, rk: &RelinKey) -> Ciphertext {
         assert_eq!(ct.len(), 3, "nothing to relinearise");
         let ring = &self.ring_q;
         let mut lazy0 = ring.ntt_accumulator();
         let mut lazy1 = ring.ntt_accumulator();
-        for (j, mut dj) in self.relin_digits(&ct.polys[2]).into_iter().enumerate() {
+        for (j, mut dj) in
+            self.relin_digits(ring.coeff_form(&ct.polys[2]).as_ref()).into_iter().enumerate()
+        {
             ring.ntt_forward(&mut dj);
             ring.acc_mul_ntt(&mut lazy0, &dj, &rk.b_ntt[j]);
             ring.acc_mul_ntt(&mut lazy1, &dj, &rk.a_ntt[j]);
         }
         let mut acc0 = ring.acc_reduce(&lazy0);
         let mut acc1 = ring.acc_reduce(&lazy1);
-        ring.ntt_inverse(&mut acc0);
-        ring.ntt_inverse(&mut acc1);
-        let mut out = Ciphertext::new(vec![
-            ring.add(&ct.polys[0], &acc0),
-            ring.add(&ct.polys[1], &acc1),
-        ]);
+        ring.add_assign(&mut acc0, ring.ntt_form(&ct.polys[0]).as_ref());
+        ring.add_assign(&mut acc1, ring.ntt_form(&ct.polys[1]).as_ref());
+        let mut out = Ciphertext::new(vec![acc0, acc1]);
         out.ct_depth = ct.ct_depth;
         out
     }
 
     /// Full homomorphic multiplication: tensor, scale, relinearise.
+    /// The product comes back NTT-resident (see
+    /// [`relinearize`](Self::relinearize)).
     pub fn mul_ct(&self, a: &Ciphertext, b: &Ciphertext, rk: &RelinKey) -> Ciphertext {
         self.relinearize(&self.mul_no_relin(a, b), rk)
+    }
+
+    /// [`mul_ct`](Self::mul_ct) with caller-owned scratch and an
+    /// intra-multiply worker budget — the per-worker form the native
+    /// engine's `mul_pairs` fan-out drives.
+    pub fn mul_ct_with(
+        &self,
+        a: &Ciphertext,
+        b: &Ciphertext,
+        rk: &RelinKey,
+        scratch: &mut crate::fhe::rns_mul::MulScratch,
+        workers: usize,
+    ) -> Ciphertext {
+        self.relinearize(&self.mul_no_relin_with(a, b, scratch, workers), rk)
     }
 }
 
@@ -239,7 +311,12 @@ mod tests {
     use crate::fhe::noise::noise_budget_bits;
     use crate::fhe::params::FvParams;
 
-    fn setup(d: usize, l: usize, t_bits: usize, seed: u64) -> (Arc<FvContext>, super::super::keys::KeySet, ChaChaRng) {
+    fn setup(
+        d: usize,
+        l: usize,
+        t_bits: usize,
+        seed: u64,
+    ) -> (Arc<FvContext>, super::super::keys::KeySet, ChaChaRng) {
         let ctx = FvContext::new(FvParams::custom(d, l, t_bits));
         let mut rng = ChaChaRng::from_seed(seed);
         let keys = keygen(&ctx, &mut rng);
@@ -382,6 +459,91 @@ mod tests {
                 + (k as i128) * (vals[0] as i128);
             assert_eq!(out.eval_at_2().to_i128(), Some(expect));
         });
+    }
+
+    #[test]
+    fn cached_mul_plain_transform_budget() {
+        // The acceptance contract for PlaintextNtt: zero transforms on
+        // the plaintext per call, at most one per non-resident
+        // ciphertext component, none at all once the ciphertext is
+        // NTT-resident — verified through the ring's transform counter.
+        let (ctx, keys, mut rng) = setup(256, 3, 24, 52);
+        let ring = &ctx.ring_q;
+        let m = pt(&ctx, &[1, 0, -1]); // -3 at 2
+        let c = ctx.encrypt(&m, &keys.pk, &mut rng); // Coeff-resident
+        let k = pt(&ctx, &[1, 0, 1, 1]); // 13 at 2
+        let before = ring.transform_count();
+        let cached = ctx.prepare_plaintext(&k);
+        assert_eq!(ring.transform_count() - before, 1, "cache costs one transform, ever");
+        // Cold ciphertext: one forward per component, nothing else.
+        let before = ring.transform_count();
+        let out = ctx.mul_plain_prepared(&c, &cached);
+        assert_eq!(ring.transform_count() - before, c.len() as u64);
+        assert!(out.is_ntt_resident());
+        // NTT-resident ciphertext: zero transforms.
+        let before = ring.transform_count();
+        let out2 = ctx.mul_plain_prepared(&out, &cached);
+        assert_eq!(ring.transform_count() - before, 0, "resident ct × cached pt is free");
+        // And the arithmetic is the one-shot path's, bit for bit.
+        let expect = ctx.decrypt(&ctx.mul_plain(&ctx.mul_plain(&c, &k), &k), &keys.sk);
+        assert_eq!(ctx.decrypt(&out2, &keys.sk), expect);
+        assert_eq!(expect.eval_at_2().to_i128(), Some(-3 * 13 * 13));
+    }
+
+    #[test]
+    fn representation_invariance_exhaustive() {
+        // Run one mixed circuit — ((a·b) − c) + k·a — with the five
+        // ciphertext slots (3 inputs + 2 intermediates) forced into
+        // every Coeff/Ntt residency combination, on both multiply
+        // backends. Decryption must be bit-identical to the all-Coeff
+        // path: representation is a managed property, never a value.
+        use crate::fhe::encoding::encode_int;
+        for backend in [MulBackend::FullRns, MulBackend::ExactBigint] {
+            let mut params = crate::fhe::params::FvParams::custom(256, 4, 22);
+            params.mul_backend = backend;
+            let ctx = FvContext::new(params);
+            let mut rng = ChaChaRng::from_seed(53);
+            let keys = keygen(&ctx, &mut rng);
+            let vals = [137i64, -89, 41];
+            let k = -7i64;
+            let kp = encode_int(k, ctx.d());
+            let cts: Vec<Ciphertext> = vals
+                .iter()
+                .map(|&v| ctx.encrypt(&encode_int(v, ctx.d()), &keys.pk, &mut rng))
+                .collect();
+            let force = |ct: Ciphertext, to_ntt: bool| -> Ciphertext {
+                let mut c = ct;
+                for p in c.polys.iter_mut() {
+                    if to_ntt {
+                        ctx.ring_q.ensure_ntt(p);
+                    } else {
+                        ctx.ring_q.ensure_coeff(p);
+                    }
+                }
+                c
+            };
+            let circuit = |mask: u32| -> Plaintext {
+                let bit = |i: u32| (mask >> i) & 1 == 1;
+                let a = force(cts[0].clone(), bit(0));
+                let b = force(cts[1].clone(), bit(1));
+                let c = force(cts[2].clone(), bit(2));
+                let ab = force(ctx.mul_ct(&a, &b, &keys.rk), bit(3));
+                let t1 = force(ctx.sub_ct(&ab, &c), bit(4));
+                let t2 = ctx.mul_plain(&a, &kp);
+                ctx.decrypt(&ctx.add_ct(&t1, &t2), &keys.sk)
+            };
+            let reference = circuit(0); // the all-Coeff path
+            let expect = vals[0] as i128 * vals[1] as i128 - vals[2] as i128
+                + k as i128 * vals[0] as i128;
+            assert_eq!(reference.eval_at_2().to_i128(), Some(expect));
+            for mask in 1u32..32 {
+                assert_eq!(
+                    circuit(mask),
+                    reference,
+                    "backend {backend:?} residency mask {mask:#07b}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -6,13 +6,30 @@
 //! arithmetic grows both degree and coefficients, exactly as bounded by
 //! the paper's Lemma 3.
 
+use std::sync::Arc;
+
 use crate::math::bigint::{BigInt, BigUint};
+use crate::math::poly::RnsPoly;
 
 /// A plaintext polynomial: signed coefficients, length = ring degree
 /// (trailing zeros allowed), reduced to the symmetric range mod t.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Plaintext {
     pub coeffs: Vec<BigInt>,
+}
+
+/// A plaintext operand cached in evaluation form: the message reduced
+/// to Q-basis residues and NTT'd **once**, then `Arc`-shared across
+/// iterations and worker threads. Built by
+/// [`FvContext::prepare_plaintext`](super::context::FvContext::prepare_plaintext);
+/// consumed by `mul_plain_prepared`, which therefore spends zero NTT
+/// transforms on the plaintext side no matter how many ciphertexts the
+/// operand multiplies (the GD/NAG/VWT step constants and the CD carry
+/// constant are reused `O(N·K)` times each).
+#[derive(Clone, Debug)]
+pub struct PlaintextNtt {
+    /// The cached evaluation-form operand (always `Rep::Ntt`, Q basis).
+    pub m_ntt: Arc<RnsPoly>,
 }
 
 impl Plaintext {

@@ -28,11 +28,59 @@
 use crate::math::baseconv::{BaseConverter, ShenoyConverter};
 use crate::math::bigint::BigUint;
 use crate::math::modarith::{invmod_prime, submod, ShoupConstant};
-use crate::math::poly::{RingContext, RnsPoly};
+use crate::math::poly::{Rep, RingContext, RnsPoly};
 
 use super::ciphertext::Ciphertext;
 use super::context::FvContext;
 use super::params::MulBackend;
+
+/// Reusable working buffers for the tensor/scale path: one per worker,
+/// created once per `mul_pairs` batch (see
+/// `util::pool::parallel_map_with`) instead of three plane-major
+/// `Vec<Vec<u64>>` allocations per scale-and-round call (nine per
+/// multiply).
+pub struct MulScratch {
+    /// `[t·v]_q` canonical residues per Q plane.
+    z_q: Vec<Vec<u64>>,
+    /// `z` extended to `B ∪ {m_sk}`.
+    z_ext: Vec<Vec<u64>>,
+    /// `r = (t·v − z)/q` on the extension planes.
+    r_ext: Vec<Vec<u64>>,
+}
+
+impl MulScratch {
+    /// Pre-sized buffers for `ctx` (allocates immediately).
+    pub fn new(ctx: &FvContext) -> Self {
+        let d = ctx.d();
+        MulScratch {
+            z_q: vec![vec![0u64; d]; ctx.ring_q.nlimbs()],
+            z_ext: vec![vec![0u64; d]; ctx.ring_ext.nlimbs()],
+            r_ext: vec![vec![0u64; d]; ctx.ring_ext.nlimbs()],
+        }
+    }
+
+    /// Empty holder: buffers are sized on first full-RNS use, so a
+    /// worker on the `ExactBigint` oracle backend (which never touches
+    /// the scratch) costs three empty `Vec`s, not `(L_q + 2·L_ext)·d`
+    /// words.
+    pub fn empty() -> Self {
+        MulScratch { z_q: Vec::new(), z_ext: Vec::new(), r_ext: Vec::new() }
+    }
+
+    /// Size the buffers for `ctx` if they are not already. Checks all
+    /// three buffer sets, so a scratch reused across contexts that
+    /// happen to share the Q shape but differ in the extension basis
+    /// is resized rather than passed through stale.
+    fn ensure(&mut self, ctx: &FvContext) {
+        let sized = self.z_q.len() == ctx.ring_q.nlimbs()
+            && self.z_ext.len() == ctx.ring_ext.nlimbs()
+            && self.r_ext.len() == ctx.ring_ext.nlimbs()
+            && self.z_q.first().is_some_and(|pl| pl.len() == ctx.d());
+        if !sized {
+            *self = MulScratch::new(ctx);
+        }
+    }
+}
 
 /// Precomputed tables for the full-RNS multiply under one context.
 #[derive(Clone, Debug)]
@@ -76,9 +124,15 @@ impl FvContext {
     /// Extend a Q-basis polynomial (coefficient rep) to the extension
     /// ring `B ∪ {m_sk}`, centered representatives per coefficient.
     pub fn q_to_ext(&self, poly: &RnsPoly) -> RnsPoly {
-        assert_eq!(poly.rep, crate::math::poly::Rep::Coeff);
+        self.q_to_ext_workers(poly, 1)
+    }
+
+    /// [`q_to_ext`](Self::q_to_ext) with the per-coefficient conversion
+    /// fanned across up to `workers` threads.
+    pub fn q_to_ext_workers(&self, poly: &RnsPoly, workers: usize) -> RnsPoly {
+        assert_eq!(poly.rep, Rep::Coeff);
         let mut out = self.ring_ext.zero();
-        self.rns.fwd.convert_signed(&poly.planes, &mut out.planes);
+        self.rns.fwd.convert_signed_workers(&poly.planes, &mut out.planes, workers);
         out
     }
 
@@ -86,29 +140,40 @@ impl FvContext {
     /// Q planes (`c_q`) and the extension planes (`c_ext`), both in
     /// coefficient rep; the result lands back on Q.
     pub fn scale_round_rns(&self, c_q: &RnsPoly, c_ext: &RnsPoly) -> RnsPoly {
-        assert_eq!(c_q.rep, crate::math::poly::Rep::Coeff);
-        assert_eq!(c_ext.rep, crate::math::poly::Rep::Coeff);
+        self.scale_round_rns_with(c_q, c_ext, &mut MulScratch::new(self), 1)
+    }
+
+    /// [`scale_round_rns`](Self::scale_round_rns) against caller-owned
+    /// scratch buffers (reused across a batch) with the base
+    /// conversions fanned across up to `workers` threads.
+    pub fn scale_round_rns_with(
+        &self,
+        c_q: &RnsPoly,
+        c_ext: &RnsPoly,
+        scratch: &mut MulScratch,
+        workers: usize,
+    ) -> RnsPoly {
+        assert_eq!(c_q.rep, Rep::Coeff);
+        assert_eq!(c_ext.rep, Rep::Coeff);
+        scratch.ensure(self);
         let rq = &self.ring_q;
         let re = &self.ring_ext;
         let d = rq.d;
         // z = [t·v]_q per Q plane (canonical residues of the centered z).
-        let mut z_planes = vec![vec![0u64; d]; rq.nlimbs()];
         for (i, tm) in self.rns.t_mod_q.iter().enumerate() {
-            let (src, dst) = (&c_q.planes[i], &mut z_planes[i]);
+            let (src, dst) = (&c_q.planes[i], &mut scratch.z_q[i]);
             for c in 0..d {
                 dst[c] = tm.mul(src[c]);
             }
         }
         // Extend z to B ∪ {m_sk} (centered: |z| ≤ q/2).
-        let mut z_ext = vec![vec![0u64; d]; re.nlimbs()];
-        self.rns.fwd.convert_signed(&z_planes, &mut z_ext);
+        self.rns.fwd.convert_signed_workers(&scratch.z_q, &mut scratch.z_ext, workers);
         // r = (t·v − z)·q^{-1} on every extension plane — exact
         // division, since t·v ≡ z (mod q) as integers.
-        let mut r_planes = vec![vec![0u64; d]; re.nlimbs()];
         for (e, &p) in re.basis.primes.iter().enumerate() {
             let tm = &self.rns.t_mod_ext[e];
             let qi = &self.rns.q_inv_ext[e];
-            let (src, zs, dst) = (&c_ext.planes[e], &z_ext[e], &mut r_planes[e]);
+            let (src, zs, dst) = (&c_ext.planes[e], &scratch.z_ext[e], &mut scratch.r_ext[e]);
             for c in 0..d {
                 let tv = tm.mul(src[c]);
                 dst[c] = qi.mul(submod(tv, zs[c], p));
@@ -117,7 +182,12 @@ impl FvContext {
         // Exact Shenoy–Kumaresan conversion back to Q.
         let lb = re.nlimbs() - 1;
         let mut out = rq.zero();
-        self.rns.back.convert(&r_planes[..lb], &r_planes[lb], &mut out.planes);
+        self.rns.back.convert_workers(
+            &scratch.r_ext[..lb],
+            &scratch.r_ext[lb],
+            &mut out.planes,
+            workers,
+        );
         out
     }
 
@@ -125,39 +195,69 @@ impl FvContext {
     /// [`MulBackend::FullRns`] counterpart of
     /// [`mul_no_relin_bigint`](FvContext::mul_no_relin_bigint).
     pub fn mul_no_relin_rns(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.mul_no_relin_rns_with(a, b, &mut MulScratch::new(self), 1)
+    }
+
+    /// [`mul_no_relin_rns`](Self::mul_no_relin_rns) with caller-owned
+    /// scratch and an intra-multiply worker budget (`workers` fans the
+    /// per-limb NTT planes and the base-conversion coefficient ranges;
+    /// results are bit-identical for every worker count).
+    ///
+    /// Operands may arrive in either residency: a `Coeff` component
+    /// pays one forward NTT for its Q planes (base extension reads it
+    /// directly), an NTT-resident component pays one inverse for the
+    /// base extension (its Q planes are reused as-is) — the transform
+    /// bill is the same, so residency upstream is never penalised here.
+    pub fn mul_no_relin_rns_with(
+        &self,
+        a: &Ciphertext,
+        b: &Ciphertext,
+        scratch: &mut MulScratch,
+        workers: usize,
+    ) -> Ciphertext {
         assert_eq!(a.len(), 2, "operands must be relinearised");
         assert_eq!(b.len(), 2);
         let rq = &self.ring_q;
         let re = &self.ring_ext;
         let operands = [&a.polys[0], &a.polys[1], &b.polys[0], &b.polys[1]];
-        // Q planes: the original residues, NTT'd.
-        let mut q_ops: Vec<RnsPoly> = operands.iter().map(|p| (**p).clone()).collect();
-        for p in q_ops.iter_mut() {
-            rq.ntt_forward(p);
-        }
-        // Extension planes: centered base extension, then NTT.
-        let mut e_ops: Vec<RnsPoly> = operands.iter().map(|p| self.q_to_ext(p)).collect();
-        for p in e_ops.iter_mut() {
-            re.ntt_forward(p);
+        let mut q_ops: Vec<RnsPoly> = Vec::with_capacity(4);
+        let mut e_ops: Vec<RnsPoly> = Vec::with_capacity(4);
+        for p in operands {
+            let mut ext = match p.rep {
+                Rep::Coeff => {
+                    let mut n = p.clone();
+                    rq.ntt_forward_workers(&mut n, workers);
+                    q_ops.push(n);
+                    self.q_to_ext_workers(p, workers)
+                }
+                Rep::Ntt => {
+                    let mut c = p.clone();
+                    rq.ntt_inverse_workers(&mut c, workers);
+                    q_ops.push(p.clone());
+                    self.q_to_ext_workers(&c, workers)
+                }
+            };
+            re.ntt_forward_workers(&mut ext, workers);
+            e_ops.push(ext);
         }
         // Tensor product on both rings.
-        fn tensor(ring: &RingContext, ops: &[RnsPoly]) -> [RnsPoly; 3] {
+        fn tensor(ring: &RingContext, ops: &[RnsPoly], workers: usize) -> [RnsPoly; 3] {
             let mut c0 = ring.mul_ntt(&ops[0], &ops[2]);
             let mut c1 =
                 ring.add(&ring.mul_ntt(&ops[0], &ops[3]), &ring.mul_ntt(&ops[1], &ops[2]));
             let mut c2 = ring.mul_ntt(&ops[1], &ops[3]);
-            ring.ntt_inverse(&mut c0);
-            ring.ntt_inverse(&mut c1);
-            ring.ntt_inverse(&mut c2);
+            ring.ntt_inverse_workers(&mut c0, workers);
+            ring.ntt_inverse_workers(&mut c1, workers);
+            ring.ntt_inverse_workers(&mut c2, workers);
             [c0, c1, c2]
         }
-        let cq = tensor(rq, &q_ops);
-        let ce = tensor(re, &e_ops);
+        let cq = tensor(rq, &q_ops, workers);
+        let ce = tensor(re, &e_ops, workers);
         // Scale each component by t/q back into Q.
         let polys = cq
             .iter()
             .zip(ce.iter())
-            .map(|(q_part, e_part)| self.scale_round_rns(q_part, e_part))
+            .map(|(q_part, e_part)| self.scale_round_rns_with(q_part, e_part, scratch, workers))
             .collect();
         let mut out = Ciphertext::new(polys);
         out.ct_depth = a.ct_depth.max(b.ct_depth) + 1;
@@ -235,6 +335,32 @@ mod tests {
             assert_eq!(dec, big_ctx.decrypt(&full_big, &keys.sk));
             assert_eq!(dec.eval_at_2().to_i128(), Some(a as i128 * b as i128));
         });
+    }
+
+    #[test]
+    fn intra_multiply_workers_are_bit_identical() {
+        // The inner fan-out (plane-parallel NTTs + chunked base
+        // conversions) must reproduce the serial multiply exactly, for
+        // fresh (Coeff) and NTT-resident operands alike. The engine
+        // only engages this path on large rings, so drive it directly.
+        let (ctx, _) = ctx_pair(256, 3, 24);
+        let mut rng = ChaChaRng::from_seed(94);
+        let keys = keygen(&ctx, &mut rng);
+        let ca = ctx.encrypt(&encode_int(123, ctx.d()), &keys.pk, &mut rng);
+        let cb = ctx.encrypt(&encode_int(-45, ctx.d()), &keys.pk, &mut rng);
+        let mut cb_ntt = cb.clone();
+        for p in cb_ntt.polys.iter_mut() {
+            ctx.ring_q.ensure_ntt(p);
+        }
+        let serial = ctx.mul_no_relin_rns(&ca, &cb);
+        for workers in [2usize, 4, 8] {
+            let mut scratch = MulScratch::new(&ctx);
+            let par = ctx.mul_no_relin_rns_with(&ca, &cb, &mut scratch, workers);
+            assert_eq!(par.polys, serial.polys, "coeff operands, workers {workers}");
+            // Mixed residency through the same scratch (reuse check).
+            let par_mixed = ctx.mul_no_relin_rns_with(&ca, &cb_ntt, &mut scratch, workers);
+            assert_eq!(par_mixed.polys, serial.polys, "mixed operands, workers {workers}");
+        }
     }
 
     #[test]

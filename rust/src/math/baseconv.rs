@@ -26,6 +26,50 @@
 //! (`base_convert_signed`, `shenoy_convert`).
 
 use super::modarith::{invmod_prime, mulmod, submod, BarrettConstant, ShoupConstant};
+use crate::util::pool::parallel_map_workers;
+
+/// Split `0..d` into up to `workers` contiguous ranges (all non-empty).
+fn coeff_ranges(d: usize, workers: usize) -> Vec<(usize, usize)> {
+    let chunk = d.div_ceil(workers.max(1));
+    (0..workers.max(1))
+        .map(|w| (w * chunk, d.min((w + 1) * chunk)))
+        .filter(|(s, e)| s < e)
+        .collect()
+}
+
+/// Shared fan-out scaffolding for both converters: split the
+/// coefficient range across `workers`, give each worker its own
+/// `y`/`out` scratch (length `n_src`/`n_tgt`), run `convert(c, y, out)`
+/// per coefficient, and stitch the per-range columns back into the
+/// plane-major `out_planes`. Output order is the input order, so the
+/// result is bit-identical to a serial pass for any worker count.
+fn fan_convert(
+    d: usize,
+    workers: usize,
+    n_src: usize,
+    n_tgt: usize,
+    out_planes: &mut [Vec<u64>],
+    convert: impl Fn(usize, &mut [u64], &mut [u64]) + Send + Sync,
+) {
+    let ranges = coeff_ranges(d, workers);
+    let parts = parallel_map_workers(ranges.clone(), workers, |(s, e)| {
+        let mut y = vec![0u64; n_src];
+        let mut out = vec![0u64; n_tgt];
+        let mut cols = vec![vec![0u64; e - s]; n_tgt];
+        for c in s..e {
+            convert(c, &mut y, &mut out);
+            for (t, &v) in out.iter().enumerate() {
+                cols[t][c - s] = v;
+            }
+        }
+        cols
+    });
+    for ((s, e), cols) in ranges.into_iter().zip(parts) {
+        for (t, col) in cols.into_iter().enumerate() {
+            out_planes[t][s..e].copy_from_slice(&col);
+        }
+    }
+}
 
 /// Accumulator headroom: `Σ y_i·m_i < L·2^60` must fit `u128`, and the
 /// fixed-point sum `Σ ⌊y_i·2^64/p_i⌋ < L·2^64` must too.
@@ -155,6 +199,27 @@ impl BaseConverter {
         self.convert_one(|i| residues[i], &mut y, &mut out);
         out
     }
+
+    /// [`convert_signed`](Self::convert_signed) with the coefficient
+    /// range fanned across up to `workers` threads (each conversion is
+    /// per-coefficient independent, so the split is bit-identical to
+    /// the serial pass for any worker count).
+    pub fn convert_signed_workers(
+        &self,
+        src_planes: &[Vec<u64>],
+        out_planes: &mut [Vec<u64>],
+        workers: usize,
+    ) {
+        if workers <= 1 {
+            return self.convert_signed(src_planes, out_planes);
+        }
+        assert_eq!(src_planes.len(), self.src.len());
+        assert_eq!(out_planes.len(), self.tgt.len());
+        let d = src_planes[0].len();
+        fan_convert(d, workers, self.src.len(), self.tgt.len(), out_planes, |c, y, out| {
+            self.convert_one(|i| src_planes[i][c], y, out)
+        });
+    }
 }
 
 /// Exact Shenoy–Kumaresan base conversion `B → tgt` using a redundant
@@ -280,6 +345,26 @@ impl ShenoyConverter {
         self.convert_one(|j| residues[j], res_msk, &mut y, &mut out);
         out
     }
+
+    /// [`convert`](Self::convert) with the coefficient range fanned
+    /// across up to `workers` threads (bit-identical for any count).
+    pub fn convert_workers(
+        &self,
+        b_planes: &[Vec<u64>],
+        msk_plane: &[u64],
+        out_planes: &mut [Vec<u64>],
+        workers: usize,
+    ) {
+        if workers <= 1 {
+            return self.convert(b_planes, msk_plane, out_planes);
+        }
+        assert_eq!(b_planes.len(), self.b.len());
+        assert_eq!(out_planes.len(), self.tgt.len());
+        let d = msk_plane.len();
+        fan_convert(d, workers, self.b.len(), self.tgt.len(), out_planes, |c, y, out| {
+            self.convert_one(|j| b_planes[j][c], msk_plane[c], y, out)
+        });
+    }
 }
 
 #[cfg(test)]
@@ -384,6 +469,53 @@ mod tests {
             for t in 0..tgt_all.len() {
                 assert_eq!(out[t][c], expect[t], "coeff {c} target {t}");
             }
+        }
+    }
+
+    #[test]
+    fn worker_fanout_is_bit_identical() {
+        // Both converters must produce the serial result for every
+        // worker count, including counts beyond the coefficient range.
+        let (src, tgt, msk) = split(64, 3, 3);
+        let d = 64;
+        let mut rng = crate::fhe::rng::ChaChaRng::from_seed(78);
+        let fwd = {
+            let mut tgt_all = tgt.clone();
+            tgt_all.push(msk);
+            BaseConverter::new(&src, &tgt_all)
+        };
+        let src_planes: Vec<Vec<u64>> = src
+            .iter()
+            .map(|&p| (0..d).map(|_| rng.uniform_below(p)).collect())
+            .collect();
+        let mut serial = vec![vec![0u64; d]; tgt.len() + 1];
+        fwd.convert_signed(&src_planes, &mut serial);
+        for workers in [2usize, 3, 7, 64, 100] {
+            let mut par = vec![vec![0u64; d]; tgt.len() + 1];
+            fwd.convert_signed_workers(&src_planes, &mut par, workers);
+            assert_eq!(par, serial, "forward workers = {workers}");
+        }
+        // Shenoy: uniform B residues with the exact m_sk plane of their
+        // signed lift (any value in (−B/2, B/2] is valid input).
+        let back = ShenoyConverter::new(&tgt, msk, &src);
+        let b_basis = RnsBasis::new(tgt.clone());
+        let b_planes: Vec<Vec<u64>> = tgt
+            .iter()
+            .map(|&p| (0..d).map(|_| rng.uniform_below(p)).collect())
+            .collect();
+        let msk_plane: Vec<u64> = (0..d)
+            .map(|c| {
+                let residues: Vec<u64> =
+                    (0..tgt.len()).map(|j| b_planes[j][c]).collect();
+                b_basis.lift_signed(&residues).mod_u64(msk)
+            })
+            .collect();
+        let mut back_serial = vec![vec![0u64; d]; src.len()];
+        back.convert(&b_planes, &msk_plane, &mut back_serial);
+        for workers in [2usize, 5, 64] {
+            let mut par = vec![vec![0u64; d]; src.len()];
+            back.convert_workers(&b_planes, &msk_plane, &mut par, workers);
+            assert_eq!(par, back_serial, "shenoy workers = {workers}");
         }
     }
 

@@ -5,12 +5,26 @@
 //! Polynomials carry a representation flag: `Coeff` (power basis) or
 //! `Ntt` (evaluation basis). Additions work in either representation
 //! (element-wise in both); multiplications require `Ntt`.
+//!
+//! Representation is a *managed property*, not an implicit invariant:
+//! [`ensure_ntt`](RingContext::ensure_ntt) /
+//! [`ensure_coeff`](RingContext::ensure_coeff) convert lazily,
+//! [`add_mixed`](RingContext::add_mixed) /
+//! [`sub_mixed`](RingContext::sub_mixed) reconcile mixed-rep operands
+//! (coercing toward `Ntt`, the steady-state residency of the encrypted
+//! descent loops), and every forward/inverse transform bumps a
+//! per-ring counter ([`transform_count`](RingContext::transform_count))
+//! so tests can assert that cached operands and NTT-resident
+//! ciphertexts really skip transforms.
 
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::crt::RnsBasis;
 use super::modarith::{addmod, negmod, submod, ShoupConstant};
 use super::ntt::NttTable;
+use crate::util::pool::parallel_map_workers;
 
 /// Hard cap on the number of `acc_mul_ntt` terms an [`NttAccumulator`]
 /// may absorb before [`acc_reduce`](RingContext::acc_reduce): plane
@@ -35,12 +49,28 @@ pub struct RingContext {
     pub d: usize,
     pub basis: RnsBasis,
     pub tables: Vec<NttTable>,
+    /// Forward + inverse transforms performed through this ring (one
+    /// count per polynomial, not per limb) — the test hook behind the
+    /// cached-operand / NTT-residency transform-budget assertions.
+    transforms: AtomicU64,
 }
 
 impl RingContext {
     pub fn new(d: usize, primes: Vec<u64>) -> Arc<Self> {
         let tables = primes.iter().map(|&p| NttTable::new(p, d)).collect();
-        Arc::new(RingContext { d, basis: RnsBasis::new(primes), tables })
+        Arc::new(RingContext {
+            d,
+            basis: RnsBasis::new(primes),
+            tables,
+            transforms: AtomicU64::new(0),
+        })
+    }
+
+    /// Total forward + inverse NTTs this ring has performed (whole-poly
+    /// granularity). Monotone; diff two snapshots around an operation
+    /// to measure its transform budget.
+    pub fn transform_count(&self) -> u64 {
+        self.transforms.load(Ordering::Relaxed)
     }
 
     pub fn nlimbs(&self) -> usize {
@@ -70,20 +100,96 @@ impl RingContext {
 
     /// Forward NTT in place.
     pub fn ntt_forward(&self, poly: &mut RnsPoly) {
-        assert_eq!(poly.rep, Rep::Coeff, "poly already in NTT form");
-        for (l, table) in self.tables.iter().enumerate() {
-            table.forward(&mut poly.planes[l]);
-        }
-        poly.rep = Rep::Ntt;
+        self.ntt_forward_workers(poly, 1);
     }
 
     /// Inverse NTT in place.
     pub fn ntt_inverse(&self, poly: &mut RnsPoly) {
+        self.ntt_inverse_workers(poly, 1);
+    }
+
+    /// Forward NTT with the limb planes fanned across up to `workers`
+    /// threads. Bit-identical to the serial transform for any worker
+    /// count (each plane is independent and order is preserved).
+    pub fn ntt_forward_workers(&self, poly: &mut RnsPoly, workers: usize) {
+        assert_eq!(poly.rep, Rep::Coeff, "poly already in NTT form");
+        self.transforms.fetch_add(1, Ordering::Relaxed);
+        if workers <= 1 || self.nlimbs() == 1 {
+            for (l, table) in self.tables.iter().enumerate() {
+                table.forward(&mut poly.planes[l]);
+            }
+        } else {
+            let planes = std::mem::take(&mut poly.planes);
+            let jobs: Vec<(Vec<u64>, &NttTable)> =
+                planes.into_iter().zip(self.tables.iter()).collect();
+            poly.planes = parallel_map_workers(jobs, workers, |(mut pl, table)| {
+                table.forward(&mut pl);
+                pl
+            });
+        }
+        poly.rep = Rep::Ntt;
+    }
+
+    /// Inverse NTT with the limb planes fanned across up to `workers`
+    /// threads (see [`ntt_forward_workers`](Self::ntt_forward_workers)).
+    pub fn ntt_inverse_workers(&self, poly: &mut RnsPoly, workers: usize) {
         assert_eq!(poly.rep, Rep::Ntt, "poly not in NTT form");
-        for (l, table) in self.tables.iter().enumerate() {
-            table.inverse(&mut poly.planes[l]);
+        self.transforms.fetch_add(1, Ordering::Relaxed);
+        if workers <= 1 || self.nlimbs() == 1 {
+            for (l, table) in self.tables.iter().enumerate() {
+                table.inverse(&mut poly.planes[l]);
+            }
+        } else {
+            let planes = std::mem::take(&mut poly.planes);
+            let jobs: Vec<(Vec<u64>, &NttTable)> =
+                planes.into_iter().zip(self.tables.iter()).collect();
+            poly.planes = parallel_map_workers(jobs, workers, |(mut pl, table)| {
+                table.inverse(&mut pl);
+                pl
+            });
         }
         poly.rep = Rep::Coeff;
+    }
+
+    /// Lazily bring a polynomial to NTT form (no-op when already there).
+    pub fn ensure_ntt(&self, poly: &mut RnsPoly) {
+        if poly.rep == Rep::Coeff {
+            self.ntt_forward(poly);
+        }
+    }
+
+    /// Lazily bring a polynomial to coefficient form (no-op when
+    /// already there).
+    pub fn ensure_coeff(&self, poly: &mut RnsPoly) {
+        if poly.rep == Rep::Ntt {
+            self.ntt_inverse(poly);
+        }
+    }
+
+    /// Borrow `poly` if it is already in NTT form, else a converted
+    /// clone — the read-only counterpart of [`ensure_ntt`](Self::ensure_ntt).
+    pub fn ntt_form<'a>(&self, poly: &'a RnsPoly) -> Cow<'a, RnsPoly> {
+        match poly.rep {
+            Rep::Ntt => Cow::Borrowed(poly),
+            Rep::Coeff => {
+                let mut c = poly.clone();
+                self.ntt_forward(&mut c);
+                Cow::Owned(c)
+            }
+        }
+    }
+
+    /// Borrow `poly` if it is already in coefficient form, else a
+    /// converted clone.
+    pub fn coeff_form<'a>(&self, poly: &'a RnsPoly) -> Cow<'a, RnsPoly> {
+        match poly.rep {
+            Rep::Coeff => Cow::Borrowed(poly),
+            Rep::Ntt => {
+                let mut c = poly.clone();
+                self.ntt_inverse(&mut c);
+                Cow::Owned(c)
+            }
+        }
     }
 
     /// `a + b` (must share representation).
@@ -117,6 +223,39 @@ impl RingContext {
             }
         }
         out
+    }
+
+    /// `a + b` with representation reconciliation: same-rep operands
+    /// add directly (in whichever rep they share); mixed-rep operands
+    /// coerce the `Coeff` side to `Ntt` (the NTT residency is the
+    /// steady state of the descent loops, so the forward transform
+    /// paid here is one a later multiply would have paid anyway).
+    /// Exact in both domains — the NTT is a bijective linear map.
+    pub fn add_mixed(&self, a: &RnsPoly, b: &RnsPoly) -> RnsPoly {
+        if a.rep == b.rep {
+            return self.add(a, b);
+        }
+        let (mut out, resident) = if a.rep == Rep::Ntt { (b.clone(), a) } else { (a.clone(), b) };
+        self.ntt_forward(&mut out);
+        self.add_assign(&mut out, resident);
+        out
+    }
+
+    /// `a - b` with representation reconciliation (see
+    /// [`add_mixed`](Self::add_mixed) for the coercion policy).
+    pub fn sub_mixed(&self, a: &RnsPoly, b: &RnsPoly) -> RnsPoly {
+        if a.rep == b.rep {
+            return self.sub(a, b);
+        }
+        if a.rep == Rep::Coeff {
+            let mut an = a.clone();
+            self.ntt_forward(&mut an);
+            self.sub(&an, b)
+        } else {
+            let mut bn = b.clone();
+            self.ntt_forward(&mut bn);
+            self.sub(a, &bn)
+        }
     }
 
     /// `-a`.
@@ -418,5 +557,72 @@ mod tests {
         let ctx = ctx(16, 1);
         let a = ctx.zero();
         let _ = ctx.mul_ntt(&a, &a);
+    }
+
+    #[test]
+    fn mixed_rep_add_sub_match_coeff_path() {
+        let ctx = ctx(64, 3);
+        let mut rng = ChaChaRng::from_seed(16);
+        let a = ctx.sample_uniform(&mut rng);
+        let b = ctx.sample_uniform(&mut rng);
+        let sum_ref = ctx.add(&a, &b);
+        let diff_ref = ctx.sub(&a, &b);
+        // All four residency combinations must agree bit-for-bit after
+        // normalising back to coefficient form.
+        for (a_ntt, b_ntt) in [(false, false), (false, true), (true, false), (true, true)] {
+            let mut av = a.clone();
+            let mut bv = b.clone();
+            if a_ntt {
+                ctx.ntt_forward(&mut av);
+            }
+            if b_ntt {
+                ctx.ntt_forward(&mut bv);
+            }
+            let mut sum = ctx.add_mixed(&av, &bv);
+            ctx.ensure_coeff(&mut sum);
+            assert_eq!(sum, sum_ref, "add a_ntt={a_ntt} b_ntt={b_ntt}");
+            let mut diff = ctx.sub_mixed(&av, &bv);
+            ctx.ensure_coeff(&mut diff);
+            assert_eq!(diff, diff_ref, "sub a_ntt={a_ntt} b_ntt={b_ntt}");
+        }
+    }
+
+    #[test]
+    fn ensure_and_form_helpers_are_lazy() {
+        let ctx = ctx(32, 2);
+        let mut rng = ChaChaRng::from_seed(17);
+        let a = ctx.sample_uniform(&mut rng);
+        let t0 = ctx.transform_count();
+        // Borrow path: already in the requested rep — zero transforms.
+        assert!(matches!(ctx.coeff_form(&a), Cow::Borrowed(_)));
+        assert_eq!(ctx.transform_count(), t0);
+        // Convert path: one transform, original untouched.
+        let an = ctx.ntt_form(&a);
+        assert_eq!(an.rep, Rep::Ntt);
+        assert_eq!(a.rep, Rep::Coeff);
+        assert_eq!(ctx.transform_count(), t0 + 1);
+        // ensure_* round trip is exact and counts both transforms.
+        let mut v = a.clone();
+        ctx.ensure_ntt(&mut v);
+        ctx.ensure_ntt(&mut v); // no-op
+        ctx.ensure_coeff(&mut v);
+        assert_eq!(v, a);
+        assert_eq!(ctx.transform_count(), t0 + 3);
+    }
+
+    #[test]
+    fn plane_parallel_ntt_is_bit_identical() {
+        let ctx = ctx(64, 4);
+        let mut rng = ChaChaRng::from_seed(18);
+        let a = ctx.sample_uniform(&mut rng);
+        let mut serial = a.clone();
+        ctx.ntt_forward_workers(&mut serial, 1);
+        for workers in [2usize, 4, 8] {
+            let mut par = a.clone();
+            ctx.ntt_forward_workers(&mut par, workers);
+            assert_eq!(par, serial, "forward workers = {workers}");
+            ctx.ntt_inverse_workers(&mut par, workers);
+            assert_eq!(par, a, "inverse workers = {workers}");
+        }
     }
 }

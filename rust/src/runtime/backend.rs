@@ -10,8 +10,9 @@
 use std::sync::Arc;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::fhe::{Ciphertext, FvContext, MulBackend, Plaintext, RelinKey};
-use crate::util::pool::parallel_map;
+use crate::fhe::rns_mul::MulScratch;
+use crate::fhe::{Ciphertext, FvContext, MulBackend, Plaintext, PlaintextNtt, RelinKey};
+use crate::util::pool::{parallel_map_with, pool_workers};
 
 /// Operation counters (fig5 instrumentation and batching diagnostics).
 #[derive(Default, Debug)]
@@ -32,6 +33,14 @@ impl OpStats {
         )
     }
 }
+
+/// Minimum ring degree for the *intra*-multiply worker fan-out. Below
+/// this, one NTT limb plane (`d·log d` butterflies) or base-conversion
+/// chunk is only a few microseconds of work — less than a scoped-thread
+/// spawn+join — so leftover budget would buy thread churn, not speed.
+/// At `d ≥ 2048` a plane is tens of microseconds and the split pays.
+/// Batch-level parallelism (and per-worker scratch reuse) is unaffected.
+const INTRA_MUL_MIN_DEGREE: usize = 2048;
 
 /// A homomorphic evaluation engine bound to one FV context + relin key.
 pub trait HeEngine: Send + Sync {
@@ -63,6 +72,21 @@ pub trait HeEngine: Send + Sync {
         self.ctx().mul_plain(a, pt)
     }
 
+    /// Cache a plaintext operand in NTT form for repeated
+    /// [`mul_plain_prepared`](Self::mul_plain_prepared) calls — one
+    /// forward transform total, `Arc`-shared.
+    fn prepare_plaintext(&self, pt: &Plaintext) -> PlaintextNtt {
+        self.ctx().prepare_plaintext(pt)
+    }
+
+    /// Plaintext multiply against a cached operand: zero plaintext
+    /// transforms, ≤ 1 forward per non-resident ciphertext component,
+    /// NTT-resident result.
+    fn mul_plain_prepared(&self, a: &Ciphertext, m: &PlaintextNtt) -> Ciphertext {
+        self.stats().plain_muls.fetch_add(1, Ordering::Relaxed);
+        self.ctx().mul_plain_prepared(a, m)
+    }
+
     /// Convenience single multiplication.
     fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         self.mul_pairs(&[(a, b)]).pop().unwrap()
@@ -73,22 +97,50 @@ pub trait HeEngine: Send + Sync {
 /// The arithmetic backend (full-RNS vs exact-bigint oracle) rides on
 /// the context's [`MulBackend`]; [`NativeEngine::with_backend`]
 /// overrides it at construction.
+///
+/// The `mul_pairs` fan-out splits the worker budget (`ELS_POOL_WORKERS`
+/// or `available_parallelism`, overridable per engine) two ways: up to
+/// `len(pairs)` workers across the batch, and — on rings big enough to
+/// amortise a thread spawn ([`INTRA_MUL_MIN_DEGREE`]) — any leftover
+/// budget *inside* each multiply across its NTT limb planes and
+/// base-conversion coefficient ranges, so a 1-pair batch on an 8-core
+/// box still uses the cores. Each batch worker owns one reusable
+/// [`MulScratch`], eliminating the per-call tensor/scale `Vec` churn.
+/// Results are bit-identical and in input order for every worker count.
 pub struct NativeEngine {
     pub ctx: Arc<FvContext>,
     pub rk: Arc<RelinKey>,
+    /// Explicit worker budget; `None` reads [`pool_workers`] per call.
+    workers: Option<usize>,
     stats: OpStats,
 }
 
 impl NativeEngine {
     pub fn new(ctx: Arc<FvContext>, rk: Arc<RelinKey>) -> Self {
-        NativeEngine { ctx, rk, stats: OpStats::default() }
+        NativeEngine { ctx, rk, workers: None, stats: OpStats::default() }
     }
 
     /// Build with an explicit multiply backend (parity tests, benches,
     /// the CLI's `--backend` flag). Keys stay valid across backends —
     /// they live entirely in the Q basis.
     pub fn with_backend(ctx: Arc<FvContext>, rk: Arc<RelinKey>, backend: MulBackend) -> Self {
-        NativeEngine { ctx: ctx.with_backend(backend), rk, stats: OpStats::default() }
+        NativeEngine {
+            ctx: ctx.with_backend(backend),
+            rk,
+            workers: None,
+            stats: OpStats::default(),
+        }
+    }
+
+    /// Pin the worker budget (tests and controlled benches; production
+    /// callers leave it on the `ELS_POOL_WORKERS` default).
+    pub fn with_pool_workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
+        self
+    }
+
+    fn worker_budget(&self) -> usize {
+        self.workers.unwrap_or_else(pool_workers)
     }
 }
 
@@ -104,9 +156,29 @@ impl HeEngine for NativeEngine {
     fn mul_pairs(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext> {
         self.stats.ct_muls.fetch_add(pairs.len() as u64, Ordering::Relaxed);
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        if pairs.is_empty() {
+            return Vec::new();
+        }
         let ctx = &self.ctx;
         let rk = &self.rk;
-        parallel_map(pairs.to_vec(), move |(a, b)| ctx.mul_ct(a, b, rk))
+        let budget = self.worker_budget();
+        // Split the budget: batch-level first (it parallelises the
+        // whole multiply); leftover goes intra-multiply, but only on
+        // rings where a plane/chunk outweighs a thread spawn.
+        let outer = budget.min(pairs.len());
+        let inner = if self.ctx.ring_q.d >= INTRA_MUL_MIN_DEGREE {
+            (budget / outer).max(1)
+        } else {
+            1
+        };
+        parallel_map_with(
+            pairs.to_vec(),
+            outer,
+            // Empty holder: sized on first full-RNS use, free for the
+            // bigint oracle backend (which never touches it).
+            MulScratch::empty,
+            move |scratch, (a, b)| ctx.mul_ct_with(a, b, rk, scratch, inner),
+        )
     }
 }
 
@@ -144,5 +216,87 @@ mod tests {
         let (muls, _, _, batches) = engine.stats().snapshot();
         assert_eq!(muls, 4);
         assert_eq!(batches, 1);
+    }
+
+    #[test]
+    fn mul_pairs_is_deterministic_across_worker_counts() {
+        // A 16-pair batch must come back identical — order and bits —
+        // for every worker budget (serial and the ELS_POOL_WORKERS CI
+        // values 1/4/8 among them). At this toy degree the leftover
+        // budget never goes intra-multiply (d=256 < INTRA_MUL_MIN_DEGREE);
+        // the engine-level inner split is covered by
+        // `intra_multiply_split_engages_on_large_rings` below, and the
+        // plane/chunk fan-out itself by the rns_mul/poly/baseconv tests.
+        let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+        let mut rng = ChaChaRng::from_seed(202);
+        let keys = keygen(&ctx, &mut rng);
+        let rk = Arc::new(keys.rk);
+        let cts: Vec<(Ciphertext, Ciphertext)> = (0..16i64)
+            .map(|k| {
+                (
+                    ctx.encrypt(&encode_int(3 * k - 7, ctx.d()), &keys.pk, &mut rng),
+                    ctx.encrypt(&encode_int(11 - k, ctx.d()), &keys.pk, &mut rng),
+                )
+            })
+            .collect();
+        let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+            cts.iter().map(|(a, b)| (a, b)).collect();
+        let reference = NativeEngine::new(ctx.clone(), rk.clone())
+            .with_pool_workers(1)
+            .mul_pairs(&pairs);
+        for workers in [4usize, 8, 3, 16, 32] {
+            let engine =
+                NativeEngine::new(ctx.clone(), rk.clone()).with_pool_workers(workers);
+            let out = engine.mul_pairs(&pairs);
+            assert_eq!(out.len(), reference.len());
+            for (i, (got, want)) in out.iter().zip(&reference).enumerate() {
+                assert_eq!(got.polys, want.polys, "pair {i}, workers {workers}");
+                assert_eq!(got.ct_depth, want.ct_depth);
+            }
+        }
+        // The env-var path takes the same code (worker_budget() →
+        // pool_workers() → the identical fan-out); CI exercises it by
+        // running this whole suite under ELS_POOL_WORKERS=1. Never
+        // set_var here — mutating the env races concurrent test
+        // threads reading it (UB on glibc).
+        let out = NativeEngine::new(ctx.clone(), rk.clone()).mul_pairs(&pairs);
+        for (got, want) in out.iter().zip(&reference) {
+            assert_eq!(got.polys, want.polys, "ambient worker budget");
+        }
+    }
+
+    #[test]
+    fn intra_multiply_split_engages_on_large_rings() {
+        // Above INTRA_MUL_MIN_DEGREE the engine hands leftover budget
+        // to the intra-multiply fan-out (outer = pairs, inner =
+        // budget/outer > 1). A 2-pair batch at budget 8 (inner 4) must
+        // be bit-identical to the fully serial run — this is the only
+        // test that drives the inner>1 branch *through the engine's
+        // split arithmetic* rather than calling mul_no_relin_rns_with
+        // directly.
+        let ctx = FvContext::new(FvParams::custom(2048, 2, 20));
+        assert!(ctx.d() >= super::INTRA_MUL_MIN_DEGREE);
+        let mut rng = ChaChaRng::from_seed(203);
+        let keys = keygen(&ctx, &mut rng);
+        let rk = Arc::new(keys.rk);
+        let cts: Vec<(Ciphertext, Ciphertext)> = (0..2i64)
+            .map(|k| {
+                (
+                    ctx.encrypt(&encode_int(5 + k, ctx.d()), &keys.pk, &mut rng),
+                    ctx.encrypt(&encode_int(-9 * k - 1, ctx.d()), &keys.pk, &mut rng),
+                )
+            })
+            .collect();
+        let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+            cts.iter().map(|(a, b)| (a, b)).collect();
+        let reference = NativeEngine::new(ctx.clone(), rk.clone())
+            .with_pool_workers(1)
+            .mul_pairs(&pairs);
+        let split = NativeEngine::new(ctx.clone(), rk.clone())
+            .with_pool_workers(8)
+            .mul_pairs(&pairs);
+        for (i, (got, want)) in split.iter().zip(&reference).enumerate() {
+            assert_eq!(got.polys, want.polys, "pair {i} under inner split");
+        }
     }
 }

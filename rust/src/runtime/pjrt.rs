@@ -205,15 +205,19 @@ mod imp {
             }
             self.stats.ct_muls.fetch_add(pairs.len() as u64, Ordering::Relaxed);
             let ctx = &self.ctx;
-            // 1. CRT-lift all four components of every pair (thread-parallel).
+            // 1. CRT-lift all four components of every pair
+            //    (thread-parallel). NTT-resident components are lazily
+            //    brought back to coefficient form first — the artifacts
+            //    take power-basis inputs.
             let lifted: Vec<[RnsPoly; 4]> = parallel_map(pairs.to_vec(), |(a, b)| {
                 assert_eq!(a.len(), 2, "operands must be relinearised");
                 assert_eq!(b.len(), 2);
+                let rq = &ctx.ring_q;
                 [
-                    ctx.q_to_big(&a.polys[0]),
-                    ctx.q_to_big(&a.polys[1]),
-                    ctx.q_to_big(&b.polys[0]),
-                    ctx.q_to_big(&b.polys[1]),
+                    ctx.q_to_big(rq.coeff_form(&a.polys[0]).as_ref()),
+                    ctx.q_to_big(rq.coeff_form(&a.polys[1]).as_ref()),
+                    ctx.q_to_big(rq.coeff_form(&b.polys[0]).as_ref()),
+                    ctx.q_to_big(rq.coeff_form(&b.polys[1]).as_ref()),
                 ]
             });
             // 2. Tensor products: 4 polymuls per pair in one XLA stream.

@@ -1,28 +1,66 @@
 //! Minimal data-parallelism helper (no rayon offline): chunked
-//! `parallel_map` over scoped threads.
+//! `parallel_map` over scoped threads, with an optional per-worker
+//! scratch state and an `ELS_POOL_WORKERS`-controlled worker budget.
 
-/// Map `f` over `items` using up to `available_parallelism` threads.
-/// Preserves input order. Falls back to serial for tiny inputs.
+/// The process-wide worker budget: `ELS_POOL_WORKERS` when set (≥ 1),
+/// otherwise `available_parallelism`. The env var is how CI pins the
+/// serial (`=1`) vs parallel engine paths; an unparsable or zero value
+/// panics loudly rather than silently degrading to serial.
+pub fn pool_workers() -> usize {
+    match std::env::var("ELS_POOL_WORKERS") {
+        Ok(v) => parse_pool_workers(&v),
+        Err(_) => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+    }
+}
+
+/// Parse an `ELS_POOL_WORKERS` value (pure — testable without touching
+/// the process environment, which is not thread-safe to mutate).
+fn parse_pool_workers(v: &str) -> usize {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => n,
+        _ => panic!("invalid ELS_POOL_WORKERS '{v}' (expected an integer >= 1)"),
+    }
+}
+
+/// Map `f` over `items` using up to [`pool_workers`] threads (so
+/// `ELS_POOL_WORKERS=1` really pins *every* fan-out in the process,
+/// not just the native engine's). Preserves input order. Falls back to
+/// serial for tiny inputs.
 pub fn parallel_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
 where
     T: Send,
     U: Send,
     F: Fn(T) -> U + Send + Sync,
 {
-    let workers =
-        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
-    parallel_map_workers(items, workers, f)
+    parallel_map_workers(items, pool_workers(), f)
 }
 
 /// [`parallel_map`] with an explicit worker budget. `workers` is
 /// clamped to `[1, items.len()]`, so any value (0, or more workers than
 /// items) is safe; `workers <= 1`, empty and single-element inputs run
-/// serially on the caller thread.
+/// serially on the caller thread. Output order always equals input
+/// order, independent of the worker count.
 pub fn parallel_map_workers<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Vec<U>
 where
     T: Send,
     U: Send,
     F: Fn(T) -> U + Send + Sync,
+{
+    parallel_map_with(items, workers, || (), move |(), t| f(t))
+}
+
+/// [`parallel_map_workers`] with a per-worker scratch state: `init`
+/// runs once on each worker thread (and once on the caller thread for
+/// the serial path), and `f` receives `&mut` to that worker's scratch
+/// for every item of its chunk. This is how the multiply pipeline
+/// reuses its tensor/scale buffers across a batch instead of
+/// reallocating per call.
+pub fn parallel_map_with<T, U, S, I, F>(items: Vec<T>, workers: usize, init: I, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    I: Fn() -> S + Send + Sync,
+    F: Fn(&mut S, T) -> U + Send + Sync,
 {
     let n = items.len();
     if n == 0 {
@@ -30,7 +68,8 @@ where
     }
     let workers = workers.clamp(1, n);
     if n == 1 || workers == 1 {
-        return items.into_iter().map(f).collect();
+        let mut scratch = init();
+        return items.into_iter().map(|t| f(&mut scratch, t)).collect();
     }
     let chunk = n.div_ceil(workers);
     let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
@@ -43,13 +82,19 @@ where
         chunks.push(c);
     }
     let f = &f;
+    let init = &init;
     let mut results: Vec<Vec<U>> = Vec::with_capacity(chunks.len());
     std::thread::scope(|s| {
         // Spawn everything first, then join in spawn order — joining
         // in order is what preserves the input order in `results`.
         let handles: Vec<_> = chunks
             .into_iter()
-            .map(|c| s.spawn(move || c.into_iter().map(f).collect::<Vec<U>>()))
+            .map(|c| {
+                s.spawn(move || {
+                    let mut scratch = init();
+                    c.into_iter().map(|t| f(&mut scratch, t)).collect::<Vec<U>>()
+                })
+            })
             .collect();
         for h in handles {
             match h.join() {
@@ -115,6 +160,60 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn scratch_state_is_per_worker_and_order_preserving() {
+        // Each worker counts the items it processed in its scratch; the
+        // output carries (item, count-so-far-on-this-worker). Order must
+        // match input order and per-worker counts must partition n.
+        let n = 64usize;
+        for workers in [1usize, 3, 8, 64] {
+            let out = parallel_map_with(
+                (0..n).collect::<Vec<_>>(),
+                workers,
+                || 0usize,
+                |seen, x| {
+                    *seen += 1;
+                    (x, *seen)
+                },
+            );
+            assert_eq!(
+                out.iter().map(|&(x, _)| x).collect::<Vec<_>>(),
+                (0..n).collect::<Vec<_>>(),
+                "workers = {workers}"
+            );
+            let total: usize = out.iter().filter(|&&(_, c)| c == 1).count();
+            assert_eq!(total, workers.min(n), "one scratch per worker (workers = {workers})");
+        }
+    }
+
+    #[test]
+    fn pool_workers_is_at_least_one() {
+        // Whatever the test environment sets (CI pins "1"; developers
+        // usually leave it unset → available_parallelism), the
+        // contract is >= 1. Never mutate the env here: setenv racing
+        // getenv across test threads is UB on glibc.
+        assert!(pool_workers() >= 1);
+    }
+
+    #[test]
+    fn pool_workers_parsing() {
+        assert_eq!(parse_pool_workers("1"), 1);
+        assert_eq!(parse_pool_workers(" 8 "), 8);
+        assert_eq!(parse_pool_workers("32"), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid ELS_POOL_WORKERS")]
+    fn pool_workers_rejects_zero() {
+        let _ = parse_pool_workers("0");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid ELS_POOL_WORKERS")]
+    fn pool_workers_rejects_garbage() {
+        let _ = parse_pool_workers("many");
     }
 
     #[test]

@@ -176,6 +176,33 @@ fn gd_and_nag_fits_decrypt_identically_across_backends() {
 }
 
 #[test]
+fn gd_fit_is_bit_identical_across_pool_worker_counts() {
+    // The parallel mul_pairs fan-out (batch-level + intra-multiply
+    // plane dispatch) must not change a single bit of the fit: the
+    // same encrypted dataset fitted under worker budgets 1, 4 and 8
+    // yields identical ciphertext polynomials, and the NTT-resident
+    // coefficients decrypt to the exact simulation as always.
+    let mut w = world(823, 6, 2, 2, Algo::Gd, 0);
+    let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
+    let cfg = FitConfig::gd(2, w.nu);
+    let rk = Arc::new(w.keys.rk.clone());
+    let fit_serial =
+        fit(&NativeEngine::new(w.ctx.clone(), rk.clone()).with_pool_workers(1), &data, &cfg);
+    // The descent loop's steady state is NTT residency.
+    assert!(fit_serial.betas.iter().all(|b| b.is_ntt_resident()));
+    for workers in [4usize, 8] {
+        let engine = NativeEngine::new(w.ctx.clone(), rk.clone()).with_pool_workers(workers);
+        let f = fit(&engine, &data, &cfg);
+        for (j, (a, b)) in f.betas.iter().zip(&fit_serial.betas).enumerate() {
+            assert_eq!(a.polys, b.polys, "β_{j} differs at {workers} workers");
+        }
+    }
+    let dec = decrypt_coefficients(&w.ctx, &w.keys.sk, &fit_serial);
+    let expect = exact::gd_exact(&w.q, w.nu, 2).decode_last();
+    assert!(linf(&dec, &expect) < 1e-9);
+}
+
+#[test]
 fn random_products_decrypt_equally_across_planner_depths() {
     // Property: random ct×ct product chains, driven to each planner
     // depth, decrypt identically under both backends. Plans for GD

@@ -16,7 +16,7 @@ use els::els::float_ref::linf;
 use els::els::model::encrypt_dataset;
 use els::els::stepsize::nu_optimal;
 use els::fhe::keys::keygen;
-use els::fhe::params::FvParams;
+use els::fhe::params::{FvParams, MulBackend};
 use els::fhe::rng::ChaChaRng;
 use els::fhe::FvContext;
 use els::runtime::backend::{HeEngine, NativeEngine};
@@ -79,7 +79,9 @@ fn xla_mul_pairs_matches_native_engine() {
     let mut rng = ChaChaRng::from_seed(402);
     let keys = keygen(&ctx, &mut rng);
     let rk = Arc::new(keys.rk.clone());
-    let native = NativeEngine::new(ctx.clone(), rk.clone());
+    // The XLA pipeline is the exact-bigint tensor basis; run the native
+    // engine on the same backend so the arithmetic is truly identical.
+    let native = NativeEngine::with_backend(ctx.clone(), rk.clone(), MulBackend::ExactBigint);
     let xla = XlaEngine::new(ctx.clone(), &keys.rk, &dir).unwrap();
     let values = [(3i64, -7i64), (123, 456), (-1000, 999), (0, 5), (-12, -34)];
     let cts: Vec<_> = values
@@ -96,8 +98,15 @@ fn xla_mul_pairs_matches_native_engine() {
     let out_x = xla.mul_pairs(&pairs);
     for (i, &(a, b)) in values.iter().enumerate() {
         // The two backends perform identical arithmetic — ciphertexts
-        // must be *equal*, not merely decrypt-equal.
-        assert_eq!(out_n[i].polys, out_x[i].polys, "pair {i} ciphertext mismatch");
+        // must be *equal*, not merely decrypt-equal. The native product
+        // is NTT-resident and the XLA one coefficient-form, so
+        // normalise residency before comparing (exact in both domains).
+        let n_coeff: Vec<_> = out_n[i]
+            .polys
+            .iter()
+            .map(|p| ctx.ring_q.coeff_form(p).into_owned())
+            .collect();
+        assert_eq!(n_coeff, out_x[i].polys, "pair {i} ciphertext mismatch");
         let pt = ctx.decrypt(&out_x[i], &keys.sk);
         assert_eq!(pt.eval_at_2().to_i128(), Some((a as i128) * (b as i128)));
     }
