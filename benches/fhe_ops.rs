@@ -5,7 +5,10 @@
 //! The `mul_pairs` section runs the same 1/4/16-pair batches on both
 //! arithmetic backends (full-RNS default vs the exact-bigint oracle)
 //! and writes the comparison to `BENCH_fhe_ops.json` — the bench
-//! trajectory the ROADMAP tracks for the `mul_pairs` cost centre.
+//! trajectory the ROADMAP tracks for the `mul_pairs` cost centre. The
+//! `dot_pairs` section times one fused 8-pair inner-product group
+//! against the pair-by-pair fold it replaces (the fusion speedup ratio
+//! bench_check.py tracks warn-only).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -132,8 +135,29 @@ fn main() {
             ("speedup", Json::Num(speedup)),
         ]));
     }
+    // Fused inner product: one n=8 dot_pairs group (accumulate tensors,
+    // one scale-and-round + relinearisation) vs the pair-by-pair
+    // mul_pairs + add fold it replaces. Machine-relative ratio, tracked
+    // warn-only by bench_check.py until a measured baseline lands.
+    header("dot_pairs fused inner product (one 8-pair group)");
+    let group: Vec<(&Ciphertext, &Ciphertext)> = pairs[..8].to_vec();
+    let s_fused = bench("dot_pairs 1×8 fused", 1, 5, || {
+        black_box(rns.dot_pairs(&[group.as_slice()]));
+    });
+    let s_pairwise = bench("mul_pairs 8 + 7 adds", 1, 5, || {
+        let prods = rns.mul_pairs(&group);
+        let mut acc = prods[0].clone();
+        for pr in &prods[1..] {
+            acc = rns.add(&acc, pr);
+        }
+        black_box(acc);
+    });
+    let fusion_speedup =
+        s_pairwise.mean.as_nanos() as f64 / s_fused.mean.as_nanos().max(1) as f64;
+    println!("  -> 8-term fusion speedup: {fusion_speedup:.2}x");
+
     // End-to-end GD iteration: the paper's per-iteration cost centre
-    // (two mul_pairs batches + cached plaintext muls + adds), on a
+    // (two dot_pairs batches + cached plaintext muls + adds), on a
     // small encrypted dataset through the native engine.
     header("gd_iteration end-to-end (N=6, P=2, K=1)");
     let s_gd = {
@@ -168,6 +192,15 @@ fn main() {
             Json::obj(vec![
                 ("cold", stats_json(&s_plain_cold)),
                 ("cached", stats_json(&s_plain_cached)),
+            ]),
+        ),
+        (
+            "dot_pairs",
+            Json::obj(vec![
+                ("group", Json::Num(8.0)),
+                ("fused", stats_json(&s_fused)),
+                ("pairwise", stats_json(&s_pairwise)),
+                ("speedup", Json::Num(fusion_speedup)),
             ]),
         ),
         ("gd_iteration", stats_json(&s_gd)),

@@ -33,6 +33,8 @@ cargo build --release
 note "tier-1: cargo test -q"
 cargo test -q
 
+# Also drives the dot_pairs fusion tests (unit + e2e parity) through
+# the oracle's summed-tensor-before-CRT-lift path.
 note "tier-1 (oracle backend): ELS_MUL_BACKEND=bigint cargo test -q"
 ELS_MUL_BACKEND=bigint cargo test -q
 

@@ -15,10 +15,12 @@ measured run is committed.
 
 Beyond mul_pairs, the report also carries a `mul_plain` section
 (cold vs cached-operand timings — the cold/cached ratio is the same
-machine-relative design as the backend speedup) and a `gd_iteration`
-end-to-end timing. Both are tracked **warn-only** until a measured
-baseline containing them lands; they never fail the gate (gd_iteration
-has no in-run relative pair at all, so it stays advisory forever).
+machine-relative design as the backend speedup), a `dot_pairs` section
+(one fused 8-pair inner-product group vs the pair-by-pair fold — the
+fusion speedup ratio) and a `gd_iteration` end-to-end timing. All are
+tracked **warn-only** until a measured baseline containing them lands;
+they never fail the gate (gd_iteration has no in-run relative pair at
+all, so it stays advisory forever).
 
 Usage: bench_check.py BASELINE_JSON FRESH_JSON [--threshold=0.15]
        (--threshold 0.15 is also accepted)
@@ -149,6 +151,32 @@ def main(argv):
             verdict = "WARNING: cached-operand advantage shrank (not gated yet)"
         lines.append(
             f"  mul_plain cold/cached speedup: {old_ratio:.2f}x -> "
+            f"{new_ratio:.2f}x ({new_ratio / old_ratio - 1.0:+.1%})  {verdict}"
+        )
+    # dot_pairs fused/pairwise ratio — warn-only (same machine-relative
+    # design as mul_plain: both legs run in the same process, so the
+    # fusion speedup is stable across runner hardware; promote to a
+    # hard gate once a few CI runs confirm it).
+    base_dp, fresh_dp = baseline.get("dot_pairs"), fresh.get("dot_pairs")
+    if base_dp and not fresh_dp:
+        lines.append(
+            "  dot_pairs: WARNING — baseline has this section but the fresh "
+            "run does not (did the bench stop measuring it?)"
+        )
+    elif fresh_dp and not base_dp:
+        lines.append(
+            "  dot_pairs: no baseline section yet — fusion speedup tracked "
+            "warn-only until a measured baseline containing it is committed"
+        )
+    elif base_dp and fresh_dp:
+        old_ratio = base_dp["pairwise"]["mean_ns"] / max(base_dp["fused"]["mean_ns"], 1)
+        new_ratio = fresh_dp["pairwise"]["mean_ns"] / max(fresh_dp["fused"]["mean_ns"], 1)
+        verdict = "OK"
+        if new_ratio < old_ratio * (1.0 - threshold):
+            verdict = "WARNING: fusion advantage shrank (not gated yet)"
+        lines.append(
+            f"  dot_pairs fused/pairwise speedup (group "
+            f"{int(base_dp.get('group', 0))}): {old_ratio:.2f}x -> "
             f"{new_ratio:.2f}x ({new_ratio / old_ratio - 1.0:+.1%})  {verdict}"
         )
     # gd_iteration — absolute wall clock only, advisory forever.

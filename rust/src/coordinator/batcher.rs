@@ -2,12 +2,20 @@
 //! analogue of continuous batching in an LLM serving stack.
 //!
 //! [`BatchingEngine`] wraps any [`HeEngine`]: callers (one worker thread
-//! per job) still see the synchronous `mul_pairs` API, but requests are
-//! funnelled to a dispatcher thread that coalesces work from concurrent
-//! jobs up to `max_batch` pairs or `max_wait`, executes one fused
-//! backend call, and scatters the results back. Small jobs thus ride
-//! along with large ones instead of paying per-call dispatch overhead
-//! (for the XLA backend: per-executable-launch overhead).
+//! per job) still see the synchronous `mul_pairs`/`dot_pairs` APIs, but
+//! requests are funnelled to a dispatcher thread that coalesces work
+//! from concurrent jobs up to `max_batch` pairs or `max_wait`, executes
+//! one fused backend call, and scatters the results back. Small jobs
+//! thus ride along with large ones instead of paying per-call dispatch
+//! overhead (for the XLA backend: per-executable-launch overhead).
+//!
+//! The queue is **group-shaped**: the unit of work is one inner-product
+//! group (`Σ_k a_k·b_k` → one ciphertext). A `mul_pairs` call enters
+//! the same queue as singleton groups — exactly the product semantics,
+//! and bit-identical through a fusing backend, since a one-pair fused
+//! accumulation *is* the single multiply. One dispatch therefore mixes
+//! plain products and fused sums from different jobs in a single
+//! backend `dot_pairs` call.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -18,8 +26,16 @@ use crate::fhe::{Ciphertext, FvContext, Plaintext, PlaintextNtt};
 use crate::runtime::backend::{HeEngine, OpStats};
 
 struct WorkItem {
-    pairs: Vec<(Ciphertext, Ciphertext)>,
+    /// Inner-product groups (singletons for plain products); the reply
+    /// carries one ciphertext per group.
+    groups: Vec<Vec<(Ciphertext, Ciphertext)>>,
     reply: Sender<Vec<Ciphertext>>,
+}
+
+impl WorkItem {
+    fn npairs(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
 }
 
 /// Batching configuration.
@@ -62,6 +78,21 @@ impl BatchingEngine {
         engine
     }
 
+    /// Enqueue one group-shaped work item and block for its replies
+    /// (one ciphertext per group).
+    fn submit(&self, groups: Vec<Vec<(Ciphertext, Ciphertext)>>) -> Vec<Ciphertext> {
+        let (reply_tx, reply_rx) = channel();
+        let item = WorkItem { groups, reply: reply_tx };
+        self.tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .expect("batcher already shut down")
+            .send(item)
+            .expect("batcher thread gone");
+        reply_rx.recv().expect("batcher dropped reply")
+    }
+
     /// Stop the dispatcher (drains pending work first).
     pub fn shutdown(&self) {
         let tx = self.tx.lock().unwrap().take();
@@ -86,7 +117,7 @@ fn dispatcher(inner: Arc<dyn HeEngine>, rx: Receiver<WorkItem>, cfg: BatchConfig
             Err(_) => return,
         };
         let mut items = vec![first];
-        let mut total: usize = items[0].pairs.len();
+        let mut total: usize = items[0].npairs();
         let deadline = Instant::now() + cfg.max_wait;
         while total < cfg.max_batch {
             let now = Instant::now();
@@ -95,21 +126,26 @@ fn dispatcher(inner: Arc<dyn HeEngine>, rx: Receiver<WorkItem>, cfg: BatchConfig
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(w) => {
-                    total += w.pairs.len();
+                    total += w.npairs();
                     items.push(w);
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        // One fused backend call over every coalesced pair.
-        let all_pairs: Vec<(&Ciphertext, &Ciphertext)> = items
+        // One fused backend call over every coalesced group (plain
+        // products ride along as singleton groups).
+        let group_refs: Vec<Vec<(&Ciphertext, &Ciphertext)>> = items
             .iter()
-            .flat_map(|w| w.pairs.iter().map(|(a, b)| (a, b)))
+            .flat_map(|w| {
+                w.groups.iter().map(|g| g.iter().map(|(a, b)| (a, b)).collect())
+            })
             .collect();
-        let mut results = inner.mul_pairs(&all_pairs).into_iter();
+        let all_groups: Vec<&[(&Ciphertext, &Ciphertext)]> =
+            group_refs.iter().map(|g| g.as_slice()).collect();
+        let mut results = inner.dot_pairs(&all_groups).into_iter();
         for item in &items {
-            let n = item.pairs.len();
+            let n = item.groups.len();
             let out: Vec<Ciphertext> = results.by_ref().take(n).collect();
             // Receiver may have given up (job failed) — ignore.
             let _ = item.reply.send(out);
@@ -132,19 +168,34 @@ impl HeEngine for BatchingEngine {
         }
         self.stats.ct_muls.fetch_add(pairs.len() as u64, Ordering::Relaxed);
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        let (reply_tx, reply_rx) = channel();
-        let item = WorkItem {
-            pairs: pairs.iter().map(|(a, b)| ((*a).clone(), (*b).clone())).collect(),
-            reply: reply_tx,
-        };
-        self.tx
-            .lock()
-            .unwrap()
-            .as_ref()
-            .expect("batcher already shut down")
-            .send(item)
-            .expect("batcher thread gone");
-        reply_rx.recv().expect("batcher dropped reply")
+        // Each product is a singleton group: identical semantics (and,
+        // through a fusing backend, identical bits) to a flat
+        // mul_pairs, while sharing the dispatcher with fused sums.
+        self.submit(
+            pairs.iter().map(|&(a, b)| vec![(a.clone(), b.clone())]).collect(),
+        )
+    }
+
+    fn dot_pairs(&self, groups: &[&[(&Ciphertext, &Ciphertext)]]) -> Vec<Ciphertext> {
+        if groups.is_empty() {
+            return Vec::new();
+        }
+        // Enforce the non-empty-group precondition on the *caller*
+        // thread: letting it trip inside the shared dispatcher would
+        // kill the dispatcher and cascade 'batcher dropped reply'
+        // panics into every unrelated concurrent job.
+        for (i, g) in groups.iter().enumerate() {
+            assert!(!g.is_empty(), "dot_pairs group {i} must be non-empty");
+        }
+        let total: u64 = groups.iter().map(|g| g.len() as u64).sum();
+        self.stats.ct_muls.fetch_add(total, Ordering::Relaxed);
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.submit(
+            groups
+                .iter()
+                .map(|g| g.iter().map(|&(a, b)| (a.clone(), b.clone())).collect())
+                .collect(),
+        )
     }
 
     fn mul_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
@@ -223,6 +274,100 @@ mod tests {
                 assert_eq!(pt.eval_at_2().to_i128(), Some(expect as i128));
             }
         }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn coalesces_groups_and_singletons_across_threads() {
+        // Mixed workload: two threads submit fused inner-product
+        // groups, two submit plain mul_pairs; all four coalesce into
+        // shared dispatches and every job gets its own sums back.
+        let (ctx, keys, engine) = setup();
+        let mut rng = ChaChaRng::from_seed(503);
+        let enc = |v: i64, rng: &mut ChaChaRng| {
+            ctx.encrypt(&encode_int(v, ctx.d()), &keys.pk, rng)
+        };
+        // Per dot-thread: one group of 3 pairs + one group of 2.
+        let dot_jobs: Vec<(Vec<Vec<(Ciphertext, Ciphertext)>>, Vec<i64>)> = (0..2i64)
+            .map(|t| {
+                let mut groups = Vec::new();
+                let mut expects = Vec::new();
+                for (gi, len) in [3usize, 2].into_iter().enumerate() {
+                    let mut group = Vec::new();
+                    let mut sum = 0i64;
+                    for k in 0..len as i64 {
+                        let a = 5 * t + k + gi as i64;
+                        let b = 3 - k;
+                        sum += a * b;
+                        group.push((enc(a, &mut rng), enc(b, &mut rng)));
+                    }
+                    groups.push(group);
+                    expects.push(sum);
+                }
+                (groups, expects)
+            })
+            .collect();
+        let mul_jobs: Vec<Vec<(Ciphertext, Ciphertext, i64)>> = (0..2i64)
+            .map(|t| {
+                (1..=2i64)
+                    .map(|k| {
+                        let (a, b) = (7 * t + k, k - 1);
+                        (enc(a, &mut rng), enc(b, &mut rng), a * b)
+                    })
+                    .collect()
+            })
+            .collect();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (groups, expects) in &dot_jobs {
+                let engine = engine.clone();
+                handles.push(s.spawn(move || {
+                    let refs: Vec<Vec<(&Ciphertext, &Ciphertext)>> = groups
+                        .iter()
+                        .map(|g| g.iter().map(|(a, b)| (a, b)).collect())
+                        .collect();
+                    let slices: Vec<&[(&Ciphertext, &Ciphertext)]> =
+                        refs.iter().map(|g| g.as_slice()).collect();
+                    let out = engine.dot_pairs(&slices);
+                    (out, expects.clone())
+                }));
+            }
+            for cts in &mul_jobs {
+                let engine = engine.clone();
+                handles.push(s.spawn(move || {
+                    let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+                        cts.iter().map(|(a, b, _)| (a, b)).collect();
+                    let out = engine.mul_pairs(&pairs);
+                    (out, cts.iter().map(|(_, _, e)| *e).collect())
+                }));
+            }
+            for h in handles {
+                let (out, expects) = h.join().unwrap();
+                assert_eq!(out.len(), expects.len());
+                for (ct, expect) in out.iter().zip(expects) {
+                    let pt = ctx.decrypt(ct, &keys.sk);
+                    assert_eq!(pt.eval_at_2().to_i128(), Some(expect as i128));
+                }
+            }
+        });
+        engine.shutdown();
+    }
+
+    #[test]
+    fn empty_group_panics_on_the_caller_not_the_dispatcher() {
+        // The precondition fires on the submitting thread; the shared
+        // dispatcher (and other jobs' replies) must stay alive.
+        let (ctx, keys, engine) = setup();
+        let mut rng = ChaChaRng::from_seed(504);
+        let a = ctx.encrypt(&encode_int(3, ctx.d()), &keys.pk, &mut rng);
+        let b = ctx.encrypt(&encode_int(4, ctx.d()), &keys.pk, &mut rng);
+        let bad = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.dot_pairs(&[&[][..]])
+        }));
+        assert!(bad.is_err(), "empty group must panic");
+        // The dispatcher survived: a valid job still completes.
+        let out = engine.dot_pairs(&[&[(&a, &b)][..]]);
+        assert_eq!(ctx.decrypt(&out[0], &keys.sk).eval_at_2().to_i128(), Some(12));
         engine.shutdown();
     }
 

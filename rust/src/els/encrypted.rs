@@ -3,9 +3,14 @@
 //! [`HeEngine`].
 //!
 //! Every ciphertext multiplication in an iteration is emitted as one
-//! `mul_pairs` batch — the contract that lets the coordinator/XLA
+//! batched engine call — the contract that lets the coordinator/XLA
 //! backends amortise fixed-shape kernel launches (and the native
-//! backend fan across cores).
+//! backend fan across cores). Inner-product sums (`Σ_j X̃_ij β̃_j`,
+//! `Σ_i X̃_ij r̃_i`, the CD gradient) go through `dot_pairs` groups, so
+//! a native engine relinearises and scale-and-rounds once per output
+//! sum — `n+p` pipelines per GD iteration instead of `2·n·p`; only the
+//! CD residual update, whose products are not summed, stays on
+//! `mul_pairs`.
 
 use crate::fhe::encoding::encode_biguint;
 use crate::fhe::{Ciphertext, FvContext, SecretKey};
@@ -72,8 +77,21 @@ fn zero_ct(ctx: &FvContext) -> Ciphertext {
     Ciphertext::new(vec![ctx.ring_q.zero(), ctx.ring_q.zero()])
 }
 
+/// One inner-product group: the borrowed pairs whose products are
+/// summed into a single ciphertext by `HeEngine::dot_pairs`.
+type PairGroup<'a> = Vec<(&'a Ciphertext, &'a Ciphertext)>;
+
+/// Borrow a grid of owned pair groups as the slice-of-slices shape
+/// `HeEngine::dot_pairs` takes.
+fn as_groups<'a>(owned: &'a [PairGroup<'a>]) -> Vec<&'a [(&'a Ciphertext, &'a Ciphertext)]> {
+    owned.iter().map(|g| g.as_slice()).collect()
+}
+
 /// One GD/NAG gradient step: returns `g_j = Σ_i X̃_ij·r̃_i` where
-/// `r̃ = c_y·ỹ − X̃·β̃` (two `mul_pairs` batches).
+/// `r̃ = c_y·ỹ − X̃·β̃` (two `dot_pairs` batches: one group per row for
+/// the residual, one group per column for the gradient — `n+p`
+/// relinearisation + scale-and-round pipelines per iteration on a
+/// fusing engine, where the flat `mul_pairs` emission paid `2·n·p`).
 ///
 /// `c_y` changes every iteration, but within one step it multiplies
 /// all N response ciphertexts — so it is NTT-cached once here and the
@@ -87,35 +105,24 @@ fn gradient_step(
     let ctx = engine.ctx();
     let (n, p) = (data.n(), data.p());
     let cy_pt = engine.prepare_plaintext(&encode_biguint(c_y, ctx.d()));
-    // r̃_i = c_y·ỹ_i − Σ_j X̃_ij β̃_j
+    // r̃_i = c_y·ỹ_i − Σ_j X̃_ij β̃_j — the Σ_j is one fused group.
     let mut r: Vec<Ciphertext> =
         data.y.iter().map(|y| engine.mul_plain_prepared(y, &cy_pt)).collect();
     if !beta.is_empty() {
-        let pairs: Vec<(&Ciphertext, &Ciphertext)> = (0..n)
-            .flat_map(|i| (0..p).map(move |j| (&data.x[i][j], &beta[j])))
+        let owned: Vec<PairGroup> = (0..n)
+            .map(|i| (0..p).map(|j| (&data.x[i][j], &beta[j])).collect())
             .collect();
-        let prods = engine.mul_pairs(&pairs);
-        for i in 0..n {
-            for j in 0..p {
-                r[i] = engine.sub(&r[i], &prods[i * p + j]);
-            }
+        let dots = engine.dot_pairs(&as_groups(&owned));
+        for (ri, dot) in r.iter_mut().zip(&dots) {
+            *ri = engine.sub(ri, dot);
         }
     }
-    // g_j = Σ_i X̃_ij·r̃_i
+    // g_j = Σ_i X̃_ij·r̃_i — one fused group per coordinate.
     let r_ref = &r;
-    let pairs: Vec<(&Ciphertext, &Ciphertext)> = (0..n)
-        .flat_map(|i| (0..p).map(move |j| (&data.x[i][j], &r_ref[i])))
+    let owned: Vec<PairGroup> = (0..p)
+        .map(|j| (0..n).map(|i| (&data.x[i][j], &r_ref[i])).collect())
         .collect();
-    let prods = engine.mul_pairs(&pairs);
-    (0..p)
-        .map(|j| {
-            let mut acc = prods[j].clone();
-            for i in 1..n {
-                acc = engine.add(&acc, &prods[i * p + j]);
-            }
-            acc
-        })
-        .collect()
+    engine.dot_pairs(&as_groups(&owned))
 }
 
 /// Fit by ELS-GD (eq. 10), optionally with VWT (eq. 18) or NAG
@@ -253,14 +260,11 @@ pub fn fit_cd(
     let mut r: Vec<Ciphertext> = data.y.to_vec();
     for u in 1..=updates {
         let j = (u - 1) % p;
-        // ĝ_j = Σ_i X̃_ij·r̃_i
+        // ĝ_j = Σ_i X̃_ij·r̃_i — one fused group (one relinearisation
+        // per coordinate update instead of N).
         let pairs: Vec<(&Ciphertext, &Ciphertext)> =
             (0..n).map(|i| (&data.x[i][j], &r[i])).collect();
-        let prods = engine.mul_pairs(&pairs);
-        let mut g = prods[0].clone();
-        for pr in prods.iter().skip(1) {
-            g = engine.add(&g, pr);
-        }
+        let g = engine.dot_pairs(&[pairs.as_slice()]).pop().unwrap();
         // Carry all coefficients, add ĝ to coordinate j.
         for (l, b) in beta.iter_mut().enumerate() {
             *b = match (b.take(), l == j) {
@@ -355,6 +359,30 @@ mod tests {
         assert!(d < 1e-9, "encrypted vs exact drift: {d} ({dec:?} vs {expect:?})");
         assert_eq!(fit.paper_mmd, 4);
         assert_eq!(fit.noise_depth, 3); // 2K−1
+    }
+
+    #[test]
+    fn gradient_step_relin_budget_is_n_plus_p() {
+        // The fusion acceptance criterion: one relinearisation + one
+        // scale-and-round pipeline per output *sum* — n+p per GD
+        // iteration under dot_pairs, where the flat mul_pairs emission
+        // paid 2·n·p of each.
+        let s = setup(305, 5, 2, 2, Algo::Gd);
+        // One fitted iteration materialises a live β̃ so the next
+        // gradient step runs both fused batches.
+        let f1 = super::fit(&s.engine, &s.data, &FitConfig::gd(1, s.nu));
+        let (n, p) = (s.data.n(), s.data.p());
+        let ring = &s.ctx.ring_q;
+        let (r0, s0) = (ring.relin_count(), ring.scale_round_count());
+        let gs = GdScaling::new(s.data.phi, s.nu);
+        let g = gradient_step(&s.engine, &s.data, &f1.betas, &gs.c_y(2));
+        assert_eq!(g.len(), p);
+        assert_eq!(ring.relin_count() - r0, (n + p) as u64, "n+p relinearisations");
+        assert_eq!(
+            ring.scale_round_count() - s0,
+            (n + p) as u64,
+            "n+p scale-and-round pipelines (no chunking at this scale)"
+        );
     }
 
     #[test]

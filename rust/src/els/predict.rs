@@ -16,24 +16,18 @@ pub fn predict(
     x_new: &[Vec<Ciphertext>],
 ) -> Vec<Ciphertext> {
     let p = fit.betas.len();
-    let pairs: Vec<(&Ciphertext, &Ciphertext)> = x_new
+    // One fused group per new row: the dot product relinearises and
+    // scale-and-rounds once per prediction instead of once per term.
+    let owned: Vec<Vec<(&Ciphertext, &Ciphertext)>> = x_new
         .iter()
-        .flat_map(|row| {
+        .map(|row| {
             assert_eq!(row.len(), p);
-            row.iter().zip(&fit.betas)
+            row.iter().zip(&fit.betas).collect()
         })
         .collect();
-    let prods = engine.mul_pairs(&pairs);
-    prods
-        .chunks(p)
-        .map(|chunk| {
-            let mut acc = chunk[0].clone();
-            for c in &chunk[1..] {
-                acc = engine.add(&acc, c);
-            }
-            acc
-        })
-        .collect()
+    let groups: Vec<&[(&Ciphertext, &Ciphertext)]> =
+        owned.iter().map(|g| g.as_slice()).collect();
+    engine.dot_pairs(&groups)
 }
 
 /// Divisor for decoded predictions: fit divisor × 10^φ.

@@ -32,6 +32,17 @@ pub struct FvContext {
     pub relin_ndigits: usize,
     /// Base-conversion tables for the full-RNS multiply.
     pub rns: RnsMulPrecomp,
+    /// Largest number of tensor products the full-RNS `dot_pairs`
+    /// pipeline may accumulate before one shared `⌊t·v/q⌉`: bounded by
+    /// the Shenoy–Kumaresan range (`|r| ≤ k·t·d·q/4` must stay under
+    /// `B/8`, keeping the single-multiply slack margin). Computed from
+    /// the *actual* extension-basis product, so the 29-vs-30-bit prime
+    /// granularity slack is harvested rather than assumed away.
+    pub(crate) fuse_chunk_rns: usize,
+    /// The same bound for the exact-bigint oracle: the summed tensor
+    /// (`|Σv| ≤ k·d·q²/4`) must stay inside the joint Q∪E basis range
+    /// with the same 2 bits of slack.
+    pub(crate) fuse_chunk_big: usize,
     /// `log2 t` when t is a power of two (always true for planned
     /// parameter sets): turns the hot `t·v` big-multiply of the BFV
     /// scale-and-round into a shift.
@@ -55,6 +66,23 @@ impl FvContext {
         let relin_ndigits = params.relin_ndigits();
         let rns = RnsMulPrecomp::new(&ring_q, &ring_ext, &t);
         let t_shift = if t.is_power_of_two() { Some(t.bit_len() - 1) } else { None };
+        let fuse_chunk_rns = {
+            // B = Π extension primes without the redundant m_sk plane.
+            let ext = &ring_ext.basis.primes;
+            let mut b = BigUint::one();
+            for &p in &ext[..ext.len() - 1] {
+                b = b.mul_u64(p);
+            }
+            // cap = B/8 (the symmetric B/2 range plus the same 2 slack
+            // bits the single-multiply sizing reserves); each fused
+            // term contributes at most t·d·q/4 to |r| = |(t·Σv − z)/q|.
+            Self::fuse_terms(&b, &t.mul(&q).mul_u64(params.d as u64))
+        };
+        let fuse_chunk_big = {
+            // Joint basis Q∪E must hold |Σv| ≤ k·d·q²/4 with 2 bits of
+            // slack: cap = (q·E)/8, per-term d·q²/4.
+            Self::fuse_terms(&ring_big.basis.modulus, &q.mul(&q).mul_u64(params.d as u64))
+        };
         Arc::new(FvContext {
             params,
             ring_q,
@@ -66,8 +94,38 @@ impl FvContext {
             delta_rns,
             relin_ndigits,
             rns,
+            fuse_chunk_rns,
+            fuse_chunk_big,
             t_shift,
         })
+    }
+
+    /// `⌊(cap/8) / (per4/4)⌋` clamped to `[1, 2^31]`: how many fused
+    /// terms fit a basis of modulus `cap` when each term contributes at
+    /// most `per4/4` (callers pass the un-divided `4×` products so the
+    /// shifts stay exact). The ≥ 1 floor is guaranteed by the existing
+    /// single-multiply basis sizing; the 2^31 ceiling keeps the count
+    /// far under the `u128` accumulator guard
+    /// [`crate::math::poly::MAX_NTT_ACC_TERMS`].
+    fn fuse_terms(cap: &BigUint, per4: &BigUint) -> usize {
+        let cap = cap.shr_bits(3);
+        let per = per4.shr_bits(2).add_u64(1);
+        let k = cap.div_rem(&per).0;
+        match k.to_u64() {
+            Some(v) => v.clamp(1, 1 << 31) as usize,
+            None => 1 << 31,
+        }
+    }
+
+    /// How many tensor products the active multiply backend may fuse
+    /// into one scale-and-round (see the field docs). `dot_pairs`
+    /// groups longer than this are accumulated in chunks of this size
+    /// — still a single relinearisation per group.
+    pub fn fuse_chunk(&self) -> usize {
+        match self.params.mul_backend {
+            MulBackend::FullRns => self.fuse_chunk_rns,
+            MulBackend::ExactBigint => self.fuse_chunk_big,
+        }
     }
 
     /// A context identical to this one except for the multiply backend
@@ -226,6 +284,25 @@ mod tests {
         assert_eq!(lifted[0].to_i128(), Some(3));
         assert_eq!(lifted[1].to_i128(), Some(-4));
         assert_eq!(lifted[2].to_i128(), Some(123456));
+    }
+
+    #[test]
+    fn fuse_chunk_has_headroom_on_both_backends() {
+        // The single-multiply basis sizing guarantees ≥ 2 fused terms
+        // (one extra bit of slack beyond one tensor); the realised
+        // 29-vs-30-bit prime granularity gives far more on real sets.
+        let c = ctx();
+        assert!(c.fuse_chunk_rns >= 2, "rns chunk {}", c.fuse_chunk_rns);
+        assert!(c.fuse_chunk_big >= 2, "bigint chunk {}", c.fuse_chunk_big);
+        // fuse_chunk() follows the active backend (which CI may pin
+        // via ELS_MUL_BACKEND).
+        let expect = match c.params.mul_backend {
+            crate::fhe::params::MulBackend::FullRns => c.fuse_chunk_rns,
+            crate::fhe::params::MulBackend::ExactBigint => c.fuse_chunk_big,
+        };
+        assert_eq!(c.fuse_chunk(), expect);
+        // And the u128 accumulator guard dwarfs the clamp ceiling.
+        assert!((c.fuse_chunk_rns as u64) < crate::math::poly::MAX_NTT_ACC_TERMS);
     }
 
     #[test]

@@ -5,10 +5,36 @@
 //! `v = [c₀ + c₁s]_q = Δm + e`, the quantity `[t·v]_q` equals
 //! `t·e − (q mod t)·m`, whose ∞-norm must stay below `q/2` for correct
 //! decryption. The budget is `log2(q) − log2(2·‖[t·v]_q‖∞)` bits.
+//!
+//! ## Fused inner-product accounting
+//!
+//! A `dot_pairs` group of `k` terms performs the same `k` tensor
+//! products as the pair-by-pair fold — the *multiplicative* noise
+//! growth (≈ `2·d·t` per operand pair) is identical — but the
+//! *additive* terms differ: the fold pays `k` scale-and-round
+//! roundings (≈ `(1 + d·‖s‖₁ + d·‖s‖₁²)/2` invariant-noise ulps each)
+//! plus `k` relinearisation noises (≈ `ℓ·d·2^29·B/q` each), where the
+//! fused pipeline pays `⌈k/chunk⌉` roundings and exactly one
+//! relinearisation noise — rounding **the sum** rather than summing
+//! the roundings. [`fused_noise_terms`] is the counting form of that
+//! statement; since both counts are ≤ the fold's `(k, k)` for every
+//! `k ≥ 1`, fusing only tightens the §4 correctness bounds (the
+//! planner's flat additive reserve stays valid unchanged).
 
 use super::ciphertext::Ciphertext;
 use super::context::FvContext;
 use super::keys::SecretKey;
+
+/// Additive-noise term counts `(relinearisations, roundings)` for a
+/// fused inner product of `k` pairs accumulated in chunks of `chunk`
+/// terms: one relinearisation for the whole group, one scale-and-round
+/// rounding per accumulation chunk. The pair-by-pair fold's counts are
+/// `(k, k)`; the fused counts are never larger, so every §4 bound that
+/// sums additive noise over these events is tightened by fusion.
+pub fn fused_noise_terms(k: u64, chunk: u64) -> (u64, u64) {
+    assert!(k >= 1 && chunk >= 1);
+    (1, k.div_ceil(chunk))
+}
 
 /// Remaining noise budget in bits (≤ 0 means decryption may fail).
 pub fn noise_budget_bits(ctx: &FvContext, ct: &Ciphertext, sk: &SecretKey) -> f64 {
@@ -114,6 +140,63 @@ mod tests {
             );
         }
         assert!(*budgets.last().unwrap() > 0.0, "depth-2 chain should still decrypt");
+    }
+
+    #[test]
+    fn fused_noise_terms_never_exceed_the_fold() {
+        for k in 1..=20u64 {
+            for chunk in 1..=8u64 {
+                let (relins, roundings) = fused_noise_terms(k, chunk);
+                assert_eq!(relins, 1);
+                assert!(roundings <= k, "k={k} chunk={chunk}");
+                assert_eq!(roundings, k.div_ceil(chunk));
+            }
+        }
+        // Un-chunked (the production case): exactly one of each.
+        assert_eq!(fused_noise_terms(16, 1 << 20), (1, 1));
+    }
+
+    #[test]
+    fn fused_inner_product_is_no_noisier_than_fold() {
+        // The empirical form of the accounting above: on the same
+        // operands, the fused dot's measured invariant-noise budget
+        // must be at least the pair-by-pair fold's (one relin + one
+        // rounding versus k of each). Checked on both backends.
+        use crate::fhe::encoding::encode_int;
+        use crate::fhe::params::MulBackend;
+        for backend in [MulBackend::FullRns, MulBackend::ExactBigint] {
+            let mut params = FvParams::custom(256, 3, 24);
+            params.mul_backend = backend;
+            let ctx = FvContext::new(params);
+            let mut rng = ChaChaRng::from_seed(66);
+            let keys = keygen(&ctx, &mut rng);
+            let cts: Vec<(Ciphertext, Ciphertext)> = (0..6i64)
+                .map(|k| {
+                    (
+                        ctx.encrypt(&encode_int(k - 2, ctx.d()), &keys.pk, &mut rng),
+                        ctx.encrypt(&encode_int(3 - k, ctx.d()), &keys.pk, &mut rng),
+                    )
+                })
+                .collect();
+            let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+                cts.iter().map(|(a, b)| (a, b)).collect();
+            let fused = ctx.dot_group(&pairs, &keys.rk);
+            let mut fold = ctx.mul_ct(pairs[0].0, pairs[0].1, &keys.rk);
+            for (a, b) in &pairs[1..] {
+                fold = ctx.add_ct(&fold, &ctx.mul_ct(a, b, &keys.rk));
+            }
+            assert_eq!(ctx.decrypt(&fused, &keys.sk), ctx.decrypt(&fold, &keys.sk));
+            let b_fused = noise_budget_bits(&ctx, &fused, &keys.sk);
+            let b_fold = noise_budget_bits(&ctx, &fold, &keys.sk);
+            assert!(b_fused > 0.0, "{backend:?}: fused budget exhausted ({b_fused})");
+            // One rounding + one relin noise versus k of each: within
+            // the integer-bit measurement granularity, fusion is never
+            // materially noisier (and is typically strictly better).
+            assert!(
+                b_fused >= b_fold - 1.0,
+                "{backend:?}: fused budget {b_fused} below fold budget {b_fold}"
+            );
+        }
     }
 
     #[test]

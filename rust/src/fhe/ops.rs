@@ -195,20 +195,9 @@ impl FvContext {
     pub fn mul_no_relin_bigint(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         assert_eq!(a.len(), 2, "operands must be relinearised");
         assert_eq!(b.len(), 2);
-        let rq = &self.ring_q;
         let big = &self.ring_big;
-        // Lift all four polynomials into the joint basis and NTT them
-        // (the CRT lift needs power-basis coefficients, so NTT-resident
-        // operands are lazily brought back first).
-        let mut a0 = self.q_to_big(rq.coeff_form(&a.polys[0]).as_ref());
-        let mut a1 = self.q_to_big(rq.coeff_form(&a.polys[1]).as_ref());
-        let mut b0 = self.q_to_big(rq.coeff_form(&b.polys[0]).as_ref());
-        let mut b1 = self.q_to_big(rq.coeff_form(&b.polys[1]).as_ref());
-        big.ntt_forward(&mut a0);
-        big.ntt_forward(&mut a1);
-        big.ntt_forward(&mut b0);
-        big.ntt_forward(&mut b1);
         // Tensor product (exact over the joint basis).
+        let [a0, a1, b0, b1] = self.big_tensor_operands(a, b);
         let mut c0 = big.mul_ntt(&a0, &b0);
         let mut c1 = big.add(&big.mul_ntt(&a0, &b1), &big.mul_ntt(&a1, &b0));
         let mut c2 = big.mul_ntt(&a1, &b1);
@@ -221,9 +210,121 @@ impl FvContext {
             self.scale_round_to_q(&c1),
             self.scale_round_to_q(&c2),
         ];
+        self.ring_q.note_scale_round();
         let mut out = Ciphertext::new(polys);
         out.ct_depth = a.ct_depth.max(b.ct_depth) + 1;
         out
+    }
+
+    /// Lift one operand pair's four polynomials into the joint Q∪E
+    /// basis in NTT form (the CRT lift needs power-basis coefficients,
+    /// so NTT-resident operands are lazily brought back first).
+    fn big_tensor_operands(&self, a: &Ciphertext, b: &Ciphertext) -> [RnsPoly; 4] {
+        assert_eq!(a.len(), 2, "operands must be relinearised");
+        assert_eq!(b.len(), 2);
+        let rq = &self.ring_q;
+        let big = &self.ring_big;
+        [&a.polys[0], &a.polys[1], &b.polys[0], &b.polys[1]].map(|p| {
+            let mut lifted = self.q_to_big(rq.coeff_form(p).as_ref());
+            big.ntt_forward(&mut lifted);
+            lifted
+        })
+    }
+
+    /// Fused inner product `Σ_k a_k·b_k` **without** relinearisation:
+    /// returns one 3-component ciphertext for the whole group, paying
+    /// the scale-and-round pipeline once per accumulation chunk (see
+    /// [`fuse_chunk`](Self::fuse_chunk)) instead of once per pair.
+    /// Dispatches on the context's [`MulBackend`]. A one-pair group is
+    /// bit-identical to [`mul_no_relin`](Self::mul_no_relin).
+    pub fn dot_no_relin(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Ciphertext {
+        match self.params.mul_backend {
+            MulBackend::FullRns => self.dot_no_relin_rns(pairs),
+            MulBackend::ExactBigint => self.dot_no_relin_bigint(pairs),
+        }
+    }
+
+    /// [`dot_no_relin`](Self::dot_no_relin) with caller-owned scratch
+    /// and an intra-group worker budget (full-RNS backend only; the
+    /// bigint oracle ignores both).
+    pub fn dot_no_relin_with(
+        &self,
+        pairs: &[(&Ciphertext, &Ciphertext)],
+        scratch: &mut crate::fhe::rns_mul::MulScratch,
+        workers: usize,
+    ) -> Ciphertext {
+        match self.params.mul_backend {
+            MulBackend::FullRns => self.dot_no_relin_rns_with(pairs, scratch, workers),
+            MulBackend::ExactBigint => self.dot_no_relin_bigint(pairs),
+        }
+    }
+
+    /// The exact-bigint fused inner product: the parity oracle sums
+    /// the per-pair tensors **in the joint Q∪E basis, before the
+    /// per-coefficient CRT lift**, so the summed value is scaled and
+    /// rounded exactly once per chunk — the reference semantics the
+    /// full-RNS accumulation is tested against.
+    pub fn dot_no_relin_bigint(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Ciphertext {
+        assert!(!pairs.is_empty(), "dot group must be non-empty");
+        let mut acc: Option<Ciphertext> = None;
+        for part in pairs.chunks(self.fuse_chunk_big) {
+            let ct = self.dot_chunk_bigint(part);
+            acc = Some(match acc {
+                None => ct,
+                Some(prev) => self.add_ct(&prev, &ct),
+            });
+        }
+        acc.unwrap()
+    }
+
+    /// One oracle accumulation chunk: `u128` lazy tensor accumulation
+    /// over the joint-basis NTT planes, one exact scale-and-round for
+    /// the three summed components.
+    fn dot_chunk_bigint(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Ciphertext {
+        let big = &self.ring_big;
+        let mut accs =
+            [big.ntt_accumulator(), big.ntt_accumulator(), big.ntt_accumulator()];
+        let mut depth = 0u32;
+        for (a, b) in pairs {
+            depth = depth.max(a.ct_depth).max(b.ct_depth);
+            let [a0, a1, b0, b1] = self.big_tensor_operands(a, b);
+            big.acc_mul_ntt(&mut accs[0], &a0, &b0);
+            big.acc_mul_ntt(&mut accs[1], &a0, &b1);
+            big.acc_mul_ntt(&mut accs[1], &a1, &b0);
+            big.acc_mul_ntt(&mut accs[2], &a1, &b1);
+        }
+        let polys = accs
+            .iter()
+            .map(|acc| {
+                let mut v = big.acc_reduce(acc);
+                big.ntt_inverse(&mut v);
+                self.scale_round_to_q(&v)
+            })
+            .collect();
+        self.ring_q.note_scale_round();
+        let mut out = Ciphertext::new(polys);
+        out.ct_depth = depth + 1;
+        out
+    }
+
+    /// Relinearised fused inner product `Σ_k a_k·b_k` — the per-group
+    /// primitive behind `HeEngine::dot_pairs`: one gadget
+    /// relinearisation for the whole group, whatever its length.
+    pub fn dot_group(&self, pairs: &[(&Ciphertext, &Ciphertext)], rk: &RelinKey) -> Ciphertext {
+        self.relinearize(&self.dot_no_relin(pairs), rk)
+    }
+
+    /// [`dot_group`](Self::dot_group) with caller-owned scratch and an
+    /// intra-group worker budget — the per-worker form the native
+    /// engine's `dot_pairs` fan-out drives.
+    pub fn dot_group_with(
+        &self,
+        pairs: &[(&Ciphertext, &Ciphertext)],
+        rk: &RelinKey,
+        scratch: &mut crate::fhe::rns_mul::MulScratch,
+        workers: usize,
+    ) -> Ciphertext {
+        self.relinearize(&self.dot_no_relin_with(pairs, scratch, workers), rk)
     }
 
     /// Per-limb RNS gadget decomposition: `poly = Σ_i D_i·(q/q_i)
@@ -262,6 +363,7 @@ impl FvContext {
     pub fn relinearize(&self, ct: &Ciphertext, rk: &RelinKey) -> Ciphertext {
         assert_eq!(ct.len(), 3, "nothing to relinearise");
         let ring = &self.ring_q;
+        ring.note_relin();
         let mut lazy0 = ring.ntt_accumulator();
         let mut lazy1 = ring.ntt_accumulator();
         for (j, mut dj) in
@@ -543,6 +645,52 @@ mod tests {
                     "backend {backend:?} residency mask {mask:#07b}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn fused_dot_group_parity_across_backends() {
+        // dot_group on both multiply backends: decrypt-equal to the
+        // fold of relinearised products, exactly one relinearisation
+        // and one scale-and-round pipeline for the whole group.
+        use crate::fhe::encoding::encode_int;
+        let vals = [(31i64, -2i64), (5, 5), (-12, 3), (8, -9)];
+        for backend in [MulBackend::FullRns, MulBackend::ExactBigint] {
+            let mut params = FvParams::custom(256, 3, 24);
+            params.mul_backend = backend;
+            let ctx = FvContext::new(params);
+            let mut rng = ChaChaRng::from_seed(54);
+            let keys = keygen(&ctx, &mut rng);
+            let cts: Vec<(Ciphertext, Ciphertext)> = vals
+                .iter()
+                .map(|&(a, b)| {
+                    (
+                        ctx.encrypt(&encode_int(a, ctx.d()), &keys.pk, &mut rng),
+                        ctx.encrypt(&encode_int(b, ctx.d()), &keys.pk, &mut rng),
+                    )
+                })
+                .collect();
+            let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+                cts.iter().map(|(a, b)| (a, b)).collect();
+            let ring = &ctx.ring_q;
+            let (r0, s0) = (ring.relin_count(), ring.scale_round_count());
+            let fused = ctx.dot_group(&pairs, &keys.rk);
+            assert_eq!(ring.relin_count() - r0, 1, "{backend:?}: one relin per group");
+            assert_eq!(
+                ring.scale_round_count() - s0,
+                1,
+                "{backend:?}: one scale-round per group (no chunking at toy scale)"
+            );
+            assert_eq!(fused.len(), 2);
+            assert!(fused.is_ntt_resident(), "relinearised output stays NTT-resident");
+            let mut fold = ctx.mul_ct(pairs[0].0, pairs[0].1, &keys.rk);
+            for (a, b) in &pairs[1..] {
+                fold = ctx.add_ct(&fold, &ctx.mul_ct(a, b, &keys.rk));
+            }
+            let df = ctx.decrypt(&fused, &keys.sk);
+            assert_eq!(df, ctx.decrypt(&fold, &keys.sk), "{backend:?}: fused vs fold");
+            let expect: i128 = vals.iter().map(|&(a, b)| a as i128 * b as i128).sum();
+            assert_eq!(df.eval_at_2().to_i128(), Some(expect), "{backend:?}");
         }
     }
 

@@ -28,7 +28,7 @@
 use crate::math::baseconv::{BaseConverter, ShenoyConverter};
 use crate::math::bigint::BigUint;
 use crate::math::modarith::{invmod_prime, submod, ShoupConstant};
-use crate::math::poly::{Rep, RingContext, RnsPoly};
+use crate::math::poly::{NttAccumulator, Rep, RingContext, RnsPoly};
 
 use super::ciphertext::Ciphertext;
 use super::context::FvContext;
@@ -46,38 +46,80 @@ pub struct MulScratch {
     z_ext: Vec<Vec<u64>>,
     /// `r = (t·v − z)/q` on the extension planes.
     r_ext: Vec<Vec<u64>>,
+    /// Fused-dot tensor accumulators on the Q ring (c₀/c₁/c₂), built
+    /// on first `dot_pairs` use and reset (not reallocated) per chunk
+    /// — `mul_pairs`-only workers never pay the `u128` planes.
+    acc_q: Vec<NttAccumulator>,
+    /// The extension-ring counterparts.
+    acc_e: Vec<NttAccumulator>,
 }
 
 impl MulScratch {
-    /// Pre-sized buffers for `ctx` (allocates immediately).
+    /// Pre-sized buffers for `ctx` (allocates immediately; the dot
+    /// accumulators stay lazy — see [`ensure_accs`](Self::ensure_accs)).
     pub fn new(ctx: &FvContext) -> Self {
         let d = ctx.d();
         MulScratch {
             z_q: vec![vec![0u64; d]; ctx.ring_q.nlimbs()],
             z_ext: vec![vec![0u64; d]; ctx.ring_ext.nlimbs()],
             r_ext: vec![vec![0u64; d]; ctx.ring_ext.nlimbs()],
+            acc_q: Vec::new(),
+            acc_e: Vec::new(),
         }
     }
 
     /// Empty holder: buffers are sized on first full-RNS use, so a
     /// worker on the `ExactBigint` oracle backend (which never touches
-    /// the scratch) costs three empty `Vec`s, not `(L_q + 2·L_ext)·d`
-    /// words.
+    /// the scratch) costs a handful of empty `Vec`s, not
+    /// `(L_q + 2·L_ext)·d` words.
     pub fn empty() -> Self {
-        MulScratch { z_q: Vec::new(), z_ext: Vec::new(), r_ext: Vec::new() }
+        MulScratch {
+            z_q: Vec::new(),
+            z_ext: Vec::new(),
+            r_ext: Vec::new(),
+            acc_q: Vec::new(),
+            acc_e: Vec::new(),
+        }
+    }
+
+    /// Size (or reset) the six fused-dot tensor accumulators for `ctx`:
+    /// first use per context allocates them, every later chunk zeroes
+    /// the existing `u128` planes in place — no per-group allocation in
+    /// the hot path.
+    fn ensure_accs(&mut self, ctx: &FvContext) {
+        let (rq, re) = (&ctx.ring_q, &ctx.ring_ext);
+        let sized = self.acc_q.len() == 3
+            && self.acc_e.len() == 3
+            && self.acc_q[0].matches(rq.nlimbs(), rq.d)
+            && self.acc_e[0].matches(re.nlimbs(), re.d);
+        if sized {
+            for acc in self.acc_q.iter_mut().chain(self.acc_e.iter_mut()) {
+                acc.reset();
+            }
+        } else {
+            self.acc_q = (0..3).map(|_| rq.ntt_accumulator()).collect();
+            self.acc_e = (0..3).map(|_| re.ntt_accumulator()).collect();
+        }
     }
 
     /// Size the buffers for `ctx` if they are not already. Checks all
     /// three buffer sets, so a scratch reused across contexts that
     /// happen to share the Q shape but differ in the extension basis
-    /// is resized rather than passed through stale.
+    /// is resized rather than passed through stale. Touches only the
+    /// scale-and-round buffers — the dot accumulators may hold a live
+    /// in-chunk sum when this runs (the fused pipeline scale-and-rounds
+    /// component c₀ while c₁/c₂ still sit in the accumulators), so they
+    /// are managed exclusively by [`ensure_accs`](Self::ensure_accs).
     fn ensure(&mut self, ctx: &FvContext) {
         let sized = self.z_q.len() == ctx.ring_q.nlimbs()
             && self.z_ext.len() == ctx.ring_ext.nlimbs()
             && self.r_ext.len() == ctx.ring_ext.nlimbs()
             && self.z_q.first().is_some_and(|pl| pl.len() == ctx.d());
         if !sized {
-            *self = MulScratch::new(ctx);
+            let d = ctx.d();
+            self.z_q = vec![vec![0u64; d]; ctx.ring_q.nlimbs()];
+            self.z_ext = vec![vec![0u64; d]; ctx.ring_ext.nlimbs()];
+            self.r_ext = vec![vec![0u64; d]; ctx.ring_ext.nlimbs()];
         }
     }
 }
@@ -215,6 +257,46 @@ impl FvContext {
         scratch: &mut MulScratch,
         workers: usize,
     ) -> Ciphertext {
+        let rq = &self.ring_q;
+        let re = &self.ring_ext;
+        let (q_ops, e_ops) = self.tensor_operands(a, b, workers);
+        // Tensor product on both rings.
+        fn tensor(ring: &RingContext, ops: &[RnsPoly], workers: usize) -> [RnsPoly; 3] {
+            let mut c0 = ring.mul_ntt(&ops[0], &ops[2]);
+            let mut c1 =
+                ring.add(&ring.mul_ntt(&ops[0], &ops[3]), &ring.mul_ntt(&ops[1], &ops[2]));
+            let mut c2 = ring.mul_ntt(&ops[1], &ops[3]);
+            ring.ntt_inverse_workers(&mut c0, workers);
+            ring.ntt_inverse_workers(&mut c1, workers);
+            ring.ntt_inverse_workers(&mut c2, workers);
+            [c0, c1, c2]
+        }
+        let cq = tensor(rq, &q_ops, workers);
+        let ce = tensor(re, &e_ops, workers);
+        // Scale each component by t/q back into Q.
+        let polys = cq
+            .iter()
+            .zip(ce.iter())
+            .map(|(q_part, e_part)| self.scale_round_rns_with(q_part, e_part, scratch, workers))
+            .collect();
+        rq.note_scale_round();
+        let mut out = Ciphertext::new(polys);
+        out.ct_depth = a.ct_depth.max(b.ct_depth) + 1;
+        out
+    }
+
+    /// Bring one relinearised operand pair's four polynomials into the
+    /// two tensor domains: NTT-form Q planes and NTT-form extension
+    /// planes (residency-lazy; see
+    /// [`mul_no_relin_rns_with`](Self::mul_no_relin_rns_with) for the
+    /// transform bill). Shared by the single multiply and the fused
+    /// inner-product accumulation.
+    fn tensor_operands(
+        &self,
+        a: &Ciphertext,
+        b: &Ciphertext,
+        workers: usize,
+    ) -> (Vec<RnsPoly>, Vec<RnsPoly>) {
         assert_eq!(a.len(), 2, "operands must be relinearised");
         assert_eq!(b.len(), 2);
         let rq = &self.ring_q;
@@ -240,27 +322,101 @@ impl FvContext {
             re.ntt_forward_workers(&mut ext, workers);
             e_ops.push(ext);
         }
-        // Tensor product on both rings.
-        fn tensor(ring: &RingContext, ops: &[RnsPoly], workers: usize) -> [RnsPoly; 3] {
-            let mut c0 = ring.mul_ntt(&ops[0], &ops[2]);
-            let mut c1 =
-                ring.add(&ring.mul_ntt(&ops[0], &ops[3]), &ring.mul_ntt(&ops[1], &ops[2]));
-            let mut c2 = ring.mul_ntt(&ops[1], &ops[3]);
-            ring.ntt_inverse_workers(&mut c0, workers);
-            ring.ntt_inverse_workers(&mut c1, workers);
-            ring.ntt_inverse_workers(&mut c2, workers);
-            [c0, c1, c2]
+        (q_ops, e_ops)
+    }
+
+    /// Fused inner-product tensor `Σ_k a_k ⊗ b_k` **without**
+    /// relinearisation: every pair is base-extended and tensored
+    /// exactly as in [`mul_no_relin_rns_with`](Self::mul_no_relin_rns_with),
+    /// but the three degree-2 tensor components accumulate *unreduced*
+    /// in `u128` residue planes (one [`crate::math::poly::NttAccumulator`]
+    /// per component per ring) across the whole group, and the
+    /// `⌊t·v/q⌉` scale-and-round + Shenoy–Kumaresan back conversion run
+    /// once per chunk of [`fuse_chunk`](Self::fuse_chunk) terms instead
+    /// of once per pair. A one-pair group is bit-identical to
+    /// [`mul_no_relin_rns`](Self::mul_no_relin_rns).
+    pub fn dot_no_relin_rns(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Ciphertext {
+        self.dot_no_relin_rns_with(pairs, &mut MulScratch::new(self), 1)
+    }
+
+    /// [`dot_no_relin_rns`](Self::dot_no_relin_rns) with caller-owned
+    /// scratch and an intra-group worker budget (fans the NTT limb
+    /// planes and base-conversion coefficient ranges; bit-identical
+    /// for every worker count).
+    pub fn dot_no_relin_rns_with(
+        &self,
+        pairs: &[(&Ciphertext, &Ciphertext)],
+        scratch: &mut MulScratch,
+        workers: usize,
+    ) -> Ciphertext {
+        self.dot_no_relin_rns_chunked(pairs, self.fuse_chunk_rns, scratch, workers)
+    }
+
+    /// [`dot_no_relin_rns_with`](Self::dot_no_relin_rns_with) with an
+    /// explicit accumulation-chunk size. Production callers use the
+    /// context-computed headroom bound (`fuse_chunk_rns`: the summed
+    /// `⌊t·v/q⌉` output must keep `|r| ≤ k·t·d·q/4 < B/8` for the
+    /// Shenoy–Kumaresan conversion to stay exact); the chunk-boundary
+    /// parity tests drive smaller chunks directly. Groups longer than
+    /// one chunk pay one extra scale-and-round per chunk — the chunk
+    /// sums are added back in Q — but still relinearise once.
+    pub fn dot_no_relin_rns_chunked(
+        &self,
+        pairs: &[(&Ciphertext, &Ciphertext)],
+        chunk: usize,
+        scratch: &mut MulScratch,
+        workers: usize,
+    ) -> Ciphertext {
+        assert!(!pairs.is_empty(), "dot group must be non-empty");
+        assert!(chunk >= 1, "chunk must be positive");
+        let mut acc: Option<Ciphertext> = None;
+        for part in pairs.chunks(chunk) {
+            let ct = self.dot_chunk_rns(part, scratch, workers);
+            acc = Some(match acc {
+                None => ct,
+                Some(prev) => self.add_ct(&prev, &ct),
+            });
         }
-        let cq = tensor(rq, &q_ops, workers);
-        let ce = tensor(re, &e_ops, workers);
-        // Scale each component by t/q back into Q.
-        let polys = cq
-            .iter()
-            .zip(ce.iter())
-            .map(|(q_part, e_part)| self.scale_round_rns_with(q_part, e_part, scratch, workers))
-            .collect();
+        acc.unwrap()
+    }
+
+    /// One accumulation chunk: tensor every pair into the scratch's
+    /// reusable `u128` accumulators, then reduce, inverse-transform and
+    /// scale-and-round the three summed components once.
+    fn dot_chunk_rns(
+        &self,
+        pairs: &[(&Ciphertext, &Ciphertext)],
+        scratch: &mut MulScratch,
+        workers: usize,
+    ) -> Ciphertext {
+        let rq = &self.ring_q;
+        let re = &self.ring_ext;
+        scratch.ensure_accs(self);
+        let mut depth = 0u32;
+        for (a, b) in pairs {
+            depth = depth.max(a.ct_depth).max(b.ct_depth);
+            let (q_ops, e_ops) = self.tensor_operands(a, b, workers);
+            for (ring, ops, acc) in [
+                (rq, &q_ops, &mut scratch.acc_q),
+                (re, &e_ops, &mut scratch.acc_e),
+            ] {
+                ring.acc_mul_ntt(&mut acc[0], &ops[0], &ops[2]);
+                ring.acc_mul_ntt(&mut acc[1], &ops[0], &ops[3]);
+                ring.acc_mul_ntt(&mut acc[1], &ops[1], &ops[2]);
+                ring.acc_mul_ntt(&mut acc[2], &ops[1], &ops[3]);
+            }
+        }
+        let mut polys = Vec::with_capacity(3);
+        for c in 0..3 {
+            let mut vq = rq.acc_reduce(&scratch.acc_q[c]);
+            rq.ntt_inverse_workers(&mut vq, workers);
+            let mut ve = re.acc_reduce(&scratch.acc_e[c]);
+            re.ntt_inverse_workers(&mut ve, workers);
+            polys.push(self.scale_round_rns_with(&vq, &ve, scratch, workers));
+        }
+        rq.note_scale_round();
         let mut out = Ciphertext::new(polys);
-        out.ct_depth = a.ct_depth.max(b.ct_depth) + 1;
+        out.ct_depth = depth + 1;
         out
     }
 
@@ -360,6 +516,109 @@ mod tests {
             // Mixed residency through the same scratch (reuse check).
             let par_mixed = ctx.mul_no_relin_rns_with(&ca, &cb_ntt, &mut scratch, workers);
             assert_eq!(par_mixed.polys, serial.polys, "mixed operands, workers {workers}");
+        }
+    }
+
+    fn encrypt_pairs(
+        ctx: &FvContext,
+        keys: &super::super::keys::KeySet,
+        rng: &mut ChaChaRng,
+        vals: &[(i64, i64)],
+    ) -> Vec<(Ciphertext, Ciphertext)> {
+        vals.iter()
+            .map(|&(a, b)| {
+                (
+                    ctx.encrypt(&encode_int(a, ctx.d()), &keys.pk, rng),
+                    ctx.encrypt(&encode_int(b, ctx.d()), &keys.pk, rng),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_dot_matches_fold_of_single_multiplies() {
+        let (ctx, _) = ctx_pair(256, 3, 24);
+        let mut rng = ChaChaRng::from_seed(95);
+        let keys = keygen(&ctx, &mut rng);
+        let vals = [(3i64, 5i64), (-7, 11), (100, -2), (9, 4), (-1, -8)];
+        let cts = encrypt_pairs(&ctx, &keys, &mut rng, &vals);
+        let pairs: Vec<(&Ciphertext, &Ciphertext)> = cts.iter().map(|(a, b)| (a, b)).collect();
+        // Reference: per-pair tensors summed in Q.
+        let mut fold = ctx.mul_no_relin_rns(pairs[0].0, pairs[0].1);
+        for (a, b) in &pairs[1..] {
+            fold = ctx.add_ct(&fold, &ctx.mul_no_relin_rns(a, b));
+        }
+        let fused = ctx.dot_no_relin_rns(&pairs);
+        assert_eq!(fused.len(), 3);
+        assert_eq!(fused.ct_depth, 1);
+        let df = ctx.decrypt(&fused, &keys.sk);
+        assert_eq!(df, ctx.decrypt(&fold, &keys.sk), "fused vs fold decrypt");
+        let expect: i128 = vals.iter().map(|&(a, b)| a as i128 * b as i128).sum();
+        assert_eq!(df.eval_at_2().to_i128(), Some(expect));
+        // A one-pair group is the single multiply, bit for bit — the
+        // batcher relies on this to route mul_pairs through the group
+        // seam unchanged.
+        let single = ctx.dot_no_relin_rns(&pairs[..1]);
+        assert_eq!(single.polys, ctx.mul_no_relin_rns(pairs[0].0, pairs[0].1).polys);
+    }
+
+    #[test]
+    fn fused_dot_chunk_boundary_parity() {
+        // Groups beyond the accumulation chunk must split, scale-round
+        // once per chunk, and still decrypt to the same inner product.
+        let (ctx, _) = ctx_pair(256, 3, 24);
+        let mut rng = ChaChaRng::from_seed(96);
+        let keys = keygen(&ctx, &mut rng);
+        let vals = [(12i64, -3i64), (4, 4), (-9, 7), (30, 2), (-5, -5)];
+        let cts = encrypt_pairs(&ctx, &keys, &mut rng, &vals);
+        let pairs: Vec<(&Ciphertext, &Ciphertext)> = cts.iter().map(|(a, b)| (a, b)).collect();
+        assert!(ctx.fuse_chunk_rns >= pairs.len(), "toy set must not chunk by itself");
+        let dec = ctx.decrypt(&ctx.dot_no_relin_rns(&pairs), &keys.sk);
+        let ring = &ctx.ring_q;
+        for chunk in [1usize, 2, 3, 5, 7] {
+            let mut scratch = MulScratch::new(&ctx);
+            let before = ring.scale_round_count();
+            let out = ctx.dot_no_relin_rns_chunked(&pairs, chunk, &mut scratch, 1);
+            assert_eq!(
+                ring.scale_round_count() - before,
+                pairs.len().div_ceil(chunk) as u64,
+                "one scale-round pipeline per chunk (chunk {chunk})"
+            );
+            assert_eq!(ctx.decrypt(&out, &keys.sk), dec, "chunk {chunk}");
+        }
+        // chunk = 1 degenerates to the pair-by-pair fold, bit for bit.
+        let mut scratch = MulScratch::new(&ctx);
+        let per_pair = ctx.dot_no_relin_rns_chunked(&pairs, 1, &mut scratch, 1);
+        let mut fold = ctx.mul_no_relin_rns(pairs[0].0, pairs[0].1);
+        for (a, b) in &pairs[1..] {
+            fold = ctx.add_ct(&fold, &ctx.mul_no_relin_rns(a, b));
+        }
+        assert_eq!(per_pair.polys, fold.polys);
+    }
+
+    #[test]
+    fn fused_dot_workers_are_bit_identical() {
+        let (ctx, _) = ctx_pair(256, 3, 24);
+        let mut rng = ChaChaRng::from_seed(97);
+        let keys = keygen(&ctx, &mut rng);
+        let vals = [(21i64, 2i64), (-6, 13), (7, 7)];
+        let cts = encrypt_pairs(&ctx, &keys, &mut rng, &vals);
+        let mut pairs: Vec<(&Ciphertext, &Ciphertext)> =
+            cts.iter().map(|(a, b)| (a, b)).collect();
+        let serial = ctx.dot_no_relin_rns(&pairs);
+        // Mixed residency (NTT-resident b of the middle pair) through
+        // the same scratch, as the descent loops produce.
+        let mut b1_ntt = cts[1].1.clone();
+        for p in b1_ntt.polys.iter_mut() {
+            ctx.ring_q.ensure_ntt(p);
+        }
+        pairs[1].1 = &b1_ntt;
+        let serial_mixed = ctx.dot_no_relin_rns(&pairs);
+        assert_eq!(serial_mixed.polys, serial.polys, "residency must not change bits");
+        for workers in [2usize, 4, 8] {
+            let mut scratch = MulScratch::new(&ctx);
+            let par = ctx.dot_no_relin_rns_with(&pairs, &mut scratch, workers);
+            assert_eq!(par.polys, serial.polys, "workers {workers}");
         }
     }
 

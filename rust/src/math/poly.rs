@@ -53,6 +53,15 @@ pub struct RingContext {
     /// count per polynomial, not per limb) — the test hook behind the
     /// cached-operand / NTT-residency transform-budget assertions.
     transforms: AtomicU64,
+    /// Relinearisation pipelines performed over this ring (one count
+    /// per relinearised ciphertext, not per gadget limb) — the hook
+    /// behind the fused-inner-product budget tests: a GD iteration
+    /// under `dot_pairs` must relinearise `n+p` times, not `2·n·p`.
+    relins: AtomicU64,
+    /// `⌊t·v/q⌉` scale-and-round pipelines performed over this ring
+    /// (one count per 3-component tensor brought back to Q — either a
+    /// single ciphertext product or a whole fused accumulation chunk).
+    scale_rounds: AtomicU64,
 }
 
 impl RingContext {
@@ -63,6 +72,8 @@ impl RingContext {
             basis: RnsBasis::new(primes),
             tables,
             transforms: AtomicU64::new(0),
+            relins: AtomicU64::new(0),
+            scale_rounds: AtomicU64::new(0),
         })
     }
 
@@ -71,6 +82,30 @@ impl RingContext {
     /// to measure its transform budget.
     pub fn transform_count(&self) -> u64 {
         self.transforms.load(Ordering::Relaxed)
+    }
+
+    /// Relinearisation pipelines performed over this ring (see the
+    /// field doc); diff two snapshots to measure an operation's
+    /// relinearisation budget.
+    pub fn relin_count(&self) -> u64 {
+        self.relins.load(Ordering::Relaxed)
+    }
+
+    /// Scale-and-round pipelines performed over this ring (see the
+    /// field doc).
+    pub fn scale_round_count(&self) -> u64 {
+        self.scale_rounds.load(Ordering::Relaxed)
+    }
+
+    /// Record one relinearisation pipeline (called by the FV ops layer;
+    /// lives here so the counter sits alongside [`transform_count`]).
+    pub fn note_relin(&self) {
+        self.relins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one scale-and-round pipeline.
+    pub fn note_scale_round(&self) {
+        self.scale_rounds.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn nlimbs(&self) -> usize {
@@ -406,6 +441,22 @@ impl NttAccumulator {
     /// Number of `acc_mul_ntt` terms absorbed so far.
     pub fn terms(&self) -> usize {
         self.terms
+    }
+
+    /// True when this accumulator was built for a ring of `nplanes`
+    /// limbs and degree `d` (scratch-reuse shape check).
+    pub fn matches(&self, nplanes: usize, d: usize) -> bool {
+        self.d == d && self.planes.len() == nplanes
+    }
+
+    /// Zero every plane and the term counter, keeping the allocation —
+    /// how the fused inner-product scratch reuses accumulators across
+    /// chunks instead of reallocating `nplanes·d` `u128` words each.
+    pub fn reset(&mut self) {
+        for plane in self.planes.iter_mut() {
+            plane.fill(0);
+        }
+        self.terms = 0;
     }
 }
 

@@ -50,6 +50,34 @@ pub trait HeEngine: Send + Sync {
     /// relinearisation). The batching seam for XLA dispatch.
     fn mul_pairs(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext>;
 
+    /// Batched **fused inner products**: one relinearised ciphertext
+    /// `Σ_k a_k·b_k` per (non-empty) group. This is the primitive the
+    /// encrypted descent loops emit — the algebra needs one
+    /// relinearisation + scale-and-round per output *sum*, not per
+    /// product, so a native implementation accumulates the degree-2
+    /// tensors across the group and runs the expensive pipeline once
+    /// (`n+p` pipelines per GD iteration instead of `2·n·p`).
+    ///
+    /// The default implementation degrades to one `mul_pairs` batch
+    /// plus an add fold, so engines without a native fused path (the
+    /// XLA backend, at present) keep working with identical semantics.
+    fn dot_pairs(&self, groups: &[&[(&Ciphertext, &Ciphertext)]]) -> Vec<Ciphertext> {
+        let flat: Vec<(&Ciphertext, &Ciphertext)> =
+            groups.iter().flat_map(|g| g.iter().copied()).collect();
+        let mut prods = self.mul_pairs(&flat).into_iter();
+        groups
+            .iter()
+            .map(|g| {
+                assert!(!g.is_empty(), "dot_pairs group must be non-empty");
+                let mut acc = prods.next().unwrap();
+                for _ in 1..g.len() {
+                    acc = self.add(&acc, &prods.next().unwrap());
+                }
+                acc
+            })
+            .collect()
+    }
+
     fn stats(&self) -> &OpStats;
 
     // Cheap ops with default implementations via the context.
@@ -142,6 +170,20 @@ impl NativeEngine {
     fn worker_budget(&self) -> usize {
         self.workers.unwrap_or_else(pool_workers)
     }
+
+    /// Split the worker budget between batch-level fan-out over `items`
+    /// work units and intra-multiply plane/range fan-out (the latter
+    /// only on rings big enough to amortise a thread spawn).
+    fn split_budget(&self, items: usize) -> (usize, usize) {
+        let budget = self.worker_budget();
+        let outer = budget.min(items.max(1));
+        let inner = if self.ctx.ring_q.d >= INTRA_MUL_MIN_DEGREE {
+            (budget / outer).max(1)
+        } else {
+            1
+        };
+        (outer, inner)
+    }
 }
 
 impl HeEngine for NativeEngine {
@@ -161,16 +203,10 @@ impl HeEngine for NativeEngine {
         }
         let ctx = &self.ctx;
         let rk = &self.rk;
-        let budget = self.worker_budget();
         // Split the budget: batch-level first (it parallelises the
         // whole multiply); leftover goes intra-multiply, but only on
         // rings where a plane/chunk outweighs a thread spawn.
-        let outer = budget.min(pairs.len());
-        let inner = if self.ctx.ring_q.d >= INTRA_MUL_MIN_DEGREE {
-            (budget / outer).max(1)
-        } else {
-            1
-        };
+        let (outer, inner) = self.split_budget(pairs.len());
         parallel_map_with(
             pairs.to_vec(),
             outer,
@@ -178,6 +214,30 @@ impl HeEngine for NativeEngine {
             // bigint oracle backend (which never touches it).
             MulScratch::empty,
             move |scratch, (a, b)| ctx.mul_ct_with(a, b, rk, scratch, inner),
+        )
+    }
+
+    fn dot_pairs(&self, groups: &[&[(&Ciphertext, &Ciphertext)]]) -> Vec<Ciphertext> {
+        let total: u64 = groups.iter().map(|g| g.len() as u64).sum();
+        self.stats.ct_muls.fetch_add(total, Ordering::Relaxed);
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        if groups.is_empty() {
+            return Vec::new();
+        }
+        let ctx = &self.ctx;
+        let rk = &self.rk;
+        // Same two-way budget split as `mul_pairs`: groups fan across
+        // the batch workers, leftover budget goes to the intra-group
+        // plane/range fan-out on large rings. Each group's pipeline
+        // (u128 tensor accumulation → one scale-and-round → one
+        // relinearisation) runs on one worker, so results are
+        // bit-identical and in input order for every worker count.
+        let (outer, inner) = self.split_budget(groups.len());
+        parallel_map_with(
+            groups.to_vec(),
+            outer,
+            MulScratch::empty,
+            move |scratch, g| ctx.dot_group_with(g, rk, scratch, inner),
         )
     }
 }
@@ -263,6 +323,141 @@ mod tests {
         for (got, want) in out.iter().zip(&reference) {
             assert_eq!(got.polys, want.polys, "ambient worker budget");
         }
+    }
+
+    #[test]
+    fn dot_pairs_matches_fold_across_backends_workers_and_shapes() {
+        // The satellite parity battery: dot_pairs must decrypt
+        // identically to the fold of mul_pairs-plus-adds on both
+        // multiply backends, for worker counts 1/2/4 and group shapes
+        // singleton / whole-batch / ragged — and be bit-identical
+        // across worker counts.
+        for backend in [MulBackend::FullRns, MulBackend::ExactBigint] {
+            let ctx = FvContext::new(FvParams::custom(256, 3, 24)).with_backend(backend);
+            let mut rng = ChaChaRng::from_seed(204);
+            let keys = keygen(&ctx, &mut rng);
+            let rk = Arc::new(keys.rk.clone());
+            let vals: Vec<(i64, i64)> = (0..8i64).map(|k| (2 * k - 5, 7 - 3 * k)).collect();
+            let cts: Vec<(Ciphertext, Ciphertext)> = vals
+                .iter()
+                .map(|&(a, b)| {
+                    (
+                        ctx.encrypt(&encode_int(a, ctx.d()), &keys.pk, &mut rng),
+                        ctx.encrypt(&encode_int(b, ctx.d()), &keys.pk, &mut rng),
+                    )
+                })
+                .collect();
+            let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+                cts.iter().map(|(a, b)| (a, b)).collect();
+            for shape in [vec![1usize], vec![8], vec![2, 5, 1]] {
+                let mut groups: Vec<&[(&Ciphertext, &Ciphertext)]> = Vec::new();
+                let mut bounds = Vec::new();
+                let mut cursor = 0usize;
+                for &len in &shape {
+                    groups.push(&pairs[cursor..cursor + len]);
+                    bounds.push((cursor, cursor + len));
+                    cursor += len;
+                }
+                let serial =
+                    NativeEngine::new(ctx.clone(), rk.clone()).with_pool_workers(1);
+                // Reference: the default-impl semantics — one mul_pairs
+                // batch per group, folded with adds.
+                let folds: Vec<Ciphertext> = groups
+                    .iter()
+                    .map(|g| {
+                        let prods = serial.mul_pairs(g);
+                        let mut acc = prods[0].clone();
+                        for p in &prods[1..] {
+                            acc = serial.add(&acc, p);
+                        }
+                        acc
+                    })
+                    .collect();
+                let reference = serial.dot_pairs(&groups);
+                for workers in [1usize, 2, 4] {
+                    let engine =
+                        NativeEngine::new(ctx.clone(), rk.clone()).with_pool_workers(workers);
+                    let out = engine.dot_pairs(&groups);
+                    assert_eq!(out.len(), groups.len());
+                    for (gi, got) in out.iter().enumerate() {
+                        assert_eq!(
+                            got.polys, reference[gi].polys,
+                            "{backend:?} shape {shape:?} group {gi}: \
+                             bits differ at {workers} workers"
+                        );
+                        let dec = ctx.decrypt(got, &keys.sk);
+                        assert_eq!(
+                            dec,
+                            ctx.decrypt(&folds[gi], &keys.sk),
+                            "{backend:?} shape {shape:?} group {gi}: fused vs fold"
+                        );
+                        let (s, e) = bounds[gi];
+                        let expect: i128 =
+                            vals[s..e].iter().map(|&(a, b)| a as i128 * b as i128).sum();
+                        assert_eq!(dec.eval_at_2().to_i128(), Some(expect));
+                    }
+                }
+            }
+            // Singleton groups are mul_pairs, bit for bit — the
+            // batcher routes mul_pairs through the group seam on the
+            // strength of this.
+            let engine = NativeEngine::new(ctx.clone(), rk.clone()).with_pool_workers(2);
+            let singles: Vec<&[(&Ciphertext, &Ciphertext)]> = pairs.chunks(1).collect();
+            let via_dot = engine.dot_pairs(&singles);
+            let via_mul = engine.mul_pairs(&pairs);
+            for (i, (a, b)) in via_dot.iter().zip(&via_mul).enumerate() {
+                assert_eq!(a.polys, b.polys, "{backend:?}: singleton group {i}");
+                assert_eq!(a.ct_depth, b.ct_depth);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_pairs_default_impl_matches_native() {
+        // A wrapper that deliberately refuses to override dot_pairs
+        // must still produce decrypt-identical group sums through the
+        // mul_pairs + add-fold default — the XLA degradation contract.
+        struct Fallback(NativeEngine);
+        impl HeEngine for Fallback {
+            fn ctx(&self) -> &FvContext {
+                self.0.ctx()
+            }
+            fn stats(&self) -> &OpStats {
+                self.0.stats()
+            }
+            fn mul_pairs(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext> {
+                self.0.mul_pairs(pairs)
+            }
+        }
+        let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+        let mut rng = ChaChaRng::from_seed(205);
+        let keys = keygen(&ctx, &mut rng);
+        let rk = Arc::new(keys.rk);
+        let cts: Vec<(Ciphertext, Ciphertext)> = (0..5i64)
+            .map(|k| {
+                (
+                    ctx.encrypt(&encode_int(k + 1, ctx.d()), &keys.pk, &mut rng),
+                    ctx.encrypt(&encode_int(2 * k - 3, ctx.d()), &keys.pk, &mut rng),
+                )
+            })
+            .collect();
+        let pairs: Vec<(&Ciphertext, &Ciphertext)> = cts.iter().map(|(a, b)| (a, b)).collect();
+        let groups: Vec<&[(&Ciphertext, &Ciphertext)]> = vec![&pairs[..2], &pairs[2..]];
+        let native = NativeEngine::new(ctx.clone(), rk.clone());
+        let fallback = Fallback(NativeEngine::new(ctx.clone(), rk.clone()));
+        let a = native.dot_pairs(&groups);
+        let b = fallback.dot_pairs(&groups);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                ctx.decrypt(x, &keys.sk),
+                ctx.decrypt(y, &keys.sk),
+                "group {i}: native fused vs default fold"
+            );
+        }
+        // Empty input is a no-op on both paths.
+        assert!(native.dot_pairs(&[]).is_empty());
+        assert!(fallback.dot_pairs(&[]).is_empty());
     }
 
     #[test]

@@ -14,6 +14,14 @@
 //!   4. one `polymul` dispatch stream for the 2ℓ·B relinearisation
 //!      digit products (XLA), accumulated in Rust.
 //!
+//! Keys stay **NTT-resident** in the engine: the relinearisation key
+//! is stored exactly as keygen produced it and only lowered to
+//! coefficient form — once, lazily — at the artifact boundary when the
+//! first `mul_pairs` batch dispatches (ROADMAP PR-4 follow-up).
+//! `dot_pairs` (fused inner products) has no XLA lowering yet and
+//! rides the trait default (`mul_pairs` + add fold); lowering the
+//! tensor accumulation into the artifact stream is the next open item.
+//!
 //! PJRT handles are not `Send`/`Sync` at the type level (raw pointers);
 //! all access is serialised behind one mutex, and the CPU PJRT plugin
 //! itself is thread-safe, so sharing the engine across coordinator
@@ -32,7 +40,7 @@ mod imp {
     use std::collections::HashMap;
     use std::path::Path;
     use std::sync::atomic::Ordering;
-    use std::sync::{Arc, Mutex};
+    use std::sync::{Arc, Mutex, OnceLock};
 
     use crate::fhe::{Ciphertext, FvContext, RelinKey};
     use crate::math::poly::{Rep, RingContext, RnsPoly};
@@ -51,9 +59,17 @@ mod imp {
     /// The XLA-backed homomorphic engine.
     pub struct XlaEngine {
         pub ctx: Arc<FvContext>,
-        /// Relinearisation key digits in *coefficient* form (the artifacts
-        /// take coefficient-domain inputs).
-        rk_coeff: Vec<(RnsPoly, RnsPoly)>,
+        /// The relinearisation key, NTT-resident as keygen produced it.
+        /// Construction no longer pays `2ℓ` inverse transforms up
+        /// front: the key stays hot for any native-path reuse and is
+        /// only lowered at the artifact boundary (below).
+        rk: RelinKey,
+        /// Relinearisation key digits in *coefficient* form — the
+        /// representation the `polymul` artifacts take. Converted
+        /// lazily, once, on the first `mul_pairs` dispatch; an engine
+        /// that is constructed but never multiplies (backend probes,
+        /// capability checks) pays zero key transforms.
+        rk_coeff: OnceLock<Vec<(RnsPoly, RnsPoly)>>,
         inner: Mutex<XlaInner>,
         stats: OpStats,
     }
@@ -81,24 +97,33 @@ mod imp {
                 }
             }
             let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-            let ring = &ctx.ring_q;
-            let rk_coeff = rk
-                .b_ntt
-                .iter()
-                .zip(&rk.a_ntt)
-                .map(|(b, a)| {
-                    let mut bc = b.clone();
-                    let mut ac = a.clone();
-                    ring.ntt_inverse(&mut bc);
-                    ring.ntt_inverse(&mut ac);
-                    (bc, ac)
-                })
-                .collect();
             Ok(XlaEngine {
                 ctx,
-                rk_coeff,
+                rk: rk.clone(),
+                rk_coeff: OnceLock::new(),
                 inner: Mutex::new(XlaInner { client, exes: HashMap::new(), registry }),
                 stats: OpStats::default(),
+            })
+        }
+
+        /// The coefficient-form relinearisation key limbs, converted on
+        /// first use (the artifact boundary is the only place the NTT
+        /// residency must be given up).
+        fn rk_coeff(&self) -> &Vec<(RnsPoly, RnsPoly)> {
+            self.rk_coeff.get_or_init(|| {
+                let ring = &self.ctx.ring_q;
+                self.rk
+                    .b_ntt
+                    .iter()
+                    .zip(&self.rk.a_ntt)
+                    .map(|(b, a)| {
+                        let mut bc = b.clone();
+                        let mut ac = a.clone();
+                        ring.ntt_inverse(&mut bc);
+                        ring.ntt_inverse(&mut ac);
+                        (bc, ac)
+                    })
+                    .collect()
             })
         }
 
@@ -242,16 +267,26 @@ mod imp {
                     ]
                 },
             );
+            // The XLA path has no fused inner-product lowering yet
+            // (dot_pairs degrades to this mul_pairs + add fold via the
+            // trait default): one scale-round and one relinearisation
+            // pipeline per pair, recorded on the ring counters so the
+            // budget accounting stays comparable with the native path.
+            for _ in 0..scaled.len() {
+                ctx.ring_q.note_scale_round();
+                ctx.ring_q.note_relin();
+            }
             // 4. Relinearisation: digit products through XLA, accumulated
             //    in Rust.
             let digits: Vec<Vec<RnsPoly>> = parallel_map(
                 scaled.iter().map(|s| s[2].clone()).collect::<Vec<_>>(),
                 |c2| ctx.relin_digits(&c2),
             );
+            let rk_coeff = self.rk_coeff();
             let relin_jobs: Vec<(&RnsPoly, &RnsPoly)> = digits
                 .iter()
                 .flat_map(|ds| {
-                    ds.iter().zip(&self.rk_coeff).flat_map(|(dj, (bj, aj))| {
+                    ds.iter().zip(rk_coeff).flat_map(|(dj, (bj, aj))| {
                         [(dj, bj), (dj, aj)]
                     })
                 })

@@ -18,7 +18,7 @@ use els::fhe::noise::noise_budget_bits;
 use els::fhe::params::{plan, Algo, MulBackend, PlanRequest, SecurityProfile};
 use els::fhe::rng::ChaChaRng;
 use els::fhe::FvContext;
-use els::runtime::backend::NativeEngine;
+use els::runtime::backend::{HeEngine, NativeEngine};
 
 struct World {
     ctx: Arc<FvContext>,
@@ -200,6 +200,62 @@ fn gd_fit_is_bit_identical_across_pool_worker_counts() {
     let dec = decrypt_coefficients(&w.ctx, &w.keys.sk, &fit_serial);
     let expect = exact::gd_exact(&w.q, w.nu, 2).decode_last();
     assert!(linf(&dec, &expect) < 1e-9);
+}
+
+#[test]
+fn fused_dots_match_mul_pairs_fold_at_e2e_scale() {
+    // The fused inner-product parity contract at integration scale:
+    // dot_pairs over GD-shaped groups (one per row, one per column,
+    // plus a ragged remainder) must decrypt identically to the
+    // mul_pairs + add fold, on the active multiply backend (CI re-runs
+    // this under ELS_MUL_BACKEND=bigint) and for worker counts 1/2/4 —
+    // with the fused outputs bit-identical across worker budgets.
+    let mut w = world(824, 6, 2, 2, Algo::Gd, 0);
+    let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
+    let rk = Arc::new(w.keys.rk.clone());
+    type Pair<'a> = (&'a els::fhe::Ciphertext, &'a els::fhe::Ciphertext);
+    let mut owned: Vec<Vec<Pair>> = Vec::new();
+    // Row-shaped groups: Σ_j X̃_ij·ỹ_i-style (use y as the second leg).
+    for i in 0..w.q.n() {
+        owned.push((0..w.q.p()).map(|j| (&data.x[i][j], &data.y[i])).collect());
+    }
+    // Column-shaped groups: Σ_i X̃_ij·ỹ_i.
+    for j in 0..w.q.p() {
+        owned.push((0..w.q.n()).map(|i| (&data.x[i][j], &data.y[i])).collect());
+    }
+    // Ragged remainder: a singleton.
+    owned.push(vec![(&data.x[0][0], &data.y[1])]);
+    let groups: Vec<&[Pair]> = owned.iter().map(|g| g.as_slice()).collect();
+    let serial = NativeEngine::new(w.ctx.clone(), rk.clone()).with_pool_workers(1);
+    // Reference fold through the same engine.
+    let folds: Vec<els::fhe::Ciphertext> = groups
+        .iter()
+        .map(|g| {
+            let prods = serial.mul_pairs(g);
+            let mut acc = prods[0].clone();
+            for p in &prods[1..] {
+                acc = serial.add(&acc, p);
+            }
+            acc
+        })
+        .collect();
+    let reference = serial.dot_pairs(&groups);
+    for workers in [1usize, 2, 4] {
+        let engine = NativeEngine::new(w.ctx.clone(), rk.clone()).with_pool_workers(workers);
+        let out = engine.dot_pairs(&groups);
+        assert_eq!(out.len(), groups.len());
+        for (gi, got) in out.iter().enumerate() {
+            assert_eq!(
+                got.polys, reference[gi].polys,
+                "group {gi}: fused bits differ at {workers} workers"
+            );
+            assert_eq!(
+                w.ctx.decrypt(got, &w.keys.sk),
+                w.ctx.decrypt(&folds[gi], &w.keys.sk),
+                "group {gi}: fused vs fold decrypt at {workers} workers"
+            );
+        }
+    }
 }
 
 #[test]
