@@ -7,8 +7,9 @@
 //! and writes the comparison to `BENCH_fhe_ops.json` — the bench
 //! trajectory the ROADMAP tracks for the `mul_pairs` cost centre. The
 //! `dot_pairs` section times one fused 8-pair inner-product group
-//! against the pair-by-pair fold it replaces (the fusion speedup ratio
-//! bench_check.py tracks warn-only).
+//! against the pair-by-pair fold it replaces, and the `rotations`
+//! section times packed Galois rotations/slot_sum against a full
+//! ct-mul (both ratios tracked warn-only by bench_check.py).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -179,6 +180,30 @@ fn main() {
         })
     };
 
+    // Slot rotations on a packed context: one Galois key switch
+    // (rotate_rows by 1) and a full slot_sum (log₂(d/2)+1 switches)
+    // against a full ct-mul on the same parameters. All three run in
+    // the same process, so the mul/rotate ratio is machine-relative —
+    // tracked warn-only by bench_check.py like dot_pairs.
+    header("rotations: packed rotate_rows / slot_sum (d=256)");
+    let pctx = FvContext::new(FvParams::custom_packed(256, 3, 24).unwrap());
+    let mut prng = ChaChaRng::from_seed(9003);
+    let pkeys = keygen(&pctx, &mut prng);
+    let pct_a = pctx.encrypt(&m, &pkeys.pk, &mut prng);
+    let pct_b = pctx.encrypt(&m, &pkeys.pk, &mut prng);
+    let s_rot = bench("rotate_rows 1 step", 2, 10, || {
+        black_box(pctx.rotate_rows(&pct_a, 1, &pkeys.gk));
+    });
+    let s_slot_sum = bench("slot_sum (full total)", 1, 5, || {
+        black_box(pctx.slot_sum(&pct_a, &pkeys.gk));
+    });
+    let s_pmul = bench("packed ct mul full", 2, 10, || {
+        black_box(pctx.mul_ct(&pct_a, &pct_b, &pkeys.rk));
+    });
+    let mul_over_rotate =
+        s_pmul.mean.as_nanos() as f64 / s_rot.mean.as_nanos().max(1) as f64;
+    println!("  -> ct-mul / 1-step-rotation cost ratio: {mul_over_rotate:.2}x");
+
     let report = Json::obj(vec![
         ("bench", Json::str("fhe_ops::mul_pairs")),
         ("status", Json::str("measured")),
@@ -204,6 +229,16 @@ fn main() {
             ]),
         ),
         ("gd_iteration", stats_json(&s_gd)),
+        (
+            "rotations",
+            Json::obj(vec![
+                ("d", Json::Num(pctx.d() as f64)),
+                ("rotate_1", stats_json(&s_rot)),
+                ("slot_sum", stats_json(&s_slot_sum)),
+                ("ct_mul", stats_json(&s_pmul)),
+                ("mul_over_rotate", Json::Num(mul_over_rotate)),
+            ]),
+        ),
     ]);
     match std::fs::write("BENCH_fhe_ops.json", report.to_string_json()) {
         Ok(()) => println!("wrote BENCH_fhe_ops.json"),

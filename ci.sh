@@ -41,6 +41,12 @@ ELS_MUL_BACKEND=bigint cargo test -q
 note "tier-1 (serial pool): ELS_POOL_WORKERS=1 cargo test -q"
 ELS_POOL_WORKERS=1 cargo test -q
 
+# Routes the env-dispatch e2e fit (and any Encoding::from_env caller)
+# through the packed slot path: CRT batching, Galois rotations,
+# fit_packed vs the unpacked parity oracle.
+note "tier-1 (packed encoding): ELS_ENCODING=packed cargo test -q"
+ELS_ENCODING=packed cargo test -q
+
 note "cargo bench (toy profile; must not panic)"
 # fhe_ops overwrites BENCH_fhe_ops.json — stash the committed baseline
 # for the regression gate below.

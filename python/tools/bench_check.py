@@ -17,7 +17,9 @@ Beyond mul_pairs, the report also carries a `mul_plain` section
 (cold vs cached-operand timings — the cold/cached ratio is the same
 machine-relative design as the backend speedup), a `dot_pairs` section
 (one fused 8-pair inner-product group vs the pair-by-pair fold — the
-fusion speedup ratio) and a `gd_iteration` end-to-end timing. All are
+fusion speedup ratio), a `rotations` section (packed Galois key switch
+vs a full ct-mul on the same parameters) and a `gd_iteration`
+end-to-end timing. All are
 tracked **warn-only** until a measured baseline containing them lands;
 they never fail the gate (gd_iteration has no in-run relative pair at
 all, so it stays advisory forever).
@@ -178,6 +180,31 @@ def main(argv):
             f"  dot_pairs fused/pairwise speedup (group "
             f"{int(base_dp.get('group', 0))}): {old_ratio:.2f}x -> "
             f"{new_ratio:.2f}x ({new_ratio / old_ratio - 1.0:+.1%})  {verdict}"
+        )
+    # rotations ct-mul/rotate ratio — warn-only (same machine-relative
+    # design: one Galois key switch vs a full ct-mul, measured in the
+    # same process on the same packed parameters).
+    base_rot, fresh_rot = baseline.get("rotations"), fresh.get("rotations")
+    if base_rot and not fresh_rot:
+        lines.append(
+            "  rotations: WARNING — baseline has this section but the fresh "
+            "run does not (did the bench stop measuring it?)"
+        )
+    elif fresh_rot and not base_rot:
+        lines.append(
+            "  rotations: no baseline section yet — mul/rotate ratio tracked "
+            "warn-only until a measured baseline containing it is committed"
+        )
+    elif base_rot and fresh_rot:
+        old_ratio = base_rot["ct_mul"]["mean_ns"] / max(base_rot["rotate_1"]["mean_ns"], 1)
+        new_ratio = fresh_rot["ct_mul"]["mean_ns"] / max(fresh_rot["rotate_1"]["mean_ns"], 1)
+        verdict = "OK"
+        if new_ratio < old_ratio * (1.0 - threshold):
+            verdict = "WARNING: rotations got pricier vs ct-mul (not gated yet)"
+        lines.append(
+            f"  rotations ct-mul/rotate ratio (d={int(base_rot.get('d', 0))}): "
+            f"{old_ratio:.2f}x -> {new_ratio:.2f}x "
+            f"({new_ratio / old_ratio - 1.0:+.1%})  {verdict}"
         )
     # gd_iteration — absolute wall clock only, advisory forever.
     base_gd, fresh_gd = baseline.get("gd_iteration"), fresh.get("gd_iteration")

@@ -210,6 +210,21 @@ impl HeEngine for BatchingEngine {
         self.stats.plain_muls.fetch_add(1, Ordering::Relaxed);
         self.inner.ctx().mul_plain_prepared(a, m)
     }
+
+    fn rotate_rows(
+        &self,
+        ct: &Ciphertext,
+        steps: usize,
+    ) -> crate::util::error::Result<Ciphertext> {
+        // Rotations are single key switches — cheap next to the fused
+        // mul pipeline; forward inline to the wrapped engine (which
+        // holds the Galois keys), never through the dispatcher.
+        self.inner.rotate_rows(ct, steps)
+    }
+
+    fn slot_sum(&self, ct: &Ciphertext) -> crate::util::error::Result<Ciphertext> {
+        self.inner.slot_sum(ct)
+    }
 }
 
 #[cfg(test)]

@@ -181,6 +181,55 @@ pub fn relin_key_from_json(ctx: &FvContext, j: &Json) -> Result<RelinKey> {
     Ok(RelinKey { b_ntt: b, a_ntt: a })
 }
 
+/// Galois rotation keys: same per-limb gadget shape as the relin key,
+/// one entry per Galois element. Scalar key sets serialise as `[]`.
+pub fn galois_keys_to_json(gk: &crate::fhe::GaloisKeys) -> Json {
+    Json::Arr(
+        gk.iter()
+            .map(|k| {
+                Json::obj(vec![
+                    ("galois", Json::Num(k.galois as f64)),
+                    ("b", Json::Arr(k.b_ntt.iter().map(poly_to_json).collect())),
+                    ("a", Json::Arr(k.a_ntt.iter().map(poly_to_json).collect())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn galois_keys_from_json(ctx: &FvContext, j: &Json) -> Result<crate::fhe::GaloisKeys> {
+    let keys: Result<Vec<crate::fhe::GaloisKey>> = j
+        .as_arr()
+        .context("galois key array")?
+        .iter()
+        .map(|entry| {
+            let galois = entry.req("galois")?.as_usize().context("galois element")?;
+            if galois % 2 == 0 || galois >= 2 * ctx.d() {
+                bail!("galois element {galois} is not an odd unit mod 2d");
+            }
+            let parse = |key: &str| -> Result<Vec<RnsPoly>> {
+                entry
+                    .req(key)?
+                    .as_arr()
+                    .context("galois key digit array")?
+                    .iter()
+                    .map(|p| poly_from_json(ctx, p))
+                    .collect()
+            };
+            let (b, a) = (parse("b")?, parse("a")?);
+            if b.len() != a.len() || b.len() != ctx.relin_ndigits {
+                bail!(
+                    "galois key digit count mismatch (got {}, need {})",
+                    b.len(),
+                    ctx.relin_ndigits
+                );
+            }
+            Ok(crate::fhe::GaloisKey { galois, b_ntt: b, a_ntt: a })
+        })
+        .collect();
+    Ok(crate::fhe::GaloisKeys::from_keys(keys?))
+}
+
 // ---- fit config / results ----------------------------------------------
 
 pub fn accel_to_str(a: Accel) -> &'static str {
@@ -273,12 +322,19 @@ pub fn params_to_json(p: &crate::fhe::FvParams) -> Json {
                 crate::fhe::SecurityProfile::Paper128 => "paper128",
             }),
         ),
+        (
+            "encoding",
+            Json::str(match p.encoding {
+                crate::fhe::Encoding::Scalar => "scalar",
+                crate::fhe::Encoding::Packed => "packed",
+            }),
+        ),
     ])
 }
 
 pub fn params_from_json(j: &Json) -> Result<crate::fhe::FvParams> {
     let t = BigUint::from_limbs(from_hex(j.req("t_hex")?.as_str().context("t_hex")?)?);
-    Ok(crate::fhe::FvParams {
+    let params = crate::fhe::FvParams {
         d: j.req("d")?.as_usize().context("d")?,
         q_count: j.req("q_count")?.as_usize().context("q_count")?,
         ext_count: j.req("ext_count")?.as_usize().context("ext_count")?,
@@ -297,7 +353,17 @@ pub fn params_from_json(j: &Json) -> Result<crate::fhe::FvParams> {
             Some("paper128") => crate::fhe::SecurityProfile::Paper128,
             _ => crate::fhe::SecurityProfile::Toy,
         },
-    })
+        // Absent ⇒ scalar: key files predate slot packing. A packed
+        // tag is re-validated below (t ≡ 1 mod 2d), so a tampered or
+        // mismatched wire params set fails here, not deep in keygen.
+        encoding: match j.get("encoding").and_then(|v| v.as_str()) {
+            Some("packed") => crate::fhe::Encoding::Packed,
+            Some("scalar") | None => crate::fhe::Encoding::Scalar,
+            Some(other) => bail!("unknown encoding '{other}' (scalar|packed)"),
+        },
+    };
+    params.validate_encoding()?;
+    Ok(params)
 }
 
 /// Full key-file codec (params + sk + pk + rk). The secret key is
@@ -315,6 +381,7 @@ pub fn keyset_to_json(params: &crate::fhe::FvParams, keys: &crate::fhe::KeySet) 
             ]),
         ),
         ("rk", relin_key_to_json(&keys.rk)),
+        ("gk", galois_keys_to_json(&keys.gk)),
     ])
 }
 
@@ -334,6 +401,12 @@ pub fn keyset_from_json(j: &Json) -> Result<(std::sync::Arc<FvContext>, crate::f
             a_ntt: poly_from_json(&ctx, pk.req("a")?)?,
         },
         rk: relin_key_from_json(&ctx, j.req("rk")?)?,
+        // Absent ⇒ empty: scalar key files (and any predating slot
+        // packing) carry no rotation keys.
+        gk: match j.get("gk") {
+            Some(gk) => galois_keys_from_json(&ctx, gk)?,
+            None => crate::fhe::GaloisKeys::default(),
+        },
     };
     Ok((ctx, keys))
 }
@@ -437,6 +510,36 @@ mod tests {
         let ct = ctx.encrypt(&encode_int(77, ctx.d()), &keys.pk, &mut rng);
         let pt = ctx2.decrypt(&ct, &keys2.sk);
         assert_eq!(pt.eval_at_2().to_i128(), Some(77));
+    }
+
+    #[test]
+    fn packed_keyset_roundtrip_carries_galois_keys() {
+        use crate::fhe::encoding::Encoder;
+        let params = FvParams::custom_packed(256, 2, 16).unwrap();
+        let ctx = FvContext::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(706);
+        let keys = keygen(&ctx, &mut rng);
+        assert!(!keys.gk.is_empty());
+        let j = keyset_to_json(&params, &keys).to_string_json();
+        let (ctx2, keys2) = keyset_from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(ctx2.params.encoding, crate::fhe::Encoding::Packed);
+        let original: Vec<usize> = keys.gk.elements().collect();
+        let restored: Vec<usize> = keys2.gk.elements().collect();
+        assert_eq!(restored, original);
+        // The restored keys must actually rotate: encrypt a packed
+        // vector, rotate one step under the roundtripped key set,
+        // decrypt with the roundtripped secret key.
+        let vals: Vec<i64> = (0..8).collect();
+        let ct = ctx.encrypt(&ctx.encoder().encode_vec(&vals), &keys.pk, &mut rng);
+        let rot = ctx2.rotate_rows(&ct, 1, &keys2.gk);
+        let dec = ctx2.decrypt(&rot, &keys2.sk);
+        assert_eq!(ctx2.encoder().decode_slot(&dec, 0).to_i128(), Some(1));
+        // A params blob that claims packed over a non-CRT-friendly t
+        // must be rejected at parse time.
+        let bad = params_to_json(&FvParams::custom(256, 2, 16));
+        let mut bad = bad.to_string_json();
+        bad = bad.replace("\"encoding\":\"scalar\"", "\"encoding\":\"packed\"");
+        assert!(params_from_json(&Json::parse(&bad).unwrap()).is_err());
     }
 
     #[test]

@@ -11,15 +11,24 @@
 //! sum — `n+p` pipelines per GD iteration instead of `2·n·p`; only the
 //! CD residual update, whose products are not summed, stays on
 //! `mul_pairs`.
+//!
+//! With CRT slot packing ([`fit_packed`] on a
+//! [`PackedDataset`](super::model::PackedDataset)) the observation
+//! axis disappears from the multiply count entirely: one slot-wise
+//! product covers all `n ≤ d` observations, and the `Σ_i` folds become
+//! `O(log d)` Galois rotations — `p + 1` multiply pipelines per GD
+//! iteration, independent of `n`. The per-value path stays as the
+//! decrypt-parity oracle.
 
-use crate::fhe::encoding::encode_biguint;
-use crate::fhe::{Ciphertext, FvContext, SecretKey};
+use crate::fhe::encoding::{encode_biguint, Encoder};
+use crate::fhe::{Ciphertext, FvContext, PlaintextNtt, SecretKey};
 use crate::math::bigint::BigUint;
 use crate::runtime::backend::HeEngine;
+use crate::util::error::Result;
 
 use super::mmd;
-use super::model::EncryptedDataset;
-use super::scaling::{CdScaling, GdScaling, NagScaling, VwtScaling};
+use super::model::{EncryptedDataset, PackedDataset};
+use super::scaling::{ratio_f64, CdScaling, GdScaling, NagScaling, VwtScaling};
 
 /// Acceleration mode (paper §5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -132,6 +141,166 @@ pub fn fit(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> E
         Accel::None | Accel::Vwt => fit_gd(engine, data, cfg),
         Accel::Nag => fit_nag(engine, data, cfg),
     }
+}
+
+/// A rescaling constant as a slot-broadcast plaintext, NTT-cached.
+/// Packed constants live in the *value* domain: the encoder reduces
+/// them mod `t`, which is exact as long as every true intermediate
+/// value stays below `t/2` (the packed correctness bound — see
+/// `fhe::noise`).
+fn packed_const(engine: &dyn HeEngine, v: &BigUint) -> PlaintextNtt {
+    engine.prepare_plaintext(&engine.ctx().encoder().encode_const_biguint(v))
+}
+
+/// One packed GD/NAG gradient step over column ciphertexts: the
+/// residual `r̃ = c_y·ỹ − Σ_j X̃_j ⊙ β̃_j` is **one** fused `dot_pairs`
+/// group of `p` slot-wise products (one relinearisation + one
+/// scale-and-round for all `n` observations at once), and each
+/// gradient coordinate `g̃_j = slot_sum(X̃_j ⊙ r̃)` is one slot-wise
+/// multiply plus `log₂(d/2) + 1` rotations — `p + 1` multiply
+/// pipelines and `p·O(log d)` rotations per iteration, where the
+/// per-value layout pays `n + p` pipelines. `slot_sum` leaves the
+/// total in *every* slot, so `g̃_j` (and hence `β̃_j`) stays
+/// slot-broadcast across iterations with no extra work.
+fn gradient_step_packed(
+    engine: &dyn HeEngine,
+    data: &PackedDataset,
+    beta: &[Ciphertext],
+    c_y: &BigUint,
+) -> Result<Vec<Ciphertext>> {
+    let cy_pt = packed_const(engine, c_y);
+    let mut r = engine.mul_plain_prepared(&data.y, &cy_pt);
+    if !beta.is_empty() {
+        let pairs: PairGroup =
+            data.x_cols.iter().zip(beta.iter()).map(|(x, b)| (x, b)).collect();
+        let dot = engine.dot_pairs(&[pairs.as_slice()]).pop().unwrap();
+        r = engine.sub(&r, &dot);
+    }
+    let r_ref = &r;
+    let pairs: PairGroup = data.x_cols.iter().map(|x| (x, r_ref)).collect();
+    let prods = engine.mul_pairs(&pairs);
+    prods.iter().map(|ct| engine.slot_sum(ct)).collect()
+}
+
+/// Fit on a slot-packed dataset — ELS-GD, optionally VWT- or
+/// NAG-accelerated, with identical update equations and decode
+/// metadata to the per-value [`fit`] (the unpacked path is the parity
+/// oracle: both decrypt to the same coefficients). ELS-CD stays
+/// scalar-only — its incremental residual is never summed, so packing
+/// buys nothing there. Fails if the engine cannot rotate (no Galois
+/// keys).
+pub fn fit_packed(
+    engine: &dyn HeEngine,
+    data: &PackedDataset,
+    cfg: &FitConfig,
+) -> Result<EncryptedFit> {
+    match cfg.accel {
+        Accel::None | Accel::Vwt => fit_gd_packed(engine, data, cfg),
+        Accel::Nag => fit_nag_packed(engine, data, cfg),
+    }
+}
+
+fn fit_gd_packed(
+    engine: &dyn HeEngine,
+    data: &PackedDataset,
+    cfg: &FitConfig,
+) -> Result<EncryptedFit> {
+    let ctx = engine.ctx();
+    let p = data.p();
+    let s = GdScaling::new(data.phi, cfg.nu);
+    let keep_path = cfg.keep_path || cfg.accel == Accel::Vwt;
+    let cc_pt = packed_const(engine, &s.c_carry());
+    let mut beta: Vec<Ciphertext> = Vec::new();
+    let mut path: Vec<Vec<Ciphertext>> = Vec::new();
+    for k in 1..=cfg.iters {
+        let g = gradient_step_packed(engine, data, &beta, &s.c_y(k))?;
+        beta = if beta.is_empty() {
+            g
+        } else {
+            (0..p)
+                .map(|j| engine.add(&engine.mul_plain_prepared(&beta[j], &cc_pt), &g[j]))
+                .collect()
+        };
+        if keep_path {
+            path.push(beta.clone());
+        }
+    }
+    let (betas, divisor, paper) = if cfg.accel == Accel::Vwt {
+        let v = VwtScaling::new(data.phi, cfg.nu, cfg.iters);
+        let mut acc: Vec<Ciphertext> = vec![zero_ct(ctx); p];
+        for k in v.kstar..=cfg.iters {
+            let w = v.weight(k);
+            if w.is_zero() {
+                continue;
+            }
+            let w_pt = packed_const(engine, &w);
+            for j in 0..p {
+                let term = engine.mul_plain_prepared(&path[k - 1][j], &w_pt);
+                acc[j] = engine.add(&acc[j], &term);
+            }
+        }
+        (acc, v.divisor(), mmd::paper_mmd(Accel::Vwt, cfg.iters))
+    } else {
+        (beta, s.divisor(cfg.iters), mmd::paper_mmd(Accel::None, cfg.iters))
+    };
+    Ok(EncryptedFit {
+        noise_depth: betas.iter().map(|b| b.ct_depth).max().unwrap_or(0),
+        betas,
+        divisor,
+        path: if cfg.keep_path { Some(path) } else { None },
+        phi: data.phi,
+        paper_mmd: paper,
+    })
+}
+
+fn fit_nag_packed(
+    engine: &dyn HeEngine,
+    data: &PackedDataset,
+    cfg: &FitConfig,
+) -> Result<EncryptedFit> {
+    let ctx = engine.ctx();
+    let p = data.p();
+    let s = NagScaling::new(data.phi, cfg.nu, cfg.iters);
+    let cc_pt = packed_const(engine, &s.c_carry());
+    let mut beta: Vec<Ciphertext> = Vec::new();
+    let mut s_prev: Vec<Ciphertext> = vec![zero_ct(ctx); p];
+    let mut path: Vec<Vec<Ciphertext>> = Vec::new();
+    for k in 1..=cfg.iters {
+        let g = gradient_step_packed(engine, data, &beta, &s.c_y(k))?;
+        let s_cur: Vec<Ciphertext> = if beta.is_empty() {
+            g
+        } else {
+            (0..p)
+                .map(|j| engine.add(&engine.mul_plain_prepared(&beta[j], &cc_pt), &g[j]))
+                .collect()
+        };
+        let w1_pt = packed_const(engine, &s.w1(k));
+        let w2 = s.w2(k);
+        let w2_pt = if w2.is_zero() { None } else { Some(packed_const(engine, &w2)) };
+        beta = (0..p)
+            .map(|j| {
+                let a = engine.mul_plain_prepared(&s_cur[j], &w1_pt);
+                match &w2_pt {
+                    None => a,
+                    Some(w2_pt) => {
+                        engine.sub(&a, &engine.mul_plain_prepared(&s_prev[j], w2_pt))
+                    }
+                }
+            })
+            .collect();
+        s_prev = s_cur;
+        if cfg.keep_path {
+            path.push(beta.clone());
+        }
+    }
+    Ok(EncryptedFit {
+        noise_depth: beta.iter().map(|b| b.ct_depth).max().unwrap_or(0),
+        betas: beta,
+        divisor: s.divisor(cfg.iters),
+        path: if cfg.keep_path { Some(path) } else { None },
+        phi: data.phi,
+        paper_mmd: mmd::paper_mmd(Accel::Nag, cfg.iters),
+    })
 }
 
 fn fit_gd(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
@@ -297,10 +466,20 @@ pub fn fit_cd(
 }
 
 /// Secret-key holder: decrypt and rescale the fitted coefficients.
+/// Encoding-aware: scalar fits evaluate the coefficient polynomial at
+/// 2 (the §3.1 decode); packed fits read slot 0 — `slot_sum` left the
+/// same total in every slot, so any slot would do — and rescale by the
+/// identical divisor.
 pub fn decrypt_coefficients(ctx: &FvContext, sk: &SecretKey, fit: &EncryptedFit) -> Vec<f64> {
     fit.betas
         .iter()
-        .map(|ct| ctx.decrypt(ct, sk).eval_at_2_scaled(&fit.divisor))
+        .map(|ct| {
+            let pt = ctx.decrypt(ct, sk);
+            match ctx.slot_encoder() {
+                Some(enc) => ratio_f64(&enc.decode_slot(&pt, 0), &fit.divisor),
+                None => pt.eval_at_2_scaled(&fit.divisor),
+            }
+        })
         .collect()
 }
 
@@ -312,7 +491,7 @@ mod tests {
     use crate::data::synth;
     use crate::els::exact::{self, QuantisedData};
     use crate::els::float_ref::{self, linf};
-    use crate::els::model::encrypt_dataset;
+    use crate::els::model::{encrypt_dataset, encrypt_dataset_packed};
     use crate::fhe::keys::keygen;
     use crate::fhe::params::{plan, Algo, PlanRequest};
     use crate::fhe::rng::ChaChaRng;
@@ -418,5 +597,150 @@ mod tests {
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let expect = exact::cd_exact(&s.q, s.nu, 2).decode_last();
         assert!(linf(&dec, &expect) < 1e-9, "{dec:?} vs {expect:?}");
+    }
+
+    struct PackedSetup {
+        ctx: Arc<FvContext>,
+        keys: crate::fhe::KeySet,
+        engine: NativeEngine,
+        data: crate::els::model::PackedDataset,
+        q: QuantisedData,
+        nu: u64,
+    }
+
+    /// Packed worlds quantise at φ = 1 and take a generous limb count:
+    /// packed correctness is a *value* bound (every true intermediate
+    /// < t/2, since constants and results live mod t), so t must cover
+    /// the largest scaled gradient, and the modulus must cover the
+    /// noise of depth 2K−1 multiplies at that t.
+    fn setup_packed(seed: u64, n: usize, p: usize) -> PackedSetup {
+        let mut rng = ChaChaRng::from_seed(seed);
+        let (x, y) = synth::gaussian_regression(&mut rng, n, p, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 1);
+        let (xq, _) = q.dequantised();
+        let (lmin, lmax) = float_ref::gram_spectrum(&xq);
+        let nu = ((lmin + lmax) / 2.0).ceil() as u64;
+        let params = crate::fhe::params::FvParams::custom_packed(256, 14, 44).unwrap();
+        let ctx = FvContext::new(params);
+        let keys = keygen(&ctx, &mut rng);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()))
+            .with_galois_keys(Arc::new(keys.gk.clone()));
+        let data = encrypt_dataset_packed(&ctx, &keys.pk, &q, &mut rng).unwrap();
+        PackedSetup { ctx, keys, engine, data, q, nu }
+    }
+
+    #[test]
+    fn packed_gd_equals_exact_simulation() {
+        let s = setup_packed(311, 4, 2);
+        let fit = fit_packed(&s.engine, &s.data, &FitConfig::gd(2, s.nu)).unwrap();
+        let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
+        let expect = exact::gd_exact(&s.q, s.nu, 2).decode_last();
+        let d = linf(&dec, &expect);
+        assert!(d < 1e-9, "packed vs exact drift: {d} ({dec:?} vs {expect:?})");
+        assert_eq!(fit.noise_depth, 3); // same 2K−1 depth as the scalar path
+    }
+
+    #[test]
+    fn packed_gradient_budget_is_constant_in_n() {
+        // The tentpole acceptance criterion: one packed gradient step
+        // costs p+1 multiply pipelines (1 fused residual group + p
+        // gradient products) and p·(log₂(d/2)+1) rotations — the
+        // observation count n appears in neither, where the per-value
+        // oracle pays n+p relinearisations (see
+        // `gradient_step_relin_budget_is_n_plus_p`).
+        let s = setup_packed(312, 6, 2);
+        let p = s.data.p();
+        let f1 = fit_packed(&s.engine, &s.data, &FitConfig::gd(1, s.nu)).unwrap();
+        let ring = &s.ctx.ring_q;
+        let gs = GdScaling::new(s.data.phi, s.nu);
+        let (r0, s0, rot0) =
+            (ring.relin_count(), ring.scale_round_count(), ring.rotation_count());
+        let g = gradient_step_packed(&s.engine, &s.data, &f1.betas, &gs.c_y(2)).unwrap();
+        assert_eq!(g.len(), p);
+        assert_eq!(ring.relin_count() - r0, (p + 1) as u64, "p+1 relins, n-free");
+        assert_eq!(ring.scale_round_count() - s0, (p + 1) as u64, "p+1 scale-rounds");
+        let log_rot = (s.ctx.d() / 2).trailing_zeros() as u64 + 1;
+        assert_eq!(
+            ring.rotation_count() - rot0,
+            p as u64 * log_rot,
+            "log₂(d/2)+1 rotations per coordinate"
+        );
+    }
+
+    #[test]
+    fn packed_fit_parity_across_backends_and_workers() {
+        // The packed half of the satellite battery: the same packed
+        // dataset and keys fitted on the full-RNS pipeline and the
+        // exact-bigint oracle must decrypt identically, and each
+        // backend must be bit-identical across worker budgets.
+        let s = setup_packed(313, 4, 2);
+        let rk = Arc::new(s.keys.rk.clone());
+        let gk = Arc::new(s.keys.gk.clone());
+        let cfg = FitConfig::gd(2, s.nu);
+        let mut per_backend: Vec<Vec<crate::fhe::Plaintext>> = Vec::new();
+        for backend in
+            [crate::fhe::MulBackend::FullRns, crate::fhe::MulBackend::ExactBigint]
+        {
+            let reference =
+                NativeEngine::with_backend(s.ctx.clone(), rk.clone(), backend)
+                    .with_galois_keys(gk.clone())
+                    .with_pool_workers(1);
+            let fit_ref = fit_packed(&reference, &s.data, &cfg).unwrap();
+            for workers in [2usize, 4] {
+                let engine =
+                    NativeEngine::with_backend(s.ctx.clone(), rk.clone(), backend)
+                        .with_galois_keys(gk.clone())
+                        .with_pool_workers(workers);
+                let f = fit_packed(&engine, &s.data, &cfg).unwrap();
+                for (j, (a, b)) in f.betas.iter().zip(&fit_ref.betas).enumerate() {
+                    assert_eq!(
+                        a.polys, b.polys,
+                        "{backend:?}: β_{j} differs at {workers} workers"
+                    );
+                }
+            }
+            per_backend.push(
+                fit_ref.betas.iter().map(|b| s.ctx.decrypt(b, &s.keys.sk)).collect(),
+            );
+        }
+        assert_eq!(
+            per_backend[0], per_backend[1],
+            "packed fits decrypt differently across multiply backends"
+        );
+    }
+
+    #[test]
+    fn packed_vwt_equals_exact() {
+        let s = setup_packed(314, 4, 2);
+        let cfg = FitConfig::gd(3, s.nu).with_accel(Accel::Vwt);
+        let fit = fit_packed(&s.engine, &s.data, &cfg).unwrap();
+        let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
+        let (acc, div) = exact::vwt_exact(&s.q, s.nu, 3);
+        let expect: Vec<f64> = acc
+            .iter()
+            .map(|b| crate::els::scaling::ratio_f64(b, &div))
+            .collect();
+        assert!(linf(&dec, &expect) < 1e-9);
+        assert_eq!(fit.paper_mmd, 7); // 2K+1, same as the scalar path
+    }
+
+    #[test]
+    fn packed_nag_equals_exact() {
+        let s = setup_packed(315, 4, 2);
+        let cfg = FitConfig::gd(2, s.nu).with_accel(Accel::Nag);
+        let fit = fit_packed(&s.engine, &s.data, &cfg).unwrap();
+        let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
+        let expect = exact::nag_exact(&s.q, s.nu, 2).decode_last();
+        assert!(linf(&dec, &expect) < 1e-9);
+        assert_eq!(fit.paper_mmd, 6); // 3K
+    }
+
+    #[test]
+    fn packed_fit_requires_rotation_capable_engine() {
+        // A keyless engine must surface a descriptive error, not panic.
+        let s = setup_packed(316, 4, 2);
+        let keyless = NativeEngine::new(s.ctx.clone(), Arc::new(s.keys.rk.clone()));
+        let err = fit_packed(&keyless, &s.data, &FitConfig::gd(1, s.nu)).unwrap_err();
+        assert!(err.to_string().contains("Galois keys"), "{err}");
     }
 }

@@ -22,6 +22,8 @@ pub mod predict;
 pub mod scaling;
 pub mod stepsize;
 
-pub use encrypted::{decrypt_coefficients, fit, fit_cd, Accel, EncryptedFit, FitConfig};
+pub use encrypted::{
+    decrypt_coefficients, fit, fit_cd, fit_packed, Accel, EncryptedFit, FitConfig,
+};
 pub use exact::QuantisedData;
-pub use model::{encrypt_dataset, EncryptedDataset};
+pub use model::{encrypt_dataset, encrypt_dataset_packed, EncryptedDataset, PackedDataset};

@@ -1,10 +1,19 @@
-//! Encrypted regression datasets: per-value FV ciphertexts of the
-//! quantised design matrix and response (the paper's data layout — one
-//! ciphertext per number).
+//! Encrypted regression datasets, in two layouts:
+//!
+//! - [`EncryptedDataset`] — per-value FV ciphertexts of the quantised
+//!   design matrix and response (the paper's data layout — one
+//!   ciphertext per number).
+//! - [`PackedDataset`] — CRT slot packing: one ciphertext per
+//!   covariate column, holding all `n ≤ d` observations slot-wise
+//!   (requires a [`Encoding::Packed`] context). The packed descent
+//!   loop replaces the `O(n)` per-observation multiply pipelines with
+//!   `O(1)` slot-wise multiplies plus `O(log d)` rotations.
 
-use crate::fhe::encoding::encode_int;
+use crate::fhe::encoding::{encode_int, Encoder};
+use crate::fhe::params::Encoding;
 use crate::fhe::rng::ChaChaRng;
 use crate::fhe::{Ciphertext, FvContext, PublicKey};
+use crate::util::error::Result;
 
 use super::exact::QuantisedData;
 
@@ -63,6 +72,79 @@ pub fn encrypt_dataset(
     EncryptedDataset { x, y, phi: data.phi }
 }
 
+/// Slot-packed encrypted `(X̃, ỹ)`: ciphertext `x_cols[j]` holds column
+/// `j` of the design matrix with observation `i` in slot `i` (slots
+/// `n..d` are zero and stay zero through the descent algebra), and `y`
+/// holds the response the same way.
+pub struct PackedDataset {
+    /// `x_cols[j]` encrypts `(X̃_0j, …, X̃_{n−1,j}, 0, …)` slot-wise.
+    pub x_cols: Vec<Ciphertext>,
+    /// Slot-packed response `(ỹ_0, …, ỹ_{n−1}, 0, …)`.
+    pub y: Ciphertext,
+    /// Observation count (`≤ d`).
+    pub n: usize,
+    /// Quantisation exponent φ.
+    pub phi: u32,
+}
+
+impl PackedDataset {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn p(&self) -> usize {
+        self.x_cols.len()
+    }
+
+    /// Total ciphertext bytes — `p + 1` ciphertexts regardless of `n`,
+    /// versus the per-value layout's `n·(p + 1)`.
+    pub fn size_bytes(&self) -> usize {
+        self.x_cols.iter().chain(std::iter::once(&self.y)).map(|c| c.size_bytes()).sum()
+    }
+}
+
+/// Pack-and-encrypt one slot vector per column (data-holder side).
+/// Each inner vector is one ciphertext's slot contents; shorter
+/// vectors are zero-padded to `d` slots by the encoder.
+pub fn encrypt_packed_columns(
+    ctx: &FvContext,
+    pk: &PublicKey,
+    cols: &[Vec<i64>],
+    rng: &mut ChaChaRng,
+) -> Result<Vec<Ciphertext>> {
+    if ctx.params.encoding != Encoding::Packed {
+        crate::bail!("slot packing needs a packed context (FvParams::custom_packed)");
+    }
+    let slots = ctx.params.slot_count();
+    if let Some(over) = cols.iter().find(|c| c.len() > slots) {
+        crate::bail!(
+            "cannot pack {} values into {} slots (d = {})",
+            over.len(),
+            slots,
+            ctx.d()
+        );
+    }
+    Ok(cols.iter().map(|c| ctx.encrypt(&ctx.encoder().encode_vec(c), pk, rng)).collect())
+}
+
+/// Encrypt a quantised dataset column-packed (data-holder side):
+/// `p + 1` ciphertexts total. Fails on scalar contexts and on
+/// `n > d` (pack more observations than slots).
+pub fn encrypt_dataset_packed(
+    ctx: &FvContext,
+    pk: &PublicKey,
+    data: &QuantisedData,
+    rng: &mut ChaChaRng,
+) -> Result<PackedDataset> {
+    let (n, p) = (data.n(), data.p());
+    let cols: Vec<Vec<i64>> =
+        (0..p).map(|j| data.x.iter().map(|row| row[j]).collect()).collect();
+    let mut cts = encrypt_packed_columns(ctx, pk, &cols, rng)?;
+    cts.extend(encrypt_packed_columns(ctx, pk, std::slice::from_ref(&data.y), rng)?);
+    let y = cts.pop().unwrap();
+    Ok(PackedDataset { x_cols: cts, y, n, phi: data.phi })
+}
+
 /// Ridge (§4.4): augment the *quantised* data with `⌊10^φ·√α⌉·e_j` rows
 /// and zero responses, then encrypt. OLS on the augmented ciphertexts
 /// equals RLS on the original data (eq. 14).
@@ -100,6 +182,50 @@ mod tests {
         assert_eq!(pt.eval_at_2().to_i128(), Some(-45));
         let pt = ctx.decrypt(&enc.y[1], &keys.sk);
         assert_eq!(pt.eval_at_2().to_i128(), Some(-200));
+    }
+
+    #[test]
+    fn packed_dataset_shapes_and_slot_decryption() {
+        let ctx = FvContext::new(FvParams::custom_packed(256, 3, 24).unwrap());
+        let mut rng = ChaChaRng::from_seed(212);
+        let keys = keygen(&ctx, &mut rng);
+        let q = QuantisedData {
+            x: vec![vec![123, -45], vec![-7, 89]],
+            y: vec![100, -200],
+            phi: 2,
+        };
+        let enc = encrypt_dataset_packed(&ctx, &keys.pk, &q, &mut rng).unwrap();
+        assert_eq!(enc.n(), 2);
+        assert_eq!(enc.p(), 2);
+        assert!(enc.size_bytes() > 0);
+        // Column 1 packs (X̃_01, X̃_11, 0, …) slot-wise.
+        let slots = ctx.encoder().decode_vec(&ctx.decrypt(&enc.x_cols[1], &keys.sk), ctx.d());
+        assert_eq!(slots[0].to_i128(), Some(-45));
+        assert_eq!(slots[1].to_i128(), Some(89));
+        assert!(slots[2..].iter().all(|v| v.is_zero()), "padding slots are zero");
+        let ys = ctx.encoder().decode_vec(&ctx.decrypt(&enc.y, &keys.sk), ctx.d());
+        assert_eq!(ys[1].to_i128(), Some(-200));
+    }
+
+    #[test]
+    fn packed_encrypt_rejects_scalar_context_and_overflow() {
+        let q = QuantisedData { x: vec![vec![1]], y: vec![2], phi: 0 };
+        let sctx = FvContext::new(FvParams::custom(256, 3, 24));
+        let mut rng = ChaChaRng::from_seed(213);
+        let keys = keygen(&sctx, &mut rng);
+        let err = encrypt_dataset_packed(&sctx, &keys.pk, &q, &mut rng).unwrap_err();
+        assert!(err.to_string().contains("packed context"), "{err}");
+        // More observations than slots.
+        let pctx = FvContext::new(FvParams::custom_packed(256, 3, 24).unwrap());
+        let pkeys = keygen(&pctx, &mut rng);
+        let d = pctx.d();
+        let big = QuantisedData {
+            x: (0..d + 1).map(|_| vec![1i64]).collect(),
+            y: vec![0; d + 1],
+            phi: 0,
+        };
+        let err = encrypt_dataset_packed(&pctx, &pkeys.pk, &big, &mut rng).unwrap_err();
+        assert!(err.to_string().contains("slots"), "{err}");
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //! dot product per new observation (+1 MMD), with the common GD scale
 //! factor making rescaling trivial for the key holder.
 
+use crate::fhe::encoding::Encoder;
 use crate::fhe::{Ciphertext, FvContext, SecretKey};
 use crate::math::bigint::BigUint;
 use crate::runtime::backend::HeEngine;
 
 use super::encrypted::EncryptedFit;
+use super::scaling::ratio_f64;
 
 /// Predict for encrypted new rows `x_new[i][j]` (quantised at the same
 /// φ as the fit). Returns one ciphertext per row.
@@ -28,6 +30,40 @@ pub fn predict(
     let groups: Vec<&[(&Ciphertext, &Ciphertext)]> =
         owned.iter().map(|g| g.as_slice()).collect();
     engine.dot_pairs(&groups)
+}
+
+/// Packed prediction: `x_new_cols[j]` packs covariate `j` of all new
+/// observations slot-wise (same column layout as
+/// [`super::model::PackedDataset`], quantised at the fit's φ), and the
+/// returned single ciphertext carries prediction `i` in slot `i` —
+/// one fused group of `p` slot-wise products for the whole batch,
+/// with **no rotations**: the sum runs over covariates, which sit in
+/// separate ciphertexts, not separate slots. A packed fit's β̃ are
+/// slot-broadcast, so the slot-wise products align by construction.
+pub fn predict_packed(
+    engine: &dyn HeEngine,
+    fit: &EncryptedFit,
+    x_new_cols: &[Ciphertext],
+) -> Ciphertext {
+    assert_eq!(x_new_cols.len(), fit.betas.len(), "one packed column per covariate");
+    let pairs: Vec<(&Ciphertext, &Ciphertext)> =
+        x_new_cols.iter().zip(&fit.betas).collect();
+    engine.dot_pairs(&[pairs.as_slice()]).pop().unwrap()
+}
+
+/// Key-holder decode of a packed prediction ciphertext: slots
+/// `0..n_new` rescaled by the prediction divisor.
+pub fn decrypt_predictions_packed(
+    ctx: &FvContext,
+    sk: &SecretKey,
+    fit: &EncryptedFit,
+    pred: &Ciphertext,
+    n_new: usize,
+) -> Vec<f64> {
+    let enc = ctx.slot_encoder().expect("packed predictions need a packed context");
+    let div = prediction_divisor(fit);
+    let pt = ctx.decrypt(pred, sk);
+    enc.decode_vec(&pt, n_new).iter().map(|v| ratio_f64(v, &div)).collect()
 }
 
 /// Divisor for decoded predictions: fit divisor × 10^φ.
@@ -55,12 +91,12 @@ mod tests {
 
     use super::*;
     use crate::data::synth;
-    use crate::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+    use crate::els::encrypted::{decrypt_coefficients, fit, fit_packed, FitConfig};
     use crate::els::exact::QuantisedData;
     use crate::els::float_ref;
-    use crate::els::model::encrypt_dataset;
+    use crate::els::model::{encrypt_dataset, encrypt_dataset_packed};
     use crate::fhe::keys::keygen;
-    use crate::fhe::params::{plan, PlanRequest};
+    use crate::fhe::params::{plan, FvParams, PlanRequest};
     use crate::fhe::rng::ChaChaRng;
     use crate::fhe::FvContext;
     use crate::runtime::backend::NativeEngine;
@@ -89,5 +125,33 @@ mod tests {
             assert!((pred - expect).abs() < 1e-9, "row {i}: {pred} vs {expect}");
         }
         let _ = float_ref::ols(&xq, &q.dequantised().1);
+    }
+
+    #[test]
+    fn packed_prediction_fills_slots_without_rotations() {
+        // One fused group of p slot-wise products predicts for every
+        // packed observation at once — and never rotates: the Σ_j runs
+        // across ciphertexts, not slots.
+        let mut rng = ChaChaRng::from_seed(232);
+        let (x, y) = synth::gaussian_regression(&mut rng, 4, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 1);
+        let (xq, _) = q.dequantised();
+        let nu = crate::els::stepsize::nu_optimal(&xq);
+        let ctx = FvContext::new(FvParams::custom_packed(256, 14, 44).unwrap());
+        let keys = keygen(&ctx, &mut rng);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()))
+            .with_galois_keys(Arc::new(keys.gk.clone()));
+        let data = encrypt_dataset_packed(&ctx, &keys.pk, &q, &mut rng).unwrap();
+        let f = fit_packed(&engine, &data, &FitConfig::gd(2, nu)).unwrap();
+        // Predict on the training columns themselves (already packed).
+        let rot0 = ctx.ring_q.rotation_count();
+        let pred = predict_packed(&engine, &f, &data.x_cols);
+        assert_eq!(ctx.ring_q.rotation_count() - rot0, 0, "prediction is rotation-free");
+        let dec = decrypt_predictions_packed(&ctx, &keys.sk, &f, &pred, data.n());
+        let betas = decrypt_coefficients(&ctx, &keys.sk, &f);
+        for (i, &p) in dec.iter().enumerate() {
+            let expect: f64 = xq[i].iter().zip(&betas).map(|(a, b)| a * b).sum();
+            assert!((p - expect).abs() < 1e-9, "row {i}: {p} vs {expect}");
+        }
     }
 }

@@ -7,6 +7,13 @@
 //! decryption. This module is the single source of truth for those
 //! constants, shared by the encrypted driver, the exact integer
 //! simulator and the parameter planner.
+//!
+//! Under slot packing the same constants are emitted as slot-broadcast
+//! plaintexts, i.e. reduced mod `t`; correctness then requires every
+//! true scaled intermediate — constants included — to stay below `t/2`
+//! as a *value* (see the packed accounting note in
+//! [`crate::fhe::noise`]), so packed parameter sets must pick `t` to
+//! cover the largest constant produced here.
 
 use crate::math::bigint::{BigInt, BigUint};
 

@@ -5,7 +5,8 @@ use std::sync::Arc;
 use crate::math::bigint::{BigInt, BigUint};
 use crate::math::poly::{RingContext, RnsPoly};
 
-use super::params::{FvParams, MulBackend};
+use super::encoding::{Encoder, ScalarEncoder, SlotEncoder};
+use super::params::{Encoding, FvParams, MulBackend};
 use super::plaintext::Plaintext;
 use super::rns_mul::RnsMulPrecomp;
 
@@ -47,10 +48,16 @@ pub struct FvContext {
     /// parameter sets): turns the hot `t·v` big-multiply of the BFV
     /// scale-and-round into a shift.
     t_shift: Option<usize>,
+    /// The scalar (signed-binary) encoder — always available.
+    scalar_encoder: ScalarEncoder,
+    /// The slot encoder, built once per context for packed parameter
+    /// sets (`t` prime ≡ 1 mod 2d).
+    slot_encoder: Option<SlotEncoder>,
 }
 
 impl FvContext {
     pub fn new(params: FvParams) -> Arc<Self> {
+        params.validate_encoding().expect("FvParams encoding invalid for this modulus");
         let q_primes = params.q_primes();
         let mut big_primes = q_primes.clone();
         big_primes.extend(params.ext_primes());
@@ -83,6 +90,14 @@ impl FvContext {
             // slack: cap = (q·E)/8, per-term d·q²/4.
             Self::fuse_terms(&ring_big.basis.modulus, &q.mul(&q).mul_u64(params.d as u64))
         };
+        let scalar_encoder = ScalarEncoder { d: params.d };
+        let slot_encoder = match params.encoding {
+            Encoding::Packed => {
+                let t_u64 = t.to_u64().expect("validate_encoding guarantees t < 2^62");
+                Some(SlotEncoder::new(t_u64, params.d))
+            }
+            Encoding::Scalar => None,
+        };
         Arc::new(FvContext {
             params,
             ring_q,
@@ -97,7 +112,25 @@ impl FvContext {
             fuse_chunk_rns,
             fuse_chunk_big,
             t_shift,
+            scalar_encoder,
+            slot_encoder,
         })
+    }
+
+    /// The active message encoder: slot packing when
+    /// `params.encoding == Packed`, signed-binary scalars otherwise.
+    /// Call sites stay encoding-agnostic by going through this.
+    pub fn encoder(&self) -> &dyn Encoder {
+        match &self.slot_encoder {
+            Some(s) => s,
+            None => &self.scalar_encoder,
+        }
+    }
+
+    /// The slot encoder, when this is a packed context (direct access
+    /// for slot-level tests and diagnostics).
+    pub fn slot_encoder(&self) -> Option<&SlotEncoder> {
+        self.slot_encoder.as_ref()
     }
 
     /// `⌊(cap/8) / (per4/4)⌋` clamped to `[1, 2^31]`: how many fused

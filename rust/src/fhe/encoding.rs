@@ -1,11 +1,33 @@
 //! §3.1 data representation and encoding.
 //!
-//! Real data is quantised to integers by `ż = ⌊10^φ·z⌉` and each integer
-//! is encoded as a signed-binary polynomial `m(x)` with coefficients in
-//! {-1, 0, 1} such that `m(2) = ż` (§4.5). Decoding evaluates at `x = 2`
-//! and divides by the algorithm's known global scale factor.
+//! Real data is quantised to integers by `ż = ⌊10^φ·z⌉`. Two plaintext
+//! representations are supported, selected by
+//! [`Encoding`](super::params::Encoding) and surfaced uniformly through
+//! the [`Encoder`] trait:
+//!
+//! - **Scalar** ([`ScalarEncoder`]): each integer becomes a
+//!   signed-binary polynomial `m(x)` with coefficients in {-1, 0, 1}
+//!   such that `m(2) = ż` (§4.5). Decoding evaluates at `x = 2` and
+//!   divides by the algorithm's known global scale factor. The
+//!   original free functions ([`encode_int`], [`encode_biguint`], …)
+//!   remain and the encoder delegates to them bit-identically.
+//! - **Slot packing** ([`SlotEncoder`]): when `t` is a prime
+//!   ≡ 1 (mod 2d), `Z_t[x]/(x^d + 1)` CRT-factors into `d` linear
+//!   factors, so one plaintext carries `d` independent values with
+//!   slot-wise add/mul semantics (the classic SIMD batching of the
+//!   encrypted-statistical-ML line). Encoding is an inverse NTT over
+//!   `Z_t`, decoding a forward NTT — reusing the
+//!   [`NttTable`](crate::math::ntt::NttTable) machinery at the `t`
+//!   level. Values are carried mod t, so correctness needs the *final*
+//!   true value below `t/2` (a value bound, vs the scalar path's
+//!   coefficient bound).
+
+use std::collections::HashMap;
 
 use crate::math::bigint::{BigInt, BigUint};
+use crate::math::modarith::mulmod;
+use crate::math::ntt::NttTable;
+use crate::math::primes::{is_prime, primitive_2d_root};
 
 use super::plaintext::Plaintext;
 
@@ -81,6 +103,245 @@ pub fn decode_exact(pt: &Plaintext) -> BigInt {
     pt.eval_at_2()
 }
 
+/// Unified encoding API: one interface over the scalar signed-binary
+/// representation and CRT slot packing, so the descent loops and
+/// `els/scaling.rs` never hard-code a representation. Obtain the
+/// active implementation from
+/// [`FvContext::encoder`](super::context::FvContext::encoder).
+pub trait Encoder: Send + Sync {
+    /// Logical values one plaintext carries (1 scalar, `d` packed).
+    fn slots(&self) -> usize;
+
+    /// Encode one already-quantised integer (broadcast to every slot
+    /// in packed mode).
+    fn encode_int(&self, v: i64) -> Plaintext;
+
+    /// Encode one integer per slot (`vs.len() ≤ slots()`, remaining
+    /// slots zero). Scalar encoders accept at most one value.
+    fn encode_vec(&self, vs: &[i64]) -> Plaintext;
+
+    /// Encode a non-negative big constant (broadcast in packed mode,
+    /// where it is carried mod t).
+    fn encode_const_biguint(&self, v: &BigUint) -> Plaintext;
+
+    /// Encode a signed big constant (broadcast in packed mode).
+    fn encode_const_bigint(&self, v: &BigInt) -> Plaintext;
+
+    /// Exact integer carried by `slot` of a (decrypted) plaintext.
+    fn decode_slot(&self, pt: &Plaintext, slot: usize) -> BigInt;
+
+    /// Exact integers carried by the first `n` slots.
+    fn decode_vec(&self, pt: &Plaintext, n: usize) -> Vec<BigInt> {
+        (0..n).map(|s| self.decode_slot(pt, s)).collect()
+    }
+}
+
+/// The original §3.1 signed-binary encoding behind the [`Encoder`]
+/// interface — delegates to the free functions, so behaviour is
+/// bit-identical to the pre-trait API.
+#[derive(Clone, Debug)]
+pub struct ScalarEncoder {
+    /// Ring degree.
+    pub d: usize,
+}
+
+impl Encoder for ScalarEncoder {
+    fn slots(&self) -> usize {
+        1
+    }
+
+    fn encode_int(&self, v: i64) -> Plaintext {
+        encode_int(v, self.d)
+    }
+
+    fn encode_vec(&self, vs: &[i64]) -> Plaintext {
+        assert!(vs.len() <= 1, "scalar encoding carries one value per plaintext");
+        encode_int(vs.first().copied().unwrap_or(0), self.d)
+    }
+
+    fn encode_const_biguint(&self, v: &BigUint) -> Plaintext {
+        encode_biguint(v, self.d)
+    }
+
+    fn encode_const_bigint(&self, v: &BigInt) -> Plaintext {
+        encode_bigint(v, self.d)
+    }
+
+    fn decode_slot(&self, pt: &Plaintext, slot: usize) -> BigInt {
+        assert_eq!(slot, 0, "scalar encoding has a single slot");
+        decode_exact(pt)
+    }
+}
+
+/// CRT slot packing over a prime `t ≡ 1 (mod 2d)`.
+///
+/// Slot layout: two rows of `d/2`. Row-0 slot `j` is the evaluation of
+/// the message polynomial at `ψ^{3^j}`, row-1 slot `d/2 + j` the
+/// evaluation at `ψ^{−3^j}` (exponents mod 2d, ψ a fixed primitive
+/// 2d-th root of unity mod t). Because ⟨3⟩ and −1 together generate
+/// the odd residues mod 2d, the Galois map `x → x^{3^r}` rotates each
+/// row left by `r` and `x → x^{2d−1}` swaps the rows — exactly the
+/// `rotate_rows`/`slot_sum` engine operations
+/// (`fhe/ops.rs`).
+#[derive(Clone, Debug)]
+pub struct SlotEncoder {
+    /// Plaintext modulus (prime ≡ 1 mod 2d, below 2^62).
+    pub t: u64,
+    /// Ring degree = slot count.
+    pub d: usize,
+    /// Negacyclic NTT over `Z_t`: coefficient ↔ evaluation form.
+    table: NttTable,
+    /// `slot_to_index[s]` = the transform-output index carrying slot
+    /// `s`'s evaluation (the transform's output order is an
+    /// implementation detail of `math/ntt`; see [`SlotEncoder::new`]).
+    slot_to_index: Vec<usize>,
+}
+
+impl SlotEncoder {
+    /// Build the slot maps for `(t, d)` (panics unless `t` is a prime
+    /// ≡ 1 mod 2d and `d` a power of two ≥ 2 — [`super::params::FvParams::validate_encoding`]
+    /// checks the same conditions fallibly).
+    pub fn new(t: u64, d: usize) -> Self {
+        assert!(d.is_power_of_two() && d >= 2, "slot packing needs a power-of-two d ≥ 2");
+        assert!(
+            t % (2 * d as u64) == 1 && is_prime(t),
+            "slot packing needs a prime t ≡ 1 (mod 2d), got t = {t}, d = {d}"
+        );
+        let table = NttTable::new(t, d);
+        // The transform's output permutation (bit-reversal, base-root
+        // convention) is private to math/ntt. Recover the index ↔
+        // root-exponent map empirically: the monomial x evaluates at
+        // ψ^e to ψ^e itself, so one forward transform plus a discrete
+        // log against the known ψ labels every output index.
+        let mut mono = vec![0u64; d];
+        mono[1] = 1;
+        table.forward(&mut mono);
+        let psi = primitive_2d_root(t, d);
+        let psi_sq = mulmod(psi, psi, t);
+        let mut exp_of_power = HashMap::with_capacity(d);
+        let mut cur = psi; // ψ^1, ψ^3, ψ^5, … (the d odd powers)
+        for k in 0..d {
+            exp_of_power.insert(cur, 2 * k + 1);
+            cur = mulmod(cur, psi_sq, t);
+        }
+        let mut index_of_exp = vec![usize::MAX; 2 * d];
+        for (i, v) in mono.iter().enumerate() {
+            let e = *exp_of_power.get(v).expect("NTT output of x must be an odd power of ψ");
+            index_of_exp[e] = i;
+        }
+        let m = 2 * d as u64;
+        let mut slot_to_index = vec![0usize; d];
+        let mut g = 1u64; // 3^j mod 2d
+        for j in 0..d / 2 {
+            slot_to_index[j] = index_of_exp[g as usize];
+            slot_to_index[d / 2 + j] = index_of_exp[(m - g) as usize];
+            g = g * 3 % m;
+        }
+        SlotEncoder { t, d, table, slot_to_index }
+    }
+
+    /// Canonical `[0, t)` residues of a plaintext's coefficients.
+    fn canonical_coeffs(&self, pt: &Plaintext) -> Vec<u64> {
+        assert!(pt.coeffs.len() <= self.d, "plaintext longer than ring degree");
+        let mut out = vec![0u64; self.d];
+        for (i, c) in pt.coeffs.iter().enumerate() {
+            out[i] = c.mod_u64(self.t);
+        }
+        out
+    }
+
+    /// Plaintext from canonical `[0, t)` coefficients, re-centered to
+    /// the symmetric range (matching what decryption produces).
+    fn plaintext_from_canonical(&self, coeffs: Vec<u64>) -> Plaintext {
+        Plaintext { coeffs: coeffs.into_iter().map(|c| self.center(c)).collect() }
+    }
+
+    /// Centered representative of a canonical residue (t < 2^62, so
+    /// both halves fit i64).
+    fn center(&self, v: u64) -> BigInt {
+        debug_assert!(v < self.t);
+        if v > self.t / 2 {
+            BigInt::from_i64(-((self.t - v) as i64))
+        } else {
+            BigInt::from_i64(v as i64)
+        }
+    }
+
+    /// Signed value → canonical residue mod t.
+    fn to_canonical_i64(&self, v: i64) -> u64 {
+        v.rem_euclid(self.t as i64) as u64
+    }
+
+    /// Canonical `[0, t)` values of every slot (one forward transform).
+    pub fn slot_values(&self, pt: &Plaintext) -> Vec<u64> {
+        let mut evals = self.canonical_coeffs(pt);
+        self.table.forward(&mut evals);
+        self.slot_to_index.iter().map(|&i| evals[i]).collect()
+    }
+
+    /// Encode canonical `[0, t)` slot values (length ≤ d, rest zero;
+    /// one inverse transform).
+    pub fn encode_slots_u64(&self, vals: &[u64]) -> Plaintext {
+        assert!(vals.len() <= self.d, "more slot values than slots");
+        let mut evals = vec![0u64; self.d];
+        for (s, &v) in vals.iter().enumerate() {
+            assert!(v < self.t, "slot value {v} out of range for t = {}", self.t);
+            evals[self.slot_to_index[s]] = v;
+        }
+        self.table.inverse(&mut evals);
+        self.plaintext_from_canonical(evals)
+    }
+}
+
+impl Encoder for SlotEncoder {
+    fn slots(&self) -> usize {
+        self.d
+    }
+
+    fn encode_int(&self, v: i64) -> Plaintext {
+        // Broadcast: a constant polynomial evaluates to the same value
+        // in every slot — no transform needed.
+        let mut coeffs = vec![0u64; self.d];
+        coeffs[0] = self.to_canonical_i64(v);
+        self.plaintext_from_canonical(coeffs)
+    }
+
+    fn encode_vec(&self, vs: &[i64]) -> Plaintext {
+        let half = self.t / 2;
+        let vals: Vec<u64> = vs
+            .iter()
+            .map(|&v| {
+                assert!(v.unsigned_abs() <= half, "packed value |{v}| exceeds t/2");
+                self.to_canonical_i64(v)
+            })
+            .collect();
+        self.encode_slots_u64(&vals)
+    }
+
+    fn encode_const_biguint(&self, v: &BigUint) -> Plaintext {
+        let mut coeffs = vec![0u64; self.d];
+        coeffs[0] = v.mod_u64(self.t);
+        self.plaintext_from_canonical(coeffs)
+    }
+
+    fn encode_const_bigint(&self, v: &BigInt) -> Plaintext {
+        let mut coeffs = vec![0u64; self.d];
+        coeffs[0] = v.mod_u64(self.t);
+        self.plaintext_from_canonical(coeffs)
+    }
+
+    fn decode_slot(&self, pt: &Plaintext, slot: usize) -> BigInt {
+        assert!(slot < self.d, "slot {slot} out of range for d = {}", self.d);
+        self.center(self.slot_values(pt)[slot])
+    }
+
+    fn decode_vec(&self, pt: &Plaintext, n: usize) -> Vec<BigInt> {
+        assert!(n <= self.d, "asked for {n} slots, have {}", self.d);
+        let vals = self.slot_values(pt);
+        vals[..n].iter().map(|&v| self.center(v)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +410,164 @@ mod tests {
     #[should_panic(expected = "exceeds ring degree")]
     fn overflow_degree_panics() {
         let _ = encode_int(i64::MAX, 8);
+    }
+
+    /// Largest prime ≡ 1 (mod 2d) below 2^30 — a packing-friendly t.
+    fn slot_t(d: usize) -> u64 {
+        crate::math::primes::ntt_primes_below(1 << 30, 2 * d as u64, 1)[0]
+    }
+
+    /// Coefficient-side Galois map `x → x^g` on a plaintext (the
+    /// message-space oracle for what `fhe/ops.rs::apply_galois` does to
+    /// ciphertexts).
+    fn apply_auto(pt: &Plaintext, g: usize, d: usize) -> Plaintext {
+        let mut out = vec![BigInt::zero(); d];
+        for i in 0..d {
+            let e = (i * g) % (2 * d);
+            let c = pt.coeffs.get(i).cloned().unwrap_or_else(BigInt::zero);
+            if e < d {
+                out[e] = c;
+            } else {
+                out[e - d] = c.neg_value();
+            }
+        }
+        Plaintext { coeffs: out }
+    }
+
+    #[test]
+    fn scalar_encoder_matches_free_functions() {
+        let enc = ScalarEncoder { d: 64 };
+        assert_eq!(enc.slots(), 1);
+        assert_eq!(enc.encode_int(-123456), encode_int(-123456, 64));
+        assert_eq!(enc.encode_vec(&[42]), encode_int(42, 64));
+        assert_eq!(enc.encode_vec(&[]), encode_int(0, 64));
+        let big = BigUint::pow10(12);
+        assert_eq!(enc.encode_const_biguint(&big), encode_biguint(&big, 64));
+        let pt = enc.encode_int(-987);
+        assert_eq!(enc.decode_slot(&pt, 0).to_i128(), Some(-987));
+    }
+
+    #[test]
+    fn slot_roundtrip_property() {
+        let d = 16usize;
+        let t = slot_t(d);
+        let enc = SlotEncoder::new(t, d);
+        let half = (t / 2) as i64;
+        let mut run = PropRunner::new("slot_roundtrip", 200);
+        run.run(|rng| {
+            let n = gen::int_in(rng, 0, d as i64) as usize;
+            let vs: Vec<i64> = (0..n).map(|_| gen::int_in(rng, -half, half)).collect();
+            let pt = enc.encode_vec(&vs);
+            // Encoded coefficients are centered mod t.
+            for c in &pt.coeffs {
+                assert!(c.mag.to_u64().unwrap() <= t / 2);
+            }
+            let back = enc.decode_vec(&pt, d);
+            for s in 0..d {
+                let expect = vs.get(s).copied().unwrap_or(0);
+                assert_eq!(back[s].to_i128(), Some(expect as i128), "slot {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn slotwise_mul_and_add_semantics() {
+        // Ring ops on packed plaintexts act slot-wise mod t: the CRT
+        // isomorphism in action, with zero changes to the arithmetic.
+        let d = 8usize;
+        let t = slot_t(d);
+        let enc = SlotEncoder::new(t, d);
+        let a: Vec<i64> = vec![3, -7, 0, 123_456, -99_999, 1, 2, -3];
+        let b: Vec<i64> = vec![-5, 11, 42, 2, 100_003, -1, 0, 7];
+        let (pa, pb) = (enc.encode_vec(&a), enc.encode_vec(&b));
+        let prod = pa.mul(&pb);
+        let sum = pa.add(&pb);
+        let sp = enc.decode_vec(&prod, d);
+        let ss = enc.decode_vec(&sum, d);
+        for s in 0..d {
+            assert_eq!(sp[s].to_i128(), Some(a[s] as i128 * b[s] as i128), "mul slot {s}");
+            assert_eq!(ss[s].to_i128(), Some((a[s] + b[s]) as i128), "add slot {s}");
+        }
+    }
+
+    #[test]
+    fn broadcast_constant_fills_every_slot() {
+        let d = 16usize;
+        let t = slot_t(d);
+        let enc = SlotEncoder::new(t, d);
+        let pt = enc.encode_int(-4242);
+        for s in 0..d {
+            assert_eq!(enc.decode_slot(&pt, s).to_i128(), Some(-4242));
+        }
+        // Big constants are carried mod t.
+        let big = BigUint::pow10(25);
+        let pt = enc.encode_const_biguint(&big);
+        let want = big.mod_u64(t);
+        let want = if want > t / 2 { want as i128 - t as i128 } else { want as i128 };
+        assert_eq!(enc.decode_slot(&pt, 3).to_i128(), Some(want));
+    }
+
+    #[test]
+    fn automorphism_rotates_rows_and_swaps() {
+        // The slot layout promise behind rotate_rows/slot_sum:
+        // x → x^{3^r} rotates each d/2-row left by r; x → x^{2d−1}
+        // swaps the rows.
+        let d = 16usize;
+        let half = d / 2;
+        let t = slot_t(d);
+        let enc = SlotEncoder::new(t, d);
+        let vs: Vec<i64> = (0..d as i64).map(|i| 10 * i + 1).collect();
+        let pt = enc.encode_vec(&vs);
+        let mut g = 1usize;
+        for r in 0..half {
+            let rot = apply_auto(&pt, g, d);
+            let got = enc.decode_vec(&rot, d);
+            for j in 0..half {
+                let src = (j + r) % half;
+                assert_eq!(got[j].to_i128(), Some(vs[src] as i128), "row0 r={r} j={j}");
+                assert_eq!(
+                    got[half + j].to_i128(),
+                    Some(vs[half + src] as i128),
+                    "row1 r={r} j={j}"
+                );
+            }
+            g = g * 3 % (2 * d);
+        }
+        let swapped = apply_auto(&pt, 2 * d - 1, d);
+        let got = enc.decode_vec(&swapped, d);
+        for j in 0..half {
+            assert_eq!(got[j].to_i128(), Some(vs[half + j] as i128));
+            assert_eq!(got[half + j].to_i128(), Some(vs[j] as i128));
+        }
+    }
+
+    #[test]
+    fn slot_sum_via_row_rotations_and_swap() {
+        // The message-space proof of the O(log d) slot_sum schedule:
+        // log2(d/2) doubling rotations + one row swap leave the total
+        // in every slot.
+        let d = 8usize;
+        let half = d / 2;
+        let t = slot_t(d);
+        let enc = SlotEncoder::new(t, d);
+        let vs: Vec<i64> = vec![5, -3, 11, 7, 2, 0, -6, 4];
+        let total: i64 = vs.iter().sum();
+        let mut acc = enc.encode_vec(&vs);
+        let mut step = 1usize;
+        while step < half {
+            let g = {
+                let mut g = 1usize;
+                for _ in 0..step {
+                    g = g * 3 % (2 * d);
+                }
+                g
+            };
+            acc = acc.add(&apply_auto(&acc, g, d));
+            step *= 2;
+        }
+        acc = acc.add(&apply_auto(&acc, 2 * d - 1, d));
+        for s in 0..d {
+            assert_eq!(enc.decode_slot(&acc, s).to_i128(), Some(total as i128), "slot {s}");
+        }
     }
 }

@@ -3,6 +3,7 @@
 use crate::math::poly::RnsPoly;
 
 use super::context::FvContext;
+use super::params::Encoding;
 use super::rng::ChaChaRng;
 use super::sampler::{sample_error, sample_ternary};
 
@@ -33,11 +34,77 @@ pub struct RelinKey {
     pub a_ntt: Vec<RnsPoly>,
 }
 
+/// Key-switching key for one Galois automorphism `x → x^g`: the same
+/// per-limb RNS gadget as [`RelinKey`], but digit i encodes
+/// `g_i·σ_g(s)` instead of `g_i·s²`. Rotating a ciphertext applies the
+/// automorphism to both components and key-switches `σ_g(c₁)` back
+/// under `s` (see `fhe/ops.rs::apply_galois`).
+#[derive(Clone)]
+pub struct GaloisKey {
+    /// The Galois element `g` (odd, a unit mod 2d).
+    pub galois: usize,
+    pub b_ntt: Vec<RnsPoly>,
+    pub a_ntt: Vec<RnsPoly>,
+}
+
+/// The set of Galois keys a party publishes (empty under scalar
+/// encoding — rotations are a packed-only operation).
+#[derive(Clone, Default)]
+pub struct GaloisKeys {
+    keys: Vec<GaloisKey>,
+}
+
+impl GaloisKeys {
+    /// The key for Galois element `g`, if generated.
+    pub fn get(&self, galois: usize) -> Option<&GaloisKey> {
+        self.keys.iter().find(|k| k.galois == galois)
+    }
+
+    /// Galois elements covered by this key set.
+    pub fn elements(&self) -> impl Iterator<Item = usize> + '_ {
+        self.keys.iter().map(|k| k.galois)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Iterate the keys themselves (wire codec, diagnostics).
+    pub fn iter(&self) -> impl Iterator<Item = &GaloisKey> {
+        self.keys.iter()
+    }
+
+    /// Rebuild a set from deserialised keys (wire codec).
+    pub fn from_keys(keys: Vec<GaloisKey>) -> Self {
+        GaloisKeys { keys }
+    }
+}
+
+/// The Galois elements the packed engine needs for degree `d`: the
+/// row-rotation generators `3^{2^k} (mod 2d)` (binary rotation
+/// schedule over the d/2-slot rows) plus the row-swap element `2d−1`.
+pub fn packed_galois_elements(d: usize) -> Vec<usize> {
+    assert!(d.is_power_of_two() && d >= 2);
+    let m = 2 * d;
+    let mut els = Vec::new();
+    let mut g = 3usize % m;
+    let mut span = 1usize;
+    while span < d / 2 {
+        els.push(g);
+        g = g * g % m;
+        span *= 2;
+    }
+    els.push(m - 1);
+    els
+}
+
 /// All keys for one party.
 pub struct KeySet {
     pub sk: SecretKey,
     pub pk: PublicKey,
     pub rk: RelinKey,
+    /// Galois rotation keys (populated only for packed parameter sets).
+    pub gk: GaloisKeys,
 }
 
 /// Generate a full key set.
@@ -68,28 +135,75 @@ pub fn keygen(ctx: &FvContext, rng: &mut ChaChaRng) -> KeySet {
     // zero except [q/q_i]_{q_i} on plane i. Same all-NTT evaluation:
     // one forward per error sample, no cancelling inverse/forward
     // pairs on a_i·s or g_i·s².
-    let mut rb = Vec::with_capacity(ctx.relin_ndigits);
-    let mut ra = Vec::with_capacity(ctx.relin_ndigits);
+    let (rb, ra) = gadget_key(ctx, rng, &s_ntt, &s2_ntt);
+
+    let sk = SecretKey { s, s_ntt, s2_ntt };
+
+    // Galois rotation keys: packed sets only — scalar keygen draws the
+    // exact same rng stream (and pays the exact same cost) as before
+    // slot packing existed.
+    let gk = match ctx.params.encoding {
+        Encoding::Packed => galois_keygen(ctx, rng, &sk, &packed_galois_elements(ctx.d())),
+        Encoding::Scalar => GaloisKeys::default(),
+    };
+
+    KeySet { sk, pk, rk: RelinKey { b_ntt: rb, a_ntt: ra }, gk }
+}
+
+/// One per-limb-gadget key-switching key: for each Q limb i,
+/// `(b_i, a_i)` with `b_i = −(a_i·s + e_i) + g_i·target (mod q)`.
+/// `target = s²` gives the relinearisation key, `target = σ_g(s)` a
+/// Galois key — the digit-decomposition side (`relin_digits`) is
+/// shared too, so both consume identical noise per digit.
+fn gadget_key(
+    ctx: &FvContext,
+    rng: &mut ChaChaRng,
+    s_ntt: &RnsPoly,
+    target_ntt: &RnsPoly,
+) -> (Vec<RnsPoly>, Vec<RnsPoly>) {
+    let ring = &ctx.ring_q;
     let primes = &ring.basis.primes;
+    let mut kb = Vec::with_capacity(ctx.relin_ndigits);
+    let mut ka = Vec::with_capacity(ctx.relin_ndigits);
     for i in 0..ctx.relin_ndigits {
         let ai = ring.sample_uniform(rng);
         let mut ai_ntt = ai.clone();
         ring.ntt_forward(&mut ai_ntt);
         let mut ei_ntt = sample_error(ring, rng, ctx.params.cbd_k);
         ring.ntt_forward(&mut ei_ntt);
-        let ais_ntt = ring.mul_ntt(&ai_ntt, &s_ntt);
+        let ais_ntt = ring.mul_ntt(&ai_ntt, s_ntt);
         let gi_rns: Vec<u64> = primes
             .iter()
             .enumerate()
             .map(|(l, &p)| if l == i { ring.basis.crt_m[i].mod_u64(p) } else { 0 })
             .collect();
-        let gis2_ntt = ring.mul_scalar_rns(&s2_ntt, &gi_rns);
-        let bi_ntt = ring.add(&ring.neg(&ring.add(&ais_ntt, &ei_ntt)), &gis2_ntt);
-        rb.push(bi_ntt);
-        ra.push(ai_ntt);
+        let gi_target_ntt = ring.mul_scalar_rns(target_ntt, &gi_rns);
+        let bi_ntt = ring.add(&ring.neg(&ring.add(&ais_ntt, &ei_ntt)), &gi_target_ntt);
+        kb.push(bi_ntt);
+        ka.push(ai_ntt);
     }
+    (kb, ka)
+}
 
-    KeySet { sk: SecretKey { s, s_ntt, s2_ntt }, pk, rk: RelinKey { b_ntt: rb, a_ntt: ra } }
+/// Generate Galois keys for the given elements (a per-limb gadget key
+/// switching `σ_g(s)` back under `s`, for each `g`).
+pub fn galois_keygen(
+    ctx: &FvContext,
+    rng: &mut ChaChaRng,
+    sk: &SecretKey,
+    elements: &[usize],
+) -> GaloisKeys {
+    let ring = &ctx.ring_q;
+    let keys = elements
+        .iter()
+        .map(|&g| {
+            let mut sg_ntt = ring.automorphism(&sk.s, g);
+            ring.ntt_forward(&mut sg_ntt);
+            let (b_ntt, a_ntt) = gadget_key(ctx, rng, &sk.s_ntt, &sg_ntt);
+            GaloisKey { galois: g, b_ntt, a_ntt }
+        })
+        .collect();
+    GaloisKeys { keys }
 }
 
 #[cfg(test)]
@@ -129,6 +243,66 @@ mod tests {
         assert_eq!(keys.rk.a_ntt.len(), ctx.relin_ndigits);
         // One digit per RNS limb of q.
         assert_eq!(ctx.relin_ndigits, ctx.params.q_count);
+    }
+
+    #[test]
+    fn packed_galois_element_schedule() {
+        // d = 16 (2d = 32): doubling rotations 3, 3² = 9, 3⁴ = 17,
+        // then the row swap 31 = −1.
+        assert_eq!(packed_galois_elements(16), vec![3, 9, 17, 31]);
+        // Degenerate single-slot rows: only the swap remains.
+        assert_eq!(packed_galois_elements(2), vec![3]);
+        for d in [2usize, 8, 256] {
+            let els = packed_galois_elements(d);
+            assert_eq!(els.len(), (d / 2).trailing_zeros() as usize + 1, "O(log d) keys");
+            for g in els {
+                assert_eq!(g % 2, 1, "Galois elements are odd units mod 2d");
+                assert!(g < 2 * d);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_keygen_has_no_galois_keys() {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(35);
+        let keys = keygen(&ctx, &mut rng);
+        assert!(keys.gk.is_empty());
+        assert!(keys.gk.get(3).is_none());
+    }
+
+    #[test]
+    fn galois_key_encodes_gadget_multiples_of_rotated_s() {
+        // b_i + a_i·s - g_i·σ_g(s) = -e_i (small) for every digit of
+        // every packed Galois element.
+        let ctx = FvContext::new(FvParams::custom_packed(256, 3, 20).unwrap());
+        let mut rng = ChaChaRng::from_seed(34);
+        let keys = keygen(&ctx, &mut rng);
+        assert!(!keys.gk.is_empty());
+        let ring = &ctx.ring_q;
+        for g in packed_galois_elements(ctx.d()) {
+            let key = keys.gk.get(g).expect("packed keygen covers the schedule");
+            let mut sg_ntt = ring.automorphism(&keys.sk.s, g);
+            ring.ntt_forward(&mut sg_ntt);
+            for i in [0usize, ctx.relin_ndigits - 1] {
+                let prod = ring.mul_ntt(&key.a_ntt[i], &keys.sk.s_ntt);
+                let gi: Vec<u64> = ring
+                    .basis
+                    .primes
+                    .iter()
+                    .map(|&p| ring.basis.crt_m[i].mod_u64(p))
+                    .collect();
+                let gisg = ring.mul_scalar_rns(&sg_ntt, &gi);
+                let mut res = ring.sub(&ring.add(&key.b_ntt[i], &prod), &gisg);
+                ring.ntt_inverse(&mut res);
+                let bound = ctx.params.cbd_k as i64;
+                for (l, &p) in ring.basis.primes.iter().enumerate() {
+                    for &v in &res.planes[l] {
+                        assert!(center(v, p).abs() <= bound, "galois digit {i} of g = {g}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! - [`params`] — §4.5 parameter selection: Lemma 3 growth bounds,
 //!   Lindner–Peikert security, noise-depth budgeting.
 //! - [`context`] — precomputed rings/moduli and basis conversions.
-//! - [`keys`] — secret/public/relinearisation key generation.
-//! - [`plaintext`] / [`encoding`] — message ring and §3.1 encoding.
+//! - [`keys`] — secret/public/relinearisation/Galois key generation.
+//! - [`plaintext`] / [`encoding`] — message ring, §3.1 scalar
+//!   encoding, and CRT slot packing (the [`encoding::Encoder`] seam).
 //! - [`ciphertext`] / [`ops`] — ⊕, ⊗, plaintext ops, relinearisation.
 //! - [`rns_mul`] — the full-RNS ⊗ pipeline (default
 //!   [`MulBackend`](params::MulBackend)): base extension,
@@ -30,6 +31,10 @@ pub mod sampler;
 
 pub use ciphertext::Ciphertext;
 pub use context::FvContext;
-pub use keys::{keygen, KeySet, PublicKey, RelinKey, SecretKey};
-pub use params::{plan, Algo, FvParams, MulBackend, PlanRequest, SecurityProfile};
+pub use encoding::{Encoder, ScalarEncoder, SlotEncoder};
+pub use keys::{
+    galois_keygen, keygen, packed_galois_elements, GaloisKey, GaloisKeys, KeySet, PublicKey,
+    RelinKey, SecretKey,
+};
+pub use params::{plan, Algo, Encoding, FvParams, MulBackend, PlanRequest, SecurityProfile};
 pub use plaintext::{Plaintext, PlaintextNtt};

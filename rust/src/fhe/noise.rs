@@ -20,6 +20,30 @@
 //! statement; since both counts are ≤ the fold's `(k, k)` for every
 //! `k ≥ 1`, fusing only tightens the §4 correctness bounds (the
 //! planner's flat additive reserve stays valid unchanged).
+//!
+//! ## Packed (slot) accounting
+//!
+//! Two things change under slot packing, one per side of the budget:
+//!
+//! - **Noise growth.** A scalar-mode rescaling constant is encoded in
+//!   signed binary, so its ℓ₁-norm is its popcount and the planner's
+//!   `const_bits` term is small. A packed constant is slot-*broadcast*
+//!   — a single degree-0 coefficient `c mod t` (centred) — so its
+//!   ℓ₁-norm is the centred value itself, up to `t/2`. Plain-mul noise
+//!   growth in packed mode is therefore bounded by the generic
+//!   `d·t`-style factor already charged per level, not the tighter
+//!   popcount refinement; `FvParams::custom_packed` sizes `q` for the
+//!   generic bound. Rotations add only relinearisation-shaped noise
+//!   (`≈ ℓ·d·2^29·B/q` per key switch, no depth), so a `slot_sum`'s
+//!   `log₂(d/2)+1` switches cost far less than one multiplication.
+//! - **Correctness bound.** Scalar mode needs every *coefficient* of
+//!   the encoded product below `t/2`; packed mode evaluates at the CRT
+//!   roots, so it needs every true slot *value* (each a full inner
+//!   product, not a convolution coefficient) below `t/2`. Values grow
+//!   much faster than coefficients — packed `t` must cover the largest
+//!   scaled intermediate of the whole descent, which is why
+//!   `custom_packed` takes `t_bits` explicitly instead of reusing the
+//!   scalar planner's coefficient-growth model.
 
 use super::ciphertext::Ciphertext;
 use super::context::FvContext;

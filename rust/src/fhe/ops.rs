@@ -14,7 +14,7 @@ use crate::math::poly::{Rep, RnsPoly};
 
 use super::ciphertext::Ciphertext;
 use super::context::FvContext;
-use super::keys::{PublicKey, RelinKey, SecretKey};
+use super::keys::{GaloisKey, GaloisKeys, PublicKey, RelinKey, SecretKey};
 use super::params::MulBackend;
 use super::plaintext::Plaintext;
 use super::rng::ChaChaRng;
@@ -382,6 +382,88 @@ impl FvContext {
         out
     }
 
+    /// Apply the Galois automorphism `x ↦ x^g` to a 2-component
+    /// ciphertext and key-switch the rotated `σ(c₁)` back to the
+    /// original secret key with the matching [`GaloisKey`]. Reuses the
+    /// per-limb gadget pipeline of [`relinearize`](Self::relinearize):
+    /// digits of `σ(c₁)` accumulate lazily against the key limbs, one
+    /// Barrett reduction per coefficient for the whole sum, and the
+    /// output stays **NTT-resident** (σ(c₀) is forward-transformed
+    /// into the accumulator instead of inverse-transforming it).
+    /// Rotation costs no ciphertext-depth level; noise grows
+    /// additively like a relinearisation.
+    pub fn apply_galois(&self, ct: &Ciphertext, gk: &GaloisKey) -> Ciphertext {
+        assert_eq!(ct.len(), 2, "rotate a relinearised (2-component) ciphertext");
+        let ring = &self.ring_q;
+        ring.note_rotation();
+        let c0 = ring.automorphism(ring.coeff_form(&ct.polys[0]).as_ref(), gk.galois);
+        let c1 = ring.automorphism(ring.coeff_form(&ct.polys[1]).as_ref(), gk.galois);
+        let mut lazy0 = ring.ntt_accumulator();
+        let mut lazy1 = ring.ntt_accumulator();
+        for (j, mut dj) in self.relin_digits(&c1).into_iter().enumerate() {
+            ring.ntt_forward(&mut dj);
+            ring.acc_mul_ntt(&mut lazy0, &dj, &gk.b_ntt[j]);
+            ring.acc_mul_ntt(&mut lazy1, &dj, &gk.a_ntt[j]);
+        }
+        let mut acc0 = ring.acc_reduce(&lazy0);
+        let acc1 = ring.acc_reduce(&lazy1);
+        ring.add_assign(&mut acc0, ring.ntt_form(&c0).as_ref());
+        let mut out = Ciphertext::new(vec![acc0, acc1]);
+        out.ct_depth = ct.ct_depth;
+        out
+    }
+
+    /// Rotate both packed rows left by `steps` slots: slot `j` of the
+    /// result holds slot `j + steps (mod d/2)` of the input, within
+    /// each row. Binary step decomposition over the cached `3^{2^k}`
+    /// keys — at most `log₂(d/2)` key-switches for any step count.
+    pub fn rotate_rows(&self, ct: &Ciphertext, steps: usize, gks: &GaloisKeys) -> Ciphertext {
+        let half = self.d() / 2;
+        let m = 2 * self.d();
+        let mut steps = steps % half.max(1);
+        let mut out = ct.clone();
+        let mut g = 3 % m;
+        let mut span = 1usize;
+        while steps > 0 && span < half {
+            if steps & span != 0 {
+                let key = gks
+                    .get(g)
+                    .unwrap_or_else(|| panic!("missing Galois key for x ↦ x^{g} (packed keygen?)"));
+                out = self.apply_galois(&out, key);
+                steps &= !span;
+            }
+            g = (g * g) % m;
+            span <<= 1;
+        }
+        out
+    }
+
+    /// Swap the two packed rows (the `x ↦ x^{2d−1}` automorphism):
+    /// slot `j` trades places with slot `d/2 + j`.
+    pub fn swap_rows(&self, ct: &Ciphertext, gks: &GaloisKeys) -> Ciphertext {
+        let g = 2 * self.d() - 1;
+        let key = gks
+            .get(g)
+            .unwrap_or_else(|| panic!("missing Galois key for x ↦ x^{g} (packed keygen?)"));
+        self.apply_galois(ct, key)
+    }
+
+    /// Sum every slot into every slot: `log₂(d/2)` doubling rotations
+    /// fold each row onto itself, one row swap folds the rows
+    /// together — `log₂(d/2) + 1` key-switches total, versus `d − 1`
+    /// for naive slot extraction. The packed inner product reads the
+    /// total from any slot afterwards.
+    pub fn slot_sum(&self, ct: &Ciphertext, gks: &GaloisKeys) -> Ciphertext {
+        let half = self.d() / 2;
+        let mut acc = ct.clone();
+        let mut span = 1usize;
+        while span < half {
+            acc = self.add_ct(&acc, &self.rotate_rows(&acc, span, gks));
+            span <<= 1;
+        }
+        self.add_ct(&acc, &self.swap_rows(&acc, gks))
+    }
+
     /// Full homomorphic multiplication: tensor, scale, relinearise.
     /// The product comes back NTT-resident (see
     /// [`relinearize`](Self::relinearize)).
@@ -409,6 +491,7 @@ mod tests {
     use std::sync::Arc;
 
     use super::*;
+    use crate::fhe::encoding::Encoder;
     use crate::fhe::keys::keygen;
     use crate::fhe::noise::noise_budget_bits;
     use crate::fhe::params::FvParams;
@@ -692,6 +775,119 @@ mod tests {
             let expect: i128 = vals.iter().map(|&(a, b)| a as i128 * b as i128).sum();
             assert_eq!(df.eval_at_2().to_i128(), Some(expect), "{backend:?}");
         }
+    }
+
+    fn setup_packed(
+        d: usize,
+        l: usize,
+        t_bits: usize,
+        seed: u64,
+    ) -> (Arc<FvContext>, super::super::keys::KeySet, ChaChaRng) {
+        let params = FvParams::custom_packed(d, l, t_bits).expect("packed params");
+        let ctx = FvContext::new(params);
+        let mut rng = ChaChaRng::from_seed(seed);
+        let keys = keygen(&ctx, &mut rng);
+        (ctx, keys, rng)
+    }
+
+    #[test]
+    fn rotation_decrypt_parity_with_slot_permutation() {
+        // Encrypted rotate_rows must realise exactly the message-space
+        // slot permutation the SlotEncoder promises: slot j of the
+        // rotated ciphertext holds slot j+r (mod d/2) of the input,
+        // rows independently.
+        let (ctx, keys, mut rng) = setup_packed(256, 3, 24, 61);
+        let d = ctx.d();
+        let half = d / 2;
+        let vals: Vec<i64> = (0..d as i64).map(|j| (j * j + 3) % 997).collect();
+        let pt = ctx.encoder().encode_vec(&vals);
+        let ct = ctx.encrypt(&pt, &keys.pk, &mut rng);
+        for r in [1usize, 2, 37, half - 1] {
+            let rot = ctx.rotate_rows(&ct, r, &keys.gk);
+            assert_eq!(rot.len(), 2, "rotation preserves component count");
+            assert_eq!(rot.ct_depth, ct.ct_depth, "rotation consumes no depth");
+            let got = ctx.encoder().decode_vec(&ctx.decrypt(&rot, &keys.sk), d);
+            for j in 0..half {
+                assert_eq!(got[j].to_i128(), Some(vals[(j + r) % half] as i128), "row0 r={r}");
+                assert_eq!(
+                    got[half + j].to_i128(),
+                    Some(vals[half + (j + r) % half] as i128),
+                    "row1 r={r}"
+                );
+            }
+        }
+        // Row swap trades the two halves wholesale.
+        let swap = ctx.swap_rows(&ct, &keys.gk);
+        let swapped = ctx.encoder().decode_vec(&ctx.decrypt(&swap, &keys.sk), d);
+        for j in 0..half {
+            assert_eq!(swapped[j].to_i128(), Some(vals[half + j] as i128));
+            assert_eq!(swapped[half + j].to_i128(), Some(vals[j] as i128));
+        }
+    }
+
+    #[test]
+    fn slot_sum_totals_every_slot_in_log_rotations() {
+        // slot_sum leaves Σ vals in all d slots and pays exactly
+        // log₂(d/2) + 1 key-switches — the O(log d) budget the packed
+        // inner product is built on.
+        let (ctx, keys, mut rng) = setup_packed(256, 3, 24, 62);
+        let d = ctx.d();
+        let vals: Vec<i64> = (0..d as i64).map(|j| j + 1).collect();
+        let total: i128 = vals.iter().map(|&v| v as i128).sum();
+        let ct = ctx.encrypt(&ctx.encoder().encode_vec(&vals), &keys.pk, &mut rng);
+        let ring = &ctx.ring_q;
+        let before = ring.rotation_count();
+        let summed = ctx.slot_sum(&ct, &keys.gk);
+        let expect_rot = (d / 2).trailing_zeros() as u64 + 1;
+        assert_eq!(ring.rotation_count() - before, expect_rot, "log₂(d/2)+1 key-switches");
+        let got = ctx.encoder().decode_vec(&ctx.decrypt(&summed, &keys.sk), d);
+        for (j, v) in got.iter().enumerate() {
+            assert_eq!(v.to_i128(), Some(total), "slot {j}");
+        }
+        assert!(
+            noise_budget_bits(&ctx, &summed, &keys.sk) > 10.0,
+            "key-switch noise stays within budget"
+        );
+    }
+
+    #[test]
+    fn rotate_rows_zero_steps_and_full_cycle() {
+        let (ctx, keys, mut rng) = setup_packed(256, 3, 24, 63);
+        let d = ctx.d();
+        let vals: Vec<i64> = (0..d as i64).map(|j| 7 * j - 100).collect();
+        let ct = ctx.encrypt(&ctx.encoder().encode_vec(&vals), &keys.pk, &mut rng);
+        let ring = &ctx.ring_q;
+        let before = ring.rotation_count();
+        let same = ctx.rotate_rows(&ct, 0, &keys.gk);
+        assert_eq!(ring.rotation_count() - before, 0, "zero steps is key-switch-free");
+        assert_eq!(ctx.decrypt(&same, &keys.sk), ctx.decrypt(&ct, &keys.sk));
+        // d/2 steps wrap to the identity permutation (mod half-row).
+        let cycled = ctx.rotate_rows(&ct, d / 2, &keys.gk);
+        assert_eq!(ctx.decrypt(&cycled, &keys.sk), ctx.decrypt(&ct, &keys.sk));
+    }
+
+    #[test]
+    fn rotation_commutes_with_slotwise_ops() {
+        // σ_g is a ring homomorphism, so rotating a sum/product equals
+        // the sum/product of rotations — checked through encryption.
+        let (ctx, keys, mut rng) = setup_packed(256, 3, 22, 64);
+        let d = ctx.d();
+        let va: Vec<i64> = (0..d as i64).map(|j| j % 23 - 11).collect();
+        let vb: Vec<i64> = (0..d as i64).map(|j| (j * 5) % 17 - 8).collect();
+        let ca = ctx.encrypt(&ctx.encoder().encode_vec(&va), &keys.pk, &mut rng);
+        let cb = ctx.encrypt(&ctx.encoder().encode_vec(&vb), &keys.pk, &mut rng);
+        let r = 5usize;
+        let prod_then_rot =
+            ctx.rotate_rows(&ctx.mul_ct(&ca, &cb, &keys.rk), r, &keys.gk);
+        let rot_then_prod = ctx.mul_ct(
+            &ctx.rotate_rows(&ca, r, &keys.gk),
+            &ctx.rotate_rows(&cb, r, &keys.gk),
+            &keys.rk,
+        );
+        assert_eq!(
+            ctx.decrypt(&prod_then_rot, &keys.sk),
+            ctx.decrypt(&rot_then_prod, &keys.sk)
+        );
     }
 
     #[test]

@@ -20,7 +20,7 @@
 use crate::util::error::{bail, Result};
 
 use crate::math::bigint::BigUint;
-use crate::math::primes::rns_basis_primes;
+use crate::math::primes::{is_prime, ntt_primes_below, rns_basis_primes};
 
 use super::sampler::DEFAULT_CBD_K;
 
@@ -56,6 +56,36 @@ impl MulBackend {
     }
 }
 
+/// How plaintext polynomials carry messages (see `fhe/encoding.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Encoding {
+    /// One logical scalar per ciphertext, signed-binary coefficient
+    /// encoding (the original paper pipeline). Works for any `t`.
+    #[default]
+    Scalar,
+    /// CRT slot packing: `Z_t[x]/(x^d+1)` factors into `d` independent
+    /// slots when `t` is a prime ≡ 1 (mod 2d), so one ciphertext
+    /// carries `d` values with slot-wise add/mul semantics. Requires
+    /// [`FvParams::validate_encoding`] to pass.
+    Packed,
+}
+
+impl Encoding {
+    /// Process-wide default, overridable via `ELS_ENCODING`
+    /// (`packed`/`slot` or `scalar`). Used by the CI packed leg, so a
+    /// typo must fail loudly rather than silently test the default
+    /// encoding twice.
+    pub fn from_env() -> Self {
+        match std::env::var("ELS_ENCODING").as_deref() {
+            Ok("packed") | Ok("slot") | Ok("simd") => Encoding::Packed,
+            Ok("scalar") | Ok("") | Err(_) => Encoding::Scalar,
+            Ok(other) => {
+                panic!("unknown ELS_ENCODING '{other}' (expected scalar|packed)")
+            }
+        }
+    }
+}
+
 /// How strictly to enforce the LP11 security floor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SecurityProfile {
@@ -85,6 +115,10 @@ pub struct FvParams {
     pub cbd_k: u32,
     /// Ciphertext-multiplication pipeline this set runs on.
     pub mul_backend: MulBackend,
+    /// How plaintexts carry messages (scalar signed-binary or CRT
+    /// slot packing). Purely an encoding property: the ciphertext
+    /// pipelines are identical either way.
+    pub encoding: Encoding,
     /// The profile this set was planned under.
     pub profile: SecurityProfile,
 }
@@ -99,10 +133,91 @@ impl FvParams {
             t: BigUint::one().shl_bits(t_bits),
             cbd_k: DEFAULT_CBD_K,
             mul_backend: MulBackend::from_env(),
+            encoding: Encoding::Scalar,
             profile: SecurityProfile::Toy,
         };
         params.ext_count = params.required_ext_count();
         params
+    }
+
+    /// Hand-rolled *packed* parameter set: like [`custom`](Self::custom)
+    /// but `t` is the largest prime ≡ 1 (mod 2d) below `2^t_bits` (so
+    /// the plaintext ring CRT-factors into `d` slots) and the encoding
+    /// is [`Encoding::Packed`]. Fails when no such prime exists or the
+    /// resulting set does not validate.
+    pub fn custom_packed(d: usize, q_count: usize, t_bits: usize) -> Result<Self> {
+        if t_bits >= 62 {
+            bail!("packed t must fit the NTT engine: t_bits = {t_bits} ≥ 62");
+        }
+        if 1u64 << t_bits <= 2 * d as u64 + 1 {
+            bail!(
+                "packed t_bits = {t_bits} leaves no prime ≡ 1 (mod 2d) below 2^{t_bits} \
+                 for d = {d}"
+            );
+        }
+        let t = ntt_primes_below(1u64 << t_bits, 2 * d as u64, 1)[0];
+        let mut params = FvParams {
+            d,
+            q_count,
+            ext_count: 0,
+            t: BigUint::from_u64(t),
+            cbd_k: DEFAULT_CBD_K,
+            mul_backend: MulBackend::from_env(),
+            encoding: Encoding::Packed,
+            profile: SecurityProfile::Toy,
+        };
+        params.ext_count = params.required_ext_count();
+        params.validate_encoding()?;
+        Ok(params)
+    }
+
+    /// Re-tag an existing set with `encoding`, re-validating the
+    /// plaintext modulus against the packing constraint.
+    pub fn with_encoding(mut self, encoding: Encoding) -> Result<Self> {
+        self.encoding = encoding;
+        self.validate_encoding()?;
+        Ok(self)
+    }
+
+    /// Check the plaintext modulus against the encoding's constraint:
+    /// packed sets need a prime `t ≡ 1 (mod 2d)` with `t < 2^62` so
+    /// that `Z_t[x]/(x^d+1)` splits into `d` linear factors and the
+    /// slot NTT engine applies. Scalar sets always pass.
+    pub fn validate_encoding(&self) -> Result<()> {
+        if self.encoding == Encoding::Scalar {
+            return Ok(());
+        }
+        let Some(t) = self.t.to_u64() else {
+            bail!(
+                "packed encoding needs a plaintext modulus below 2^64 \
+                 (got t with {} bits); use Encoding::Scalar or shrink t",
+                self.t.bit_len()
+            );
+        };
+        if t >= 1 << 62 {
+            bail!("packed encoding needs t < 2^62 for the slot NTT (got t = {t})");
+        }
+        if t % (2 * self.d as u64) != 1 {
+            bail!(
+                "packed encoding needs t ≡ 1 (mod 2d) so Z_t[x]/(x^d+1) splits into d slots \
+                 (got t = {t}, d = {}, t mod 2d = {}); pick t via FvParams::custom_packed",
+                self.d,
+                t % (2 * self.d as u64)
+            );
+        }
+        if !is_prime(t) {
+            bail!("packed encoding needs a prime plaintext modulus (got composite t = {t})");
+        }
+        Ok(())
+    }
+
+    /// Number of plaintext slots a single ciphertext carries: `d` when
+    /// packed, 1 otherwise.
+    pub fn slot_count(&self) -> usize {
+        match self.encoding {
+            Encoding::Packed => self.d,
+            Encoding::Scalar => 1,
+        }
     }
 
     /// The RNS primes of `q` (deterministic; mirrored in Python).
@@ -533,6 +648,7 @@ pub fn plan(req: &PlanRequest) -> Result<FvParams> {
                 t: BigUint::one().shl_bits(t_bits),
                 cbd_k: DEFAULT_CBD_K,
                 mul_backend: MulBackend::from_env(),
+                encoding: Encoding::Scalar,
                 profile: req.profile,
             };
             params.ext_count = params.required_ext_count();
@@ -678,6 +794,50 @@ mod tests {
     fn relin_digit_count_is_limb_count() {
         let p = FvParams::custom(256, 4, 20);
         assert_eq!(p.relin_ndigits(), 4);
+    }
+
+    #[test]
+    fn custom_packed_selects_crt_friendly_prime_t() {
+        let p = FvParams::custom_packed(256, 4, 26).unwrap();
+        let t = p.t.to_u64().unwrap();
+        assert_eq!(p.encoding, Encoding::Packed);
+        assert_eq!(t % (2 * 256), 1, "t ≡ 1 mod 2d");
+        assert!(is_prime(t));
+        assert!(t < 1 << 26);
+        assert_eq!(p.slot_count(), 256);
+        assert_eq!(FvParams::custom(256, 4, 26).slot_count(), 1);
+        p.validate_encoding().unwrap();
+    }
+
+    #[test]
+    fn packed_validation_rejects_bad_t() {
+        // Power-of-two t (the scalar default) is ≢ 1 mod 2d.
+        let e = FvParams::custom(256, 4, 20).with_encoding(Encoding::Packed).unwrap_err();
+        assert!(e.to_string().contains("t ≡ 1 (mod 2d)"), "got: {e}");
+        // Composite t ≡ 1 mod 2d: 2d·k + 1 with a forced factor.
+        let mut p = FvParams::custom(256, 4, 20);
+        let composite = (2 * 256 * 9 + 1) as u64 * (2 * 256 * 25 + 1) as u64;
+        assert_eq!(composite % 512, 1);
+        assert!(!is_prime(composite));
+        p.t = BigUint::from_u64(composite);
+        let e = p.with_encoding(Encoding::Packed).unwrap_err();
+        assert!(e.to_string().contains("prime plaintext modulus"), "got: {e}");
+        // Oversized t cannot index the slot NTT.
+        let mut p = FvParams::custom(256, 4, 20);
+        p.t = BigUint::one().shl_bits(80);
+        let e = p.with_encoding(Encoding::Packed).unwrap_err();
+        assert!(e.to_string().contains("below 2^64"), "got: {e}");
+        // Scalar sets never fail validation.
+        FvParams::custom(256, 4, 20).validate_encoding().unwrap();
+    }
+
+    #[test]
+    fn encoding_default_is_scalar() {
+        // `Encoding::default()` is the compiled-in default; from_env
+        // may differ when the CI packed leg sets ELS_ENCODING.
+        assert_eq!(Encoding::default(), Encoding::Scalar);
+        assert_eq!(FvParams::custom(256, 4, 20).encoding, Encoding::Scalar);
+        assert_eq!(plan(&PlanRequest::gd(8, 2, 2, 1, 4)).unwrap().encoding, Encoding::Scalar);
     }
 
     #[test]

@@ -62,6 +62,11 @@ pub struct RingContext {
     /// (one count per 3-component tensor brought back to Q — either a
     /// single ciphertext product or a whole fused accumulation chunk).
     scale_rounds: AtomicU64,
+    /// Galois rotations (automorphism + key-switch) performed over this
+    /// ring (one count per rotated ciphertext) — the hook behind the
+    /// packed inner-product budget tests: `slot_sum` must cost
+    /// O(log d) rotations, not O(n) pipelines.
+    rotations: AtomicU64,
 }
 
 impl RingContext {
@@ -74,6 +79,7 @@ impl RingContext {
             transforms: AtomicU64::new(0),
             relins: AtomicU64::new(0),
             scale_rounds: AtomicU64::new(0),
+            rotations: AtomicU64::new(0),
         })
     }
 
@@ -106,6 +112,16 @@ impl RingContext {
     /// Record one scale-and-round pipeline.
     pub fn note_scale_round(&self) {
         self.scale_rounds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Galois rotations performed over this ring (see the field doc).
+    pub fn rotation_count(&self) -> u64 {
+        self.rotations.load(Ordering::Relaxed)
+    }
+
+    /// Record one Galois rotation (automorphism + key-switch).
+    pub fn note_rotation(&self) {
+        self.rotations.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn nlimbs(&self) -> usize {
@@ -415,6 +431,30 @@ impl RingContext {
         out
     }
 
+    /// Galois automorphism `x → x^g` (`g` odd) on a coefficient-form
+    /// polynomial: coefficient `i` moves to index `(i·g) mod 2d`,
+    /// negated when the index wraps past `d` (since `x^d = −1`). A ring
+    /// homomorphism of `R_q`, applied plane-wise; the FV ops layer
+    /// key-switches the result back under the original secret key.
+    pub fn automorphism(&self, a: &RnsPoly, g: usize) -> RnsPoly {
+        assert_eq!(a.rep, Rep::Coeff, "automorphism needs coefficient form");
+        assert_eq!(g % 2, 1, "Galois element must be odd (a unit mod 2d)");
+        let m = 2 * self.d;
+        let mut out = self.zero();
+        for (l, &p) in self.basis.primes.iter().enumerate() {
+            for i in 0..self.d {
+                let e = (i * (g % m)) % m;
+                let v = a.planes[l][i];
+                if e < self.d {
+                    out.planes[l][e] = v;
+                } else {
+                    out.planes[l][e - self.d] = negmod(v, p);
+                }
+            }
+        }
+        out
+    }
+
     /// Sample a uniform polynomial in `R_q` (coefficient rep).
     pub fn sample_uniform(&self, rng: &mut crate::fhe::rng::ChaChaRng) -> RnsPoly {
         let mut out = self.zero();
@@ -659,6 +699,22 @@ mod tests {
         ctx.ensure_coeff(&mut v);
         assert_eq!(v, a);
         assert_eq!(ctx.transform_count(), t0 + 3);
+    }
+
+    #[test]
+    fn automorphism_is_ring_homomorphism() {
+        let ctx = ctx(16, 2);
+        let mut rng = ChaChaRng::from_seed(19);
+        let a = ctx.sample_uniform(&mut rng);
+        let b = ctx.sample_uniform(&mut rng);
+        for g in [1usize, 3, 9, 31] {
+            let lhs = ctx.automorphism(&ctx.polymul(&a, &b), g);
+            let rhs = ctx.polymul(&ctx.automorphism(&a, g), &ctx.automorphism(&b, g));
+            assert_eq!(lhs, rhs, "g = {g}");
+        }
+        // σ_1 is the identity; σ_11 ∘ σ_3 = σ_33 = σ_1 (mod 2d = 32).
+        assert_eq!(ctx.automorphism(&a, 1), a);
+        assert_eq!(ctx.automorphism(&ctx.automorphism(&a, 3), 11), a);
     }
 
     #[test]

@@ -11,7 +11,10 @@ use std::sync::Arc;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::fhe::rns_mul::MulScratch;
-use crate::fhe::{Ciphertext, FvContext, MulBackend, Plaintext, PlaintextNtt, RelinKey};
+use crate::fhe::{
+    Ciphertext, Encoding, FvContext, GaloisKeys, MulBackend, Plaintext, PlaintextNtt, RelinKey,
+};
+use crate::util::error::Result;
 use crate::util::pool::{parallel_map_with, pool_workers};
 
 /// Operation counters (fig5 instrumentation and batching diagnostics).
@@ -119,6 +122,39 @@ pub trait HeEngine: Send + Sync {
     fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         self.mul_pairs(&[(a, b)]).pop().unwrap()
     }
+
+    /// Rotate both packed rows left by `steps` slots. The default
+    /// degrades gracefully (the `dot_pairs` pattern): every rotation
+    /// that is the identity permutation — zero steps, a full row
+    /// cycle, or a scalar-encoded context whose single logical slot
+    /// cannot move — returns the ciphertext unchanged; anything else
+    /// is an error rather than a panic, so engines without Galois
+    /// keys (the XLA stub, at present) keep compiling and working on
+    /// the scalar path.
+    fn rotate_rows(&self, ct: &Ciphertext, steps: usize) -> Result<Ciphertext> {
+        let half = (self.ctx().d() / 2).max(1);
+        if self.ctx().params.encoding == Encoding::Scalar || steps % half == 0 {
+            return Ok(ct.clone());
+        }
+        crate::bail!(
+            "engine has no rotation support (no Galois keys); \
+             use NativeEngine::with_galois_keys"
+        );
+    }
+
+    /// Sum every slot into every slot (`log₂(d/2) + 1` key-switches on
+    /// a keyed engine). The scalar-encoding default is the mul-free
+    /// identity — with one logical slot, the slot sum *is* the
+    /// ciphertext — so scalar pipelines run unchanged on any engine.
+    fn slot_sum(&self, ct: &Ciphertext) -> Result<Ciphertext> {
+        if self.ctx().params.encoding == Encoding::Scalar {
+            return Ok(ct.clone());
+        }
+        crate::bail!(
+            "engine has no slot_sum support (no Galois keys); \
+             use NativeEngine::with_galois_keys"
+        );
+    }
 }
 
 /// Pure-Rust engine: thread-parallel `mul_ct` over the pair batch.
@@ -138,6 +174,10 @@ pub trait HeEngine: Send + Sync {
 pub struct NativeEngine {
     pub ctx: Arc<FvContext>,
     pub rk: Arc<RelinKey>,
+    /// Galois rotation keys; empty unless installed with
+    /// [`with_galois_keys`](Self::with_galois_keys). Only packed
+    /// pipelines need them — scalar fits never rotate.
+    gk: Arc<GaloisKeys>,
     /// Explicit worker budget; `None` reads [`pool_workers`] per call.
     workers: Option<usize>,
     stats: OpStats,
@@ -145,19 +185,28 @@ pub struct NativeEngine {
 
 impl NativeEngine {
     pub fn new(ctx: Arc<FvContext>, rk: Arc<RelinKey>) -> Self {
-        NativeEngine { ctx, rk, workers: None, stats: OpStats::default() }
+        NativeEngine {
+            ctx,
+            rk,
+            gk: Arc::new(GaloisKeys::default()),
+            workers: None,
+            stats: OpStats::default(),
+        }
     }
 
     /// Build with an explicit multiply backend (parity tests, benches,
     /// the CLI's `--backend` flag). Keys stay valid across backends —
     /// they live entirely in the Q basis.
     pub fn with_backend(ctx: Arc<FvContext>, rk: Arc<RelinKey>, backend: MulBackend) -> Self {
-        NativeEngine {
-            ctx: ctx.with_backend(backend),
-            rk,
-            workers: None,
-            stats: OpStats::default(),
-        }
+        NativeEngine::new(ctx.with_backend(backend), rk)
+    }
+
+    /// Install the Galois rotation keys (additive builder — existing
+    /// `new(ctx, rk)` call sites stay valid). Required before
+    /// `rotate_rows`/`slot_sum` do real work on a packed context.
+    pub fn with_galois_keys(mut self, gk: Arc<GaloisKeys>) -> Self {
+        self.gk = gk;
+        self
     }
 
     /// Pin the worker budget (tests and controlled benches; production
@@ -240,12 +289,39 @@ impl HeEngine for NativeEngine {
             move |scratch, g| ctx.dot_group_with(g, rk, scratch, inner),
         )
     }
+
+    fn rotate_rows(&self, ct: &Ciphertext, steps: usize) -> Result<Ciphertext> {
+        let half = (self.ctx.d() / 2).max(1);
+        if self.ctx.params.encoding == Encoding::Scalar || steps % half == 0 {
+            return Ok(ct.clone());
+        }
+        if self.gk.is_empty() {
+            crate::bail!(
+                "packed rotation requested but no Galois keys installed; \
+                 build the engine with NativeEngine::with_galois_keys"
+            );
+        }
+        Ok(self.ctx.rotate_rows(ct, steps, &self.gk))
+    }
+
+    fn slot_sum(&self, ct: &Ciphertext) -> Result<Ciphertext> {
+        if self.ctx.params.encoding == Encoding::Scalar {
+            return Ok(ct.clone());
+        }
+        if self.gk.is_empty() {
+            crate::bail!(
+                "packed slot_sum requested but no Galois keys installed; \
+                 build the engine with NativeEngine::with_galois_keys"
+            );
+        }
+        Ok(self.ctx.slot_sum(ct, &self.gk))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fhe::encoding::encode_int;
+    use crate::fhe::encoding::{encode_int, Encoder};
     use crate::fhe::keys::keygen;
     use crate::fhe::params::FvParams;
     use crate::fhe::rng::ChaChaRng;
@@ -458,6 +534,65 @@ mod tests {
         // Empty input is a no-op on both paths.
         assert!(native.dot_pairs(&[]).is_empty());
         assert!(fallback.dot_pairs(&[]).is_empty());
+    }
+
+    #[test]
+    fn engine_rotation_defaults_degrade_gracefully() {
+        // The satellite contract, mirroring dot_pairs' default-impl
+        // pattern: engines that never override rotate_rows/slot_sum
+        // (the XLA stub) must stay correct on scalar contexts (identity
+        // is the right answer with one logical slot) and fail loudly —
+        // an Err, not a panic — when a packed pipeline asks them to
+        // actually rotate.
+        struct NoRotate(NativeEngine);
+        impl HeEngine for NoRotate {
+            fn ctx(&self) -> &FvContext {
+                self.0.ctx()
+            }
+            fn stats(&self) -> &OpStats {
+                self.0.stats()
+            }
+            fn mul_pairs(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext> {
+                self.0.mul_pairs(pairs)
+            }
+        }
+        // Scalar context: defaults are identities everywhere.
+        let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+        let mut rng = ChaChaRng::from_seed(206);
+        let keys = keygen(&ctx, &mut rng);
+        let engine = NoRotate(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+        let ct = ctx.encrypt(&encode_int(42, ctx.d()), &keys.pk, &mut rng);
+        let rot = engine.rotate_rows(&ct, 3).expect("scalar rotation is the identity");
+        assert_eq!(ctx.decrypt(&rot, &keys.sk), ctx.decrypt(&ct, &keys.sk));
+        let sum = engine.slot_sum(&ct).expect("scalar slot_sum is the identity");
+        assert_eq!(ctx.decrypt(&sum, &keys.sk), ctx.decrypt(&ct, &keys.sk));
+        // Packed context, keyless default: identity rotations still
+        // succeed, real ones surface as errors on both the default
+        // impl and a keyless NativeEngine.
+        let pctx = FvContext::new(FvParams::custom_packed(256, 3, 24).unwrap());
+        let mut prng = ChaChaRng::from_seed(207);
+        let pkeys = keygen(&pctx, &mut prng);
+        let prk = Arc::new(pkeys.rk.clone());
+        let vals: Vec<i64> = (0..pctx.d() as i64).collect();
+        let pct = pctx.encrypt(&pctx.encoder().encode_vec(&vals), &pkeys.pk, &mut prng);
+        let keyless = NoRotate(NativeEngine::new(pctx.clone(), prk.clone()));
+        assert!(keyless.rotate_rows(&pct, 0).is_ok(), "zero steps never needs keys");
+        assert!(keyless.rotate_rows(&pct, pctx.d() / 2).is_ok(), "full cycle is the identity");
+        assert!(keyless.rotate_rows(&pct, 3).is_err(), "real rotation needs keys");
+        assert!(keyless.slot_sum(&pct).is_err(), "packed slot_sum needs keys");
+        let native_keyless = NativeEngine::new(pctx.clone(), prk.clone());
+        assert!(native_keyless.rotate_rows(&pct, 3).is_err());
+        assert!(native_keyless.slot_sum(&pct).is_err());
+        // Keyed native engine: matches the ops-layer rotation bit for
+        // bit and sums every slot.
+        let keyed = NativeEngine::new(pctx.clone(), prk.clone())
+            .with_galois_keys(Arc::new(pkeys.gk.clone()));
+        let rot = keyed.rotate_rows(&pct, 5).expect("keyed rotation");
+        assert_eq!(rot.polys, pctx.rotate_rows(&pct, 5, &pkeys.gk).polys);
+        let summed = keyed.slot_sum(&pct).expect("keyed slot_sum");
+        let total: i128 = vals.iter().map(|&v| v as i128).sum();
+        let got = pctx.encoder().decode_vec(&pctx.decrypt(&summed, &pkeys.sk), pctx.d());
+        assert!(got.iter().all(|v| v.to_i128() == Some(total)));
     }
 
     #[test]

@@ -6,16 +6,18 @@
 use std::sync::Arc;
 
 use els::data::{mood, synth};
-use els::els::encrypted::{decrypt_coefficients, fit, fit_cd, Accel, FitConfig};
+use els::els::encrypted::{decrypt_coefficients, fit, fit_cd, fit_packed, Accel, FitConfig};
 use els::els::exact::{self, QuantisedData};
 use els::els::float_ref::{self, linf};
-use els::els::model::{encrypt_dataset, quantise_ridge_augmented};
+use els::els::model::{encrypt_dataset, encrypt_dataset_packed, quantise_ridge_augmented};
 use els::els::predict;
 use els::els::scaling::ratio_f64;
 use els::els::stepsize::nu_optimal;
 use els::fhe::keys::keygen;
 use els::fhe::noise::noise_budget_bits;
-use els::fhe::params::{plan, Algo, MulBackend, PlanRequest, SecurityProfile};
+use els::fhe::params::{
+    plan, Algo, Encoding, FvParams, MulBackend, PlanRequest, SecurityProfile,
+};
 use els::fhe::rng::ChaChaRng;
 use els::fhe::FvContext;
 use els::runtime::backend::{HeEngine, NativeEngine};
@@ -310,6 +312,89 @@ fn random_products_decrypt_equally_across_planner_depths() {
             }
         }
     }
+}
+
+#[test]
+fn packed_fit_matches_unpacked_oracle_across_backends() {
+    // The tentpole acceptance criterion at e2e scope: a packed GD fit
+    // (one slot-wise multiply covers all n observations; the Σ_i folds
+    // are O(log d) rotations) must decrypt to the same coefficients as
+    // the per-value parity oracle (O(n) multiply pipelines), on both
+    // multiply backends, and both must equal the exact simulation.
+    let mut rng = ChaChaRng::from_seed(841);
+    let (x, y) = synth::gaussian_regression(&mut rng, 4, 2, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 1);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let iters = 2usize;
+    let sctx = FvContext::new(plan(&PlanRequest::gd(4, 2, iters, 1, nu)).unwrap());
+    let skeys = keygen(&sctx, &mut rng);
+    let pctx = FvContext::new(FvParams::custom_packed(256, 14, 44).unwrap());
+    let pkeys = keygen(&pctx, &mut rng);
+    let sdata = encrypt_dataset(&sctx, &skeys.pk, &q, &mut rng);
+    let pdata = encrypt_dataset_packed(&pctx, &pkeys.pk, &q, &mut rng).unwrap();
+    let expect = exact::gd_exact(&q, nu, iters).decode_last();
+    let p = q.p() as u64;
+    for backend in [MulBackend::FullRns, MulBackend::ExactBigint] {
+        let oracle =
+            NativeEngine::with_backend(sctx.clone(), Arc::new(skeys.rk.clone()), backend);
+        let packed =
+            NativeEngine::with_backend(pctx.clone(), Arc::new(pkeys.rk.clone()), backend)
+                .with_galois_keys(Arc::new(pkeys.gk.clone()));
+        let (rel0, rot0) = (pctx.ring_q.relin_count(), pctx.ring_q.rotation_count());
+        let pf = fit_packed(&packed, &pdata, &FitConfig::gd(iters, nu)).unwrap();
+        // Multiply-pipeline budget, n-free: iteration 1 has no live β̃
+        // (p gradient products), every later iteration adds the fused
+        // residual group (p+1) — versus the oracle's n+p per iteration.
+        let expect_relins = iters as u64 * p + (iters as u64 - 1);
+        assert_eq!(pctx.ring_q.relin_count() - rel0, expect_relins, "{backend:?}");
+        let log_rot = (pctx.d() / 2).trailing_zeros() as u64 + 1;
+        assert_eq!(
+            pctx.ring_q.rotation_count() - rot0,
+            iters as u64 * p * log_rot,
+            "{backend:?}: O(log d) rotations per gradient coordinate"
+        );
+        let sf = fit(&oracle, &sdata, &FitConfig::gd(iters, nu));
+        let dec_s = decrypt_coefficients(&sctx, &skeys.sk, &sf);
+        let dec_p = decrypt_coefficients(&pctx, &pkeys.sk, &pf);
+        assert!(linf(&dec_s, &expect) < 1e-9, "{backend:?}: oracle vs exact");
+        assert!(linf(&dec_p, &expect) < 1e-9, "{backend:?}: packed vs exact");
+        assert!(linf(&dec_p, &dec_s) < 1e-12, "{backend:?}: packed vs oracle");
+    }
+}
+
+#[test]
+fn fit_honours_els_encoding_env() {
+    // CI runs a tier-1 leg under ELS_ENCODING=packed; this test routes
+    // through Encoding::from_env() the way production entry points do,
+    // so that leg actually exercises the packed pipeline end to end.
+    let mut rng = ChaChaRng::from_seed(842);
+    let (x, y) = synth::gaussian_regression(&mut rng, 4, 2, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 1);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let expect = exact::gd_exact(&q, nu, 2).decode_last();
+    let dec = match Encoding::from_env() {
+        Encoding::Scalar => {
+            let ctx = FvContext::new(plan(&PlanRequest::gd(4, 2, 2, 1, nu)).unwrap());
+            let keys = keygen(&ctx, &mut rng);
+            let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+            let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+            let f = fit(&engine, &data, &FitConfig::gd(2, nu));
+            decrypt_coefficients(&ctx, &keys.sk, &f)
+        }
+        Encoding::Packed => {
+            let ctx = FvContext::new(FvParams::custom_packed(256, 14, 44).unwrap());
+            assert_eq!(ctx.params.encoding, Encoding::Packed);
+            let keys = keygen(&ctx, &mut rng);
+            let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()))
+                .with_galois_keys(Arc::new(keys.gk.clone()));
+            let data = encrypt_dataset_packed(&ctx, &keys.pk, &q, &mut rng).unwrap();
+            let f = fit_packed(&engine, &data, &FitConfig::gd(2, nu)).unwrap();
+            decrypt_coefficients(&ctx, &keys.sk, &f)
+        }
+    };
+    assert!(linf(&dec, &expect) < 1e-9);
 }
 
 #[test]
