@@ -47,6 +47,21 @@ ELS_POOL_WORKERS=1 cargo test -q
 note "tier-1 (packed encoding): ELS_ENCODING=packed cargo test -q"
 ELS_ENCODING=packed cargo test -q
 
+# Flight-recorder smoke leg: one end-to-end encrypted fit with the
+# tracer armed, then structural + phase-coverage validation of the
+# emitted Chrome trace. The required set is backend-agnostic (the RNS
+# conversion phases only appear under the full-RNS backend).
+if command -v python3 >/dev/null 2>&1; then
+    note "ELS_TRACE smoke: els selftest + trace_check.py"
+    trace_file="$(mktemp -t els-trace-XXXXXX.json)"
+    ELS_TRACE="$trace_file" ./target/release/els selftest
+    python3 python/tools/trace_check.py "$trace_file" \
+        --require ntt_forward,ntt_inverse,scale_round,relinearise,descent_iteration
+    rm -f "$trace_file"
+else
+    note "SKIPPED: python3 not installed — ELS_TRACE smoke leg not run"
+fi
+
 note "cargo bench (toy profile; must not panic)"
 # fhe_ops overwrites BENCH_fhe_ops.json — stash the committed baseline
 # for the regression gate below.

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Validate an `ELS_TRACE` Chrome trace-event JSON document.
+
+Dependency-free (stdlib only), mirroring the discipline of the Rust
+side's zero-dep telemetry. Checks structural well-formedness (the
+subset of the Chrome trace-event format the recorder emits: complete
+"X" events with name/cat/ts/dur/pid/tid) and, with `--require`, phase
+coverage — the CI smoke leg asserts that one encrypted fit actually
+exercised the multiply pipeline end to end.
+
+Usage:
+    trace_check.py TRACE.json [--require phase1,phase2,...]
+
+Exit code 0 on success; 1 with a diagnostic on the first violation.
+"""
+
+import argparse
+import json
+import sys
+
+# Phase names emitted by rust/src/util/telemetry.rs (Phase::name).
+KNOWN_PHASES = {
+    "ntt_forward",
+    "ntt_inverse",
+    "base_extend",
+    "scale_round",
+    "shenoy_convert",
+    "relinearise",
+    "galois_keyswitch",
+    "pool_worker",
+    "descent_iteration",
+    "job_admit",
+    "job_queue",
+    "job_execute",
+    "batch_dispatch",
+    "serve_reply",
+}
+
+KNOWN_CATEGORIES = {"ring", "mul", "pool", "els", "coordinator"}
+
+
+def fail(msg):
+    print(f"trace_check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_event(i, ev):
+    if not isinstance(ev, dict):
+        fail(f"event {i}: not an object")
+    name = ev.get("name")
+    if name not in KNOWN_PHASES:
+        fail(f"event {i}: unknown phase name {name!r}")
+    if ev.get("cat") not in KNOWN_CATEGORIES:
+        fail(f"event {i}: unknown category {ev.get('cat')!r}")
+    if ev.get("ph") != "X":
+        fail(f"event {i}: ph must be 'X' (complete event), got {ev.get('ph')!r}")
+    for key in ("ts", "dur", "pid", "tid"):
+        v = ev.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            fail(f"event {i}: {key} must be numeric, got {v!r}")
+    if ev["dur"] < 0:
+        fail(f"event {i}: negative duration {ev['dur']}")
+    if ev["ts"] < 0:
+        fail(f"event {i}: negative timestamp {ev['ts']}")
+    return name
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="path to the trace JSON")
+    ap.add_argument(
+        "--require",
+        default="",
+        help="comma-separated phase names that must appear at least once",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot load {args.trace}: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty list")
+
+    seen = {}
+    for i, ev in enumerate(events):
+        name = check_event(i, ev)
+        seen[name] = seen.get(name, 0) + 1
+
+    required = [p for p in args.require.split(",") if p]
+    for phase in required:
+        if phase not in KNOWN_PHASES:
+            fail(f"--require names unknown phase {phase!r}")
+        if phase not in seen:
+            fail(f"required phase {phase!r} never appears in the trace")
+
+    other = doc.get("otherData", {})
+    recorded = other.get("recorded")
+    if recorded is not None and recorded < len(events):
+        fail(f"otherData.recorded={recorded} < {len(events)} events present")
+
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(seen.items()))
+    print(f"trace_check: OK: {len(events)} events ({summary})")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 
 use crate::fhe::{Ciphertext, FvContext, Plaintext, PlaintextNtt};
 use crate::runtime::backend::{HeEngine, OpStats};
+use crate::util::telemetry::{self, Phase};
 
 struct WorkItem {
     /// Inner-product groups (singletons for plain products); the reply
@@ -143,7 +144,10 @@ fn dispatcher(inner: Arc<dyn HeEngine>, rx: Receiver<WorkItem>, cfg: BatchConfig
             .collect();
         let all_groups: Vec<&[(&Ciphertext, &Ciphertext)]> =
             group_refs.iter().map(|g| g.as_slice()).collect();
-        let mut results = inner.dot_pairs(&all_groups).into_iter();
+        let mut results = {
+            let _span = telemetry::span(Phase::BatchDispatch);
+            inner.dot_pairs(&all_groups).into_iter()
+        };
         for item in &items {
             let n = item.groups.len();
             let out: Vec<Ciphertext> = results.by_ref().take(n).collect();

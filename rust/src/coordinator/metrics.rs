@@ -3,7 +3,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Log-spaced latency buckets (upper bounds, ms).
+use crate::util::json::Json;
+
+/// Log-spaced latency buckets (upper bounds, ms). Observations above
+/// the last bound land in a 13th overflow bucket.
 const BUCKET_MS: [u64; 12] = [1, 2, 5, 10, 25, 50, 100, 250, 500, 1000, 5000, 30000];
 
 /// Latency histogram (lock-free).
@@ -35,7 +38,11 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / 1000.0 / c as f64
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound).
+    /// Approximate quantile from bucket boundaries. Buckets `0..12`
+    /// report their upper bound; the overflow bucket reports its
+    /// *lower* bound (the last finite boundary) — the histogram only
+    /// knows the observation exceeded it, so any larger value would be
+    /// an invented precision.
     pub fn quantile_ms(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -46,10 +53,41 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return *BUCKET_MS.get(i).unwrap_or(&60000) as f64;
+                return *BUCKET_MS.get(i).unwrap_or(BUCKET_MS.last().unwrap()) as f64;
             }
         }
-        60000.0
+        *BUCKET_MS.last().unwrap() as f64
+    }
+
+    /// The finite bucket boundaries (upper bounds, ms); the implicit
+    /// 13th bucket collects everything above the last entry.
+    pub fn bucket_bounds_ms() -> &'static [u64] {
+        &BUCKET_MS
+    }
+
+    /// Per-bucket observation counts (12 bounded buckets + overflow).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Self-describing JSON export: boundaries ride along with the
+    /// counts so consumers never have to hard-code the bucket layout.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "bounds_ms",
+                Json::Arr(BUCKET_MS.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            (
+                "counts",
+                Json::Arr(self.bucket_counts().into_iter().map(|c| Json::Num(c as f64)).collect()),
+            ),
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_ms", Json::Num(self.mean_ms())),
+            ("p50_ms", Json::Num(self.quantile_ms(0.5))),
+            ("p95_ms", Json::Num(self.quantile_ms(0.95))),
+            ("p99_ms", Json::Num(self.quantile_ms(0.99))),
+        ])
     }
 }
 
@@ -100,5 +138,41 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.mean_ms(), 0.0);
         assert_eq!(h.quantile_ms(0.9), 0.0);
+    }
+
+    #[test]
+    fn overflow_bucket_reports_its_lower_bound() {
+        // Observations past the last finite bound must report that
+        // bound (the overflow bucket's lower edge), not an invented
+        // larger number.
+        let h = Histogram::default();
+        h.observe(Duration::from_millis(45_000));
+        h.observe(Duration::from_millis(120_000));
+        let last = *Histogram::bucket_bounds_ms().last().unwrap() as f64;
+        assert_eq!(h.quantile_ms(0.5), last);
+        assert_eq!(h.quantile_ms(1.0), last);
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), Histogram::bucket_bounds_ms().len() + 1);
+        assert_eq!(*counts.last().unwrap(), 2);
+    }
+
+    #[test]
+    fn histogram_json_is_self_describing() {
+        let h = Histogram::default();
+        h.observe(Duration::from_millis(3));
+        h.observe(Duration::from_millis(700));
+        let j = h.to_json();
+        let s = j.to_string_json();
+        let back = Json::parse(&s).expect("histogram JSON must reparse");
+        let bounds = match back.get("bounds_ms") {
+            Some(Json::Arr(a)) => a.len(),
+            _ => panic!("missing bounds_ms"),
+        };
+        let counts = match back.get("counts") {
+            Some(Json::Arr(a)) => a.len(),
+            _ => panic!("missing counts"),
+        };
+        assert_eq!(counts, bounds + 1, "counts carry the overflow bucket");
+        assert_eq!(back.get("count").and_then(Json::as_f64), Some(2.0));
     }
 }

@@ -11,6 +11,7 @@ use crate::util::error::{anyhow, Result};
 
 use crate::els::encrypted::{self, EncryptedFit};
 use crate::runtime::backend::HeEngine;
+use crate::util::telemetry::{self, Phase};
 
 use super::admission::{admit, AdmissionRequest};
 use super::job::{Job, JobId, JobSpec, JobState};
@@ -80,7 +81,11 @@ impl Coordinator {
             accel: spec.cfg.accel,
             cd_updates: spec.cd_updates,
         };
-        if let Err(e) = admit(&self.engine.ctx().params, &req) {
+        let admitted = {
+            let _span = telemetry::span(Phase::JobAdmit);
+            admit(&self.engine.ctx().params, &req)
+        };
+        if let Err(e) = admitted {
             self.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow!(e));
         }
@@ -95,7 +100,11 @@ impl Coordinator {
     }
 
     fn run_job(self: &Arc<Self>, id: JobId, spec: JobSpec) {
-        self.sem.acquire();
+        {
+            // Time spent waiting on the concurrency semaphore = queueing.
+            let _queued = telemetry::span(Phase::JobQueue);
+            self.sem.acquire();
+        }
         {
             let mut jobs = self.jobs.lock().unwrap();
             if let Some(j) = jobs.get_mut(&id) {
@@ -103,6 +112,7 @@ impl Coordinator {
             }
         }
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _span = telemetry::span(Phase::JobExecute);
             match spec.cd_updates {
                 Some(updates) => {
                     encrypted::fit_cd(self.engine.as_ref(), &spec.data, spec.cfg.nu, updates)

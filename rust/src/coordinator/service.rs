@@ -4,7 +4,10 @@
 //! - `{"type":"submit","data":{...},"cfg":{...}}` → `{"ok":true,"id":N}`
 //! - `{"type":"status","id":N}` → `{"ok":true,"state":"running"}`
 //! - `{"type":"result","id":N}` → `{"ok":true,"fit":{...}}` (waits)
-//! - `{"type":"metrics"}` → `{"ok":true,"summary":"...","stats":{...}}`
+//! - `{"type":"metrics"}` → `{"ok":true,"summary":"...","stats":{...},
+//!   "snapshot":{...}}` — `snapshot` is the unified
+//!   [`MetricsSnapshot`](crate::util::telemetry::MetricsSnapshot)
+//!   document (schema `els-metrics-v1`)
 //! - `{"type":"ping"}` → `{"ok":true}`
 
 use std::io::{BufRead, BufReader, Write};
@@ -21,6 +24,7 @@ use crate::coordinator::scheduler::Coordinator;
 use crate::els::encrypted::EncryptedFit;
 use crate::els::model::EncryptedDataset;
 use crate::util::json::Json;
+use crate::util::telemetry::{self, MetricsSnapshot, Phase};
 
 /// Running server handle.
 pub struct Server {
@@ -83,6 +87,8 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client closed
         }
+        // One span per request: handling + reply serialisation.
+        let _span = telemetry::span(Phase::ServeReply);
         let response = match handle_request(&coord, line.trim()) {
             Ok(j) => j,
             Err(e) => Json::obj(vec![
@@ -127,6 +133,8 @@ fn handle_request(coord: &Arc<Coordinator>, line: &str) -> Result<Json> {
         }
         "metrics" => {
             let (muls, plains, adds, batches) = coord.engine().stats().snapshot();
+            let snapshot = MetricsSnapshot::capture(coord.engine().ctx(), coord.engine().stats())
+                .with_coordinator(&coord.metrics);
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("summary", Json::str(&coord.metrics.summary())),
@@ -139,6 +147,7 @@ fn handle_request(coord: &Arc<Coordinator>, line: &str) -> Result<Json> {
                         ("batches", Json::Num(batches as f64)),
                     ]),
                 ),
+                ("snapshot", snapshot.to_json()),
             ]))
         }
         other => Err(anyhow!("unknown request type '{other}'")),
@@ -212,5 +221,13 @@ impl Client {
     pub fn metrics(&mut self) -> Result<String> {
         let resp = self.call(Json::obj(vec![("type", Json::str("metrics"))]))?;
         Ok(resp.req("summary")?.as_str().context("summary")?.to_string())
+    }
+
+    /// Fetch the server's unified [`MetricsSnapshot`] JSON document
+    /// (schema `els-metrics-v1`) — the machine-readable counterpart of
+    /// [`metrics`](Self::metrics).
+    pub fn metrics_snapshot(&mut self) -> Result<Json> {
+        let resp = self.call(Json::obj(vec![("type", Json::str("metrics"))]))?;
+        Ok(resp.req("snapshot")?.clone())
     }
 }

@@ -25,6 +25,7 @@ use crate::fhe::{Ciphertext, FvContext, PlaintextNtt, SecretKey};
 use crate::math::bigint::BigUint;
 use crate::runtime::backend::HeEngine;
 use crate::util::error::Result;
+use crate::util::telemetry::{self, MetricsSnapshot, Phase};
 
 use super::mmd;
 use super::model::{EncryptedDataset, PackedDataset};
@@ -143,6 +144,23 @@ pub fn fit(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> E
     }
 }
 
+/// [`fit`] plus its **op budget report**: the unified
+/// [`MetricsSnapshot`] diff of everything this fit consumed (ring
+/// transforms/relins/scale-rounds/rotations, engine ct/plain muls).
+/// The diff is per-fit even on a shared engine as long as no other
+/// work runs concurrently; the `pool`/`trace` sections are
+/// process-global and only meaningful for a quiet process.
+pub fn fit_reported(
+    engine: &dyn HeEngine,
+    data: &EncryptedDataset,
+    cfg: &FitConfig,
+) -> (EncryptedFit, MetricsSnapshot) {
+    let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    let fit = fit(engine, data, cfg);
+    let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    (fit, after.diff(&before))
+}
+
 /// A rescaling constant as a slot-broadcast plaintext, NTT-cached.
 /// Packed constants live in the *value* domain: the encoder reduces
 /// them mod `t`, which is exact as long as every true intermediate
@@ -200,6 +218,19 @@ pub fn fit_packed(
     }
 }
 
+/// [`fit_packed`] plus its op budget report — the packed counterpart
+/// of [`fit_reported`].
+pub fn fit_packed_reported(
+    engine: &dyn HeEngine,
+    data: &PackedDataset,
+    cfg: &FitConfig,
+) -> Result<(EncryptedFit, MetricsSnapshot)> {
+    let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    let fit = fit_packed(engine, data, cfg)?;
+    let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    Ok((fit, after.diff(&before)))
+}
+
 fn fit_gd_packed(
     engine: &dyn HeEngine,
     data: &PackedDataset,
@@ -213,6 +244,7 @@ fn fit_gd_packed(
     let mut beta: Vec<Ciphertext> = Vec::new();
     let mut path: Vec<Vec<Ciphertext>> = Vec::new();
     for k in 1..=cfg.iters {
+        let _iter = telemetry::span(Phase::DescentIteration);
         let g = gradient_step_packed(engine, data, &beta, &s.c_y(k))?;
         beta = if beta.is_empty() {
             g
@@ -266,6 +298,7 @@ fn fit_nag_packed(
     let mut s_prev: Vec<Ciphertext> = vec![zero_ct(ctx); p];
     let mut path: Vec<Vec<Ciphertext>> = Vec::new();
     for k in 1..=cfg.iters {
+        let _iter = telemetry::span(Phase::DescentIteration);
         let g = gradient_step_packed(engine, data, &beta, &s.c_y(k))?;
         let s_cur: Vec<Ciphertext> = if beta.is_empty() {
             g
@@ -314,6 +347,7 @@ fn fit_gd(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> En
     // the whole fit (P multiplies per iteration, K iterations).
     let cc_pt = engine.prepare_plaintext(&encode_biguint(&s.c_carry(), ctx.d()));
     for k in 1..=cfg.iters {
+        let _iter = telemetry::span(Phase::DescentIteration);
         let g = gradient_step(engine, data, &beta, &s.c_y(k));
         beta = if beta.is_empty() {
             g
@@ -366,6 +400,7 @@ fn fit_nag(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> E
     let mut s_prev: Vec<Ciphertext> = vec![zero_ct(ctx); p];
     let mut path: Vec<Vec<Ciphertext>> = Vec::new();
     for k in 1..=cfg.iters {
+        let _iter = telemetry::span(Phase::DescentIteration);
         let g = gradient_step(engine, data, &beta, &s.c_y(k));
         // s̃^[k] = c_carry·β̃^[k−1] + g
         let s_cur: Vec<Ciphertext> = if beta.is_empty() {
@@ -428,6 +463,7 @@ pub fn fit_cd(
     let mut beta: Vec<Option<Ciphertext>> = vec![None; p];
     let mut r: Vec<Ciphertext> = data.y.to_vec();
     for u in 1..=updates {
+        let _iter = telemetry::span(Phase::DescentIteration);
         let j = (u - 1) % p;
         // ĝ_j = Σ_i X̃_ij·r̃_i — one fused group (one relinearisation
         // per coordinate update instead of N).
@@ -733,6 +769,59 @@ mod tests {
         let expect = exact::nag_exact(&s.q, s.nu, 2).decode_last();
         assert!(linf(&dec, &expect) < 1e-9);
         assert_eq!(fit.paper_mmd, 6); // 3K
+    }
+
+    #[test]
+    fn packed_fit_trace_is_well_formed_and_phase_complete() {
+        // The acceptance-criteria trace: one packed GD fit must emit
+        // every phase its pipeline is built from. Programmatic capture
+        // (never the ELS_TRACE env var — tests must not mutate the
+        // process environment) serialised against the other telemetry
+        // tests by the session lock inside `Capture`.
+        use crate::fhe::params::MulBackend;
+        use crate::util::telemetry::{Capture, Phase};
+        let s = setup_packed(317, 4, 2);
+        let cap = Capture::begin();
+        let fit = fit_packed(&s.engine, &s.data, &FitConfig::gd(2, s.nu)).unwrap();
+        let trace = cap.finish();
+        assert_eq!(fit.betas.len(), 2);
+        assert_eq!(trace.phase_count(Phase::DescentIteration), 2, "one span per iteration");
+        for phase in [
+            Phase::NttForward,
+            Phase::NttInverse,
+            Phase::ScaleRound,
+            Phase::Relinearise,
+            Phase::GaloisKeySwitch,
+        ] {
+            assert!(trace.phase_count(phase) > 0, "missing phase {}", phase.name());
+        }
+        // The RNS-only conversion phases appear iff that backend ran.
+        let rns = s.ctx.params.mul_backend == MulBackend::FullRns;
+        assert_eq!(trace.phase_count(Phase::BaseExtend) > 0, rns);
+        assert_eq!(trace.phase_count(Phase::ShenoyConvert) > 0, rns);
+        // And the export must be a valid Chrome trace document.
+        let json = trace.to_chrome_json().to_string_json();
+        let back = crate::util::json::Json::parse(&json).unwrap();
+        let events = match back.get("traceEvents") {
+            Some(crate::util::json::Json::Arr(a)) => a,
+            _ => panic!("missing traceEvents"),
+        };
+        assert!(!events.is_empty());
+    }
+
+    #[test]
+    fn fit_reported_returns_per_fit_op_budget() {
+        let s = setup(306, 5, 2, 2, Algo::Gd);
+        let (fit, report) = fit_reported(&s.engine, &s.data, &FitConfig::gd(2, s.nu));
+        let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
+        let expect = exact::gd_exact(&s.q, s.nu, 2).decode_last();
+        assert!(linf(&dec, &expect) < 1e-9);
+        // 2 iterations × (n+p) fused pipelines, plus the β-carry and
+        // c_y plain multiplies — the report must show real work.
+        assert!(report.engine.ct_muls > 0, "ct_muls in the budget report");
+        assert!(report.engine.plain_muls > 0, "plain_muls in the budget report");
+        let relins: u64 = report.rings.iter().map(|r| r.relins).sum();
+        assert!(relins >= (s.data.n() + s.data.p()) as u64, "at least one iteration of relins");
     }
 
     #[test]

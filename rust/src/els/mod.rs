@@ -11,6 +11,8 @@
 //! - [`mmd`] — Table-1 multiplicative-depth accounting.
 //! - [`stepsize`] — Lemma-1 / §7 step-size selection.
 //! - [`predict`] / [`inference`] — §4.2 prediction, §4.3 bootstrap SEs.
+//! - [`probe`] — secret-key-side noise-trajectory diagnostics (measured
+//!   budget vs the §4.5 planner floor, per iteration).
 
 pub mod encrypted;
 pub mod exact;
@@ -19,11 +21,14 @@ pub mod inference;
 pub mod mmd;
 pub mod model;
 pub mod predict;
+pub mod probe;
 pub mod scaling;
 pub mod stepsize;
 
 pub use encrypted::{
-    decrypt_coefficients, fit, fit_cd, fit_packed, Accel, EncryptedFit, FitConfig,
+    decrypt_coefficients, fit, fit_cd, fit_packed, fit_packed_reported, fit_reported, Accel,
+    EncryptedFit, FitConfig,
 };
+pub use probe::{noise_trajectory, NoiseTrajectory};
 pub use exact::QuantisedData;
 pub use model::{encrypt_dataset, encrypt_dataset_packed, EncryptedDataset, PackedDataset};

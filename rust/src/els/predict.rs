@@ -6,6 +6,7 @@ use crate::fhe::encoding::Encoder;
 use crate::fhe::{Ciphertext, FvContext, SecretKey};
 use crate::math::bigint::BigUint;
 use crate::runtime::backend::HeEngine;
+use crate::util::telemetry::MetricsSnapshot;
 
 use super::encrypted::EncryptedFit;
 use super::scaling::ratio_f64;
@@ -30,6 +31,20 @@ pub fn predict(
     let groups: Vec<&[(&Ciphertext, &Ciphertext)]> =
         owned.iter().map(|g| g.as_slice()).collect();
     engine.dot_pairs(&groups)
+}
+
+/// [`predict`] plus its op budget report — the prediction counterpart
+/// of [`super::encrypted::fit_reported`]. Same caveat: the diff is
+/// per-call only on a quiet engine.
+pub fn predict_reported(
+    engine: &dyn HeEngine,
+    fit: &EncryptedFit,
+    x_new: &[Vec<Ciphertext>],
+) -> (Vec<Ciphertext>, MetricsSnapshot) {
+    let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    let preds = predict(engine, fit, x_new);
+    let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    (preds, after.diff(&before))
 }
 
 /// Packed prediction: `x_new_cols[j]` packs covariate `j` of all new

@@ -1,0 +1,218 @@
+//! Noise-trajectory probe: measured invariant-noise budget vs the
+//! §4.5 planner's predicted floor, per descent iteration.
+//!
+//! **Trust model**: this is a *diagnostic*, exactly like
+//! [`fhe::noise`](crate::fhe::noise) which it builds on — it holds the
+//! secret key, so it runs on the key holder's side (or in tests),
+//! never inside the evaluating server. It exists to make the paper's
+//! correctness argument *observable*: decryption is exact only while
+//! invariant noise stays under `q/2` (budget > 0), and the planner
+//! sizes `q` so the whole descent stays above a predicted floor. The
+//! probe replays a kept iterate path and records both numbers side by
+//! side, so a planner regression (or an unexpectedly noisy pipeline)
+//! shows up as a crossed trajectory instead of a corrupted decrypt
+//! three PRs later.
+
+use crate::els::encrypted::EncryptedFit;
+use crate::fhe::noise::noise_budget_bits;
+use crate::fhe::params::{per_level_noise_bits, FvParams, PlanRequest};
+use crate::fhe::{FvContext, SecretKey};
+use crate::util::error::{anyhow, Result};
+use crate::util::json::Json;
+
+/// One descent iteration's noise observation.
+#[derive(Clone, Debug)]
+pub struct NoisePoint {
+    /// Iteration number k (1-based).
+    pub iteration: usize,
+    /// Ciphertext-multiplication depth of the deepest iterate at k.
+    pub depth: u32,
+    /// Worst (minimum) measured budget over the iterate's coordinates.
+    pub measured_bits: f64,
+    /// The planner's predicted budget floor at this depth.
+    pub predicted_floor_bits: f64,
+}
+
+/// A fit's full noise trajectory.
+#[derive(Clone, Debug)]
+pub struct NoiseTrajectory {
+    pub points: Vec<NoisePoint>,
+    /// `log2(q)` context the budgets are relative to.
+    pub q_bits: usize,
+}
+
+/// The §4.5 planner's predicted budget floor for a ciphertext at
+/// multiplication depth `depth`, mirrored from [`plan`]'s noise model:
+/// a fresh encryption spends `t_bits + log2(d) + σ_bits + 7` bits, and
+/// every multiplication level spends
+/// [`per_level_noise_bits`] more. Conservative by construction — the
+/// planner additionally reserves a 40-bit safety margin, so measured
+/// budgets should sit well above this line.
+///
+/// [`plan`]: crate::fhe::params::plan
+pub fn predicted_floor_bits(params: &FvParams, req: &PlanRequest, depth: u32) -> f64 {
+    let growth = req.growth();
+    let t_bits = params.t.bit_len();
+    let log_d = params.d.trailing_zeros() as usize;
+    let sigma_bits = 2; // σ ≈ 3.2, as in the planner
+    let const_bits = 64 - (growth.max_const_l1.max(1) - 1).leading_zeros() as usize;
+    let fresh_bits = t_bits + log_d + sigma_bits + 7;
+    let per_level = per_level_noise_bits(t_bits, params.d, const_bits);
+    let q_bits = params.q_bits();
+    q_bits as f64 - 1.0 - fresh_bits as f64 - depth as f64 * per_level as f64
+}
+
+/// Replay a kept iterate path and measure the worst per-coordinate
+/// invariant-noise budget at every iteration, against the planner's
+/// predicted floor for the iterate's recorded depth. Requires a fit
+/// run with `keep_path` (or VWT); `req` must be the plan request the
+/// context was built from.
+pub fn noise_trajectory(
+    ctx: &FvContext,
+    sk: &SecretKey,
+    fit: &EncryptedFit,
+    req: &PlanRequest,
+) -> Result<NoiseTrajectory> {
+    let path = fit
+        .path
+        .as_ref()
+        .ok_or_else(|| anyhow!("noise_trajectory needs a fit with keep_path = true"))?;
+    let points = path
+        .iter()
+        .enumerate()
+        .map(|(i, betas)| {
+            let depth = betas.iter().map(|b| b.ct_depth).max().unwrap_or(0);
+            let measured = betas
+                .iter()
+                .map(|b| noise_budget_bits(ctx, b, sk))
+                .fold(f64::INFINITY, f64::min);
+            NoisePoint {
+                iteration: i + 1,
+                depth,
+                measured_bits: measured,
+                predicted_floor_bits: predicted_floor_bits(&ctx.params, req, depth),
+            }
+        })
+        .collect();
+    Ok(NoiseTrajectory { points, q_bits: ctx.q.bit_len() })
+}
+
+impl NoiseTrajectory {
+    /// Does every iteration's measured budget sit on or above the
+    /// planner's floor? (The planner-conservativeness invariant.)
+    pub fn is_conservative(&self) -> bool {
+        self.points.iter().all(|p| p.measured_bits >= p.predicted_floor_bits)
+    }
+
+    /// Deterministic JSON export (schema `els-noise-trajectory-v1`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("els-noise-trajectory-v1")),
+            ("q_bits", Json::Num(self.q_bits as f64)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("iteration", Json::Num(p.iteration as f64)),
+                                ("depth", Json::Num(p.depth as f64)),
+                                ("measured_bits", Json::Num(p.measured_bits)),
+                                (
+                                    "predicted_floor_bits",
+                                    Json::Num(p.predicted_floor_bits),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::data::synth;
+    use crate::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+    use crate::els::exact::{self, QuantisedData};
+    use crate::els::float_ref::linf;
+    use crate::els::model::encrypt_dataset;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::plan;
+    use crate::fhe::rng::ChaChaRng;
+    use crate::fhe::FvContext;
+    use crate::runtime::backend::NativeEngine;
+
+    #[test]
+    fn planner_floor_is_conservative_along_a_gd_trajectory() {
+        // The acceptance-criteria invariant: at every iteration of a
+        // planned GD fit, the measured budget must not fall below the
+        // §4.5 predicted floor (the planner carries a 40-bit margin on
+        // top of the floor, so a crossing means the noise model broke).
+        let mut rng = ChaChaRng::from_seed(701);
+        let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let nu = crate::els::stepsize::nu_optimal(&xq);
+        let req = PlanRequest::gd(6, 2, 3, 2, nu);
+        let params = plan(&req).unwrap();
+        let ctx = FvContext::new(params);
+        let keys = keygen(&ctx, &mut rng);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+        let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        let mut cfg = FitConfig::gd(3, nu);
+        cfg.keep_path = true;
+        let f = fit(&engine, &data, &cfg);
+        // The probed fit must still decrypt correctly.
+        let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
+        let expect = exact::gd_exact(&q, nu, 3).decode_last();
+        assert!(linf(&dec, &expect) < 1e-9);
+
+        let traj = noise_trajectory(&ctx, &keys.sk, &f, &req).unwrap();
+        assert_eq!(traj.points.len(), 3, "one point per iteration");
+        for p in &traj.points {
+            assert!(
+                p.measured_bits >= p.predicted_floor_bits,
+                "iteration {} (depth {}): measured {:.1} < floor {:.1}",
+                p.iteration,
+                p.depth,
+                p.measured_bits,
+                p.predicted_floor_bits
+            );
+            assert!(p.measured_bits > 0.0, "budget exhausted at iteration {}", p.iteration);
+        }
+        assert!(traj.is_conservative());
+        // Depth (and hence the floor) moves monotonically down-path.
+        for w in traj.points.windows(2) {
+            assert!(w[1].depth >= w[0].depth);
+            assert!(w[1].predicted_floor_bits <= w[0].predicted_floor_bits);
+        }
+        // And the export reparses with the advertised schema.
+        let back = Json::parse(&traj.to_json().to_string_json()).unwrap();
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some("els-noise-trajectory-v1"));
+        assert_eq!(back.get("points").and_then(|p| p.idx(0)).is_some(), true);
+    }
+
+    #[test]
+    fn trajectory_requires_a_kept_path() {
+        let mut rng = ChaChaRng::from_seed(702);
+        let (x, y) = synth::gaussian_regression(&mut rng, 4, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let nu = crate::els::stepsize::nu_optimal(&xq);
+        let req = PlanRequest::gd(4, 2, 1, 2, nu);
+        let params = plan(&req).unwrap();
+        let ctx = FvContext::new(params);
+        let keys = keygen(&ctx, &mut rng);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+        let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        let f = fit(&engine, &data, &FitConfig::gd(1, nu)); // keep_path = false
+        let err = noise_trajectory(&ctx, &keys.sk, &f, &req).unwrap_err();
+        assert!(err.to_string().contains("keep_path"), "{err}");
+    }
+}

@@ -1,6 +1,13 @@
 //! Exact noise measurement (requires the secret key; test/diagnostic
 //! tool and the empirical validator for the §4.5 parameter planner).
 //!
+//! **Trust caveat**: everything here decrypts, so it runs only where
+//! the secret key legitimately lives — the data holder's side, or
+//! tests. The per-iteration trajectory built on top of this module
+//! ([`els::probe`](crate::els::probe), measured budget vs the planner's
+//! predicted floor) inherits exactly the same trust model: it is a
+//! diagnostic observer, never part of the evaluating server.
+//!
 //! Uses the *invariant noise* convention: for phase
 //! `v = [c₀ + c₁s]_q = Δm + e`, the quantity `[t·v]_q` equals
 //! `t·e − (q mod t)·m`, whose ∞-norm must stay below `q/2` for correct

@@ -11,6 +11,7 @@
 //! per coefficient for the whole digit sum.
 
 use crate::math::poly::{Rep, RnsPoly};
+use crate::util::telemetry::{self, Phase};
 
 use super::ciphertext::Ciphertext;
 use super::context::FvContext;
@@ -205,6 +206,7 @@ impl FvContext {
         big.ntt_inverse(&mut c1);
         big.ntt_inverse(&mut c2);
         // Scale each by t/q with exact rounding, back in the Q basis.
+        let _span = telemetry::span(Phase::ScaleRound);
         let polys = vec![
             self.scale_round_to_q(&c0),
             self.scale_round_to_q(&c1),
@@ -293,6 +295,7 @@ impl FvContext {
             big.acc_mul_ntt(&mut accs[1], &a1, &b0);
             big.acc_mul_ntt(&mut accs[2], &a1, &b1);
         }
+        let _span = telemetry::span(Phase::ScaleRound);
         let polys = accs
             .iter()
             .map(|acc| {
@@ -361,6 +364,7 @@ impl FvContext {
     /// immediately consumable by the pointwise ops that follow it in
     /// the descent loops).
     pub fn relinearize(&self, ct: &Ciphertext, rk: &RelinKey) -> Ciphertext {
+        let _span = telemetry::span(Phase::Relinearise);
         assert_eq!(ct.len(), 3, "nothing to relinearise");
         let ring = &self.ring_q;
         ring.note_relin();
@@ -393,6 +397,7 @@ impl FvContext {
     /// Rotation costs no ciphertext-depth level; noise grows
     /// additively like a relinearisation.
     pub fn apply_galois(&self, ct: &Ciphertext, gk: &GaloisKey) -> Ciphertext {
+        let _span = telemetry::span(Phase::GaloisKeySwitch);
         assert_eq!(ct.len(), 2, "rotate a relinearised (2-component) ciphertext");
         let ring = &self.ring_q;
         ring.note_rotation();

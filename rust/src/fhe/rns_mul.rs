@@ -29,6 +29,7 @@ use crate::math::baseconv::{BaseConverter, ShenoyConverter};
 use crate::math::bigint::BigUint;
 use crate::math::modarith::{invmod_prime, submod, ShoupConstant};
 use crate::math::poly::{NttAccumulator, Rep, RingContext, RnsPoly};
+use crate::util::telemetry::{self, Phase};
 
 use super::ciphertext::Ciphertext;
 use super::context::FvContext;
@@ -172,6 +173,7 @@ impl FvContext {
     /// [`q_to_ext`](Self::q_to_ext) with the per-coefficient conversion
     /// fanned across up to `workers` threads.
     pub fn q_to_ext_workers(&self, poly: &RnsPoly, workers: usize) -> RnsPoly {
+        let _span = telemetry::span(Phase::BaseExtend);
         assert_eq!(poly.rep, Rep::Coeff);
         let mut out = self.ring_ext.zero();
         self.rns.fwd.convert_signed_workers(&poly.planes, &mut out.planes, workers);
@@ -195,6 +197,7 @@ impl FvContext {
         scratch: &mut MulScratch,
         workers: usize,
     ) -> RnsPoly {
+        let _span = telemetry::span(Phase::ScaleRound);
         assert_eq!(c_q.rep, Rep::Coeff);
         assert_eq!(c_ext.rep, Rep::Coeff);
         scratch.ensure(self);
@@ -224,12 +227,15 @@ impl FvContext {
         // Exact Shenoy–Kumaresan conversion back to Q.
         let lb = re.nlimbs() - 1;
         let mut out = rq.zero();
-        self.rns.back.convert_workers(
-            &scratch.r_ext[..lb],
-            &scratch.r_ext[lb],
-            &mut out.planes,
-            workers,
-        );
+        {
+            let _shenoy = telemetry::span(Phase::ShenoyConvert);
+            self.rns.back.convert_workers(
+                &scratch.r_ext[..lb],
+                &scratch.r_ext[lb],
+                &mut out.planes,
+                workers,
+            );
+        }
         out
     }
 

@@ -8,7 +8,11 @@
 //! els client   --keys keys.json --addr HOST:PORT [--n 8 --p 2 --iters 2] [--accel vwt]
 //! els figures  (--all | --id fig4) [--out results]
 //! els selftest [--xla artifacts] [--backend rns|bigint]
+//! els metrics  [--addr HOST:PORT] [--backend rns|bigint]
 //! ```
+//!
+//! Set `ELS_TRACE=<path>` on any command to record a Chrome trace-event
+//! JSON of the run (see README § Observability).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -42,6 +46,8 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // ELS_TRACE=<path> arms the flight recorder for the whole run.
+    els::util::telemetry::init_from_env();
     let result = match args.command.as_deref() {
         Some("params") => cmd_params(&args),
         Some("keygen") => cmd_keygen(&args),
@@ -49,12 +55,17 @@ fn main() {
         Some("client") => cmd_client(&args),
         Some("figures") => cmd_figures(&args),
         Some("selftest") => cmd_selftest(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some(other) => Err(anyhow!("unknown command '{other}'")),
+        None if args.flag("metrics") => cmd_metrics(&args),
         None => {
             eprintln!("{USAGE}");
             return;
         }
     };
+    if let Some(path) = els::util::telemetry::finish_env_trace() {
+        eprintln!("[els] wrote trace {path}");
+    }
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -70,7 +81,10 @@ commands:
   client    submit an encrypted job (synthetic demo data)
   figures   regenerate the paper's tables and figures as CSV
   selftest  end-to-end encrypted fit on this machine
+  metrics   print a unified MetricsSnapshot JSON (also: els --metrics);
+            with --addr, fetch the live snapshot from a server
 
+env: ELS_TRACE=<path> records a Chrome trace of any command
 every option has a default; see the doc comment in rust/src/main.rs.";
 
 fn plan_from_args(args: &Args) -> Result<(PlanRequest, u64)> {
@@ -258,6 +272,34 @@ fn cmd_figures(args: &Args) -> Result<()> {
     for p in paths {
         println!("wrote {}", p.display());
     }
+    Ok(())
+}
+
+/// `els metrics` / `els --metrics`: the unified counter snapshot. With
+/// `--addr`, fetch the live `els-metrics-v1` document from a running
+/// coordinator; otherwise run a small local encrypted fit and print its
+/// per-fit op budget report.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("addr") {
+        let mut client = Client::connect(addr)?;
+        println!("{}", client.metrics_snapshot()?.to_string_json());
+        return Ok(());
+    }
+    // Local mode: a micro-fit so the counters describe real work.
+    let mut rng = ChaChaRng::from_seed(args.get_u64("seed", 7)?);
+    let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let params = plan(&PlanRequest::gd(6, 2, 2, 2, nu))?;
+    let ctx = FvContext::new(params);
+    let keys = keygen(&ctx, &mut rng);
+    let engine = make_engine(args, ctx.clone(), &keys.rk)?;
+    let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+    let (_fit, report) =
+        els::els::encrypted::fit_reported(engine.as_ref(), &data, &FitConfig::gd(2, nu));
+    eprintln!("[els] op budget of one 6×2, 2-iteration GD fit:");
+    println!("{}", report.to_json().to_string_json());
     Ok(())
 }
 

@@ -25,6 +25,7 @@ use super::crt::RnsBasis;
 use super::modarith::{addmod, negmod, submod, ShoupConstant};
 use super::ntt::NttTable;
 use crate::util::pool::parallel_map_workers;
+use crate::util::telemetry;
 
 /// Hard cap on the number of `acc_mul_ntt` terms an [`NttAccumulator`]
 /// may absorb before [`acc_reduce`](RingContext::acc_reduce): plane
@@ -164,6 +165,7 @@ impl RingContext {
     /// count (each plane is independent and order is preserved).
     pub fn ntt_forward_workers(&self, poly: &mut RnsPoly, workers: usize) {
         assert_eq!(poly.rep, Rep::Coeff, "poly already in NTT form");
+        let _span = telemetry::span(telemetry::Phase::NttForward);
         self.transforms.fetch_add(1, Ordering::Relaxed);
         if workers <= 1 || self.nlimbs() == 1 {
             for (l, table) in self.tables.iter().enumerate() {
@@ -185,6 +187,7 @@ impl RingContext {
     /// threads (see [`ntt_forward_workers`](Self::ntt_forward_workers)).
     pub fn ntt_inverse_workers(&self, poly: &mut RnsPoly, workers: usize) {
         assert_eq!(poly.rep, Rep::Ntt, "poly not in NTT form");
+        let _span = telemetry::span(telemetry::Phase::NttInverse);
         self.transforms.fetch_add(1, Ordering::Relaxed);
         if workers <= 1 || self.nlimbs() == 1 {
             for (l, table) in self.tables.iter().enumerate() {

@@ -1,8 +1,9 @@
 //! Offline-build substrates: errors, JSON, CLI, thread pool, prop/bench
-//! harnesses.
+//! harnesses, and the telemetry flight recorder.
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
 pub mod pool;
 pub mod prop;
+pub mod telemetry;

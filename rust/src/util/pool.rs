@@ -2,6 +2,28 @@
 //! `parallel_map` over scoped threads, with an optional per-worker
 //! scratch state and an `ELS_POOL_WORKERS`-controlled worker budget.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::telemetry::{self, Phase};
+
+/// Fan-out invocations since process start (every `parallel_map_with`
+/// entry with at least one item, serial path included). Always-on
+/// metrics counters — not gated by tracing, like the ring counters.
+/// Excluded from the snapshot's cross-worker bit-identity contract:
+/// some call sites legally bypass the pool entirely when their own
+/// budget is serial.
+static DISPATCHES: AtomicU64 = AtomicU64::new(0);
+/// Total items fanned out across all dispatches.
+static TASKS: AtomicU64 = AtomicU64::new(0);
+
+pub fn dispatch_count() -> u64 {
+    DISPATCHES.load(Ordering::Relaxed)
+}
+
+pub fn dispatched_task_count() -> u64 {
+    TASKS.load(Ordering::Relaxed)
+}
+
 /// The process-wide worker budget: `ELS_POOL_WORKERS` when set (≥ 1),
 /// otherwise `available_parallelism`. The env var is how CI pins the
 /// serial (`=1`) vs parallel engine paths; an unparsable or zero value
@@ -66,6 +88,8 @@ where
     if n == 0 {
         return Vec::new();
     }
+    DISPATCHES.fetch_add(1, Ordering::Relaxed);
+    TASKS.fetch_add(n as u64, Ordering::Relaxed);
     let workers = workers.clamp(1, n);
     if n == 1 || workers == 1 {
         let mut scratch = init();
@@ -91,6 +115,9 @@ where
             .into_iter()
             .map(|c| {
                 s.spawn(move || {
+                    // One span per worker lane: fan-out utilisation is
+                    // visible per thread in the trace viewer.
+                    let _lane = telemetry::span(Phase::PoolWorker);
                     let mut scratch = init();
                     c.into_iter().map(|t| f(&mut scratch, t)).collect::<Vec<U>>()
                 })
@@ -186,6 +213,20 @@ mod tests {
             let total: usize = out.iter().filter(|&&(_, c)| c == 1).count();
             assert_eq!(total, workers.min(n), "one scratch per worker (workers = {workers})");
         }
+    }
+
+    #[test]
+    fn dispatch_counters_advance() {
+        // ≥, not ==: other tests fan out concurrently in this process.
+        let d0 = dispatch_count();
+        let t0 = dispatched_task_count();
+        let _ = parallel_map_workers((0..10).collect::<Vec<_>>(), 2, |x| x);
+        assert!(dispatch_count() >= d0 + 1);
+        assert!(dispatched_task_count() >= t0 + 10);
+        // Empty input is not a dispatch.
+        let d1 = dispatch_count();
+        let _: Vec<i32> = parallel_map_workers(Vec::new(), 4, |x| x);
+        assert!(dispatch_count() >= d1);
     }
 
     #[test]

@@ -1,0 +1,765 @@
+//! Flight recorder: zero-dependency structured tracing plus the
+//! unified metrics registry (the repo's observability subsystem; same
+//! in-tree discipline as `util::error`).
+//!
+//! # Span tracer
+//!
+//! Hot paths mark themselves with RAII guards:
+//!
+//! ```ignore
+//! let _span = telemetry::span(Phase::NttForward);
+//! ```
+//!
+//! When tracing is **disabled** (the default) that call is a single
+//! relaxed atomic load returning `None` — no timestamp, no allocation,
+//! no buffer write (counter-asserted by the test-suite). When enabled,
+//! completed spans land in a per-thread buffer that flushes to a global
+//! sink in [`FLUSH_AT`]-sized chunks (and on thread exit), so the sink
+//! lock is touched once per chunk, never per span.
+//!
+//! Activation paths:
+//! - `ELS_TRACE=<path>` — process-wide, read once by binary entry
+//!   points via [`init_from_env`]; [`finish_env_trace`] writes the
+//!   Chrome trace-event JSON there (open in `chrome://tracing` or
+//!   Perfetto).
+//! - [`Capture::begin`] — programmatic and exclusive, for tests and
+//!   embedders. Tests must never mutate `ELS_TRACE` (setenv racing
+//!   getenv across test threads is UB on glibc); this is the sanctioned
+//!   in-process switch.
+//!
+//! # Metrics registry
+//!
+//! [`MetricsSnapshot`] gathers every counter the stack already keeps —
+//! per-ring transforms/relins/scale-rounds/rotations, engine
+//! ct/plain-mul counts, pool dispatches, trace totals, optionally the
+//! coordinator's job counters + latency histogram — into one
+//! diffable, deterministically-serialised JSON document. `fit`/
+//! `predict` wrap it as a per-fit "op budget report"; the coordinator
+//! wire protocol and the `els metrics` CLI expose it live.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Every instrumented phase of the stack, bottom (ring transforms) to
+/// top (serving). Single source of truth for trace names — mirrored by
+/// `python/tools/trace_check.py`'s known-phase set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Forward NTT of one polynomial (all residue planes).
+    NttForward,
+    /// Inverse NTT of one polynomial.
+    NttInverse,
+    /// Full-RNS fast base extension `Q → B ∪ {m_sk}`.
+    BaseExtend,
+    /// The `⌊t·v/q⌉` scale-and-round (either multiply backend).
+    ScaleRound,
+    /// Shenoy–Kumaresan conversion back to the Q basis.
+    ShenoyConvert,
+    /// Per-limb RNS gadget relinearisation of one degree-2 ciphertext.
+    Relinearise,
+    /// Galois automorphism + gadget key switch (rotations).
+    GaloisKeySwitch,
+    /// One `util::pool` worker lane executing its chunk.
+    PoolWorker,
+    /// One encrypted descent iteration (GD/VWT/NAG/CD, packed or not).
+    DescentIteration,
+    /// Coordinator admission check of one submitted job.
+    JobAdmit,
+    /// Job waiting for a concurrency slot (queue time).
+    JobQueue,
+    /// Job running its encrypted fit.
+    JobExecute,
+    /// Batcher dispatching one coalesced group batch to the backend.
+    BatchDispatch,
+    /// Service handling one wire request (decode → execute → reply).
+    ServeReply,
+}
+
+impl Phase {
+    /// Every phase, in pipeline order.
+    pub const ALL: [Phase; 14] = [
+        Phase::NttForward,
+        Phase::NttInverse,
+        Phase::BaseExtend,
+        Phase::ScaleRound,
+        Phase::ShenoyConvert,
+        Phase::Relinearise,
+        Phase::GaloisKeySwitch,
+        Phase::PoolWorker,
+        Phase::DescentIteration,
+        Phase::JobAdmit,
+        Phase::JobQueue,
+        Phase::JobExecute,
+        Phase::BatchDispatch,
+        Phase::ServeReply,
+    ];
+
+    /// Stable snake_case trace name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::NttForward => "ntt_forward",
+            Phase::NttInverse => "ntt_inverse",
+            Phase::BaseExtend => "base_extend",
+            Phase::ScaleRound => "scale_round",
+            Phase::ShenoyConvert => "shenoy_convert",
+            Phase::Relinearise => "relinearise",
+            Phase::GaloisKeySwitch => "galois_keyswitch",
+            Phase::PoolWorker => "pool_worker",
+            Phase::DescentIteration => "descent_iteration",
+            Phase::JobAdmit => "job_admit",
+            Phase::JobQueue => "job_queue",
+            Phase::JobExecute => "job_execute",
+            Phase::BatchDispatch => "batch_dispatch",
+            Phase::ServeReply => "serve_reply",
+        }
+    }
+
+    /// Chrome trace category (one lane of the stack).
+    pub fn category(self) -> &'static str {
+        match self {
+            Phase::NttForward | Phase::NttInverse => "ring",
+            Phase::BaseExtend
+            | Phase::ScaleRound
+            | Phase::ShenoyConvert
+            | Phase::Relinearise
+            | Phase::GaloisKeySwitch => "mul",
+            Phase::PoolWorker => "pool",
+            Phase::DescentIteration => "els",
+            Phase::JobAdmit
+            | Phase::JobQueue
+            | Phase::JobExecute
+            | Phase::BatchDispatch
+            | Phase::ServeReply => "coordinator",
+        }
+    }
+}
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub phase: Phase,
+    /// Microseconds since the process trace epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Dense per-thread id (assigned in first-record order).
+    pub tid: u64,
+}
+
+/// The one word the hot path reads: tracing on/off.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Spans buffered since process start (monotone — with tracing
+/// disabled this must not move; the zero-write acceptance hook).
+static RECORDED: AtomicU64 = AtomicU64::new(0);
+/// Spans discarded because the sink hit [`MAX_EVENTS`].
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Global sink the per-thread buffers flush into.
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+
+/// Serialises capture sessions (and lets the disabled-path test hold
+/// off a concurrent capture) without ever touching the environment.
+static SESSION: Mutex<()> = Mutex::new(());
+
+/// Hard cap on buffered spans: a runaway trace degrades to counting
+/// drops instead of exhausting memory.
+const MAX_EVENTS: usize = 1 << 20;
+/// Per-thread chunk size between sink flushes.
+const FLUSH_AT: usize = 256;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct LocalBuf {
+    tid: u64,
+    events: Vec<Event>,
+}
+
+impl LocalBuf {
+    fn new() -> LocalBuf {
+        LocalBuf {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            events: Vec::with_capacity(FLUSH_AT),
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+        let room = MAX_EVENTS.saturating_sub(sink.len());
+        let take = self.events.len().min(room);
+        let dropped = self.events.len() - take;
+        sink.extend(self.events.drain(..take));
+        self.events.clear();
+        if dropped > 0 {
+            DROPPED.fetch_add(dropped as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for LocalBuf {
+    // Thread exit: whatever the lane buffered reaches the sink (every
+    // `util::pool` fan-out joins its workers, so their spans are
+    // visible by the time the dispatching call returns).
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf::new());
+}
+
+/// RAII span guard: records its phase + wall duration when dropped.
+pub struct SpanGuard {
+    phase: Phase,
+    start: Instant,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        // duration_since saturates to zero for spans that started
+        // before the lazily-initialised epoch.
+        let start_us = self.start.duration_since(epoch()).as_micros() as u64;
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        RECORDED.fetch_add(1, Ordering::Relaxed);
+        // TLS may already be torn down during thread exit; losing that
+        // span beats panicking inside a destructor.
+        let _ = LOCAL.try_with(|b| {
+            let mut b = b.borrow_mut();
+            let tid = b.tid;
+            b.events.push(Event { phase: self.phase, start_us, dur_us, tid });
+            if b.events.len() >= FLUSH_AT {
+                b.flush();
+            }
+        });
+    }
+}
+
+/// Open a span for `phase`. Disabled fast path: one relaxed load and
+/// `None` — no clock read, no allocation, no buffer write.
+#[inline]
+pub fn span(phase: Phase) -> Option<SpanGuard> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    epoch();
+    Some(SpanGuard { phase, start: Instant::now() })
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Spans buffered since process start (monotone).
+pub fn recorded_count() -> u64 {
+    RECORDED.load(Ordering::Relaxed)
+}
+
+/// Spans dropped at the [`MAX_EVENTS`] cap since process start.
+pub fn dropped_count() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+fn drain() -> Vec<Event> {
+    let _ = LOCAL.try_with(|b| b.borrow_mut().flush());
+    let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    std::mem::take(&mut *sink)
+}
+
+/// Exclusive programmatic capture session — the sanctioned in-process
+/// switch for tests and embedders (never mutate `ELS_TRACE` in-process).
+pub struct Capture {
+    _session: MutexGuard<'static, ()>,
+}
+
+impl Capture {
+    /// Enable tracing, discarding stale spans still in flight from
+    /// earlier sessions. Exclusive: concurrent captures serialise.
+    pub fn begin() -> Capture {
+        let session = SESSION.lock().unwrap_or_else(|e| e.into_inner());
+        epoch();
+        drain();
+        ENABLED.store(true, Ordering::Relaxed);
+        Capture { _session: session }
+    }
+
+    /// Disable tracing and return everything captured. The calling
+    /// thread's buffer is flushed explicitly; pool workers flushed when
+    /// they exited (fan-outs join before returning).
+    pub fn finish(self) -> Trace {
+        ENABLED.store(false, Ordering::Relaxed);
+        Trace { events: drain() }
+    }
+}
+
+/// Hold to keep tracing *disabled* (no capture can begin concurrently)
+/// — the disabled-hot-path acceptance test runs under this.
+pub fn exclusion() -> MutexGuard<'static, ()> {
+    SESSION.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static ENV_PATH: OnceLock<Option<String>> = OnceLock::new();
+
+/// Process-level activation: `ELS_TRACE=<path>` turns the recorder on
+/// for the whole run. Only binary entry points call this — library
+/// code and tests go through [`Capture`].
+pub fn init_from_env() {
+    let path = ENV_PATH.get_or_init(|| match std::env::var("ELS_TRACE") {
+        Ok(p) if !p.is_empty() => Some(p),
+        _ => None,
+    });
+    if path.is_some() {
+        epoch();
+        ENABLED.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Flush and write the `ELS_TRACE` Chrome trace file, if
+/// [`init_from_env`] activated one. Returns the path written.
+pub fn finish_env_trace() -> Option<String> {
+    let path = ENV_PATH.get().and_then(|p| p.clone())?;
+    ENABLED.store(false, Ordering::Relaxed);
+    let trace = Trace { events: drain() };
+    match std::fs::write(&path, trace.to_chrome_json().to_string_json()) {
+        Ok(()) => Some(path),
+        Err(e) => {
+            eprintln!("[els] failed to write trace {path}: {e}");
+            None
+        }
+    }
+}
+
+/// A completed capture, exportable as Chrome trace-event JSON
+/// (loadable in `chrome://tracing` or Perfetto as-is).
+pub struct Trace {
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    pub fn phase_count(&self, phase: Phase) -> usize {
+        self.events.iter().filter(|e| e.phase == phase).count()
+    }
+
+    pub fn to_chrome_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("name", Json::str(e.phase.name())),
+                    ("cat", Json::str(e.phase.category())),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::Num(e.start_us as f64)),
+                    ("dur", Json::Num(e.dur_us as f64)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(e.tid as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("recorded", Json::Num(recorded_count() as f64)),
+                    ("dropped", Json::Num(dropped_count() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Counters of one [`RingContext`](crate::math::poly::RingContext).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RingCounters {
+    pub label: String,
+    pub transforms: u64,
+    pub relins: u64,
+    pub scale_rounds: u64,
+    pub rotations: u64,
+}
+
+/// Engine-level op counts (`runtime::backend::OpStats`).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct EngineCounters {
+    pub ct_muls: u64,
+    pub plain_muls: u64,
+    pub adds: u64,
+    pub batches: u64,
+}
+
+/// Process-wide `util::pool` counters. Excluded from cross-worker
+/// bit-identity: serial call sites legally skip the pool entirely.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct PoolCounters {
+    pub dispatches: u64,
+    pub tasks: u64,
+}
+
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TraceCounters {
+    pub enabled: bool,
+    pub recorded: u64,
+    pub dropped: u64,
+}
+
+/// Serving-tier counters (present when snapshotting a coordinator).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoordinatorCounters {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_rejected: u64,
+    pub jobs_failed: u64,
+    /// Self-describing latency histogram (bounds + counts + quantiles).
+    pub latency: Json,
+}
+
+/// One unified, diffable snapshot of every counter in the stack.
+///
+/// Determinism contract (test-asserted): for a fixed workload the
+/// `rings` section is bit-identical across `ELS_POOL_WORKERS` counts,
+/// and the `engine` section additionally across mul backends (ring
+/// transform counts legitimately differ between backends — they work
+/// in different bases). `pool`/`trace` are process-global and excluded.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Per-ring pipeline counters (labels `q`, `ext`, `big`).
+    pub rings: Vec<RingCounters>,
+    pub engine: EngineCounters,
+    pub pool: PoolCounters,
+    pub trace: TraceCounters,
+    pub coordinator: Option<CoordinatorCounters>,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot every counter reachable from a context + engine stats.
+    pub fn capture(
+        ctx: &crate::fhe::FvContext,
+        stats: &crate::runtime::backend::OpStats,
+    ) -> MetricsSnapshot {
+        let ring = |label: &str, r: &crate::math::poly::RingContext| RingCounters {
+            label: label.to_string(),
+            transforms: r.transform_count(),
+            relins: r.relin_count(),
+            scale_rounds: r.scale_round_count(),
+            rotations: r.rotation_count(),
+        };
+        let (ct_muls, plain_muls, adds, batches) = stats.snapshot();
+        MetricsSnapshot {
+            rings: vec![
+                ring("q", &ctx.ring_q),
+                ring("ext", &ctx.ring_ext),
+                ring("big", &ctx.ring_big),
+            ],
+            engine: EngineCounters { ct_muls, plain_muls, adds, batches },
+            pool: PoolCounters {
+                dispatches: crate::util::pool::dispatch_count(),
+                tasks: crate::util::pool::dispatched_task_count(),
+            },
+            trace: TraceCounters {
+                enabled: enabled(),
+                recorded: recorded_count(),
+                dropped: dropped_count(),
+            },
+            coordinator: None,
+        }
+    }
+
+    /// Attach the serving tier's counters.
+    pub fn with_coordinator(
+        mut self,
+        m: &crate::coordinator::metrics::Metrics,
+    ) -> MetricsSnapshot {
+        self.coordinator = Some(CoordinatorCounters {
+            jobs_submitted: m.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: m.jobs_completed.load(Ordering::Relaxed),
+            jobs_rejected: m.jobs_rejected.load(Ordering::Relaxed),
+            jobs_failed: m.jobs_failed.load(Ordering::Relaxed),
+            latency: m.job_latency.to_json(),
+        });
+        self
+    }
+
+    /// Counter delta `self − earlier` (saturating). The trace `enabled`
+    /// flag, the latency histogram and missing-in-`earlier` sections
+    /// come from `self` unchanged.
+    pub fn diff(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let rings = self
+            .rings
+            .iter()
+            .map(|r| {
+                let base = earlier.rings.iter().find(|e| e.label == r.label);
+                match base {
+                    Some(b) => RingCounters {
+                        label: r.label.clone(),
+                        transforms: r.transforms.saturating_sub(b.transforms),
+                        relins: r.relins.saturating_sub(b.relins),
+                        scale_rounds: r.scale_rounds.saturating_sub(b.scale_rounds),
+                        rotations: r.rotations.saturating_sub(b.rotations),
+                    },
+                    None => r.clone(),
+                }
+            })
+            .collect();
+        let coordinator = match (&self.coordinator, &earlier.coordinator) {
+            (Some(c), Some(b)) => Some(CoordinatorCounters {
+                jobs_submitted: c.jobs_submitted.saturating_sub(b.jobs_submitted),
+                jobs_completed: c.jobs_completed.saturating_sub(b.jobs_completed),
+                jobs_rejected: c.jobs_rejected.saturating_sub(b.jobs_rejected),
+                jobs_failed: c.jobs_failed.saturating_sub(b.jobs_failed),
+                latency: c.latency.clone(),
+            }),
+            (c, _) => c.clone(),
+        };
+        MetricsSnapshot {
+            rings,
+            engine: EngineCounters {
+                ct_muls: self.engine.ct_muls.saturating_sub(earlier.engine.ct_muls),
+                plain_muls: self.engine.plain_muls.saturating_sub(earlier.engine.plain_muls),
+                adds: self.engine.adds.saturating_sub(earlier.engine.adds),
+                batches: self.engine.batches.saturating_sub(earlier.engine.batches),
+            },
+            pool: PoolCounters {
+                dispatches: self.pool.dispatches.saturating_sub(earlier.pool.dispatches),
+                tasks: self.pool.tasks.saturating_sub(earlier.pool.tasks),
+            },
+            trace: TraceCounters {
+                enabled: self.trace.enabled,
+                recorded: self.trace.recorded.saturating_sub(earlier.trace.recorded),
+                dropped: self.trace.dropped.saturating_sub(earlier.trace.dropped),
+            },
+            coordinator,
+        }
+    }
+
+    /// Deterministic JSON document (BTreeMap key order throughout).
+    pub fn to_json(&self) -> Json {
+        let mut out = vec![
+            ("schema", Json::str("els-metrics-v1")),
+            ("rings", self.rings_json()),
+            ("engine", self.engine_json()),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("dispatches", Json::Num(self.pool.dispatches as f64)),
+                    ("tasks", Json::Num(self.pool.tasks as f64)),
+                ]),
+            ),
+            (
+                "trace",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.trace.enabled)),
+                    ("recorded", Json::Num(self.trace.recorded as f64)),
+                    ("dropped", Json::Num(self.trace.dropped as f64)),
+                ]),
+            ),
+        ];
+        if let Some(c) = &self.coordinator {
+            out.push((
+                "coordinator",
+                Json::obj(vec![
+                    ("jobs_submitted", Json::Num(c.jobs_submitted as f64)),
+                    ("jobs_completed", Json::Num(c.jobs_completed as f64)),
+                    ("jobs_rejected", Json::Num(c.jobs_rejected as f64)),
+                    ("jobs_failed", Json::Num(c.jobs_failed as f64)),
+                    ("latency", c.latency.clone()),
+                ]),
+            ));
+        }
+        Json::obj(out)
+    }
+
+    /// The `rings` section alone (the cross-worker identity surface).
+    pub fn rings_json(&self) -> Json {
+        Json::obj(
+            self.rings
+                .iter()
+                .map(|r| {
+                    (
+                        r.label.as_str(),
+                        Json::obj(vec![
+                            ("transforms", Json::Num(r.transforms as f64)),
+                            ("relins", Json::Num(r.relins as f64)),
+                            ("scale_rounds", Json::Num(r.scale_rounds as f64)),
+                            ("rotations", Json::Num(r.rotations as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// The `engine` section alone (the cross-backend identity surface).
+    pub fn engine_json(&self) -> Json {
+        Json::obj(vec![
+            ("ct_muls", Json::Num(self.engine.ct_muls as f64)),
+            ("plain_muls", Json::Num(self.engine.plain_muls as f64)),
+            ("adds", Json::Num(self.engine.adds as f64)),
+            ("batches", Json::Num(self.engine.batches as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::fhe::encoding::encode_int;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::{FvParams, MulBackend};
+    use crate::fhe::rng::ChaChaRng;
+    use crate::fhe::{Ciphertext, FvContext};
+    use crate::runtime::backend::{HeEngine, NativeEngine};
+
+    fn setup(seed: u64) -> (Arc<FvContext>, crate::fhe::KeySet, Vec<(Ciphertext, Ciphertext)>) {
+        let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+        let mut rng = ChaChaRng::from_seed(seed);
+        let keys = keygen(&ctx, &mut rng);
+        let pairs: Vec<(Ciphertext, Ciphertext)> = (1..=4i64)
+            .map(|k| {
+                (
+                    ctx.encrypt(&encode_int(k, ctx.d()), &keys.pk, &mut rng),
+                    ctx.encrypt(&encode_int(k + 1, ctx.d()), &keys.pk, &mut rng),
+                )
+            })
+            .collect();
+        (ctx, keys, pairs)
+    }
+
+    #[test]
+    fn capture_exports_wellformed_chrome_trace() {
+        let cap = Capture::begin();
+        {
+            let _a = span(Phase::DescentIteration);
+            let _b = span(Phase::NttForward);
+        }
+        let worker = std::thread::spawn(|| {
+            let _s = span(Phase::PoolWorker);
+        });
+        worker.join().unwrap();
+        let trace = cap.finish();
+        assert!(trace.phase_count(Phase::DescentIteration) >= 1);
+        assert!(trace.phase_count(Phase::NttForward) >= 1);
+        assert!(trace.phase_count(Phase::PoolWorker) >= 1);
+        let json = trace.to_chrome_json();
+        // Round-trips through the in-tree parser.
+        let text = json.to_string_json();
+        let back = Json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        for e in events {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert!(e.get("ts").unwrap().as_u64().is_some());
+            assert!(e.get("dur").unwrap().as_u64().is_some());
+            let name = e.get("name").unwrap().as_str().unwrap();
+            assert!(Phase::ALL.iter().any(|p| p.name() == name), "unknown phase {name}");
+        }
+        // Spans recorded on a thread that died reached the sink via the
+        // TLS destructor; tids are distinct lanes.
+        let tids: std::collections::BTreeSet<u64> = trace.events.iter().map(|e| e.tid).collect();
+        assert!(tids.len() >= 2, "worker lane must have its own tid");
+    }
+
+    #[test]
+    fn disabled_hot_path_records_nothing() {
+        // Hold the session lock so no concurrent capture enables
+        // tracing mid-assertion (tests share the process).
+        let _excl = exclusion();
+        assert!(!enabled());
+        let before = recorded_count();
+        assert!(span(Phase::NttForward).is_none());
+        assert!(span(Phase::Relinearise).is_none());
+        // Drive the real instrumented hot path: a full ct×ct multiply
+        // exercises NTT, base-extension/CRT, scale-round and relin
+        // span sites. The recorder must not see a single event.
+        let (ctx, keys, pairs) = setup(811);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+        let refs: Vec<(&Ciphertext, &Ciphertext)> = pairs.iter().map(|(a, b)| (a, b)).collect();
+        let _ = engine.mul_pairs(&refs);
+        assert_eq!(recorded_count(), before, "disabled tracing wrote to the ring buffer");
+    }
+
+    #[test]
+    fn enabled_capture_sees_the_multiply_pipeline() {
+        let (ctx, keys, pairs) = setup(812);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+        let refs: Vec<(&Ciphertext, &Ciphertext)> = pairs.iter().map(|(a, b)| (a, b)).collect();
+        let cap = Capture::begin();
+        let _ = engine.mul_pairs(&refs);
+        let trace = cap.finish();
+        assert!(trace.phase_count(Phase::NttForward) >= 1, "no forward NTT spans");
+        assert!(trace.phase_count(Phase::Relinearise) >= pairs.len());
+        assert!(trace.phase_count(Phase::ScaleRound) >= pairs.len());
+        if ctx.params.mul_backend == MulBackend::FullRns {
+            assert!(trace.phase_count(Phase::BaseExtend) >= 1);
+            assert!(trace.phase_count(Phase::ShenoyConvert) >= 1);
+        }
+    }
+
+    #[test]
+    fn snapshot_diff_is_deterministic_and_sectioned() {
+        let (ctx, keys, pairs) = setup(813);
+        let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+        let refs: Vec<(&Ciphertext, &Ciphertext)> = pairs.iter().map(|(a, b)| (a, b)).collect();
+        let before = MetricsSnapshot::capture(&ctx, engine.stats());
+        let _ = engine.mul_pairs(&refs);
+        let after = MetricsSnapshot::capture(&ctx, engine.stats());
+        let diff = after.diff(&before);
+        assert_eq!(diff.engine.ct_muls, pairs.len() as u64);
+        assert!(diff.rings[0].relins >= pairs.len() as u64);
+        // Serialisation is deterministic: same snapshot, same bytes.
+        assert_eq!(diff.to_json().to_string_json(), diff.to_json().to_string_json());
+        let parsed = Json::parse(&diff.to_json().to_string_json()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("els-metrics-v1"));
+        assert!(parsed.get("rings").unwrap().get("q").is_some());
+    }
+
+    #[test]
+    fn snapshot_diff_identical_across_worker_counts_and_backends() {
+        // rings+engine sections are the determinism surface: same
+        // workload → bit-identical diffs for workers 1/2/4 (same
+        // backend), and bit-identical engine sections across backends.
+        // One key/pair set serves every run (keys live in the Q basis;
+        // ciphertexts are plain residue data — the parity-test idiom).
+        let (ctx, keys, pairs) = setup(814);
+        let rk = Arc::new(keys.rk.clone());
+        let run = |ctx: &Arc<FvContext>, workers: usize| {
+            let engine =
+                NativeEngine::new(ctx.clone(), rk.clone()).with_pool_workers(workers);
+            let refs: Vec<(&Ciphertext, &Ciphertext)> =
+                pairs.iter().map(|(a, b)| (a, b)).collect();
+            let before = MetricsSnapshot::capture(ctx, engine.stats());
+            let _ = engine.mul_pairs(&refs);
+            let after = MetricsSnapshot::capture(ctx, engine.stats());
+            after.diff(&before)
+        };
+        let d1 = run(&ctx, 1);
+        let d2 = run(&ctx, 2);
+        let d4 = run(&ctx, 4);
+        assert_eq!(
+            d1.rings_json().to_string_json(),
+            d2.rings_json().to_string_json(),
+            "ring counters depend on worker count"
+        );
+        assert_eq!(d2.rings_json().to_string_json(), d4.rings_json().to_string_json());
+        assert_eq!(d1.engine_json().to_string_json(), d4.engine_json().to_string_json());
+        // Cross-backend: engine section identical (ring bases differ by
+        // construction — rns works in B∪m_sk, the oracle in Q∪E).
+        let ctx_big = ctx.clone().with_backend(MulBackend::ExactBigint);
+        let ctx_rns = ctx_big.clone().with_backend(MulBackend::FullRns);
+        let db = run(&ctx_big, 2);
+        let dr = run(&ctx_rns, 2);
+        assert_eq!(db.engine_json().to_string_json(), dr.engine_json().to_string_json());
+    }
+}
