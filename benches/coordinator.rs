@@ -84,4 +84,74 @@ fn main() {
         let j = Json::parse(&text).unwrap();
         black_box(proto::ct_from_json(&ctx, &j).unwrap());
     });
+
+    // Saturation: hundreds of tiny fits from 3 tenants hammering a
+    // 4-lane coordinator with a bounded queue — measures end-to-end
+    // serving throughput (admission + fair queueing + per-tenant
+    // caches + coalesced execution) and prints the served/overloaded
+    // split with the latency histogram.
+    header("coordinator saturation: 240 fits, 3 tenants, 4 lanes");
+    {
+        use els::coordinator::job::JobSpec;
+        use els::coordinator::scheduler::{Coordinator, CoordinatorConfig};
+        use els::coordinator::tenant::TenantId;
+        use els::data::synth;
+        use els::els::encrypted::FitConfig;
+        use els::els::exact::QuantisedData;
+        use els::els::model::encrypt_dataset;
+        use els::els::stepsize::nu_optimal;
+        use els::fhe::params::{plan, PlanRequest};
+
+        let mut rng = ChaChaRng::from_seed(9104);
+        let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let nu = nu_optimal(&xq);
+        let fit_ctx = FvContext::new(plan(&PlanRequest::gd(6, 2, 1, 2, nu)).unwrap());
+        let fit_keys = keygen(&fit_ctx, &mut rng);
+        let native =
+            Arc::new(NativeEngine::new(fit_ctx.clone(), Arc::new(fit_keys.rk.clone())));
+        let engine = BatchingEngine::new(native, BatchConfig::default());
+        let coord = Coordinator::with_config(
+            engine.clone(),
+            CoordinatorConfig {
+                lanes: 4,
+                queue_capacity: 64,
+                cache_budget_bytes: 8 << 20,
+                cache_shards: 4,
+            },
+        );
+        let tenants: Vec<TenantId> =
+            ["acme", "globex", "initech"].iter().map(|s| TenantId::new(*s)).collect();
+        let datasets: Vec<_> = (0..3)
+            .map(|_| encrypt_dataset(&fit_ctx, &fit_keys.pk, &q, &mut rng))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let mut accepted = Vec::new();
+        let mut overloaded = 0usize;
+        for i in 0..240 {
+            let t = i % 3;
+            let spec = JobSpec::new(datasets[t].clone(), FitConfig::gd(1, nu), None)
+                .with_tenant(tenants[t].clone());
+            match coord.submit(spec) {
+                Ok(id) => accepted.push(id),
+                Err(_) => overloaded += 1,
+            }
+        }
+        for &id in &accepted {
+            coord.wait(id, Duration::from_secs(600)).unwrap();
+            let _ = coord.take_result(id);
+        }
+        let wall = t0.elapsed();
+        println!(
+            "    → {} served + {overloaded} overloaded in {wall:.2?} \
+             ({:.1} jobs/s)",
+            accepted.len(),
+            accepted.len() as f64 / wall.as_secs_f64()
+        );
+        println!("    → {}", coord.metrics.summary());
+        println!("    → histogram: {}", coord.metrics.job_latency.to_json().to_string_json());
+        println!("    → tenants: {}", coord.tenants().to_json().to_string_json());
+        engine.shutdown();
+    }
 }

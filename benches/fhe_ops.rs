@@ -163,7 +163,7 @@ fn main() {
     header("gd_iteration end-to-end (N=6, P=2, K=1)");
     let s_gd = {
         use els::data::synth;
-        use els::els::encrypted::{fit, FitConfig};
+        use els::els::encrypted::{fit, DatasetRef, FitConfig};
         use els::els::exact::QuantisedData;
         use els::els::model::encrypt_dataset;
         use els::fhe::params::{plan, PlanRequest};
@@ -176,7 +176,7 @@ fn main() {
         let engine = NativeEngine::new(gd_ctx.clone(), Arc::new(gd_keys.rk.clone()));
         let data = encrypt_dataset(&gd_ctx, &gd_keys.pk, &q, &mut rng);
         bench("gd_iteration (fit K=1)", 1, 5, || {
-            black_box(fit(&engine, &data, &FitConfig::gd(1, nu)));
+            black_box(fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(1, nu)).unwrap());
         })
     };
 

@@ -33,6 +33,13 @@ cargo build --release
 note "tier-1: cargo test -q"
 cargo test -q
 
+# Serving-tier saturation smoke: 120 fits from 12 concurrent clients
+# across 3 tenants against a small bounded queue — every submission
+# must complete bit-identically to a solo fit or bounce with a
+# structured wire code. Release mode so the burst is tight.
+note "coordinator saturation smoke: cargo test --release --test saturation"
+cargo test --release --test saturation
+
 # Also drives the dot_pairs fusion tests (unit + e2e parity) through
 # the oracle's summed-tensor-before-CRT-lift path.
 note "tier-1 (oracle backend): ELS_MUL_BACKEND=bigint cargo test -q"

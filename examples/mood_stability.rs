@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use els::data::mood;
-use els::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+use els::els::encrypted::{decrypt_coefficients, fit, DatasetRef, FitConfig};
 use els::els::exact::{gd_exact, QuantisedData};
 use els::els::float_ref::{linf, ols};
 use els::els::model::encrypt_dataset;
@@ -67,7 +67,7 @@ fn main() -> els::util::error::Result<()> {
     let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
     let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
     let t0 = std::time::Instant::now();
-    let fitted = fit(&engine, &data, &FitConfig::gd(iters, nu));
+    let fitted = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(iters, nu))?.fit;
     let wall = t0.elapsed();
     let dec = decrypt_coefficients(&ctx, &keys.sk, &fitted);
     let exact = gd_exact(&q, nu, iters).decode_last();

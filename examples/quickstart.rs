@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use els::data::synth;
-use els::els::encrypted::{decrypt_coefficients, fit, Accel, FitConfig};
+use els::els::encrypted::{decrypt_coefficients, fit, Accel, DatasetRef, FitConfig};
 use els::els::exact::QuantisedData;
 use els::els::float_ref::{linf, ols};
 use els::els::model::encrypt_dataset;
@@ -60,7 +60,7 @@ fn main() -> els::util::error::Result<()> {
     let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
     let cfg = FitConfig::gd(iters, nu).with_accel(Accel::Vwt);
     let t0 = std::time::Instant::now();
-    let fitted = fit(&engine, &data, &cfg);
+    let fitted = fit(&engine, &DatasetRef::Scalar(&data), &cfg)?.fit;
     println!(
         "encrypted fit: {:?} (paper MMD = {}, ct-mult depth = {})",
         t0.elapsed(),

@@ -83,7 +83,10 @@ fn main() -> els::util::error::Result<()> {
                     let data = encrypt_dataset(&ctx, &keys.pk, q, r);
                     let mut client = Client::connect(&addr).expect("connect");
                     let t = Instant::now();
-                    let id = client.submit(&data, &FitConfig::gd(ITERS, nu), None).expect("submit");
+                    let tenant = format!("clinic-{}", i % 3);
+                    let id = client
+                        .submit_with(&data, &FitConfig::gd(ITERS, nu), None, Some(&tenant), None)
+                        .expect("submit");
                     let fit = client.result(&ctx, id).expect("result");
                     let latency = t.elapsed();
                     let dec = decrypt_coefficients(&ctx, &keys.sk, &fit);

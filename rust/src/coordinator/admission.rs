@@ -1,11 +1,16 @@
-//! Admission control (§4.5 as a runtime guardrail): a job is accepted
+//! Admission control: §4.5 as a runtime guardrail (a job is accepted
 //! only if the compiled parameter set provably supports it — enough
 //! noise budget for its multiplicative depth, a plaintext modulus large
 //! enough for its Lemma-3 message growth, and ring room for the message
-//! degree. Rejections carry the parameter set the planner would need.
+//! degree; rejections carry the parameter set the planner would need),
+//! plus a load/deadline dimension ([`admit_load`]): bounded queues and
+//! an up-front feasibility check against the observed service rate, so
+//! overload surfaces as structured `Overloaded`/`DeadlineExceeded`
+//! rejections instead of unbounded queue growth.
 
 use crate::util::error::{bail, Result};
 
+use crate::coordinator::protocol::{ErrorCode, WireError, WireResult};
 use crate::els::encrypted::Accel;
 use crate::els::mmd;
 use crate::fhe::params::{per_level_noise_bits, plan, Algo, FvParams, PlanRequest};
@@ -120,6 +125,65 @@ pub fn admit(params: &FvParams, req: &AdmissionRequest) -> Result<()> {
     Ok(())
 }
 
+/// The coordinator's instantaneous load, as seen at submit time.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadState {
+    /// Jobs queued but not yet picked up by a lane.
+    pub pending: usize,
+    /// Jobs currently executing on lanes.
+    pub running: usize,
+    /// Execution lane count.
+    pub lanes: usize,
+    /// Pending-queue capacity (jobs beyond this are `Overloaded`).
+    pub queue_capacity: usize,
+    /// Observed mean job latency (0.0 until the first completion).
+    pub mean_latency_ms: f64,
+}
+
+impl LoadState {
+    /// Optimistic wait+service estimate for a job entering the queue
+    /// now: everything ahead of it plus itself, spread across the
+    /// lanes, at the observed mean service time. Deliberately crude —
+    /// it only has to catch deadlines that are *already* infeasible at
+    /// submit, so the client learns before shipping ciphertexts into a
+    /// queue that cannot serve them in time.
+    pub fn estimated_ms(&self) -> f64 {
+        let depth = (self.pending + self.running + 1) as f64;
+        self.mean_latency_ms * depth / self.lanes.max(1) as f64
+    }
+}
+
+/// Load/deadline admission: the second dimension beyond noise depth.
+/// Returns a structured code — `Overloaded` when the pending queue is
+/// at capacity, `DeadlineExceeded` when the requested deadline is
+/// already infeasible given the observed service rate.
+pub fn admit_load(load: &LoadState, deadline_ms: Option<u64>) -> WireResult<()> {
+    if load.pending >= load.queue_capacity {
+        return Err(WireError::new(
+            ErrorCode::Overloaded,
+            format!(
+                "pending queue at capacity ({} of {}); resubmit later",
+                load.pending, load.queue_capacity
+            ),
+        ));
+    }
+    if let Some(deadline) = deadline_ms {
+        let estimate = load.estimated_ms();
+        if estimate > deadline as f64 {
+            return Err(WireError::new(
+                ErrorCode::DeadlineExceeded,
+                format!(
+                    "deadline {deadline}ms infeasible: estimated completion \
+                     {estimate:.0}ms ({} pending + {} running on {} lanes, \
+                     mean {:.1}ms/job)",
+                    load.pending, load.running, load.lanes, load.mean_latency_ms
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,5 +243,46 @@ mod tests {
         let small = FvParams::custom(256, 3, 20);
         let large = FvParams::custom(256, 6, 20);
         assert!(supported_depth(&large, 8) > supported_depth(&small, 8));
+    }
+
+    #[test]
+    fn load_admission_codes() {
+        let mut load = LoadState {
+            pending: 0,
+            running: 0,
+            lanes: 2,
+            queue_capacity: 4,
+            mean_latency_ms: 100.0,
+        };
+        // Idle queue, no deadline: always admitted.
+        admit_load(&load, None).unwrap();
+        // Feasible deadline: one job on an idle 2-lane pool ≈ 50ms.
+        admit_load(&load, Some(1000)).unwrap();
+        // Infeasible deadline: 9 jobs deep at 100ms/job on 2 lanes.
+        load.pending = 4;
+        let full = admit_load(&load, Some(60)).unwrap_err();
+        assert_eq!(full.code, ErrorCode::Overloaded, "{full}");
+        load.pending = 3;
+        load.running = 5;
+        let late = admit_load(&load, Some(60)).unwrap_err();
+        assert_eq!(late.code, ErrorCode::DeadlineExceeded, "{late}");
+        // Best-effort jobs only bounce on queue capacity, never on the
+        // latency estimate.
+        admit_load(&load, None).unwrap();
+    }
+
+    #[test]
+    fn load_admission_with_no_history_admits_any_deadline() {
+        // Until the first completion the mean is 0 — the estimator has
+        // no signal, so even a 0ms deadline is admitted here and left
+        // to the queue-side expiry check.
+        let load = LoadState {
+            pending: 2,
+            running: 2,
+            lanes: 1,
+            queue_capacity: 8,
+            mean_latency_ms: 0.0,
+        };
+        admit_load(&load, Some(0)).unwrap();
     }
 }

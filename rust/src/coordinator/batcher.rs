@@ -54,29 +54,50 @@ impl Default for BatchConfig {
     }
 }
 
+/// Dispatcher-side counters: how many fused backend calls ran, and how
+/// many of them actually merged work items from more than one submit
+/// call (i.e. cross-job coalescing happened, not just pass-through).
+#[derive(Default)]
+pub struct DispatchStats {
+    pub dispatches: std::sync::atomic::AtomicU64,
+    pub coalesced: std::sync::atomic::AtomicU64,
+}
+
 /// An [`HeEngine`] that coalesces `mul_pairs` calls across threads.
 pub struct BatchingEngine {
     inner: Arc<dyn HeEngine>,
     tx: Mutex<Option<Sender<WorkItem>>>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
     stats: OpStats,
+    dispatch: Arc<DispatchStats>,
 }
 
 impl BatchingEngine {
     pub fn new(inner: Arc<dyn HeEngine>, cfg: BatchConfig) -> Arc<Self> {
         let (tx, rx) = channel::<WorkItem>();
+        let dispatch = Arc::new(DispatchStats::default());
         let engine = Arc::new(BatchingEngine {
             inner: inner.clone(),
             tx: Mutex::new(Some(tx)),
             handle: Mutex::new(None),
             stats: OpStats::default(),
+            dispatch: Arc::clone(&dispatch),
         });
         let handle = std::thread::Builder::new()
             .name("els-batcher".into())
-            .spawn(move || dispatcher(inner, rx, cfg))
+            .spawn(move || dispatcher(inner, rx, cfg, dispatch))
             .expect("spawning batcher");
         *engine.handle.lock().unwrap() = Some(handle);
         engine
+    }
+
+    /// `(dispatches, coalesced_dispatches)`: total fused backend calls
+    /// and the subset that merged items from ≥ 2 submit calls.
+    pub fn dispatch_counts(&self) -> (u64, u64) {
+        (
+            self.dispatch.dispatches.load(Ordering::Relaxed),
+            self.dispatch.coalesced.load(Ordering::Relaxed),
+        )
     }
 
     /// Enqueue one group-shaped work item and block for its replies
@@ -110,7 +131,12 @@ impl Drop for BatchingEngine {
     }
 }
 
-fn dispatcher(inner: Arc<dyn HeEngine>, rx: Receiver<WorkItem>, cfg: BatchConfig) {
+fn dispatcher(
+    inner: Arc<dyn HeEngine>,
+    rx: Receiver<WorkItem>,
+    cfg: BatchConfig,
+    dispatch: Arc<DispatchStats>,
+) {
     loop {
         // Block for the first item; exit when all senders are gone.
         let first = match rx.recv() {
@@ -133,6 +159,10 @@ fn dispatcher(inner: Arc<dyn HeEngine>, rx: Receiver<WorkItem>, cfg: BatchConfig
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
+        }
+        dispatch.dispatches.fetch_add(1, Ordering::Relaxed);
+        if items.len() > 1 {
+            dispatch.coalesced.fetch_add(1, Ordering::Relaxed);
         }
         // One fused backend call over every coalesced group (plain
         // products ride along as singleton groups).
@@ -387,6 +417,92 @@ mod tests {
         // The dispatcher survived: a valid job still completes.
         let out = engine.dot_pairs(&[&[(&a, &b)][..]]);
         assert_eq!(ctx.decrypt(&out[0], &keys.sk).eval_at_2().to_i128(), Some(12));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn cross_job_coalescing_is_bit_identical_to_solo_execution() {
+        // Three "jobs" (threads) each submit a dot_pairs call; the
+        // batch size equals the exact total pair count, so the
+        // dispatcher provably blocks until all three jobs' groups are
+        // merged into ONE backend call. Each job's results must be
+        // bit-identical to running its groups alone on the bare native
+        // engine — batch composition never changes bits.
+        let ctx = FvContext::new(FvParams::custom(256, 3, 24));
+        let mut rng = ChaChaRng::from_seed(505);
+        let keys = keygen(&ctx, &mut rng);
+        let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+        // Jobs: group shapes (3+2), (2), (1+1+2) = 11 pairs total.
+        let shapes: [&[usize]; 3] = [&[3, 2], &[2], &[1, 1, 2]];
+        let total_pairs: usize = shapes.iter().flat_map(|s| s.iter()).sum();
+        let engine = BatchingEngine::new(
+            native.clone(),
+            BatchConfig { max_batch: total_pairs, max_wait: Duration::from_secs(2) },
+        );
+        let jobs: Vec<Vec<Vec<(Ciphertext, Ciphertext)>>> = shapes
+            .iter()
+            .enumerate()
+            .map(|(t, shape)| {
+                shape
+                    .iter()
+                    .enumerate()
+                    .map(|(gi, &len)| {
+                        (0..len as i64)
+                            .map(|k| {
+                                let a = 9 * t as i64 + 2 * gi as i64 + k + 1;
+                                let b = k - 1;
+                                (
+                                    ctx.encrypt(&encode_int(a, ctx.d()), &keys.pk, &mut rng),
+                                    ctx.encrypt(&encode_int(b, ctx.d()), &keys.pk, &mut rng),
+                                )
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        // Solo reference: each job alone on the bare engine.
+        let solo: Vec<Vec<Ciphertext>> = jobs
+            .iter()
+            .map(|groups| {
+                let refs: Vec<Vec<(&Ciphertext, &Ciphertext)>> = groups
+                    .iter()
+                    .map(|g| g.iter().map(|(a, b)| (a, b)).collect())
+                    .collect();
+                let slices: Vec<&[(&Ciphertext, &Ciphertext)]> =
+                    refs.iter().map(|g| g.as_slice()).collect();
+                native.dot_pairs(&slices)
+            })
+            .collect();
+        // Concurrent: all three jobs through the coalescing batcher.
+        let merged: Vec<Vec<Ciphertext>> = std::thread::scope(|s| {
+            let handles: Vec<_> = jobs
+                .iter()
+                .map(|groups| {
+                    let engine = engine.clone();
+                    s.spawn(move || {
+                        let refs: Vec<Vec<(&Ciphertext, &Ciphertext)>> = groups
+                            .iter()
+                            .map(|g| g.iter().map(|(a, b)| (a, b)).collect())
+                            .collect();
+                        let slices: Vec<&[(&Ciphertext, &Ciphertext)]> =
+                            refs.iter().map(|g| g.as_slice()).collect();
+                        engine.dot_pairs(&slices)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let (dispatches, coalesced) = engine.dispatch_counts();
+        assert_eq!(dispatches, 1, "expected one merged dispatch, saw {dispatches}");
+        assert_eq!(coalesced, 1, "the single dispatch must span multiple jobs");
+        for (job_solo, job_merged) in solo.iter().zip(&merged) {
+            assert_eq!(job_solo.len(), job_merged.len());
+            for (a, b) in job_solo.iter().zip(job_merged) {
+                assert_eq!(a.polys, b.polys, "coalescing changed job results");
+                assert_eq!(a.ct_depth, b.ct_depth);
+            }
+        }
         engine.shutdown();
     }
 

@@ -1,9 +1,12 @@
 //! Encrypted regression jobs: specs, lifecycle state, timing.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::tenant::TenantId;
 use crate::els::encrypted::{EncryptedFit, FitConfig};
 use crate::els::model::EncryptedDataset;
+use crate::runtime::exec::Event;
 
 /// Job identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -15,13 +18,36 @@ impl std::fmt::Display for JobId {
     }
 }
 
-/// What to fit.
+/// What to fit, for whom, and by when.
 pub struct JobSpec {
     pub data: EncryptedDataset,
     pub cfg: FitConfig,
     /// If set, run ELS-CD with this many coordinate updates instead of
     /// the GD family (used by the fig2 comparison workloads).
     pub cd_updates: Option<usize>,
+    /// Owning tenant (cache partition + fairness lane). Defaults to
+    /// the `"default"` tenant.
+    pub tenant: TenantId,
+    /// Completion deadline, milliseconds from submission. `None` means
+    /// best-effort. A job whose deadline passes while still queued is
+    /// expired *before* any engine work starts.
+    pub deadline_ms: Option<u64>,
+}
+
+impl JobSpec {
+    pub fn new(data: EncryptedDataset, cfg: FitConfig, cd_updates: Option<usize>) -> Self {
+        JobSpec { data, cfg, cd_updates, tenant: TenantId::default(), deadline_ms: None }
+    }
+
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
 }
 
 /// Lifecycle.
@@ -30,6 +56,8 @@ pub enum JobState {
     Running,
     Done(EncryptedFit),
     Failed(String),
+    /// Deadline passed before the job reached an execution lane.
+    Expired,
 }
 
 impl JobState {
@@ -39,21 +67,40 @@ impl JobState {
             JobState::Running => "running",
             JobState::Done(_) => "done",
             JobState::Failed(_) => "failed",
+            JobState::Expired => "expired",
         }
+    }
+
+    /// Terminal states fire the job's completion event exactly once.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done(_) | JobState::Failed(_) | JobState::Expired)
     }
 }
 
 /// A tracked job.
 pub struct Job {
     pub id: JobId,
+    pub tenant: TenantId,
     pub state: JobState,
     pub submitted: Instant,
+    pub deadline: Option<Instant>,
     pub finished: Option<Instant>,
+    /// One-shot completion event: waiters block here (one condvar per
+    /// job), so a completion wakes this job's waiters and nobody else.
+    pub done: Arc<Event>,
 }
 
 impl Job {
-    pub fn new(id: JobId) -> Self {
-        Job { id, state: JobState::Queued, submitted: Instant::now(), finished: None }
+    pub fn new(id: JobId, tenant: TenantId, deadline: Option<Instant>) -> Self {
+        Job {
+            id,
+            tenant,
+            state: JobState::Queued,
+            submitted: Instant::now(),
+            deadline,
+            finished: None,
+            done: Arc::new(Event::new()),
+        }
     }
 
     pub fn latency(&self) -> Option<Duration> {

@@ -98,17 +98,25 @@ pub struct Metrics {
     pub jobs_completed: AtomicU64,
     pub jobs_rejected: AtomicU64,
     pub jobs_failed: AtomicU64,
+    /// Submissions bounced because the pending queue was at capacity.
+    pub jobs_overloaded: AtomicU64,
+    /// Jobs whose deadline passed before (or at) lane pickup, plus
+    /// submissions rejected as deadline-infeasible up front.
+    pub jobs_expired: AtomicU64,
     pub job_latency: Histogram,
 }
 
 impl Metrics {
     pub fn summary(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} rejected={} failed={} | latency mean={:.1}ms p50≤{:.0}ms p95≤{:.0}ms",
+            "jobs: submitted={} completed={} rejected={} failed={} overloaded={} expired={} \
+             | latency mean={:.1}ms p50≤{:.0}ms p95≤{:.0}ms",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_rejected.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
+            self.jobs_overloaded.load(Ordering::Relaxed),
+            self.jobs_expired.load(Ordering::Relaxed),
             self.job_latency.mean_ms(),
             self.job_latency.quantile_ms(0.5),
             self.job_latency.quantile_ms(0.95),

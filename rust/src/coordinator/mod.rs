@@ -4,12 +4,18 @@
 //! fused backend batches (native threads or XLA artifact launches).
 //!
 //! - [`job`] — specs and lifecycle.
-//! - [`admission`] — depth/growth guardrails with planner proposals.
+//! - [`admission`] — depth/growth guardrails with planner proposals,
+//!   plus load/deadline admission under saturation.
+//! - [`tenant`] — tenant registry, per-tenant operand caches, and the
+//!   per-job `TenantEngine` view.
 //! - [`batcher`] — cross-job dynamic batching (`BatchingEngine`).
-//! - [`arena`] — ciphertext slot slab with high-water accounting.
-//! - [`scheduler`] — the `Coordinator` itself.
+//! - [`arena`] — ciphertext slot slab with high-water accounting and
+//!   the byte-budgeted LRU behind the tenant caches.
+//! - [`scheduler`] — the `Coordinator` itself (executor lanes, timer
+//!   wheel, per-tenant fair queues).
 //! - [`metrics`] — counters and latency histograms.
-//! - [`protocol`] / [`service`] — wire codec, TCP server and client.
+//! - [`protocol`] / [`service`] — versioned wire codec with structured
+//!   error codes, TCP server and client.
 
 pub mod admission;
 pub mod arena;
@@ -19,8 +25,11 @@ pub mod metrics;
 pub mod protocol;
 pub mod scheduler;
 pub mod service;
+pub mod tenant;
 
 pub use batcher::{BatchConfig, BatchingEngine};
 pub use job::{JobId, JobSpec};
-pub use scheduler::Coordinator;
+pub use protocol::{ErrorCode, WireError, WireResult, PROTOCOL_VERSION};
+pub use scheduler::{Coordinator, CoordinatorConfig};
 pub use service::{Client, Server};
+pub use tenant::{TenantEngine, TenantId, TenantRegistry};

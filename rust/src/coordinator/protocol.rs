@@ -15,6 +15,113 @@ use crate::math::bigint::BigUint;
 use crate::math::poly::{Rep, RnsPoly};
 use crate::util::json::Json;
 
+// ---- protocol version / structured errors -------------------------------
+
+/// Wire schema version. Every request and reply carries `"v"`; the
+/// server rejects mismatches with [`ErrorCode::BadVersion`] instead of
+/// mis-parsing a future schema.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Structured error codes carried on the wire (`"code"` on error
+/// replies) and surfaced through `Client`, so callers match on a code
+/// instead of grepping message strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Request `"v"` missing or not [`PROTOCOL_VERSION`].
+    BadVersion,
+    /// Malformed request (unparseable JSON, missing fields, bad codec).
+    BadRequest,
+    /// §4.5 admission rejection: parameters cannot support the job.
+    AdmissionDenied,
+    /// Pending queue at capacity; resubmit later.
+    Overloaded,
+    /// Deadline already infeasible at submit, or expired before the
+    /// job reached an execution lane.
+    DeadlineExceeded,
+    /// No such job id.
+    UnknownJob,
+    /// The job ran and failed (panic or engine error).
+    JobFailed,
+    /// Server-side invariant violation.
+    Internal,
+    /// Client-side transport failure (connect/read/write/parse).
+    Transport,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadVersion => "bad_version",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::AdmissionDenied => "admission_denied",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::UnknownJob => "unknown_job",
+            ErrorCode::JobFailed => "job_failed",
+            ErrorCode::Internal => "internal",
+            ErrorCode::Transport => "transport",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "bad_version" => ErrorCode::BadVersion,
+            "bad_request" => ErrorCode::BadRequest,
+            "admission_denied" => ErrorCode::AdmissionDenied,
+            "overloaded" => ErrorCode::Overloaded,
+            "deadline_exceeded" => ErrorCode::DeadlineExceeded,
+            "unknown_job" => ErrorCode::UnknownJob,
+            "job_failed" => ErrorCode::JobFailed,
+            "internal" => ErrorCode::Internal,
+            "transport" => ErrorCode::Transport,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A coded wire error. Implements `std::error::Error`, so it converts
+/// into `util::error::Error` via the blanket `From` when a caller only
+/// wants the flattened message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        WireError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        WireError::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> Self {
+        WireError::new(ErrorCode::Internal, message)
+    }
+
+    pub fn transport(message: impl Into<String>) -> Self {
+        WireError::new(ErrorCode::Transport, message)
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+pub type WireResult<T> = std::result::Result<T, WireError>;
+
 // ---- hex helpers -------------------------------------------------------
 
 const HEX: &[u8; 16] = b"0123456789abcdef";
@@ -540,6 +647,31 @@ mod tests {
         let mut bad = bad.to_string_json();
         bad = bad.replace("\"encoding\":\"scalar\"", "\"encoding\":\"packed\"");
         assert!(params_from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn error_codes_roundtrip_and_display() {
+        let all = [
+            ErrorCode::BadVersion,
+            ErrorCode::BadRequest,
+            ErrorCode::AdmissionDenied,
+            ErrorCode::Overloaded,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::UnknownJob,
+            ErrorCode::JobFailed,
+            ErrorCode::Internal,
+            ErrorCode::Transport,
+        ];
+        for code in all {
+            assert_eq!(ErrorCode::from_str(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_str("bogus"), None);
+        let e = WireError::new(ErrorCode::Overloaded, "queue full");
+        assert_eq!(e.to_string(), "[overloaded] queue full");
+        // WireError implements std::error::Error, so `?` flattens it
+        // into the repo-wide util::error::Error.
+        let flat: crate::util::error::Error = e.into();
+        assert!(flat.to_string().contains("overloaded"));
     }
 
     #[test]

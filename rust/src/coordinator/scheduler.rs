@@ -1,65 +1,143 @@
-//! The coordinator: accepts encrypted regression jobs, runs admission
-//! control, and executes them on worker threads over a shared (batching)
-//! engine with bounded concurrency.
+//! The coordinator: a multi-tenant serving tier. Jobs pass §4.5 noise
+//! admission plus load/deadline admission, queue per tenant with
+//! round-robin fairness, and execute on the in-tree executor's worker
+//! lanes (`runtime::exec`) over a shared (batching) engine — each job
+//! wrapped in its tenant's [`TenantEngine`] so repeated plaintext
+//! operands hit the tenant's byte-budgeted cache. Deadlines ride a
+//! timer wheel: a job whose deadline passes while still queued is
+//! expired *before* any engine work starts. Completion is signalled
+//! per job through a one-shot event, so a waiter wakes O(1) times no
+//! matter how many unrelated jobs finish.
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::util::error::{anyhow, Result};
-
-use crate::els::encrypted::{self, EncryptedFit};
+use crate::els::encrypted::{self, DatasetRef, EncryptedFit};
 use crate::runtime::backend::HeEngine;
+use crate::runtime::exec::{Executor, TimerHandle, TimerWheel};
 use crate::util::telemetry::{self, Phase};
 
-use super::admission::{admit, AdmissionRequest};
+use super::admission::{admit, admit_load, AdmissionRequest, LoadState};
 use super::job::{Job, JobId, JobSpec, JobState};
 use super::metrics::Metrics;
+use super::protocol::{ErrorCode, WireError, WireResult};
+use super::tenant::{TenantEngine, TenantId, TenantRegistry};
 
-/// Counting semaphore (no tokio offline).
-struct Semaphore {
-    permits: Mutex<usize>,
-    cv: Condvar,
+/// Serving-tier sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Executor worker lanes (jobs executing concurrently).
+    pub lanes: usize,
+    /// Pending-queue capacity across all tenants; submissions beyond
+    /// this are rejected `Overloaded` instead of growing the queue.
+    pub queue_capacity: usize,
+    /// Per-tenant operand-cache byte budget.
+    pub cache_budget_bytes: usize,
+    /// Operand-cache shards per tenant.
+    pub cache_shards: usize,
 }
 
-impl Semaphore {
-    fn new(n: usize) -> Self {
-        Semaphore { permits: Mutex::new(n), cv: Condvar::new() }
-    }
-
-    fn acquire(&self) {
-        let mut p = self.permits.lock().unwrap();
-        while *p == 0 {
-            p = self.cv.wait(p).unwrap();
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            lanes: 4,
+            queue_capacity: 64,
+            cache_budget_bytes: 8 << 20,
+            cache_shards: 4,
         }
-        *p -= 1;
+    }
+}
+
+/// A queued execution: the spec plus the deadline timer to cancel on
+/// pickup.
+struct QueuedJob {
+    id: JobId,
+    spec: JobSpec,
+    timer: Option<TimerHandle>,
+}
+
+/// Per-tenant FIFO queues drained by a rotating round-robin cursor:
+/// each pop serves the next tenant with pending work, so a tenant
+/// flooding the queue cannot starve another's single job. Generic so
+/// the fairness discipline unit-tests without ciphertexts.
+pub(crate) struct TenantQueues<T> {
+    queues: BTreeMap<TenantId, VecDeque<T>>,
+    order: Vec<TenantId>,
+    cursor: usize,
+    pending: usize,
+}
+
+impl<T> Default for TenantQueues<T> {
+    fn default() -> Self {
+        TenantQueues { queues: BTreeMap::new(), order: Vec::new(), cursor: 0, pending: 0 }
+    }
+}
+
+impl<T> TenantQueues<T> {
+    pub(crate) fn push(&mut self, tenant: &TenantId, entry: T) {
+        if !self.queues.contains_key(tenant) {
+            self.order.push(tenant.clone());
+        }
+        self.queues.entry(tenant.clone()).or_default().push_back(entry);
+        self.pending += 1;
     }
 
-    fn release(&self) {
-        *self.permits.lock().unwrap() += 1;
-        self.cv.notify_one();
+    pub(crate) fn pop_fair(&mut self) -> Option<T> {
+        let n = self.order.len();
+        for i in 0..n {
+            let idx = (self.cursor + i) % n;
+            if let Some(entry) = self.queues.get_mut(&self.order[idx]).and_then(VecDeque::pop_front)
+            {
+                self.cursor = (idx + 1) % n;
+                self.pending -= 1;
+                return Some(entry);
+            }
+        }
+        None
+    }
+
+    pub(crate) fn pending(&self) -> usize {
+        self.pending
     }
 }
 
 /// The job coordinator.
 pub struct Coordinator {
     engine: Arc<dyn HeEngine>,
+    exec: Executor,
+    timers: TimerWheel,
     jobs: Mutex<BTreeMap<JobId, Job>>,
-    done_cv: Condvar,
+    queue: Mutex<TenantQueues<QueuedJob>>,
+    tenants: TenantRegistry,
+    running: AtomicUsize,
     next_id: AtomicU64,
-    sem: Semaphore,
+    cfg: CoordinatorConfig,
     pub metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
-    pub fn new(engine: Arc<dyn HeEngine>, max_concurrent: usize) -> Arc<Self> {
+    /// Default-config coordinator with `lanes` worker lanes (the
+    /// pre-serving-tier `max_concurrent` knob).
+    pub fn new(engine: Arc<dyn HeEngine>, lanes: usize) -> Arc<Self> {
+        Self::with_config(
+            engine,
+            CoordinatorConfig { lanes: lanes.max(1), ..CoordinatorConfig::default() },
+        )
+    }
+
+    pub fn with_config(engine: Arc<dyn HeEngine>, cfg: CoordinatorConfig) -> Arc<Self> {
         Arc::new(Coordinator {
             engine,
+            exec: Executor::new("els-coord", cfg.lanes.max(1)),
+            timers: TimerWheel::new("els-coord", Duration::from_millis(5)),
             jobs: Mutex::new(BTreeMap::new()),
-            done_cv: Condvar::new(),
+            queue: Mutex::new(TenantQueues::default()),
+            tenants: TenantRegistry::new(cfg.cache_budget_bytes, cfg.cache_shards),
+            running: AtomicUsize::new(0),
             next_id: AtomicU64::new(1),
-            sem: Semaphore::new(max_concurrent.max(1)),
+            cfg,
             metrics: Arc::new(Metrics::default()),
         })
     }
@@ -68,10 +146,26 @@ impl Coordinator {
         &self.engine
     }
 
-    /// Submit a job. Runs admission control synchronously; on success
-    /// the fit executes on a worker thread.
-    pub fn submit(self: &Arc<Self>, spec: JobSpec) -> Result<JobId> {
+    pub fn tenants(&self) -> &TenantRegistry {
+        &self.tenants
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Jobs queued but not yet picked up by a lane.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.lock().unwrap().pending()
+    }
+
+    /// Submit a job. Noise admission (§4.5) and load/deadline
+    /// admission run synchronously; on success the fit executes on an
+    /// executor lane under the tenant's engine view.
+    pub fn submit(self: &Arc<Self>, spec: JobSpec) -> WireResult<JobId> {
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let tenant = self.tenants.get_or_create(&spec.tenant);
+        tenant.counters.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let req = AdmissionRequest {
             n_obs: spec.data.n(),
             p_vars: spec.data.p(),
@@ -87,50 +181,119 @@ impl Coordinator {
         };
         if let Err(e) = admitted {
             self.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(anyhow!(e));
+            tenant.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(WireError::new(ErrorCode::AdmissionDenied, e.to_string()));
+        }
+        // Load/deadline admission under the queue lock, so the
+        // capacity check and the enqueue are one atomic step.
+        let mut queue = self.queue.lock().unwrap();
+        let load = LoadState {
+            pending: queue.pending(),
+            running: self.running.load(Ordering::Relaxed),
+            lanes: self.cfg.lanes,
+            queue_capacity: self.cfg.queue_capacity,
+            mean_latency_ms: self.metrics.job_latency.mean_ms(),
+        };
+        if let Err(e) = admit_load(&load, spec.deadline_ms) {
+            match e.code {
+                ErrorCode::Overloaded => {
+                    self.metrics.jobs_overloaded.fetch_add(1, Ordering::Relaxed)
+                }
+                _ => self.metrics.jobs_expired.fetch_add(1, Ordering::Relaxed),
+            };
+            tenant.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
         }
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        self.jobs.lock().unwrap().insert(id, Job::new(id));
-        let me = self.clone();
-        std::thread::Builder::new()
-            .name(format!("els-{id}"))
-            .spawn(move || me.run_job(id, spec))
-            .expect("spawning job worker");
+        let deadline = spec.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        let job = Job::new(id, spec.tenant.clone(), deadline);
+        self.jobs.lock().unwrap().insert(id, job);
+        let timer = deadline.map(|d| {
+            let me = Arc::clone(self);
+            self.timers.schedule(d, move || me.expire_if_queued(id))
+        });
+        let tenant_id = spec.tenant.clone();
+        queue.push(&tenant_id, QueuedJob { id, spec, timer });
+        drop(queue);
+        // 1:1 invariant: every queued entry gets exactly one lane task,
+        // and every lane task pops exactly one entry (possibly finding
+        // it already expired).
+        let me = Arc::clone(self);
+        self.exec.spawn(move || me.run_next());
         Ok(id)
     }
 
-    fn run_job(self: &Arc<Self>, id: JobId, spec: JobSpec) {
-        {
-            // Time spent waiting on the concurrency semaphore = queueing.
-            let _queued = telemetry::span(Phase::JobQueue);
-            self.sem.acquire();
-        }
-        {
-            let mut jobs = self.jobs.lock().unwrap();
-            if let Some(j) = jobs.get_mut(&id) {
-                j.state = JobState::Running;
+    /// Expire `id` if it is still queued (timer-wheel callback; also
+    /// the pop-time check's backend). Never touches a running job.
+    fn expire_if_queued(&self, id: JobId) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(j) = jobs.get_mut(&id) {
+            if matches!(j.state, JobState::Queued) {
+                j.state = JobState::Expired;
+                j.finished = Some(Instant::now());
+                self.metrics.jobs_expired.fetch_add(1, Ordering::Relaxed);
+                j.done.notify();
             }
         }
+    }
+
+    /// Lane task: pop one queued entry fairly and execute it (or
+    /// retire it, if its deadline already passed).
+    fn run_next(self: &Arc<Self>) {
+        let entry = {
+            let _span = telemetry::span(Phase::JobQueue);
+            self.queue.lock().unwrap().pop_fair()
+        };
+        let Some(QueuedJob { id, spec, timer }) = entry else {
+            return;
+        };
+        if let Some(t) = timer {
+            t.cancel();
+        }
+        // Deadline check *before* any engine work: an expired job must
+        // never reach the execution phase.
+        {
+            let mut jobs = self.jobs.lock().unwrap();
+            let Some(j) = jobs.get_mut(&id) else { return };
+            if !matches!(j.state, JobState::Queued) {
+                return; // timer already expired it
+            }
+            if j.deadline.is_some_and(|d| Instant::now() >= d) {
+                drop(jobs);
+                self.expire_if_queued(id);
+                return;
+            }
+            j.state = JobState::Running;
+        }
+        self.running.fetch_add(1, Ordering::Relaxed);
+        let tenant = self.tenants.get_or_create(&spec.tenant);
+        let engine = TenantEngine::new(Arc::clone(&self.engine), Arc::clone(&tenant));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let _span = telemetry::span(Phase::JobExecute);
             match spec.cd_updates {
                 Some(updates) => {
-                    encrypted::fit_cd(self.engine.as_ref(), &spec.data, spec.cfg.nu, updates)
+                    Ok(encrypted::fit_cd(&engine, &spec.data, spec.cfg.nu, updates))
                 }
-                None => encrypted::fit(self.engine.as_ref(), &spec.data, &spec.cfg),
+                None => encrypted::fit(&engine, &DatasetRef::Scalar(&spec.data), &spec.cfg)
+                    .map(|outcome| outcome.fit),
             }
         }));
-        self.sem.release();
+        self.running.fetch_sub(1, Ordering::Relaxed);
         let mut jobs = self.jobs.lock().unwrap();
         if let Some(j) = jobs.get_mut(&id) {
             j.finished = Some(Instant::now());
             match result {
-                Ok(fit) => {
+                Ok(Ok(fit)) => {
                     self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    tenant.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
                     if let Some(lat) = j.latency() {
                         self.metrics.job_latency.observe(lat);
                     }
                     j.state = JobState::Done(fit);
+                }
+                Ok(Err(e)) => {
+                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    j.state = JobState::Failed(e.to_string());
                 }
                 Err(e) => {
                     self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
@@ -142,8 +305,8 @@ impl Coordinator {
                     j.state = JobState::Failed(msg);
                 }
             }
+            j.done.notify();
         }
-        self.done_cv.notify_all();
     }
 
     /// Current state label (None if unknown id).
@@ -151,47 +314,56 @@ impl Coordinator {
         self.jobs.lock().unwrap().get(&id).map(|j| j.state.label().to_string())
     }
 
-    /// Block until the job leaves the queue/running states.
-    pub fn wait(&self, id: JobId, timeout: Duration) -> Result<()> {
-        let deadline = Instant::now() + timeout;
-        let mut jobs = self.jobs.lock().unwrap();
-        loop {
-            match jobs.get(&id) {
-                None => return Err(anyhow!("unknown job {id}")),
-                Some(j) => match j.state {
-                    JobState::Done(_) | JobState::Failed(_) => return Ok(()),
-                    _ => {}
-                },
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return Err(anyhow!("timeout waiting for {id}"));
-            }
-            let (guard, _) = self.done_cv.wait_timeout(jobs, deadline - now).unwrap();
-            jobs = guard;
+    /// How many state inspections `wait` callers have performed on
+    /// this job's completion event (O(1)-wakeup diagnostics).
+    pub fn event_checks(&self, id: JobId) -> Option<u64> {
+        self.jobs.lock().unwrap().get(&id).map(|j| j.done.checks())
+    }
+
+    /// When the job reached a terminal state.
+    pub fn finished_at(&self, id: JobId) -> Option<Instant> {
+        self.jobs.lock().unwrap().get(&id).and_then(|j| j.finished)
+    }
+
+    /// Block until the job reaches a terminal state. Waiters park on
+    /// the job's own event — completions of other jobs do not wake
+    /// them (see `event_checks`).
+    pub fn wait(&self, id: JobId, timeout: Duration) -> WireResult<()> {
+        let event = match self.jobs.lock().unwrap().get(&id) {
+            Some(j) => Arc::clone(&j.done),
+            None => return Err(WireError::new(ErrorCode::UnknownJob, format!("unknown {id}"))),
+        };
+        if event.wait_timeout(timeout) {
+            Ok(())
+        } else {
+            Err(WireError::internal(format!("timeout waiting for {id}")))
         }
     }
 
     /// Remove and return a finished fit.
-    pub fn take_result(&self, id: JobId) -> Result<EncryptedFit> {
+    pub fn take_result(&self, id: JobId) -> WireResult<EncryptedFit> {
         let mut jobs = self.jobs.lock().unwrap();
-        match jobs.get(&id).map(|j| j.state.label()) {
-            None => Err(anyhow!("unknown job {id}")),
-            Some("done") => {
+        let terminal = jobs.get(&id).map(|j| j.state.is_terminal());
+        match terminal {
+            None => Err(WireError::new(ErrorCode::UnknownJob, format!("unknown {id}"))),
+            Some(true) => {
                 let job = jobs.remove(&id).unwrap();
                 match job.state {
                     JobState::Done(fit) => Ok(fit),
+                    JobState::Failed(msg) => {
+                        Err(WireError::new(ErrorCode::JobFailed, format!("job failed: {msg}")))
+                    }
+                    JobState::Expired => Err(WireError::new(
+                        ErrorCode::DeadlineExceeded,
+                        format!("{id} expired before execution"),
+                    )),
                     _ => unreachable!(),
                 }
             }
-            Some("failed") => {
-                let job = jobs.remove(&id).unwrap();
-                match job.state {
-                    JobState::Failed(msg) => Err(anyhow!("job failed: {msg}")),
-                    _ => unreachable!(),
-                }
+            Some(false) => {
+                let s = jobs.get(&id).unwrap().state.label();
+                Err(WireError::internal(format!("{id} still {s}")))
             }
-            Some(s) => Err(anyhow!("job {id} still {s}")),
         }
     }
 }
@@ -201,6 +373,7 @@ mod tests {
     use std::sync::Arc;
 
     use super::*;
+    use crate::coordinator::batcher::{BatchConfig, BatchingEngine};
     use crate::data::synth;
     use crate::els::encrypted::{decrypt_coefficients, FitConfig};
     use crate::els::exact::{self, QuantisedData};
@@ -211,40 +384,67 @@ mod tests {
     use crate::fhe::params::{plan, PlanRequest};
     use crate::fhe::rng::ChaChaRng;
     use crate::fhe::FvContext;
-    use crate::coordinator::batcher::{BatchConfig, BatchingEngine};
     use crate::runtime::backend::NativeEngine;
 
-    #[test]
-    fn concurrent_jobs_complete_and_match_exact() {
-        let mut rng = ChaChaRng::from_seed(601);
+    struct Fixture {
+        ctx: Arc<FvContext>,
+        keys: crate::fhe::KeySet,
+        q: QuantisedData,
+        nu: u64,
+        rng: ChaChaRng,
+    }
+
+    fn fixture(seed: u64, iters: usize) -> Fixture {
+        let mut rng = ChaChaRng::from_seed(seed);
         let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
         let q = QuantisedData::from_f64(&x, &y, 2);
         let (xq, _) = q.dequantised();
         let nu = nu_optimal(&xq);
-        let params = plan(&PlanRequest::gd(6, 2, 2, 2, nu)).unwrap();
+        let params = plan(&PlanRequest::gd(6, 2, iters, 2, nu)).unwrap();
         let ctx = FvContext::new(params);
         let keys = keygen(&ctx, &mut rng);
-        let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+        Fixture { ctx, keys, q, nu, rng }
+    }
+
+    #[test]
+    fn tenant_queue_round_robin_is_fair() {
+        let mut q: TenantQueues<u32> = TenantQueues::default();
+        let (a, b) = (TenantId::new("a"), TenantId::new("b"));
+        q.push(&a, 1);
+        q.push(&a, 2);
+        q.push(&a, 3);
+        q.push(&b, 10);
+        q.push(&b, 11);
+        assert_eq!(q.pending(), 5);
+        // Rotating cursor: a flooding tenant interleaves 1:1 with the
+        // other tenant until one drains.
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop_fair()).collect();
+        assert_eq!(order, vec![1, 10, 2, 11, 3]);
+        assert_eq!(q.pending(), 0);
+        assert!(q.pop_fair().is_none());
+    }
+
+    #[test]
+    fn concurrent_jobs_complete_and_match_exact() {
+        let mut f = fixture(601, 2);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
         let engine = BatchingEngine::new(native, BatchConfig::default());
         let coord = Coordinator::new(engine.clone(), 4);
 
         let ids: Vec<JobId> = (0..3)
             .map(|_| {
-                let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+                let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
                 coord
-                    .submit(JobSpec {
-                        data,
-                        cfg: FitConfig::gd(2, nu),
-                        cd_updates: None,
-                    })
+                    .submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None))
                     .unwrap()
             })
             .collect();
-        let expect = exact::gd_exact(&q, nu, 2).decode_last();
+        let expect = exact::gd_exact(&f.q, f.nu, 2).decode_last();
         for id in ids {
             coord.wait(id, Duration::from_secs(600)).unwrap();
             let fit = coord.take_result(id).unwrap();
-            let dec = decrypt_coefficients(&ctx, &keys.sk, &fit);
+            let dec = decrypt_coefficients(&f.ctx, &f.keys.sk, &fit);
             assert!(linf(&dec, &expect) < 1e-9);
         }
         assert_eq!(coord.metrics.jobs_completed.load(Ordering::Relaxed), 3);
@@ -253,21 +453,188 @@ mod tests {
 
     #[test]
     fn oversized_job_is_rejected_at_submit() {
-        let mut rng = ChaChaRng::from_seed(602);
-        let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
-        let q = QuantisedData::from_f64(&x, &y, 2);
-        let nu = 16;
-        let params = plan(&PlanRequest::gd(6, 2, 1, 2, nu)).unwrap();
-        let ctx = FvContext::new(params);
-        let keys = keygen(&ctx, &mut rng);
-        let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+        let mut f = fixture(602, 1);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
         let coord = Coordinator::new(native, 2);
-        let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
         // 10 iterations on 1-iteration params must be rejected.
         let err = coord
-            .submit(JobSpec { data, cfg: FitConfig::gd(10, nu), cd_updates: None })
+            .submit(JobSpec::new(data, FitConfig::gd(10, f.nu), None))
             .unwrap_err();
+        assert_eq!(err.code, ErrorCode::AdmissionDenied);
         assert!(err.to_string().contains("rejected"), "{err}");
         assert_eq!(coord.metrics.jobs_rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn zero_deadline_expires_before_any_engine_work() {
+        let mut f = fixture(603, 2);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord = Coordinator::new(native.clone(), 2);
+        let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let muls_before = native.stats().snapshot().0;
+        // deadline_ms = 0: already past at pop time, deterministically.
+        // (The submit-time estimator has no latency history yet, so the
+        // job is admitted and must die at the queue boundary instead.)
+        let id = coord
+            .submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None).with_deadline_ms(0))
+            .unwrap();
+        coord.wait(id, Duration::from_secs(600)).unwrap();
+        assert_eq!(coord.state(id).as_deref(), Some("expired"));
+        let err = coord.take_result(id).unwrap_err();
+        assert_eq!(err.code, ErrorCode::DeadlineExceeded, "{err}");
+        // The rejection happened *before* expensive work started: not
+        // a single ciphertext multiplication ran.
+        assert_eq!(native.stats().snapshot().0, muls_before);
+        assert!(coord.metrics.jobs_expired.load(Ordering::Relaxed) >= 1);
+        assert_eq!(coord.metrics.jobs_completed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn infeasible_deadline_is_rejected_at_submit_once_calibrated() {
+        let mut f = fixture(604, 2);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord = Coordinator::new(native, 1);
+        // Calibrate: one completed job gives the estimator a non-zero
+        // mean service time.
+        let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let id = coord.submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None)).unwrap();
+        coord.wait(id, Duration::from_secs(600)).unwrap();
+        let _ = coord.take_result(id).unwrap();
+        assert!(coord.metrics.job_latency.mean_ms() > 0.0);
+        // Now a 0ms deadline is provably infeasible at submit: the
+        // client learns before shipping work into the queue.
+        let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let err = coord
+            .submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None).with_deadline_ms(0))
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::DeadlineExceeded, "{err}");
+        assert!(err.to_string().contains("infeasible"), "{err}");
+    }
+
+    #[test]
+    fn queue_capacity_bounces_overloaded() {
+        let mut f = fixture(605, 2);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord = Coordinator::with_config(
+            native,
+            CoordinatorConfig { lanes: 1, queue_capacity: 2, ..CoordinatorConfig::default() },
+        );
+        // Saturate: with 1 lane and capacity 2, at least one of six
+        // rapid submissions must bounce Overloaded (the lane cannot
+        // drain 4 fits in the sub-millisecond submission burst —
+        // datasets are pre-encrypted so the burst really is tight).
+        let datasets: Vec<_> = (0..6)
+            .map(|_| encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng))
+            .collect();
+        let mut accepted = Vec::new();
+        let mut overloaded = 0;
+        for data in datasets {
+            match coord.submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None)) {
+                Ok(id) => accepted.push(id),
+                Err(e) => {
+                    assert_eq!(e.code, ErrorCode::Overloaded, "{e}");
+                    overloaded += 1;
+                }
+            }
+        }
+        assert!(overloaded >= 1, "queue never reported overload");
+        assert_eq!(
+            coord.metrics.jobs_overloaded.load(Ordering::Relaxed),
+            overloaded as u64
+        );
+        // Every accepted job still completes: bounded, not lossy.
+        for id in accepted {
+            coord.wait(id, Duration::from_secs(600)).unwrap();
+            let _ = coord.take_result(id).unwrap();
+        }
+    }
+
+    #[test]
+    fn tenant_fairness_under_saturation() {
+        let mut f = fixture(606, 2);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord = Coordinator::new(native, 1);
+        // Pre-encrypt so the submission burst is tight.
+        let datasets: Vec<_> = (0..7)
+            .map(|_| encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng))
+            .collect();
+        let mut it = datasets.into_iter();
+        let flood = TenantId::new("flood");
+        let small = TenantId::new("small");
+        let flood_ids: Vec<JobId> = (0..6)
+            .map(|_| {
+                coord
+                    .submit(
+                        JobSpec::new(it.next().unwrap(), FitConfig::gd(2, f.nu), None)
+                            .with_tenant(flood.clone()),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        let small_id = coord
+            .submit(
+                JobSpec::new(it.next().unwrap(), FitConfig::gd(2, f.nu), None)
+                    .with_tenant(small.clone()),
+            )
+            .unwrap();
+        for id in flood_ids.iter().chain([&small_id]) {
+            coord.wait(*id, Duration::from_secs(600)).unwrap();
+        }
+        // Round-robin: the small tenant's single job must not wait out
+        // the flooding tenant's whole backlog. It finishes strictly
+        // before the flood's last job on the single lane.
+        let small_done = coord.finished_at(small_id).unwrap();
+        let flood_last = flood_ids.iter().map(|id| coord.finished_at(*id).unwrap()).max().unwrap();
+        assert!(
+            small_done < flood_last,
+            "small tenant starved behind the flooding tenant's backlog"
+        );
+        assert_eq!(coord.metrics.jobs_completed.load(Ordering::Relaxed), 7);
+        // Per-tenant counters saw the split.
+        let ts = coord.tenants().get(&flood).unwrap();
+        assert_eq!(ts.counters.jobs_completed.load(Ordering::Relaxed), 6);
+        let ts = coord.tenants().get(&small).unwrap();
+        assert_eq!(ts.counters.jobs_completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn wait_performs_constant_state_checks() {
+        let mut f = fixture(607, 2);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord = Coordinator::new(native, 1);
+        // Single lane: the last job completes after all the others. A
+        // waiter on it must sleep through the earlier completions —
+        // per-job events, not a broadcast condvar.
+        let ids: Vec<JobId> = (0..4)
+            .map(|_| {
+                let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+                coord.submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None)).unwrap()
+            })
+            .collect();
+        let last = *ids.last().unwrap();
+        let waiter = {
+            let coord = Arc::clone(&coord);
+            std::thread::spawn(move || coord.wait(last, Duration::from_secs(600)))
+        };
+        for id in &ids {
+            coord.wait(*id, Duration::from_secs(600)).unwrap();
+        }
+        waiter.join().unwrap().unwrap();
+        // The spawned waiter plus this thread's wait both parked on the
+        // last job's event: entry + wakeup checks each, nothing per
+        // unrelated completion. (A broadcast design would have paid a
+        // check per finished job per waiter.)
+        let checks = coord.event_checks(last).unwrap();
+        assert!(checks <= 6, "long wait performed {checks} state checks");
+        for id in ids {
+            let _ = coord.take_result(id).unwrap();
+        }
     }
 }

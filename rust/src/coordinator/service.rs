@@ -1,14 +1,26 @@
 //! TCP service: line-delimited JSON requests against a [`Coordinator`].
 //!
-//! Requests (one JSON object per line):
-//! - `{"type":"submit","data":{...},"cfg":{...}}` → `{"ok":true,"id":N}`
-//! - `{"type":"status","id":N}` → `{"ok":true,"state":"running"}`
-//! - `{"type":"result","id":N}` → `{"ok":true,"fit":{...}}` (waits)
-//! - `{"type":"metrics"}` → `{"ok":true,"summary":"...","stats":{...},
-//!   "snapshot":{...}}` — `snapshot` is the unified
+//! Every request and reply carries the wire schema version `"v"`
+//! (currently [`proto::PROTOCOL_VERSION`]); the server answers any
+//! other (or missing) version with code `bad_version` instead of
+//! mis-parsing a future schema. Requests (one JSON object per line):
+//!
+//! - `{"v":1,"type":"submit","data":{...},"cfg":{...}}` with optional
+//!   `"tenant":"name"` and `"deadline_ms":N` → `{"v":1,"ok":true,"id":N}`
+//! - `{"v":1,"type":"status","id":N}` → `{"v":1,"ok":true,"state":"running"}`
+//! - `{"v":1,"type":"result","id":N}` → `{"v":1,"ok":true,"fit":{...}}` (waits)
+//! - `{"v":1,"type":"metrics"}` → `{"v":1,"ok":true,"summary":"...",
+//!   "stats":{...},"snapshot":{...},"histogram":{...},"tenants":[...]}`
+//!   — `snapshot` is the unified
 //!   [`MetricsSnapshot`](crate::util::telemetry::MetricsSnapshot)
-//!   document (schema `els-metrics-v1`)
-//! - `{"type":"ping"}` → `{"ok":true}`
+//!   document (schema `els-metrics-v1`), `histogram` the job-latency
+//!   histogram, `tenants` the per-tenant cache/counter registry
+//! - `{"v":1,"type":"ping"}` → `{"v":1,"ok":true}`
+//!
+//! Error replies are `{"v":1,"ok":false,"code":"...","error":"..."}`
+//! with `code` one of the structured [`proto::ErrorCode`] values;
+//! [`Client`] surfaces them as typed [`WireError`]s (transport
+//! failures map to code `transport`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -16,11 +28,13 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::util::error::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
 
-use crate::coordinator::job::JobId;
+use crate::coordinator::job::{JobId, JobSpec};
 use crate::coordinator::protocol as proto;
+use crate::coordinator::protocol::{ErrorCode, WireError, WireResult};
 use crate::coordinator::scheduler::Coordinator;
+use crate::coordinator::tenant::TenantId;
 use crate::els::encrypted::EncryptedFit;
 use crate::els::model::EncryptedDataset;
 use crate::util::json::Json;
@@ -77,6 +91,14 @@ impl Drop for Server {
     }
 }
 
+/// The shared `("v", "ok")` prefix of every reply.
+fn reply_base(ok: bool) -> Vec<(&'static str, Json)> {
+    vec![
+        ("v", Json::Num(proto::PROTOCOL_VERSION as f64)),
+        ("ok", Json::Bool(ok)),
+    ]
+}
+
 fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -91,143 +113,246 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
         let _span = telemetry::span(Phase::ServeReply);
         let response = match handle_request(&coord, line.trim()) {
             Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(&format!("{e:#}"))),
-            ]),
+            Err(e) => {
+                let mut fields = reply_base(false);
+                fields.push(("code", Json::str(e.code.as_str())));
+                fields.push(("error", Json::str(&e.message)));
+                Json::obj(fields)
+            }
         };
         writer.write_all(response.to_string_json().as_bytes())?;
         writer.write_all(b"\n")?;
     }
 }
 
-fn handle_request(coord: &Arc<Coordinator>, line: &str) -> Result<Json> {
-    let req = Json::parse(line).context("malformed request JSON")?;
-    let typ = req.req("type")?.as_str().context("type")?;
+/// Flatten a codec/decode failure into a `bad_request` wire error.
+fn bad<T>(r: Result<T>) -> WireResult<T> {
+    r.map_err(|e| WireError::bad_request(format!("{e:#}")))
+}
+
+/// A required request field, or `bad_request`.
+fn field<'a>(req: &'a Json, key: &str) -> WireResult<&'a Json> {
+    req.get(key).ok_or_else(|| WireError::bad_request(format!("missing field '{key}'")))
+}
+
+fn handle_request(coord: &Arc<Coordinator>, line: &str) -> WireResult<Json> {
+    let req = Json::parse(line)
+        .map_err(|e| WireError::bad_request(format!("malformed request JSON: {e:#}")))?;
+    // Version gate before anything else: a future schema must bounce
+    // cleanly, not half-parse.
+    let v = req.get("v").and_then(Json::as_u64);
+    if v != Some(proto::PROTOCOL_VERSION) {
+        let got = v.map(|x| x.to_string()).unwrap_or_else(|| "absent".into());
+        return Err(WireError::new(
+            ErrorCode::BadVersion,
+            format!("request v={got}, server speaks v={}", proto::PROTOCOL_VERSION),
+        ));
+    }
+    let typ = field(&req, "type")?
+        .as_str()
+        .ok_or_else(|| WireError::bad_request("'type' must be a string"))?;
     match typ {
-        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        "ping" => Ok(Json::obj(reply_base(true))),
         "submit" => {
             let ctx = coord.engine().ctx();
-            let data = proto::dataset_from_json(ctx, req.req("data")?)?;
-            let (cfg, cd_updates) = proto::cfg_from_json(req.req("cfg")?)?;
-            let id = coord.submit(crate::coordinator::job::JobSpec {
-                data,
-                cfg,
-                cd_updates,
-            })?;
-            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("id", Json::Num(id.0 as f64))]))
+            let data = bad(proto::dataset_from_json(ctx, field(&req, "data")?))?;
+            let (cfg, cd_updates) = bad(proto::cfg_from_json(field(&req, "cfg")?))?;
+            let mut spec = JobSpec::new(data, cfg, cd_updates);
+            if let Some(tenant) = req.get("tenant").and_then(Json::as_str) {
+                spec = spec.with_tenant(TenantId::new(tenant));
+            }
+            if let Some(ms) = req.get("deadline_ms").and_then(Json::as_u64) {
+                spec = spec.with_deadline_ms(ms);
+            }
+            let id = coord.submit(spec)?;
+            let mut fields = reply_base(true);
+            fields.push(("id", Json::Num(id.0 as f64)));
+            Ok(Json::obj(fields))
         }
         "status" => {
-            let id = JobId(req.req("id")?.as_u64().context("id")?);
-            let state = coord.state(id).ok_or_else(|| anyhow!("unknown job {id}"))?;
-            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("state", Json::str(&state))]))
+            let id = JobId(
+                field(&req, "id")?
+                    .as_u64()
+                    .ok_or_else(|| WireError::bad_request("'id' must be a number"))?,
+            );
+            let state = coord.state(id).ok_or_else(|| {
+                WireError::new(ErrorCode::UnknownJob, format!("unknown job {id}"))
+            })?;
+            let mut fields = reply_base(true);
+            fields.push(("state", Json::str(&state)));
+            Ok(Json::obj(fields))
         }
         "result" => {
-            let id = JobId(req.req("id")?.as_u64().context("id")?);
+            let id = JobId(
+                field(&req, "id")?
+                    .as_u64()
+                    .ok_or_else(|| WireError::bad_request("'id' must be a number"))?,
+            );
             coord.wait(id, Duration::from_secs(3600))?;
             let fit = coord.take_result(id)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("fit", proto::fit_to_json(&fit)),
-            ]))
+            let mut fields = reply_base(true);
+            fields.push(("fit", proto::fit_to_json(&fit)));
+            Ok(Json::obj(fields))
         }
         "metrics" => {
             let (muls, plains, adds, batches) = coord.engine().stats().snapshot();
-            let snapshot = MetricsSnapshot::capture(coord.engine().ctx(), coord.engine().stats())
-                .with_coordinator(&coord.metrics);
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("summary", Json::str(&coord.metrics.summary())),
-                (
-                    "stats",
-                    Json::obj(vec![
-                        ("ct_muls", Json::Num(muls as f64)),
-                        ("plain_muls", Json::Num(plains as f64)),
-                        ("adds", Json::Num(adds as f64)),
-                        ("batches", Json::Num(batches as f64)),
-                    ]),
-                ),
-                ("snapshot", snapshot.to_json()),
-            ]))
+            let snapshot =
+                MetricsSnapshot::capture(coord.engine().ctx(), coord.engine().stats())
+                    .with_coordinator(&coord.metrics);
+            let mut fields = reply_base(true);
+            fields.push(("summary", Json::str(&coord.metrics.summary())));
+            fields.push((
+                "stats",
+                Json::obj(vec![
+                    ("ct_muls", Json::Num(muls as f64)),
+                    ("plain_muls", Json::Num(plains as f64)),
+                    ("adds", Json::Num(adds as f64)),
+                    ("batches", Json::Num(batches as f64)),
+                ]),
+            ));
+            fields.push(("snapshot", snapshot.to_json()));
+            fields.push(("histogram", coord.metrics.job_latency.to_json()));
+            fields.push(("tenants", coord.tenants().to_json()));
+            Ok(Json::obj(fields))
         }
-        other => Err(anyhow!("unknown request type '{other}'")),
+        other => Err(WireError::bad_request(format!("unknown request type '{other}'"))),
     }
 }
 
-/// Blocking client for the wire protocol.
+/// Blocking client for the wire protocol. Every method returns a typed
+/// [`WireResult`]: server rejections keep their structured code,
+/// connect/read/write/parse failures map to [`ErrorCode::Transport`].
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
+fn transport(e: std::io::Error) -> WireError {
+    WireError::transport(e.to_string())
+}
+
 impl Client {
-    pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    pub fn connect(addr: &str) -> WireResult<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| WireError::transport(format!("connecting {addr}: {e}")))?;
         stream.set_nodelay(true).ok();
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        let reader = BufReader::new(stream.try_clone().map_err(transport)?);
+        Ok(Client { reader, writer: stream })
     }
 
-    fn call(&mut self, req: Json) -> Result<Json> {
-        self.writer.write_all(req.to_string_json().as_bytes())?;
-        self.writer.write_all(b"\n")?;
+    /// One request/reply round-trip; `fields` ride alongside the
+    /// always-present `"v"` and `"type"`.
+    fn call(&mut self, typ: &str, mut fields: Vec<(&'static str, Json)>) -> WireResult<Json> {
+        let mut all = vec![
+            ("v", Json::Num(proto::PROTOCOL_VERSION as f64)),
+            ("type", Json::str(typ)),
+        ];
+        all.append(&mut fields);
+        let req = Json::obj(all);
+        self.writer.write_all(req.to_string_json().as_bytes()).map_err(transport)?;
+        self.writer.write_all(b"\n").map_err(transport)?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let resp = Json::parse(line.trim()).context("malformed response")?;
-        if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
-            let msg = resp
-                .get("error")
-                .and_then(|e| e.as_str())
-                .unwrap_or("unknown server error");
-            return Err(anyhow!("server error: {msg}"));
+        self.reader.read_line(&mut line).map_err(transport)?;
+        if line.is_empty() {
+            return Err(WireError::transport("server closed the connection"));
         }
-        Ok(resp)
+        let resp = Json::parse(line.trim())
+            .map_err(|e| WireError::transport(format!("malformed response: {e:#}")))?;
+        if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            return Ok(resp);
+        }
+        let code = resp
+            .get("code")
+            .and_then(|c| c.as_str())
+            .and_then(ErrorCode::from_str)
+            .unwrap_or(ErrorCode::Internal);
+        let msg = resp
+            .get("error")
+            .and_then(|e| e.as_str())
+            .unwrap_or("unknown server error");
+        Err(WireError::new(code, msg))
     }
 
-    pub fn ping(&mut self) -> Result<()> {
-        self.call(Json::obj(vec![("type", Json::str("ping"))])).map(|_| ())
+    pub fn ping(&mut self) -> WireResult<()> {
+        self.call("ping", vec![]).map(|_| ())
     }
 
+    /// Submit under the default tenant with no deadline.
     pub fn submit(
         &mut self,
         data: &EncryptedDataset,
         cfg: &crate::els::encrypted::FitConfig,
         cd_updates: Option<usize>,
-    ) -> Result<JobId> {
-        let resp = self.call(Json::obj(vec![
-            ("type", Json::str("submit")),
-            ("data", proto::dataset_to_json(data)),
-            ("cfg", proto::cfg_to_json(cfg, cd_updates)),
-        ]))?;
-        Ok(JobId(resp.req("id")?.as_u64().context("id")?))
+    ) -> WireResult<JobId> {
+        self.submit_with(data, cfg, cd_updates, None, None)
     }
 
-    pub fn status(&mut self, id: JobId) -> Result<String> {
-        let resp = self.call(Json::obj(vec![
-            ("type", Json::str("status")),
-            ("id", Json::Num(id.0 as f64)),
-        ]))?;
-        Ok(resp.req("state")?.as_str().context("state")?.to_string())
+    /// Submit with an explicit tenant and/or deadline.
+    pub fn submit_with(
+        &mut self,
+        data: &EncryptedDataset,
+        cfg: &crate::els::encrypted::FitConfig,
+        cd_updates: Option<usize>,
+        tenant: Option<&str>,
+        deadline_ms: Option<u64>,
+    ) -> WireResult<JobId> {
+        let mut fields = vec![
+            ("data", proto::dataset_to_json(data)),
+            ("cfg", proto::cfg_to_json(cfg, cd_updates)),
+        ];
+        if let Some(t) = tenant {
+            fields.push(("tenant", Json::str(t)));
+        }
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", Json::Num(ms as f64)));
+        }
+        let resp = self.call("submit", fields)?;
+        let id = resp
+            .get("id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| WireError::transport("reply missing 'id'"))?;
+        Ok(JobId(id))
+    }
+
+    pub fn status(&mut self, id: JobId) -> WireResult<String> {
+        let resp = self.call("status", vec![("id", Json::Num(id.0 as f64))])?;
+        resp.get("state")
+            .and_then(|s| s.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| WireError::transport("reply missing 'state'"))
     }
 
     /// Block until the job finishes and fetch the encrypted fit.
-    pub fn result(&mut self, ctx: &crate::fhe::FvContext, id: JobId) -> Result<EncryptedFit> {
-        let resp = self.call(Json::obj(vec![
-            ("type", Json::str("result")),
-            ("id", Json::Num(id.0 as f64)),
-        ]))?;
-        proto::fit_from_json(ctx, resp.req("fit")?)
+    pub fn result(&mut self, ctx: &crate::fhe::FvContext, id: JobId) -> WireResult<EncryptedFit> {
+        let resp = self.call("result", vec![("id", Json::Num(id.0 as f64))])?;
+        let fit = resp
+            .get("fit")
+            .ok_or_else(|| WireError::transport("reply missing 'fit'"))?;
+        proto::fit_from_json(ctx, fit)
+            .map_err(|e| WireError::transport(format!("undecodable fit: {e:#}")))
     }
 
-    pub fn metrics(&mut self) -> Result<String> {
-        let resp = self.call(Json::obj(vec![("type", Json::str("metrics"))]))?;
-        Ok(resp.req("summary")?.as_str().context("summary")?.to_string())
+    pub fn metrics(&mut self) -> WireResult<String> {
+        let resp = self.call("metrics", vec![])?;
+        resp.get("summary")
+            .and_then(|s| s.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| WireError::transport("reply missing 'summary'"))
     }
 
     /// Fetch the server's unified [`MetricsSnapshot`] JSON document
     /// (schema `els-metrics-v1`) — the machine-readable counterpart of
     /// [`metrics`](Self::metrics).
-    pub fn metrics_snapshot(&mut self) -> Result<Json> {
-        let resp = self.call(Json::obj(vec![("type", Json::str("metrics"))]))?;
-        Ok(resp.req("snapshot")?.clone())
+    pub fn metrics_snapshot(&mut self) -> WireResult<Json> {
+        let resp = self.call("metrics", vec![])?;
+        resp.get("snapshot")
+            .cloned()
+            .ok_or_else(|| WireError::transport("reply missing 'snapshot'"))
+    }
+
+    /// The whole metrics reply: `summary`, `stats`, `snapshot`,
+    /// `histogram`, `tenants`.
+    pub fn metrics_full(&mut self) -> WireResult<Json> {
+        self.call("metrics", vec![])
     }
 }

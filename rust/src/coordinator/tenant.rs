@@ -1,0 +1,382 @@
+//! Multi-tenancy: tenant identities, per-tenant counters, and sharded
+//! byte-budgeted `PlaintextNtt` operand caches.
+//!
+//! All tenants share one FV context and evaluation keyset — that is
+//! what makes cross-job coalescing bit-identical — but each tenant gets
+//! its own operand cache (so one tenant's working set cannot evict
+//! another's hot constants) and its own submission counters (so the
+//! fairness and admission decisions have per-tenant signals).
+//! [`TenantEngine`] is the per-job engine wrapper: it forwards every
+//! homomorphic op to the shared engine and intercepts only
+//! `prepare_plaintext`, serving repeated descent constants (step sizes,
+//! carry constants, `c_y` scalings) from the tenant's cache instead of
+//! re-running the forward NTT per job.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::arena::LruBytes;
+use crate::fhe::{Ciphertext, FvContext, Plaintext, PlaintextNtt};
+use crate::runtime::backend::{HeEngine, OpStats};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Tenant identity: an opaque caller-chosen string. Jobs submitted
+/// without one land in the `"default"` tenant.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub String);
+
+impl TenantId {
+    pub fn new(id: impl Into<String>) -> Self {
+        TenantId(id.into())
+    }
+}
+
+impl Default for TenantId {
+    fn default() -> Self {
+        TenantId("default".to_string())
+    }
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Per-tenant submission counters.
+#[derive(Default)]
+pub struct TenantCounters {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_rejected: AtomicU64,
+}
+
+/// Exact canonical cache key for a plaintext operand: per coefficient,
+/// the sign flag, the limb count, then the magnitude limbs. Exactness
+/// matters — a hashed key colliding would silently multiply a job by
+/// the *wrong* cached operand; a representation mismatch here merely
+/// costs a cache miss.
+fn operand_key(pt: &Plaintext) -> Vec<u64> {
+    let mut key = Vec::with_capacity(pt.coeffs.len() * 2 + 1);
+    key.push(pt.coeffs.len() as u64);
+    for c in &pt.coeffs {
+        let limbs = c.mag.limbs();
+        key.push(((limbs.len() as u64) << 1) | u64::from(c.neg));
+        key.extend_from_slice(limbs);
+    }
+    key
+}
+
+fn operand_bytes(m: &PlaintextNtt) -> usize {
+    m.m_ntt.planes.len() * m.m_ntt.d * 8 + 64
+}
+
+/// Sharded byte-budgeted operand cache. Shards split both the lock and
+/// the budget, so concurrent jobs of one tenant don't serialise on a
+/// single cache mutex.
+pub struct OperandCache {
+    shards: Vec<Mutex<LruBytes<Vec<u64>, PlaintextNtt>>>,
+}
+
+impl OperandCache {
+    pub fn new(budget_bytes: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let per_shard = (budget_bytes / shards).max(1);
+        OperandCache {
+            shards: (0..shards).map(|_| Mutex::new(LruBytes::new(per_shard))).collect(),
+        }
+    }
+
+    fn shard_of(&self, key: &[u64]) -> usize {
+        // Cheap deterministic mix; the key itself stays exact.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &w in key {
+            h = (h ^ w).wrapping_mul(0x1000_0000_01b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Fetch the prepared operand for `pt`, preparing and caching it on
+    /// a miss via `prepare`.
+    pub fn get_or_prepare(
+        &self,
+        pt: &Plaintext,
+        prepare: impl FnOnce() -> PlaintextNtt,
+    ) -> PlaintextNtt {
+        let key = operand_key(pt);
+        let shard = &self.shards[self.shard_of(&key)];
+        if let Some(hit) = shard.lock().unwrap().get(&key) {
+            return hit.clone();
+        }
+        // Prepare outside the shard lock: the forward NTT is the
+        // expensive part and must not serialise other lookups.
+        let prepared = prepare();
+        let bytes = operand_bytes(&prepared);
+        shard.lock().unwrap().insert(key, prepared.clone(), bytes);
+        prepared
+    }
+
+    /// Aggregate `(hits, misses, evictions)` across shards.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let mut agg = (0, 0, 0);
+        for s in &self.shards {
+            let (h, m, e) = s.lock().unwrap().stats();
+            agg = (agg.0 + h, agg.1 + m, agg.2 + e);
+        }
+        agg
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().live_bytes()).sum()
+    }
+
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+/// Everything the coordinator tracks per tenant.
+pub struct TenantState {
+    pub id: TenantId,
+    pub cache: OperandCache,
+    pub counters: TenantCounters,
+}
+
+impl TenantState {
+    pub fn to_json(&self) -> Json {
+        let (hits, misses, evictions) = self.cache.stats();
+        Json::obj(vec![
+            ("tenant", Json::str(&self.id.0)),
+            (
+                "jobs_submitted",
+                Json::Num(self.counters.jobs_submitted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "jobs_completed",
+                Json::Num(self.counters.jobs_completed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "jobs_rejected",
+                Json::Num(self.counters.jobs_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            ("cache_hits", Json::Num(hits as f64)),
+            ("cache_misses", Json::Num(misses as f64)),
+            ("cache_evictions", Json::Num(evictions as f64)),
+            ("cache_bytes", Json::Num(self.cache.live_bytes() as f64)),
+            ("cache_entries", Json::Num(self.cache.entries() as f64)),
+        ])
+    }
+}
+
+/// Registry of tenants, created lazily on first submission.
+pub struct TenantRegistry {
+    tenants: Mutex<BTreeMap<TenantId, Arc<TenantState>>>,
+    cache_budget_bytes: usize,
+    cache_shards: usize,
+}
+
+impl TenantRegistry {
+    pub fn new(cache_budget_bytes: usize, cache_shards: usize) -> Self {
+        TenantRegistry {
+            tenants: Mutex::new(BTreeMap::new()),
+            cache_budget_bytes,
+            cache_shards,
+        }
+    }
+
+    pub fn get_or_create(&self, id: &TenantId) -> Arc<TenantState> {
+        let mut map = self.tenants.lock().unwrap();
+        Arc::clone(map.entry(id.clone()).or_insert_with(|| {
+            Arc::new(TenantState {
+                id: id.clone(),
+                cache: OperandCache::new(self.cache_budget_bytes, self.cache_shards),
+                counters: TenantCounters::default(),
+            })
+        }))
+    }
+
+    pub fn get(&self, id: &TenantId) -> Option<Arc<TenantState>> {
+        self.tenants.lock().unwrap().get(id).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One JSON object per tenant, sorted by tenant id.
+    pub fn to_json(&self) -> Json {
+        let map = self.tenants.lock().unwrap();
+        Json::Arr(map.values().map(|t| t.to_json()).collect())
+    }
+}
+
+/// The per-job engine view: shared context, keys and batching, but
+/// `prepare_plaintext` served from the owning tenant's operand cache.
+/// Every other op forwards verbatim — including the keyed
+/// `rotate_rows`/`slot_sum` overrides of the shared engine, which a
+/// default-method fallback would silently lose.
+pub struct TenantEngine {
+    inner: Arc<dyn HeEngine>,
+    tenant: Arc<TenantState>,
+}
+
+impl TenantEngine {
+    pub fn new(inner: Arc<dyn HeEngine>, tenant: Arc<TenantState>) -> Self {
+        TenantEngine { inner, tenant }
+    }
+
+    pub fn tenant(&self) -> &TenantState {
+        &self.tenant
+    }
+}
+
+impl HeEngine for TenantEngine {
+    fn ctx(&self) -> &FvContext {
+        self.inner.ctx()
+    }
+
+    fn mul_pairs(&self, pairs: &[(&Ciphertext, &Ciphertext)]) -> Vec<Ciphertext> {
+        self.inner.mul_pairs(pairs)
+    }
+
+    fn dot_pairs(&self, groups: &[&[(&Ciphertext, &Ciphertext)]]) -> Vec<Ciphertext> {
+        self.inner.dot_pairs(groups)
+    }
+
+    fn stats(&self) -> &OpStats {
+        self.inner.stats()
+    }
+
+    fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.inner.add(a, b)
+    }
+
+    fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.inner.sub(a, b)
+    }
+
+    fn neg(&self, a: &Ciphertext) -> Ciphertext {
+        self.inner.neg(a)
+    }
+
+    fn mul_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        self.inner.mul_plain(a, pt)
+    }
+
+    fn prepare_plaintext(&self, pt: &Plaintext) -> PlaintextNtt {
+        self.tenant.cache.get_or_prepare(pt, || self.inner.prepare_plaintext(pt))
+    }
+
+    fn mul_plain_prepared(&self, a: &Ciphertext, m: &PlaintextNtt) -> Ciphertext {
+        self.inner.mul_plain_prepared(a, m)
+    }
+
+    fn rotate_rows(&self, ct: &Ciphertext, steps: usize) -> Result<Ciphertext> {
+        self.inner.rotate_rows(ct, steps)
+    }
+
+    fn slot_sum(&self, ct: &Ciphertext) -> Result<Ciphertext> {
+        self.inner.slot_sum(ct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe::encoding::encode_int;
+    use crate::fhe::params::FvParams;
+    use crate::runtime::backend::NativeEngine;
+
+    fn shared_engine() -> (Arc<FvContext>, Arc<dyn HeEngine>) {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = crate::fhe::rng::ChaChaRng::from_seed(901);
+        let keys = crate::fhe::keys::keygen(&ctx, &mut rng);
+        let engine: Arc<dyn HeEngine> =
+            Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk)));
+        (ctx, engine)
+    }
+
+    #[test]
+    fn tenant_cache_hits_on_repeated_operand() {
+        let (ctx, engine) = shared_engine();
+        let reg = TenantRegistry::new(1 << 20, 2);
+        let tenant = reg.get_or_create(&TenantId::new("acme"));
+        let te = TenantEngine::new(engine, Arc::clone(&tenant));
+        let pt = encode_int(42, ctx.d());
+        let a = te.prepare_plaintext(&pt);
+        let b = te.prepare_plaintext(&pt);
+        // Cache hit: the Arc'd NTT plane is literally shared.
+        assert!(Arc::ptr_eq(&a.m_ntt, &b.m_ntt));
+        let (hits, misses, _) = tenant.cache.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn tenant_cache_evicts_under_byte_budget() {
+        let (ctx, engine) = shared_engine();
+        // Budget ≈ 2 operands (one operand = 2 planes × 256 × 8 = 4096
+        // bytes + overhead), single shard so eviction order is exact.
+        let reg = TenantRegistry::new(2 * 4200, 1);
+        let tenant = reg.get_or_create(&TenantId::new("small"));
+        let te = TenantEngine::new(engine, Arc::clone(&tenant));
+        for v in 0..6 {
+            let _ = te.prepare_plaintext(&encode_int(v, ctx.d()));
+        }
+        let (_, misses, evictions) = tenant.cache.stats();
+        assert_eq!(misses, 6);
+        assert!(evictions >= 4, "expected ≥4 evictions, saw {evictions}");
+        assert!(tenant.cache.live_bytes() <= 2 * 4200);
+        assert!(tenant.cache.entries() <= 2);
+    }
+
+    #[test]
+    fn tenants_are_isolated() {
+        let (ctx, engine) = shared_engine();
+        let reg = TenantRegistry::new(1 << 20, 2);
+        let a = reg.get_or_create(&TenantId::new("a"));
+        let b = reg.get_or_create(&TenantId::new("b"));
+        assert_eq!(reg.len(), 2);
+        let ta = TenantEngine::new(Arc::clone(&engine), Arc::clone(&a));
+        let tb = TenantEngine::new(engine, Arc::clone(&b));
+        let pt = encode_int(7, ctx.d());
+        let _ = ta.prepare_plaintext(&pt);
+        let _ = tb.prepare_plaintext(&pt);
+        // Same operand, but each tenant pays its own miss: caches are
+        // not shared across the tenancy boundary.
+        assert_eq!(a.cache.stats().1, 1);
+        assert_eq!(b.cache.stats().1, 1);
+        let json = reg.to_json().to_string_json();
+        assert!(json.contains("\"tenant\":\"a\""), "{json}");
+        assert!(json.contains("\"tenant\":\"b\""), "{json}");
+    }
+
+    #[test]
+    fn tenant_engine_preserves_homomorphic_results() {
+        // A multiply through the TenantEngine must be bit-identical to
+        // the shared engine's own result (the wrapper adds caching, not
+        // arithmetic).
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = crate::fhe::rng::ChaChaRng::from_seed(902);
+        let keys = crate::fhe::keys::keygen(&ctx, &mut rng);
+        let engine: Arc<dyn HeEngine> =
+            Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk)));
+        let reg = TenantRegistry::new(1 << 20, 2);
+        let te = TenantEngine::new(Arc::clone(&engine), reg.get_or_create(&TenantId::default()));
+        let a = ctx.encrypt(&encode_int(5, ctx.d()), &keys.pk, &mut rng);
+        let b = ctx.encrypt(&encode_int(-3, ctx.d()), &keys.pk, &mut rng);
+        let solo = engine.mul(&a, &b);
+        let via_tenant = te.mul(&a, &b);
+        assert_eq!(via_tenant.polys, solo.polys);
+        let pt = encode_int(4, ctx.d());
+        let prepared = te.prepare_plaintext(&pt);
+        let solo_mp = engine.mul_plain_prepared(&a, &engine.prepare_plaintext(&pt));
+        let via_mp = te.mul_plain_prepared(&a, &prepared);
+        assert_eq!(via_mp.polys, solo_mp.polys);
+    }
+}

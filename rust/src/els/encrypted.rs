@@ -12,13 +12,19 @@
 //! CD residual update, whose products are not summed, stays on
 //! `mul_pairs`.
 //!
-//! With CRT slot packing ([`fit_packed`] on a
+//! With CRT slot packing (a [`DatasetRef::Packed`] over a
 //! [`PackedDataset`](super::model::PackedDataset)) the observation
 //! axis disappears from the multiply count entirely: one slot-wise
 //! product covers all `n ≤ d` observations, and the `Σ_i` folds become
 //! `O(log d)` Galois rotations — `p + 1` multiply pipelines per GD
 //! iteration, independent of `n`. The per-value path stays as the
 //! decrypt-parity oracle.
+//!
+//! The entry point is one function: [`fit`] takes a [`DatasetRef`]
+//! (scalar or packed layout), returns a [`FitOutcome`] that always
+//! carries the fit **and** its op-budget report. The former
+//! `fit`/`fit_reported`/`fit_packed`/`fit_packed_reported` quartet
+//! survives as `#[deprecated]` shims over this single path.
 
 use crate::fhe::encoding::{encode_biguint, Encoder};
 use crate::fhe::{Ciphertext, FvContext, PlaintextNtt, SecretKey};
@@ -135,30 +141,69 @@ fn gradient_step(
     engine.dot_pairs(&as_groups(&owned))
 }
 
+/// A dataset in either ciphertext layout, borrowed for one fit. The
+/// layout decides the descent path — per-value ciphertexts or CRT
+/// slot-packed columns — while the update equations, decode metadata
+/// and decrypted coefficients stay identical.
+#[derive(Clone, Copy)]
+pub enum DatasetRef<'a> {
+    /// One ciphertext per value (`x[i][j]`, `y[i]`) — the parity
+    /// oracle; works on any engine.
+    Scalar(&'a EncryptedDataset),
+    /// CRT slot-packed columns — `p + 1` multiply pipelines per
+    /// iteration, but needs a rotation-capable engine (Galois keys).
+    Packed(&'a PackedDataset),
+}
+
+/// What a fit returns: the coefficient ciphertexts plus the op-budget
+/// report. The report is the [`MetricsSnapshot`] diff of everything
+/// the fit consumed (ring transforms/relins/scale-rounds/rotations,
+/// engine ct/plain muls); it is per-fit even on a shared engine as
+/// long as no other work runs concurrently — the `pool`/`trace`
+/// sections are process-global and only meaningful for a quiet
+/// process.
+pub struct FitOutcome {
+    /// The fitted coefficients and decode metadata.
+    pub fit: EncryptedFit,
+    /// Op-budget diff for this fit.
+    pub report: MetricsSnapshot,
+}
+
 /// Fit by ELS-GD (eq. 10), optionally with VWT (eq. 18) or NAG
-/// (eqs. 20a/20b) acceleration.
-pub fn fit(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
+/// (eqs. 20a/20b) acceleration, on either ciphertext layout. This is
+/// the one fit entry point: the layout is carried by the
+/// [`DatasetRef`], and the [`FitOutcome`] always includes the
+/// op-budget report. Fails only when a packed dataset meets an engine
+/// that cannot rotate (no Galois keys).
+pub fn fit(engine: &dyn HeEngine, data: &DatasetRef, cfg: &FitConfig) -> Result<FitOutcome> {
+    let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    let fit = match data {
+        DatasetRef::Scalar(d) => fit_scalar(engine, d, cfg),
+        DatasetRef::Packed(d) => fit_packed_inner(engine, d, cfg)?,
+    };
+    let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    Ok(FitOutcome { fit, report: after.diff(&before) })
+}
+
+/// Per-value fit dispatch (infallible: never rotates).
+fn fit_scalar(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
     match cfg.accel {
         Accel::None | Accel::Vwt => fit_gd(engine, data, cfg),
         Accel::Nag => fit_nag(engine, data, cfg),
     }
 }
 
-/// [`fit`] plus its **op budget report**: the unified
-/// [`MetricsSnapshot`] diff of everything this fit consumed (ring
-/// transforms/relins/scale-rounds/rotations, engine ct/plain muls).
-/// The diff is per-fit even on a shared engine as long as no other
-/// work runs concurrently; the `pool`/`trace` sections are
-/// process-global and only meaningful for a quiet process.
+/// Pre-unification shim.
+#[deprecated(note = "use fit(engine, &DatasetRef::Scalar(data), cfg) — the \
+                     FitOutcome always carries the report")]
 pub fn fit_reported(
     engine: &dyn HeEngine,
     data: &EncryptedDataset,
     cfg: &FitConfig,
 ) -> (EncryptedFit, MetricsSnapshot) {
-    let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
-    let fit = fit(engine, data, cfg);
-    let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
-    (fit, after.diff(&before))
+    let out = fit(engine, &DatasetRef::Scalar(data), cfg)
+        .expect("scalar fits are infallible");
+    (out.fit, out.report)
 }
 
 /// A rescaling constant as a slot-broadcast plaintext, NTT-cached.
@@ -200,14 +245,14 @@ fn gradient_step_packed(
     prods.iter().map(|ct| engine.slot_sum(ct)).collect()
 }
 
-/// Fit on a slot-packed dataset — ELS-GD, optionally VWT- or
+/// Slot-packed fit dispatch — ELS-GD, optionally VWT- or
 /// NAG-accelerated, with identical update equations and decode
-/// metadata to the per-value [`fit`] (the unpacked path is the parity
+/// metadata to the per-value path (the unpacked path is the parity
 /// oracle: both decrypt to the same coefficients). ELS-CD stays
 /// scalar-only — its incremental residual is never summed, so packing
 /// buys nothing there. Fails if the engine cannot rotate (no Galois
 /// keys).
-pub fn fit_packed(
+fn fit_packed_inner(
     engine: &dyn HeEngine,
     data: &PackedDataset,
     cfg: &FitConfig,
@@ -218,17 +263,25 @@ pub fn fit_packed(
     }
 }
 
-/// [`fit_packed`] plus its op budget report — the packed counterpart
-/// of [`fit_reported`].
+/// Pre-unification shim.
+#[deprecated(note = "use fit(engine, &DatasetRef::Packed(data), cfg)")]
+pub fn fit_packed(
+    engine: &dyn HeEngine,
+    data: &PackedDataset,
+    cfg: &FitConfig,
+) -> Result<EncryptedFit> {
+    fit(engine, &DatasetRef::Packed(data), cfg).map(|out| out.fit)
+}
+
+/// Pre-unification shim.
+#[deprecated(note = "use fit(engine, &DatasetRef::Packed(data), cfg) — the \
+                     FitOutcome always carries the report")]
 pub fn fit_packed_reported(
     engine: &dyn HeEngine,
     data: &PackedDataset,
     cfg: &FitConfig,
 ) -> Result<(EncryptedFit, MetricsSnapshot)> {
-    let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
-    let fit = fit_packed(engine, data, cfg)?;
-    let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
-    Ok((fit, after.diff(&before)))
+    fit(engine, &DatasetRef::Packed(data), cfg).map(|out| (out.fit, out.report))
 }
 
 fn fit_gd_packed(
@@ -566,7 +619,9 @@ mod tests {
     #[test]
     fn encrypted_gd_equals_exact_simulation() {
         let s = setup(301, 8, 2, 2, Algo::Gd);
-        let fit = super::fit(&s.engine, &s.data, &FitConfig::gd(2, s.nu));
+        let fit = super::fit(&s.engine, &DatasetRef::Scalar(&s.data), &FitConfig::gd(2, s.nu))
+            .unwrap()
+            .fit;
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let exact = exact::gd_exact(&s.q, s.nu, 2);
         let expect = exact.decode_last();
@@ -585,7 +640,9 @@ mod tests {
         let s = setup(305, 5, 2, 2, Algo::Gd);
         // One fitted iteration materialises a live β̃ so the next
         // gradient step runs both fused batches.
-        let f1 = super::fit(&s.engine, &s.data, &FitConfig::gd(1, s.nu));
+        let f1 = super::fit(&s.engine, &DatasetRef::Scalar(&s.data), &FitConfig::gd(1, s.nu))
+            .unwrap()
+            .fit;
         let (n, p) = (s.data.n(), s.data.p());
         let ring = &s.ctx.ring_q;
         let (r0, s0) = (ring.relin_count(), ring.scale_round_count());
@@ -604,7 +661,7 @@ mod tests {
     fn encrypted_vwt_equals_exact() {
         let s = setup(302, 6, 2, 3, Algo::GdVwt);
         let cfg = FitConfig::gd(3, s.nu).with_accel(Accel::Vwt);
-        let fit = super::fit(&s.engine, &s.data, &cfg);
+        let fit = super::fit(&s.engine, &DatasetRef::Scalar(&s.data), &cfg).unwrap().fit;
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let (acc, div) = exact::vwt_exact(&s.q, s.nu, 3);
         let expect: Vec<f64> = acc
@@ -619,7 +676,7 @@ mod tests {
     fn encrypted_nag_equals_exact() {
         let s = setup(303, 6, 2, 2, Algo::Nag);
         let cfg = FitConfig::gd(2, s.nu).with_accel(Accel::Nag);
-        let fit = super::fit(&s.engine, &s.data, &cfg);
+        let fit = super::fit(&s.engine, &DatasetRef::Scalar(&s.data), &cfg).unwrap().fit;
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let expect = exact::nag_exact(&s.q, s.nu, 2).decode_last();
         assert!(linf(&dec, &expect) < 1e-9);
@@ -668,7 +725,9 @@ mod tests {
     #[test]
     fn packed_gd_equals_exact_simulation() {
         let s = setup_packed(311, 4, 2);
-        let fit = fit_packed(&s.engine, &s.data, &FitConfig::gd(2, s.nu)).unwrap();
+        let fit = super::fit(&s.engine, &DatasetRef::Packed(&s.data), &FitConfig::gd(2, s.nu))
+            .unwrap()
+            .fit;
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let expect = exact::gd_exact(&s.q, s.nu, 2).decode_last();
         let d = linf(&dec, &expect);
@@ -686,7 +745,9 @@ mod tests {
         // `gradient_step_relin_budget_is_n_plus_p`).
         let s = setup_packed(312, 6, 2);
         let p = s.data.p();
-        let f1 = fit_packed(&s.engine, &s.data, &FitConfig::gd(1, s.nu)).unwrap();
+        let f1 = super::fit(&s.engine, &DatasetRef::Packed(&s.data), &FitConfig::gd(1, s.nu))
+            .unwrap()
+            .fit;
         let ring = &s.ctx.ring_q;
         let gs = GdScaling::new(s.data.phi, s.nu);
         let (r0, s0, rot0) =
@@ -721,13 +782,15 @@ mod tests {
                 NativeEngine::with_backend(s.ctx.clone(), rk.clone(), backend)
                     .with_galois_keys(gk.clone())
                     .with_pool_workers(1);
-            let fit_ref = fit_packed(&reference, &s.data, &cfg).unwrap();
+            let fit_ref =
+                super::fit(&reference, &DatasetRef::Packed(&s.data), &cfg).unwrap().fit;
             for workers in [2usize, 4] {
                 let engine =
                     NativeEngine::with_backend(s.ctx.clone(), rk.clone(), backend)
                         .with_galois_keys(gk.clone())
                         .with_pool_workers(workers);
-                let f = fit_packed(&engine, &s.data, &cfg).unwrap();
+                let f =
+                    super::fit(&engine, &DatasetRef::Packed(&s.data), &cfg).unwrap().fit;
                 for (j, (a, b)) in f.betas.iter().zip(&fit_ref.betas).enumerate() {
                     assert_eq!(
                         a.polys, b.polys,
@@ -749,7 +812,7 @@ mod tests {
     fn packed_vwt_equals_exact() {
         let s = setup_packed(314, 4, 2);
         let cfg = FitConfig::gd(3, s.nu).with_accel(Accel::Vwt);
-        let fit = fit_packed(&s.engine, &s.data, &cfg).unwrap();
+        let fit = super::fit(&s.engine, &DatasetRef::Packed(&s.data), &cfg).unwrap().fit;
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let (acc, div) = exact::vwt_exact(&s.q, s.nu, 3);
         let expect: Vec<f64> = acc
@@ -764,7 +827,7 @@ mod tests {
     fn packed_nag_equals_exact() {
         let s = setup_packed(315, 4, 2);
         let cfg = FitConfig::gd(2, s.nu).with_accel(Accel::Nag);
-        let fit = fit_packed(&s.engine, &s.data, &cfg).unwrap();
+        let fit = super::fit(&s.engine, &DatasetRef::Packed(&s.data), &cfg).unwrap().fit;
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let expect = exact::nag_exact(&s.q, s.nu, 2).decode_last();
         assert!(linf(&dec, &expect) < 1e-9);
@@ -782,7 +845,9 @@ mod tests {
         use crate::util::telemetry::{Capture, Phase};
         let s = setup_packed(317, 4, 2);
         let cap = Capture::begin();
-        let fit = fit_packed(&s.engine, &s.data, &FitConfig::gd(2, s.nu)).unwrap();
+        let fit = super::fit(&s.engine, &DatasetRef::Packed(&s.data), &FitConfig::gd(2, s.nu))
+            .unwrap()
+            .fit;
         let trace = cap.finish();
         assert_eq!(fit.betas.len(), 2);
         assert_eq!(trace.phase_count(Phase::DescentIteration), 2, "one span per iteration");
@@ -810,9 +875,11 @@ mod tests {
     }
 
     #[test]
-    fn fit_reported_returns_per_fit_op_budget() {
+    fn fit_outcome_carries_per_fit_op_budget() {
         let s = setup(306, 5, 2, 2, Algo::Gd);
-        let (fit, report) = fit_reported(&s.engine, &s.data, &FitConfig::gd(2, s.nu));
+        let FitOutcome { fit, report } =
+            super::fit(&s.engine, &DatasetRef::Scalar(&s.data), &FitConfig::gd(2, s.nu))
+                .unwrap();
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let expect = exact::gd_exact(&s.q, s.nu, 2).decode_last();
         assert!(linf(&dec, &expect) < 1e-9);
@@ -829,7 +896,9 @@ mod tests {
         // A keyless engine must surface a descriptive error, not panic.
         let s = setup_packed(316, 4, 2);
         let keyless = NativeEngine::new(s.ctx.clone(), Arc::new(s.keys.rk.clone()));
-        let err = fit_packed(&keyless, &s.data, &FitConfig::gd(1, s.nu)).unwrap_err();
+        let err =
+            super::fit(&keyless, &DatasetRef::Packed(&s.data), &FitConfig::gd(1, s.nu))
+                .unwrap_err();
         assert!(err.to_string().contains("Galois keys"), "{err}");
     }
 }

@@ -26,9 +26,13 @@ pub mod scaling;
 pub mod stepsize;
 
 pub use encrypted::{
-    decrypt_coefficients, fit, fit_cd, fit_packed, fit_packed_reported, fit_reported, Accel,
-    EncryptedFit, FitConfig,
+    decrypt_coefficients, fit, fit_cd, Accel, DatasetRef, EncryptedFit, FitConfig, FitOutcome,
 };
+#[allow(deprecated)]
+pub use encrypted::{fit_packed, fit_packed_reported, fit_reported};
+pub use predict::{predict, NewDataRef, PredictOutcome};
+#[allow(deprecated)]
+pub use predict::{predict_packed, predict_reported};
 pub use probe::{noise_trajectory, NoiseTrajectory};
 pub use exact::QuantisedData;
 pub use model::{encrypt_dataset, encrypt_dataset_packed, EncryptedDataset, PackedDataset};

@@ -18,6 +18,7 @@ use crate::util::error::Result;
 use super::exact::QuantisedData;
 
 /// Encrypted `(X̃, ỹ)`.
+#[derive(Clone)]
 pub struct EncryptedDataset {
     /// `x[i][j]` encrypts `X̃_ij`.
     pub x: Vec<Vec<Ciphertext>>,

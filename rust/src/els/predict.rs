@@ -1,6 +1,12 @@
 //! Encrypted prediction (§4.2): `ỹ* = X̃*ᵀ·β̃^[K]`, a single encrypted
 //! dot product per new observation (+1 MMD), with the common GD scale
 //! factor making rescaling trivial for the key holder.
+//!
+//! Mirrors the unified fit API: one [`predict`] entry point over a
+//! [`NewDataRef`] (scalar rows or a packed column batch), returning a
+//! [`PredictOutcome`] that always carries the op-budget report. The
+//! former `predict`/`predict_reported`/`predict_packed` trio survives
+//! as `#[deprecated]` shims.
 
 use crate::fhe::encoding::Encoder;
 use crate::fhe::{Ciphertext, FvContext, SecretKey};
@@ -11,16 +17,59 @@ use crate::util::telemetry::MetricsSnapshot;
 use super::encrypted::EncryptedFit;
 use super::scaling::ratio_f64;
 
-/// Predict for encrypted new rows `x_new[i][j]` (quantised at the same
-/// φ as the fit). Returns one ciphertext per row.
+/// New observations in either ciphertext layout, borrowed for one
+/// prediction call.
+#[derive(Clone, Copy)]
+pub enum NewDataRef<'a> {
+    /// Per-value rows `x_new[i][j]`, quantised at the fit's φ — one
+    /// prediction ciphertext per row.
+    Scalar(&'a [Vec<Ciphertext>]),
+    /// Packed columns: `x_new_cols[j]` packs covariate `j` of all new
+    /// observations slot-wise (the [`super::model::PackedDataset`]
+    /// column layout, quantised at the fit's φ) — one prediction
+    /// ciphertext total, slot `i` carrying observation `i`.
+    Packed(&'a [Ciphertext]),
+}
+
+/// What a prediction returns: the prediction ciphertexts (one per
+/// scalar row, or a single slot-packed ciphertext) plus the op-budget
+/// report for the call — per-call only on a quiet engine, like
+/// [`super::encrypted::FitOutcome`].
+pub struct PredictOutcome {
+    /// Prediction ciphertexts.
+    pub preds: Vec<Ciphertext>,
+    /// Op-budget diff for this call.
+    pub report: MetricsSnapshot,
+}
+
+/// Predict on either layout through the one entry point. Scalar rows
+/// fuse into one `dot_pairs` group per row (the dot product
+/// relinearises and scale-and-rounds once per prediction instead of
+/// once per term); a packed batch is one fused group of `p` slot-wise
+/// products for every observation at once, with **no rotations** —
+/// the sum runs over covariates, which sit in separate ciphertexts,
+/// not separate slots, and a packed fit's β̃ are slot-broadcast so the
+/// products align by construction.
 pub fn predict(
+    engine: &dyn HeEngine,
+    fit: &EncryptedFit,
+    x_new: &NewDataRef,
+) -> PredictOutcome {
+    let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    let preds = match x_new {
+        NewDataRef::Scalar(rows) => predict_scalar(engine, fit, rows),
+        NewDataRef::Packed(cols) => vec![predict_packed_inner(engine, fit, cols)],
+    };
+    let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
+    PredictOutcome { preds, report: after.diff(&before) }
+}
+
+fn predict_scalar(
     engine: &dyn HeEngine,
     fit: &EncryptedFit,
     x_new: &[Vec<Ciphertext>],
 ) -> Vec<Ciphertext> {
     let p = fit.betas.len();
-    // One fused group per new row: the dot product relinearises and
-    // scale-and-rounds once per prediction instead of once per term.
     let owned: Vec<Vec<(&Ciphertext, &Ciphertext)>> = x_new
         .iter()
         .map(|row| {
@@ -33,29 +82,7 @@ pub fn predict(
     engine.dot_pairs(&groups)
 }
 
-/// [`predict`] plus its op budget report — the prediction counterpart
-/// of [`super::encrypted::fit_reported`]. Same caveat: the diff is
-/// per-call only on a quiet engine.
-pub fn predict_reported(
-    engine: &dyn HeEngine,
-    fit: &EncryptedFit,
-    x_new: &[Vec<Ciphertext>],
-) -> (Vec<Ciphertext>, MetricsSnapshot) {
-    let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
-    let preds = predict(engine, fit, x_new);
-    let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
-    (preds, after.diff(&before))
-}
-
-/// Packed prediction: `x_new_cols[j]` packs covariate `j` of all new
-/// observations slot-wise (same column layout as
-/// [`super::model::PackedDataset`], quantised at the fit's φ), and the
-/// returned single ciphertext carries prediction `i` in slot `i` —
-/// one fused group of `p` slot-wise products for the whole batch,
-/// with **no rotations**: the sum runs over covariates, which sit in
-/// separate ciphertexts, not separate slots. A packed fit's β̃ are
-/// slot-broadcast, so the slot-wise products align by construction.
-pub fn predict_packed(
+fn predict_packed_inner(
     engine: &dyn HeEngine,
     fit: &EncryptedFit,
     x_new_cols: &[Ciphertext],
@@ -64,6 +91,28 @@ pub fn predict_packed(
     let pairs: Vec<(&Ciphertext, &Ciphertext)> =
         x_new_cols.iter().zip(&fit.betas).collect();
     engine.dot_pairs(&[pairs.as_slice()]).pop().unwrap()
+}
+
+/// Pre-unification shim.
+#[deprecated(note = "use predict(engine, fit, &NewDataRef::Scalar(x_new)) — the \
+                     PredictOutcome always carries the report")]
+pub fn predict_reported(
+    engine: &dyn HeEngine,
+    fit: &EncryptedFit,
+    x_new: &[Vec<Ciphertext>],
+) -> (Vec<Ciphertext>, MetricsSnapshot) {
+    let out = predict(engine, fit, &NewDataRef::Scalar(x_new));
+    (out.preds, out.report)
+}
+
+/// Pre-unification shim.
+#[deprecated(note = "use predict(engine, fit, &NewDataRef::Packed(x_new_cols))")]
+pub fn predict_packed(
+    engine: &dyn HeEngine,
+    fit: &EncryptedFit,
+    x_new_cols: &[Ciphertext],
+) -> Ciphertext {
+    predict(engine, fit, &NewDataRef::Packed(x_new_cols)).preds.pop().unwrap()
 }
 
 /// Key-holder decode of a packed prediction ciphertext: slots
@@ -106,7 +155,7 @@ mod tests {
 
     use super::*;
     use crate::data::synth;
-    use crate::els::encrypted::{decrypt_coefficients, fit, fit_packed, FitConfig};
+    use crate::els::encrypted::{decrypt_coefficients, fit, DatasetRef, FitConfig};
     use crate::els::exact::QuantisedData;
     use crate::els::float_ref;
     use crate::els::model::{encrypt_dataset, encrypt_dataset_packed};
@@ -129,9 +178,11 @@ mod tests {
         let keys = keygen(&ctx, &mut rng);
         let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
         let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-        let f = fit(&engine, &data, &FitConfig::gd(2, nu));
+        let f = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(2, nu)).unwrap().fit;
         // Predict on the first two training rows (already encrypted).
-        let preds = predict(&engine, &f, &data.x[..2].to_vec());
+        let out = predict(&engine, &f, &NewDataRef::Scalar(&data.x[..2]));
+        assert!(out.report.engine.ct_muls > 0, "report rides along with every call");
+        let preds = out.preds;
         let dec = decrypt_predictions(&ctx, &keys.sk, &f, &preds);
         // Expected: X_quantised · β_decoded.
         let betas = decrypt_coefficients(&ctx, &keys.sk, &f);
@@ -157,10 +208,11 @@ mod tests {
         let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()))
             .with_galois_keys(Arc::new(keys.gk.clone()));
         let data = encrypt_dataset_packed(&ctx, &keys.pk, &q, &mut rng).unwrap();
-        let f = fit_packed(&engine, &data, &FitConfig::gd(2, nu)).unwrap();
+        let f = fit(&engine, &DatasetRef::Packed(&data), &FitConfig::gd(2, nu)).unwrap().fit;
         // Predict on the training columns themselves (already packed).
         let rot0 = ctx.ring_q.rotation_count();
-        let pred = predict_packed(&engine, &f, &data.x_cols);
+        let pred =
+            predict(&engine, &f, &NewDataRef::Packed(&data.x_cols)).preds.pop().unwrap();
         assert_eq!(ctx.ring_q.rotation_count() - rot0, 0, "prediction is rotation-free");
         let dec = decrypt_predictions_packed(&ctx, &keys.sk, &f, &pred, data.n());
         let betas = decrypt_coefficients(&ctx, &keys.sk, &f);

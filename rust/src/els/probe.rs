@@ -138,7 +138,7 @@ mod tests {
 
     use super::*;
     use crate::data::synth;
-    use crate::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+    use crate::els::encrypted::{decrypt_coefficients, fit, DatasetRef, FitConfig};
     use crate::els::exact::{self, QuantisedData};
     use crate::els::float_ref::linf;
     use crate::els::model::encrypt_dataset;
@@ -167,7 +167,7 @@ mod tests {
         let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
         let mut cfg = FitConfig::gd(3, nu);
         cfg.keep_path = true;
-        let f = fit(&engine, &data, &cfg);
+        let f = fit(&engine, &DatasetRef::Scalar(&data), &cfg).unwrap().fit;
         // The probed fit must still decrypt correctly.
         let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
         let expect = exact::gd_exact(&q, nu, 3).decode_last();
@@ -211,7 +211,8 @@ mod tests {
         let keys = keygen(&ctx, &mut rng);
         let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
         let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-        let f = fit(&engine, &data, &FitConfig::gd(1, nu)); // keep_path = false
+        // keep_path = false
+        let f = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(1, nu)).unwrap().fit;
         let err = noise_trajectory(&ctx, &keys.sk, &f, &req).unwrap_err();
         assert!(err.to_string().contains("keep_path"), "{err}");
     }

@@ -12,7 +12,7 @@ use std::time::Instant;
 use crate::util::error::Result;
 
 use crate::data::{mood, synth};
-use crate::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+use crate::els::encrypted::{decrypt_coefficients, fit, DatasetRef, FitConfig};
 use crate::els::exact::{self, QuantisedData};
 use crate::els::float_ref::linf;
 use crate::els::model::encrypt_dataset;
@@ -56,7 +56,7 @@ fn measure(seed: u64, n: usize, p: usize, iters: usize) -> Result<Cost> {
 
     let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
     let t0 = Instant::now();
-    let fitted = fit(&engine, &data, &FitConfig::gd(iters, nu));
+    let fitted = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(iters, nu))?.fit;
     let fit_s = t0.elapsed().as_secs_f64();
 
     let dec = decrypt_coefficients(&ctx, &keys.sk, &fitted);
@@ -132,7 +132,7 @@ pub fn sfig2(out: &Path) -> Result<Vec<PathBuf>> {
         let enc = t0.elapsed().as_secs_f64();
         let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
         let t0 = Instant::now();
-        let fitted = fit(&engine, &data, &FitConfig::gd(2, nu));
+        let fitted = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(2, nu))?.fit;
         let fit_s = t0.elapsed().as_secs_f64();
         let dec = decrypt_coefficients(&ctx, &keys.sk, &fitted);
         let expect = exact::gd_exact(&q, nu, 2).decode_last();

@@ -4,8 +4,10 @@
 //! ```text
 //! els params   --n 28 --p 2 --iters 2 [--nu 30] [--accel gd|vwt|nag] [--profile toy|paper128]
 //! els keygen   --n 28 --p 2 --iters 2 --nu 30 --out keys.json [--seed 7]
-//! els serve    --keys keys.json [--addr 127.0.0.1:7461] [--xla artifacts] [--backend rns|bigint] [--max-jobs 4]
+//! els serve    --keys keys.json [--addr 127.0.0.1:7461] [--xla artifacts] [--backend rns|bigint]
+//!              [--lanes 4] [--queue-cap 64] [--cache-mb 8]
 //! els client   --keys keys.json --addr HOST:PORT [--n 8 --p 2 --iters 2] [--accel vwt]
+//!              [--tenant NAME] [--deadline-ms N]
 //! els figures  (--all | --id fig4) [--out results]
 //! els selftest [--xla artifacts] [--backend rns|bigint]
 //! els metrics  [--addr HOST:PORT] [--backend rns|bigint]
@@ -21,10 +23,10 @@ use els::util::error::{anyhow, bail, Context, Result};
 
 use els::coordinator::batcher::{BatchConfig, BatchingEngine};
 use els::coordinator::protocol as proto;
-use els::coordinator::scheduler::Coordinator;
+use els::coordinator::scheduler::{Coordinator, CoordinatorConfig};
 use els::coordinator::service::{Client, Server};
 use els::data::synth;
-use els::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+use els::els::encrypted::{decrypt_coefficients, fit, DatasetRef, FitConfig};
 use els::els::exact::{self, QuantisedData};
 use els::els::float_ref::{linf, ols};
 use els::els::model::encrypt_dataset;
@@ -214,11 +216,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
         },
     );
-    let coord = Coordinator::new(engine, args.get_usize("max-jobs", 4)?);
+    // `--max-jobs` stays as a legacy alias for `--lanes`.
+    let lanes = args.get_usize("lanes", args.get_usize("max-jobs", 4)?)?;
+    let cfg = CoordinatorConfig {
+        lanes,
+        queue_capacity: args.get_usize("queue-cap", 64)?,
+        cache_budget_bytes: args.get_usize("cache-mb", 8)? << 20,
+        cache_shards: 4,
+    };
+    let coord = Coordinator::with_config(engine, cfg);
     let addr = args.get("addr").unwrap_or("127.0.0.1:7461");
     let server = Server::start(coord, addr)?;
     println!(
-        "els coordinator listening on {} (d={}, {} q-primes)",
+        "els coordinator listening on {} (d={}, {} q-primes, {lanes} lanes)",
         server.addr,
         ctx.d(),
         ctx.params.q_count
@@ -246,8 +256,16 @@ fn cmd_client(args: &Args) -> Result<()> {
     let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
     let mut client = Client::connect(addr)?;
     let cfg = FitConfig { iters, nu, accel, keep_path: false };
+    let tenant = args.get("tenant");
+    let deadline_ms = match args.get_u64("deadline-ms", 0)? {
+        0 => None,
+        ms => Some(ms),
+    };
     let t0 = std::time::Instant::now();
-    let id = client.submit(&data, &cfg, None)?;
+    let id = match client.submit_with(&data, &cfg, None, tenant, deadline_ms) {
+        Ok(id) => id,
+        Err(e) => bail!("submit rejected with code '{}': {}", e.code, e.message),
+    };
     println!("submitted as {id}; waiting ...");
     let fitted = client.result(&ctx, id)?;
     let wall = t0.elapsed();
@@ -296,10 +314,9 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     let keys = keygen(&ctx, &mut rng);
     let engine = make_engine(args, ctx.clone(), &keys.rk)?;
     let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-    let (_fit, report) =
-        els::els::encrypted::fit_reported(engine.as_ref(), &data, &FitConfig::gd(2, nu));
+    let out = fit(engine.as_ref(), &DatasetRef::Scalar(&data), &FitConfig::gd(2, nu))?;
     eprintln!("[els] op budget of one 6×2, 2-iteration GD fit:");
-    println!("{}", report.to_json().to_string_json());
+    println!("{}", out.report.to_json().to_string_json());
     Ok(())
 }
 
@@ -322,7 +339,7 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     println!("[2/3] encrypting + fitting 2 GD iterations ...");
     let engine = make_engine(args, ctx.clone(), &keys.rk)?;
     let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-    let fitted = fit(engine.as_ref(), &data, &FitConfig::gd(2, nu));
+    let fitted = fit(engine.as_ref(), &DatasetRef::Scalar(&data), &FitConfig::gd(2, nu))?.fit;
     println!("[3/3] decrypting + validating against the exact simulation ...");
     let dec = decrypt_coefficients(&ctx, &keys.sk, &fitted);
     let expect = exact::gd_exact(&q, nu, 2).decode_last();

@@ -4,13 +4,17 @@
 //!   native Rust engine.
 //! - [`artifacts`] — AOT artifact registry (`rns_meta.json` index with
 //!   deterministic-prime cross-checks).
+//! - [`exec`] — in-tree async event-loop runtime (executor lanes,
+//!   timer wheel, one-shot events) for the serving tier.
 //! - [`pjrt`] — the XLA/PJRT engine executing the JAX/Pallas-authored
 //!   `polymul` artifacts.
 
 pub mod artifacts;
 pub mod backend;
+pub mod exec;
 pub mod pjrt;
 
 pub use artifacts::ArtifactDir;
 pub use backend::{HeEngine, NativeEngine, OpStats};
+pub use exec::{Event, Executor, TimerHandle, TimerWheel};
 pub use pjrt::XlaEngine;

@@ -420,6 +420,10 @@ pub struct CoordinatorCounters {
     pub jobs_completed: u64,
     pub jobs_rejected: u64,
     pub jobs_failed: u64,
+    /// Deadline expiries (queued past deadline, or infeasible at submit).
+    pub jobs_expired: u64,
+    /// Bounded-queue rejections under load.
+    pub jobs_overloaded: u64,
     /// Self-describing latency histogram (bounds + counts + quantiles).
     pub latency: Json,
 }
@@ -485,6 +489,8 @@ impl MetricsSnapshot {
             jobs_completed: m.jobs_completed.load(Ordering::Relaxed),
             jobs_rejected: m.jobs_rejected.load(Ordering::Relaxed),
             jobs_failed: m.jobs_failed.load(Ordering::Relaxed),
+            jobs_expired: m.jobs_expired.load(Ordering::Relaxed),
+            jobs_overloaded: m.jobs_overloaded.load(Ordering::Relaxed),
             latency: m.job_latency.to_json(),
         });
         self
@@ -517,6 +523,8 @@ impl MetricsSnapshot {
                 jobs_completed: c.jobs_completed.saturating_sub(b.jobs_completed),
                 jobs_rejected: c.jobs_rejected.saturating_sub(b.jobs_rejected),
                 jobs_failed: c.jobs_failed.saturating_sub(b.jobs_failed),
+                jobs_expired: c.jobs_expired.saturating_sub(b.jobs_expired),
+                jobs_overloaded: c.jobs_overloaded.saturating_sub(b.jobs_overloaded),
                 latency: c.latency.clone(),
             }),
             (c, _) => c.clone(),
@@ -572,6 +580,8 @@ impl MetricsSnapshot {
                     ("jobs_completed", Json::Num(c.jobs_completed as f64)),
                     ("jobs_rejected", Json::Num(c.jobs_rejected as f64)),
                     ("jobs_failed", Json::Num(c.jobs_failed as f64)),
+                    ("jobs_expired", Json::Num(c.jobs_expired as f64)),
+                    ("jobs_overloaded", Json::Num(c.jobs_overloaded as f64)),
                     ("latency", c.latency.clone()),
                 ]),
             ));

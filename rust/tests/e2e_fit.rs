@@ -6,7 +6,7 @@
 use std::sync::Arc;
 
 use els::data::{mood, synth};
-use els::els::encrypted::{decrypt_coefficients, fit, fit_cd, fit_packed, Accel, FitConfig};
+use els::els::encrypted::{decrypt_coefficients, fit, fit_cd, Accel, DatasetRef, FitConfig};
 use els::els::exact::{self, QuantisedData};
 use els::els::float_ref::{self, linf};
 use els::els::model::{encrypt_dataset, encrypt_dataset_packed, quantise_ridge_augmented};
@@ -63,7 +63,7 @@ fn ridge_augmented_encrypted_fit_matches_rls() {
     let keys = keygen(&ctx, &mut rng);
     let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
     let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-    let f = fit(&engine, &data, &FitConfig::gd(2, nu));
+    let f = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(2, nu)).unwrap().fit;
     let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
     // Must equal the exact simulation on augmented data...
     let expect = exact::gd_exact(&q, nu, 2).decode_last();
@@ -79,8 +79,9 @@ fn prediction_composes_with_vwt_fit() {
     let mut w = world(812, 8, 2, 3, Algo::GdVwt, 1);
     let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
     let cfg = FitConfig::gd(3, w.nu).with_accel(Accel::Vwt);
-    let f = fit(&w.engine, &data, &cfg);
-    let preds = predict::predict(&w.engine, &f, &data.x[..3].to_vec());
+    let f = fit(&w.engine, &DatasetRef::Scalar(&data), &cfg).unwrap().fit;
+    let preds =
+        predict::predict(&w.engine, &f, &predict::NewDataRef::Scalar(&data.x[..3])).preds;
     let dec = predict::decrypt_predictions(&w.ctx, &w.keys.sk, &f, &preds);
     // Expected: quantised X rows times the decoded VWT coefficients.
     let (acc, div) = exact::vwt_exact(&w.q, w.nu, 3);
@@ -96,7 +97,7 @@ fn prediction_composes_with_vwt_fit() {
 fn noise_budget_stays_positive_at_planned_depth() {
     let mut w = world(813, 6, 2, 3, Algo::Gd, 0);
     let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
-    let f = fit(&w.engine, &data, &FitConfig::gd(3, w.nu));
+    let f = fit(&w.engine, &DatasetRef::Scalar(&data), &FitConfig::gd(3, w.nu)).unwrap().fit;
     for (j, ct) in f.betas.iter().enumerate() {
         let budget = noise_budget_bits(&w.ctx, ct, &w.keys.sk);
         assert!(budget > 0.0, "β_{j} budget {budget} ≤ 0 at planned depth");
@@ -132,7 +133,7 @@ fn mood_application_end_to_end() {
     let keys = keygen(&ctx, &mut rng);
     let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
     let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-    let f = fit(&engine, &data, &FitConfig::gd(2, nu));
+    let f = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(2, nu)).unwrap().fit;
     let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
     // Paper Figure 6: convergence within 2 iterations (‖·‖∞ ≤ 0.04 of
     // the eventual limit); we check proximity to the OLS solution.
@@ -163,8 +164,8 @@ fn gd_and_nag_fits_decrypt_identically_across_backends() {
             NativeEngine::with_backend(w.ctx.clone(), rk.clone(), MulBackend::FullRns);
         let eng_big =
             NativeEngine::with_backend(w.ctx.clone(), rk.clone(), MulBackend::ExactBigint);
-        let fit_rns = fit(&eng_rns, &data, &cfg);
-        let fit_big = fit(&eng_big, &data, &cfg);
+        let fit_rns = fit(&eng_rns, &DatasetRef::Scalar(&data), &cfg).unwrap().fit;
+        let fit_big = fit(&eng_big, &DatasetRef::Scalar(&data), &cfg).unwrap().fit;
         assert_eq!(fit_rns.betas.len(), fit_big.betas.len());
         for (j, (br, bb)) in fit_rns.betas.iter().zip(&fit_big.betas).enumerate() {
             let pr = w.ctx.decrypt(br, &w.keys.sk);
@@ -188,13 +189,13 @@ fn gd_fit_is_bit_identical_across_pool_worker_counts() {
     let data = encrypt_dataset(&w.ctx, &w.keys.pk, &w.q, &mut w.rng);
     let cfg = FitConfig::gd(2, w.nu);
     let rk = Arc::new(w.keys.rk.clone());
-    let fit_serial =
-        fit(&NativeEngine::new(w.ctx.clone(), rk.clone()).with_pool_workers(1), &data, &cfg);
+    let serial_engine = NativeEngine::new(w.ctx.clone(), rk.clone()).with_pool_workers(1);
+    let fit_serial = fit(&serial_engine, &DatasetRef::Scalar(&data), &cfg).unwrap().fit;
     // The descent loop's steady state is NTT residency.
     assert!(fit_serial.betas.iter().all(|b| b.is_ntt_resident()));
     for workers in [4usize, 8] {
         let engine = NativeEngine::new(w.ctx.clone(), rk.clone()).with_pool_workers(workers);
-        let f = fit(&engine, &data, &cfg);
+        let f = fit(&engine, &DatasetRef::Scalar(&data), &cfg).unwrap().fit;
         for (j, (a, b)) in f.betas.iter().zip(&fit_serial.betas).enumerate() {
             assert_eq!(a.polys, b.polys, "β_{j} differs at {workers} workers");
         }
@@ -342,7 +343,9 @@ fn packed_fit_matches_unpacked_oracle_across_backends() {
             NativeEngine::with_backend(pctx.clone(), Arc::new(pkeys.rk.clone()), backend)
                 .with_galois_keys(Arc::new(pkeys.gk.clone()));
         let (rel0, rot0) = (pctx.ring_q.relin_count(), pctx.ring_q.rotation_count());
-        let pf = fit_packed(&packed, &pdata, &FitConfig::gd(iters, nu)).unwrap();
+        let pf = fit(&packed, &DatasetRef::Packed(&pdata), &FitConfig::gd(iters, nu))
+            .unwrap()
+            .fit;
         // Multiply-pipeline budget, n-free: iteration 1 has no live β̃
         // (p gradient products), every later iteration adds the fused
         // residual group (p+1) — versus the oracle's n+p per iteration.
@@ -354,7 +357,9 @@ fn packed_fit_matches_unpacked_oracle_across_backends() {
             iters as u64 * p * log_rot,
             "{backend:?}: O(log d) rotations per gradient coordinate"
         );
-        let sf = fit(&oracle, &sdata, &FitConfig::gd(iters, nu));
+        let sf = fit(&oracle, &DatasetRef::Scalar(&sdata), &FitConfig::gd(iters, nu))
+            .unwrap()
+            .fit;
         let dec_s = decrypt_coefficients(&sctx, &skeys.sk, &sf);
         let dec_p = decrypt_coefficients(&pctx, &pkeys.sk, &pf);
         assert!(linf(&dec_s, &expect) < 1e-9, "{backend:?}: oracle vs exact");
@@ -380,7 +385,9 @@ fn fit_honours_els_encoding_env() {
             let keys = keygen(&ctx, &mut rng);
             let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
             let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-            let f = fit(&engine, &data, &FitConfig::gd(2, nu));
+            let f = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(2, nu))
+                .unwrap()
+                .fit;
             decrypt_coefficients(&ctx, &keys.sk, &f)
         }
         Encoding::Packed => {
@@ -390,7 +397,9 @@ fn fit_honours_els_encoding_env() {
             let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()))
                 .with_galois_keys(Arc::new(keys.gk.clone()));
             let data = encrypt_dataset_packed(&ctx, &keys.pk, &q, &mut rng).unwrap();
-            let f = fit_packed(&engine, &data, &FitConfig::gd(2, nu)).unwrap();
+            let f = fit(&engine, &DatasetRef::Packed(&data), &FitConfig::gd(2, nu))
+                .unwrap()
+                .fit;
             decrypt_coefficients(&ctx, &keys.sk, &f)
         }
     };
@@ -415,7 +424,7 @@ fn paper128_profile_parameters_are_secure_and_work() {
     let keys = keygen(&ctx, &mut rng);
     let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
     let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-    let f = fit(&engine, &data, &FitConfig::gd(1, nu));
+    let f = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(1, nu)).unwrap().fit;
     let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
     let expect = exact::gd_exact(&q, nu, 1).decode_last();
     assert!(linf(&dec, &expect) < 1e-9);

@@ -1,0 +1,173 @@
+//! Serving-tier saturation: a burst of 120 fits from 12 concurrent
+//! clients across 3 tenants against a deliberately small queue. Every
+//! submission must either complete — bit-identical to a solo fit of the
+//! same ciphertexts on a private engine — or bounce with a structured
+//! wire code. Nothing hangs, nothing is silently dropped, and deadline
+//! rejections happen before any engine work.
+
+use std::sync::Arc;
+
+use els::coordinator::batcher::{BatchConfig, BatchingEngine};
+use els::coordinator::protocol::ErrorCode;
+use els::coordinator::scheduler::{Coordinator, CoordinatorConfig};
+use els::coordinator::service::{Client, Server};
+use els::data::synth;
+use els::els::encrypted::{fit, DatasetRef, FitConfig};
+use els::els::exact::QuantisedData;
+use els::els::model::encrypt_dataset;
+use els::els::stepsize::nu_optimal;
+use els::fhe::keys::keygen;
+use els::fhe::params::{plan, PlanRequest};
+use els::fhe::rng::ChaChaRng;
+use els::fhe::{Ciphertext, FvContext};
+use els::math::poly::RnsPoly;
+use els::runtime::backend::{HeEngine, NativeEngine};
+use els::util::json::Json;
+
+const CLIENTS: usize = 12;
+const PER_CLIENT: usize = 10;
+const TENANTS: [&str; 3] = ["acme", "globex", "initech"];
+
+/// Residency-normalised ciphertext bits (NTT-resident and coefficient
+/// forms are exact representations of the same ciphertext).
+fn coeff_polys(ctx: &FvContext, betas: &[Ciphertext]) -> Vec<Vec<RnsPoly>> {
+    betas
+        .iter()
+        .map(|ct| ct.polys.iter().map(|p| ctx.ring_q.coeff_form(p).into_owned()).collect())
+        .collect()
+}
+
+#[test]
+fn saturation_every_job_completes_or_rejects_structurally() {
+    let mut rng = ChaChaRng::from_seed(901);
+    let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+    let q = QuantisedData::from_f64(&x, &y, 2);
+    let (xq, _) = q.dequantised();
+    let nu = nu_optimal(&xq);
+    let params = plan(&PlanRequest::gd(6, 2, 1, 2, nu)).unwrap();
+    let ctx = FvContext::new(params);
+    let keys = keygen(&ctx, &mut rng);
+    let cfg = FitConfig::gd(1, nu);
+
+    // One encrypted dataset per tenant, submitted repeatedly: encrypted
+    // GD is deterministic, so every accepted copy of a tenant's job
+    // must produce the *same ciphertext bits* as fitting that dataset
+    // alone on a private engine — coalescing and caching included.
+    let datasets: Vec<_> =
+        (0..TENANTS.len()).map(|_| encrypt_dataset(&ctx, &keys.pk, &q, &mut rng)).collect();
+    let solo: Vec<_> = datasets
+        .iter()
+        .map(|d| {
+            let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+            let f = fit(&engine, &DatasetRef::Scalar(d), &cfg).unwrap().fit;
+            coeff_polys(&ctx, &f.betas)
+        })
+        .collect();
+
+    // Server: 2 lanes over a shared batching engine, queue capacity far
+    // below the burst so overload rejections must occur.
+    let native = Arc::new(NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone())));
+    let engine = BatchingEngine::new(native.clone(), BatchConfig::default());
+    let coord = Coordinator::with_config(
+        engine.clone(),
+        CoordinatorConfig {
+            lanes: 2,
+            queue_capacity: 8,
+            cache_budget_bytes: 4 << 20,
+            cache_shards: 2,
+        },
+    );
+    let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // 12 clients × 10 rapid submissions each; results fetched after the
+    // burst so the queue really saturates. Outcome per submission:
+    // Ok(tenant, betas) or Err(tenant, code).
+    let outcomes: Vec<Result<(usize, Vec<Vec<RnsPoly>>), (usize, ErrorCode)>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|c| {
+                    let (addr, ctx, datasets, cfg) = (&addr, &ctx, &datasets, &cfg);
+                    s.spawn(move || {
+                        let t = c % TENANTS.len();
+                        let mut client = Client::connect(addr).expect("connect");
+                        let mut ids = Vec::new();
+                        let mut out = Vec::new();
+                        for _ in 0..PER_CLIENT {
+                            let tenant = Some(TENANTS[t]);
+                            match client.submit_with(&datasets[t], cfg, None, tenant, None) {
+                                Ok(id) => ids.push(id),
+                                Err(e) => out.push(Err((t, e.code))),
+                            }
+                        }
+                        for id in ids {
+                            match client.result(ctx, id) {
+                                Ok(f) => out.push(Ok((t, coeff_polys(ctx, &f.betas)))),
+                                Err(e) => out.push(Err((t, e.code))),
+                            }
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+
+    assert_eq!(outcomes.len(), CLIENTS * PER_CLIENT);
+    let mut completed = 0usize;
+    let mut rejected = 0usize;
+    for o in &outcomes {
+        match o {
+            Ok((t, betas)) => {
+                completed += 1;
+                assert_eq!(betas, &solo[*t], "coalesced fit diverged from solo ciphertexts");
+            }
+            Err((_, code)) => {
+                rejected += 1;
+                assert_eq!(*code, ErrorCode::Overloaded, "unexpected rejection code {code}");
+            }
+        }
+    }
+    assert_eq!(completed + rejected, CLIENTS * PER_CLIENT);
+    assert!(completed >= TENANTS.len(), "burst should complete at least one job per tenant");
+    assert!(rejected >= 1, "capacity-8 queue never reported overload under a 120-job burst");
+
+    // Deadline admission: with latency history in place and the queue
+    // idle, a 0 ms deadline is provably infeasible — rejected at submit
+    // with a structured code, before a single engine operation runs.
+    let muls_before = native.stats().snapshot().0;
+    let mut client = Client::connect(&addr).expect("connect");
+    let err = client
+        .submit_with(&datasets[0], &cfg, None, Some(TENANTS[0]), Some(0))
+        .expect_err("0ms deadline must be rejected once the estimator is calibrated");
+    assert_eq!(err.code, ErrorCode::DeadlineExceeded, "{err}");
+    assert_eq!(native.stats().snapshot().0, muls_before, "rejection must precede engine work");
+
+    // Telemetry round-trip: histogram, per-tenant counters and the
+    // unified snapshot all arrive well-formed over the wire.
+    let full = client.metrics_full().expect("metrics");
+    let hist = full.get("histogram").expect("histogram section");
+    let count = hist.get("count").and_then(Json::as_u64).expect("histogram count");
+    assert_eq!(count as usize, completed, "histogram observed every completion");
+    assert!(hist.get("bounds_ms").is_some() && hist.get("counts").is_some());
+    let Some(Json::Arr(tenants)) = full.get("tenants") else {
+        panic!("tenants section missing or not an array")
+    };
+    assert_eq!(tenants.len(), TENANTS.len());
+    for t in tenants {
+        let name = t.get("tenant").and_then(|j| j.as_str()).expect("tenant name");
+        assert!(TENANTS.contains(&name), "unknown tenant {name}");
+        assert!(t.get("jobs_submitted").and_then(Json::as_u64).unwrap() > 0);
+    }
+    let coord_counters =
+        full.get("snapshot").and_then(|s| s.get("coordinator")).expect("coordinator counters");
+    let overloaded =
+        coord_counters.get("jobs_overloaded").and_then(Json::as_u64).expect("jobs_overloaded");
+    assert_eq!(overloaded as usize, rejected);
+    let expired =
+        coord_counters.get("jobs_expired").and_then(Json::as_u64).expect("jobs_expired");
+    assert!(expired >= 1, "the 0ms-deadline rejection must be counted");
+
+    server.stop();
+    engine.shutdown();
+}

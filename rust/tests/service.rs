@@ -56,8 +56,10 @@ fn submit_fit_fetch_decrypt_roundtrip() {
     let m = client.metrics().unwrap();
     assert!(m.contains("completed=1"), "{m}");
 
-    // Unknown job errors cleanly.
-    assert!(client.status(els::coordinator::job::JobId(999)).is_err());
+    // Unknown job errors cleanly, with its structured code intact
+    // across the wire.
+    let err = client.status(els::coordinator::job::JobId(999)).unwrap_err();
+    assert_eq!(err.code, els::coordinator::protocol::ErrorCode::UnknownJob, "{err}");
 
     server.stop();
     engine.shutdown();
@@ -82,13 +84,24 @@ fn malformed_requests_get_error_responses() {
     let stream = std::net::TcpStream::connect(server.addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
     let mut w = stream;
-    for bad in ["not json", "{\"type\":\"bogus\"}", "{}"] {
+    // Every rejection is versioned and carries a structured code:
+    // unparseable JSON and schema violations are `bad_request`, while
+    // a missing or wrong `"v"` bounces as `bad_version` before the
+    // request is interpreted at all.
+    for (bad, code) in [
+        ("not json", "bad_request"),
+        ("{\"v\":1,\"type\":\"bogus\"}", "bad_request"),
+        ("{\"v\":1}", "bad_request"),
+        ("{\"type\":\"ping\"}", "bad_version"),
+        ("{\"v\":99,\"type\":\"ping\"}", "bad_version"),
+    ] {
         w.write_all(bad.as_bytes()).unwrap();
         w.write_all(b"\n").unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("\"ok\":false"), "{line}");
         assert!(line.contains("error"), "{line}");
+        assert!(line.contains(&format!("\"code\":\"{code}\"")), "{bad}: {line}");
     }
     server.stop();
 }

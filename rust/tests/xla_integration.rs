@@ -10,7 +10,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use els::data::synth;
-use els::els::encrypted::{decrypt_coefficients, fit, FitConfig};
+use els::els::encrypted::{decrypt_coefficients, fit, DatasetRef, FitConfig};
 use els::els::exact::{self, QuantisedData};
 use els::els::float_ref::linf;
 use els::els::model::encrypt_dataset;
@@ -126,7 +126,7 @@ fn encrypted_gd_through_xla_equals_exact_sim() {
     let keys = keygen(&ctx, &mut rng);
     let engine = XlaEngine::new(ctx.clone(), &keys.rk, &dir).unwrap();
     let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
-    let f = fit(&engine, &data, &FitConfig::gd(1, nu));
+    let f = fit(&engine, &DatasetRef::Scalar(&data), &FitConfig::gd(1, nu)).unwrap().fit;
     let dec = decrypt_coefficients(&ctx, &keys.sk, &f);
     let expect = exact::gd_exact(&q, nu, 1).decode_last();
     let d = linf(&dec, &expect);
