@@ -40,6 +40,26 @@ cargo test -q
 note "coordinator saturation smoke: cargo test --release --test saturation"
 cargo test --release --test saturation
 
+# Chaos battery: the saturation burst re-run under every deterministic
+# fault site (wire, lane, timer, cache, batcher) with retrying clients
+# and idempotent tokens — terminate-or-structured-code, no leaks, no
+# double execution. Then the env-driven smoke scenario writes an
+# els-chaos-v1 snapshot for the dep-free validator: faults must have
+# fired, nothing may leak, and the client must really have retried.
+note "chaos battery: cargo test --release --test chaos"
+cargo test --release --test chaos
+if command -v python3 >/dev/null 2>&1; then
+    note "chaos smoke: ELS_FAULTS burst + chaos_check.py"
+    chaos_file="$(mktemp -t els-chaos-XXXXXX.json)"
+    ELS_FAULTS="wire_write:disconnect:0.1:41,lane:panic:0.1:43" \
+        ELS_CHAOS_OUT="$chaos_file" \
+        cargo test --release --test chaos chaos_smoke_writes_snapshot_for_ci
+    python3 python/tools/chaos_check.py "$chaos_file" --expect-retries
+    rm -f "$chaos_file"
+else
+    note "SKIPPED: python3 not installed — chaos snapshot gate not run"
+fi
+
 # Also drives the dot_pairs fusion tests (unit + e2e parity) through
 # the oracle's summed-tensor-before-CRT-lift path.
 note "tier-1 (oracle backend): ELS_MUL_BACKEND=bigint cargo test -q"

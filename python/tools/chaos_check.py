@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Validate an `els-chaos-v1` chaos-battery snapshot.
+
+Dependency-free (stdlib only), in the same discipline as trace_check.py
+and bench_check.py. The Rust chaos smoke test (`cargo test --release
+--test chaos chaos_smoke` with `ELS_CHAOS_OUT=<path>`, optionally
+`ELS_FAULTS=<spec>`) runs the saturation burst under injected faults
+and writes the snapshot this script audits:
+
+- schema is `els-chaos-v1`;
+- every submission terminated: completed + failed == total;
+- nothing leaked: jobs.leaked == 0;
+- the scenario actually tested something: faults.injected > 0 and
+  probe traffic (faults.checked) at least covers the injections;
+- with `--expect-retries`, the retrying client really retried.
+
+Usage:
+    chaos_check.py SNAPSHOT.json [--expect-retries]
+
+Exit code 0 on success; 1 with a diagnostic on the first violation.
+"""
+
+import argparse
+import json
+import sys
+
+# Injection sites defined by rust/src/util/faults.rs (FaultSite::as_str).
+KNOWN_SITES = {
+    "wire_read",
+    "wire_write",
+    "lane",
+    "timer",
+    "cache",
+    "batcher",
+}
+
+
+def fail(msg):
+    print(f"chaos_check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def nonneg_int(obj, section, key):
+    v = obj.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0 or v != int(v):
+        fail(f"{section}.{key} must be a non-negative integer, got {v!r}")
+    return int(v)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("snapshot", help="path to the chaos snapshot JSON")
+    ap.add_argument(
+        "--expect-retries",
+        action="store_true",
+        help="fail unless the retrying client performed at least one retry",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.snapshot, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot load {args.snapshot}: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    if doc.get("schema") != "els-chaos-v1":
+        fail(f"schema must be 'els-chaos-v1', got {doc.get('schema')!r}")
+
+    jobs = doc.get("jobs")
+    if not isinstance(jobs, dict):
+        fail("jobs section missing or not an object")
+    total = nonneg_int(jobs, "jobs", "total")
+    completed = nonneg_int(jobs, "jobs", "completed")
+    failed = nonneg_int(jobs, "jobs", "failed")
+    leaked = nonneg_int(jobs, "jobs", "leaked")
+    if total == 0:
+        fail("jobs.total is 0 — the burst never ran")
+    if completed + failed != total:
+        fail(
+            f"jobs must all terminate: completed={completed} + failed={failed} "
+            f"!= total={total}"
+        )
+    if leaked != 0:
+        fail(f"jobs.leaked={leaked} — server-side state survived the drain")
+    if completed == 0:
+        fail("jobs.completed is 0 — chaos starved every job")
+
+    faults = doc.get("faults")
+    if not isinstance(faults, dict):
+        fail("faults section missing or not an object")
+    checked = nonneg_int(faults, "faults", "checked")
+    injected = nonneg_int(faults, "faults", "injected")
+    if injected == 0:
+        fail("faults.injected is 0 — the armed faults never fired")
+    if checked < injected:
+        fail(f"faults.checked={checked} < faults.injected={injected}")
+    per_site = faults.get("per_site")
+    if not isinstance(per_site, dict):
+        fail("faults.per_site missing or not an object")
+    for site, count in per_site.items():
+        if site not in KNOWN_SITES:
+            fail(f"faults.per_site names unknown site {site!r}")
+        nonneg_int(per_site, "faults.per_site", site)
+
+    retries = nonneg_int(doc, "<top>", "retries")
+    if args.expect_retries and retries == 0:
+        fail("--expect-retries: the retrying client never retried")
+
+    fired = ", ".join(
+        f"{k}={int(v)}" for k, v in sorted(per_site.items()) if int(v) > 0
+    )
+    print(
+        f"chaos_check: OK: {total} jobs ({completed} completed, {failed} failed, "
+        f"0 leaked), {injected} faults injected ({fired or 'none'}), "
+        f"{retries} retries"
+    )
+
+
+if __name__ == "__main__":
+    main()

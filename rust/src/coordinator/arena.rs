@@ -1,6 +1,4 @@
-//! Ciphertext slot arena: a slab allocator for working-set ciphertexts,
-//! plus a byte-budgeted LRU ([`LruBytes`]) backing the per-tenant
-//! operand caches.
+//! Ciphertext slot arena: a slab allocator for working-set ciphertexts.
 //!
 //! The FHE working set is large (one ciphertext is `2·L·d·8` bytes;
 //! a GD iteration materialises `N + N·P` intermediates), so the
@@ -8,10 +6,15 @@
 //! job churn the global allocator — the KV-cache-manager analogue of a
 //! serving stack. The arena reports high-water occupancy for the fig5
 //! memory accounting.
-
-use std::collections::BTreeMap;
+//!
+//! The byte-budgeted LRU that used to live here moved to
+//! [`crate::util::lru`] so its accounting invariants can be property-
+//! and concurrency-tested as plain util code; the re-export below keeps
+//! existing `coordinator::arena::LruBytes` paths compiling.
 
 use crate::fhe::Ciphertext;
+
+pub use crate::util::lru::LruBytes;
 
 /// Slot handle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,111 +92,6 @@ impl CtArena {
     }
 }
 
-// ---- byte-budgeted LRU --------------------------------------------------
-
-struct LruEntry<V> {
-    value: V,
-    bytes: usize,
-    tick: u64,
-}
-
-/// Byte-budgeted LRU map. Recency is a monotone tick stamped on every
-/// `get` hit and `insert`; when the live byte total exceeds the budget,
-/// the minimum-tick entry is evicted (but the most recent insert is
-/// never evicted, so a single over-budget value still caches). Keys are
-/// exact — the per-tenant operand caches key on canonical plaintext
-/// coefficient words, because an approximate (hashed) key colliding
-/// would silently substitute a *wrong operand* into an encrypted fit.
-pub struct LruBytes<K: Ord + Clone, V> {
-    entries: BTreeMap<K, LruEntry<V>>,
-    budget_bytes: usize,
-    live_bytes: usize,
-    tick: u64,
-    hits: u64,
-    misses: u64,
-    evictions: u64,
-}
-
-impl<K: Ord + Clone, V> LruBytes<K, V> {
-    pub fn new(budget_bytes: usize) -> Self {
-        LruBytes {
-            entries: BTreeMap::new(),
-            budget_bytes,
-            live_bytes: 0,
-            tick: 0,
-            hits: 0,
-            misses: 0,
-            evictions: 0,
-        }
-    }
-
-    fn next_tick(&mut self) -> u64 {
-        self.tick += 1;
-        self.tick
-    }
-
-    /// Look up `key`, bumping its recency on a hit.
-    pub fn get(&mut self, key: &K) -> Option<&V> {
-        let tick = self.tick + 1;
-        match self.entries.get_mut(key) {
-            Some(e) => {
-                self.tick = tick;
-                e.tick = tick;
-                self.hits += 1;
-                Some(&e.value)
-            }
-            None => {
-                self.misses += 1;
-                None
-            }
-        }
-    }
-
-    /// Insert (or replace) an entry charged at `bytes`, then evict
-    /// least-recently-used entries until the budget holds again. The
-    /// just-inserted entry is exempt from its own eviction pass.
-    pub fn insert(&mut self, key: K, value: V, bytes: usize) {
-        let tick = self.next_tick();
-        if let Some(old) = self.entries.insert(key, LruEntry { value, bytes, tick }) {
-            self.live_bytes -= old.bytes;
-        }
-        self.live_bytes += bytes;
-        while self.live_bytes > self.budget_bytes && self.entries.len() > 1 {
-            let victim = self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.tick)
-                .map(|(k, _)| k.clone())
-                .expect("non-empty");
-            if let Some(e) = self.entries.remove(&victim) {
-                self.live_bytes -= e.bytes;
-                self.evictions += 1;
-            }
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.entries.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
-    }
-
-    pub fn live_bytes(&self) -> usize {
-        self.live_bytes
-    }
-
-    pub fn budget_bytes(&self) -> usize {
-        self.budget_bytes
-    }
-
-    /// `(hits, misses, evictions)` since construction.
-    pub fn stats(&self) -> (u64, u64, u64) {
-        (self.hits, self.misses, self.evictions)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,54 +146,5 @@ mod tests {
         let id = a.insert(dummy_ct(8));
         a.release(id);
         a.release(id);
-    }
-
-    #[test]
-    fn lru_evicts_oldest_under_byte_budget() {
-        let mut lru: LruBytes<u32, &'static str> = LruBytes::new(100);
-        lru.insert(1, "a", 40);
-        lru.insert(2, "b", 40);
-        lru.insert(3, "c", 40); // 120 > 100 ⇒ evict key 1
-        assert_eq!(lru.len(), 2);
-        assert!(lru.get(&1).is_none());
-        assert_eq!(lru.get(&2), Some(&"b"));
-        assert_eq!(lru.get(&3), Some(&"c"));
-        assert_eq!(lru.live_bytes(), 80);
-        let (hits, misses, evictions) = lru.stats();
-        assert_eq!((hits, misses, evictions), (2, 1, 1));
-    }
-
-    #[test]
-    fn lru_hit_bumps_recency() {
-        let mut lru: LruBytes<u32, u32> = LruBytes::new(100);
-        lru.insert(1, 10, 40);
-        lru.insert(2, 20, 40);
-        assert_eq!(lru.get(&1), Some(&10)); // key 1 is now the freshest
-        lru.insert(3, 30, 40); // over budget ⇒ evict key 2, not key 1
-        assert_eq!(lru.get(&2), None);
-        assert_eq!(lru.get(&1), Some(&10));
-        assert_eq!(lru.get(&3), Some(&30));
-    }
-
-    #[test]
-    fn lru_single_oversized_entry_survives() {
-        // One value larger than the whole budget must still cache (the
-        // just-inserted entry is exempt from its own eviction pass).
-        let mut lru: LruBytes<u32, u32> = LruBytes::new(10);
-        lru.insert(1, 1, 50);
-        assert_eq!(lru.len(), 1);
-        assert_eq!(lru.get(&1), Some(&1));
-        lru.insert(2, 2, 50); // displaces the previous oversized entry
-        assert_eq!(lru.len(), 1);
-        assert_eq!(lru.get(&2), Some(&2));
-    }
-
-    #[test]
-    fn lru_replace_accounts_bytes_once() {
-        let mut lru: LruBytes<u32, u32> = LruBytes::new(100);
-        lru.insert(1, 10, 60);
-        lru.insert(1, 11, 30);
-        assert_eq!(lru.live_bytes(), 30);
-        assert_eq!(lru.get(&1), Some(&11));
     }
 }

@@ -24,13 +24,20 @@ use std::time::{Duration, Instant};
 
 use crate::fhe::{Ciphertext, FvContext, Plaintext, PlaintextNtt};
 use crate::runtime::backend::{HeEngine, OpStats};
+use crate::util::faults::{self, FaultSite};
 use crate::util::telemetry::{self, Phase};
+
+/// One coalesced dispatch's outcome per work item: the per-group
+/// ciphertexts, or the failure message when the backend call died
+/// (panic or injected fault). Failure fans out to *every* item in the
+/// batch — the dispatcher itself always survives.
+type DispatchReply = std::result::Result<Vec<Ciphertext>, String>;
 
 struct WorkItem {
     /// Inner-product groups (singletons for plain products); the reply
     /// carries one ciphertext per group.
     groups: Vec<Vec<(Ciphertext, Ciphertext)>>,
-    reply: Sender<Vec<Ciphertext>>,
+    reply: Sender<DispatchReply>,
 }
 
 impl WorkItem {
@@ -101,7 +108,11 @@ impl BatchingEngine {
     }
 
     /// Enqueue one group-shaped work item and block for its replies
-    /// (one ciphertext per group).
+    /// (one ciphertext per group). A failed dispatch (backend panic or
+    /// injected `batcher:fail` fault) panics on the *caller* thread —
+    /// inside the coordinator's per-job `catch_unwind`, so it resolves
+    /// to that job's `job_failed` while unrelated jobs and the
+    /// dispatcher keep going.
     fn submit(&self, groups: Vec<Vec<(Ciphertext, Ciphertext)>>) -> Vec<Ciphertext> {
         let (reply_tx, reply_rx) = channel();
         let item = WorkItem { groups, reply: reply_tx };
@@ -112,7 +123,10 @@ impl BatchingEngine {
             .expect("batcher already shut down")
             .send(item)
             .expect("batcher thread gone");
-        reply_rx.recv().expect("batcher dropped reply")
+        match reply_rx.recv().expect("batcher dropped reply") {
+            Ok(out) => out,
+            Err(msg) => panic!("batch dispatch failed: {msg}"),
+        }
     }
 
     /// Stop the dispatcher (drains pending work first).
@@ -174,15 +188,41 @@ fn dispatcher(
             .collect();
         let all_groups: Vec<&[(&Ciphertext, &Ciphertext)]> =
             group_refs.iter().map(|g| g.as_slice()).collect();
-        let mut results = {
-            let _span = telemetry::span(Phase::BatchDispatch);
-            inner.dot_pairs(&all_groups).into_iter()
-        };
-        for item in &items {
-            let n = item.groups.len();
-            let out: Vec<Ciphertext> = results.by_ref().take(n).collect();
-            // Receiver may have given up (job failed) — ignore.
-            let _ = item.reply.send(out);
+        // Chaos `batcher:fail` injects a dispatch failure; a real
+        // backend panic is caught the same way. Either way the
+        // dispatcher thread survives and the failure is *scattered* to
+        // every waiting item — a dead dispatcher would instead cascade
+        // "batcher dropped reply" panics into all future jobs.
+        let outcome: std::result::Result<Vec<Ciphertext>, String> =
+            if faults::check(FaultSite::Batcher).is_some() {
+                Err("injected batcher dispatch failure".to_string())
+            } else {
+                let _span = telemetry::span(Phase::BatchDispatch);
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    inner.dot_pairs(&all_groups)
+                }))
+                .map_err(|e| {
+                    e.downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "backend panicked in dispatch".to_string())
+                })
+            };
+        match outcome {
+            Ok(results) => {
+                let mut results = results.into_iter();
+                for item in &items {
+                    let n = item.groups.len();
+                    let out: Vec<Ciphertext> = results.by_ref().take(n).collect();
+                    // Receiver may have given up (job failed) — ignore.
+                    let _ = item.reply.send(Ok(out));
+                }
+            }
+            Err(msg) => {
+                for item in &items {
+                    let _ = item.reply.send(Err(msg.clone()));
+                }
+            }
         }
     }
 }
@@ -503,6 +543,38 @@ mod tests {
                 assert_eq!(a.ct_depth, b.ct_depth);
             }
         }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn injected_dispatch_failure_panics_caller_and_dispatcher_survives() {
+        use crate::util::faults::{FaultKind, FaultSession, FaultSite, FaultSpec};
+        let (ctx, keys, engine) = setup();
+        let mut rng = ChaChaRng::from_seed(506);
+        let a = ctx.encrypt(&encode_int(3, ctx.d()), &keys.pk, &mut rng);
+        let b = ctx.encrypt(&encode_int(5, ctx.d()), &keys.pk, &mut rng);
+        {
+            let _chaos = FaultSession::activate(&[FaultSpec {
+                site: FaultSite::Batcher,
+                kind: FaultKind::Fail,
+                rate: 1.0,
+                seed: 31,
+            }]);
+            let failed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                engine.dot_pairs(&[&[(&a, &b)][..]])
+            }));
+            let msg = match failed {
+                Err(e) => e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .expect("panic payload should be a String"),
+                Ok(_) => panic!("rate-1.0 dispatch fault must fail the call"),
+            };
+            assert!(msg.contains("batch dispatch failed"), "{msg}");
+        }
+        // Session over: the dispatcher is still alive and correct.
+        let out = engine.dot_pairs(&[&[(&a, &b)][..]]);
+        assert_eq!(ctx.decrypt(&out[0], &keys.sk).eval_at_2().to_i128(), Some(15));
         engine.shutdown();
     }
 

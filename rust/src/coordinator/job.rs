@@ -32,11 +32,23 @@ pub struct JobSpec {
     /// best-effort. A job whose deadline passes while still queued is
     /// expired *before* any engine work starts.
     pub deadline_ms: Option<u64>,
+    /// Idempotent submission token. Two submits carrying the same
+    /// `(tenant, token)` map to the *same* job: a client retrying after
+    /// a lost reply re-attaches instead of paying for a second
+    /// encrypted fit. `None` opts out (every submit is a new job).
+    pub token: Option<String>,
 }
 
 impl JobSpec {
     pub fn new(data: EncryptedDataset, cfg: FitConfig, cd_updates: Option<usize>) -> Self {
-        JobSpec { data, cfg, cd_updates, tenant: TenantId::default(), deadline_ms: None }
+        JobSpec {
+            data,
+            cfg,
+            cd_updates,
+            tenant: TenantId::default(),
+            deadline_ms: None,
+            token: None,
+        }
     }
 
     pub fn with_tenant(mut self, tenant: TenantId) -> Self {
@@ -46,6 +58,11 @@ impl JobSpec {
 
     pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
         self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    pub fn with_token(mut self, token: impl Into<String>) -> Self {
+        self.token = Some(token.into());
         self
     }
 }
@@ -58,6 +75,9 @@ pub enum JobState {
     Failed(String),
     /// Deadline passed before the job reached an execution lane.
     Expired,
+    /// Bounced by a server drain while still queued: no engine work
+    /// was performed; resubmit to another server.
+    Cancelled,
 }
 
 impl JobState {
@@ -68,12 +88,16 @@ impl JobState {
             JobState::Done(_) => "done",
             JobState::Failed(_) => "failed",
             JobState::Expired => "expired",
+            JobState::Cancelled => "cancelled",
         }
     }
 
     /// Terminal states fire the job's completion event exactly once.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, JobState::Done(_) | JobState::Failed(_) | JobState::Expired)
+        matches!(
+            self,
+            JobState::Done(_) | JobState::Failed(_) | JobState::Expired | JobState::Cancelled
+        )
     }
 }
 

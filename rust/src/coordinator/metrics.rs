@@ -103,6 +103,11 @@ pub struct Metrics {
     /// Jobs whose deadline passed before (or at) lane pickup, plus
     /// submissions rejected as deadline-infeasible up front.
     pub jobs_expired: AtomicU64,
+    /// Queued jobs bounced by a server drain (no engine work done).
+    pub jobs_cancelled: AtomicU64,
+    /// Submissions answered from the idempotent-token table: a retry
+    /// re-attached to an existing job instead of fitting again.
+    pub jobs_deduped: AtomicU64,
     pub job_latency: Histogram,
 }
 
@@ -110,13 +115,15 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "jobs: submitted={} completed={} rejected={} failed={} overloaded={} expired={} \
-             | latency mean={:.1}ms p50≤{:.0}ms p95≤{:.0}ms",
+             cancelled={} deduped={} | latency mean={:.1}ms p50≤{:.0}ms p95≤{:.0}ms",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_rejected.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.jobs_overloaded.load(Ordering::Relaxed),
             self.jobs_expired.load(Ordering::Relaxed),
+            self.jobs_cancelled.load(Ordering::Relaxed),
+            self.jobs_deduped.load(Ordering::Relaxed),
             self.job_latency.mean_ms(),
             self.job_latency.quantile_ms(0.5),
             self.job_latency.quantile_ms(0.95),

@@ -16,6 +16,8 @@
 //! - [`metrics`] — counters and latency histograms.
 //! - [`protocol`] / [`service`] — versioned wire codec with structured
 //!   error codes, TCP server and client.
+//! - [`retry`] — retrying client: capped decorrelated-jitter backoff
+//!   over the retryable error codes, idempotent resubmission.
 
 pub mod admission;
 pub mod arena;
@@ -23,6 +25,7 @@ pub mod batcher;
 pub mod job;
 pub mod metrics;
 pub mod protocol;
+pub mod retry;
 pub mod scheduler;
 pub mod service;
 pub mod tenant;
@@ -30,6 +33,7 @@ pub mod tenant;
 pub use batcher::{BatchConfig, BatchingEngine};
 pub use job::{JobId, JobSpec};
 pub use protocol::{ErrorCode, WireError, WireResult, PROTOCOL_VERSION};
-pub use scheduler::{Coordinator, CoordinatorConfig};
+pub use retry::{RetryPolicy, RetryingClient};
+pub use scheduler::{Coordinator, CoordinatorConfig, DrainReport};
 pub use service::{Client, Server};
 pub use tenant::{TenantEngine, TenantId, TenantRegistry};

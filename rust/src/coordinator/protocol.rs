@@ -46,9 +46,20 @@ pub enum ErrorCode {
     Internal,
     /// Client-side transport failure (connect/read/write/parse).
     Transport,
+    /// Server is draining: admission stopped, queued jobs bounced.
+    ShuttingDown,
 }
 
 impl ErrorCode {
+    /// Whether a client retry can possibly succeed. Only transient
+    /// conditions qualify: a transport hiccup or a momentarily full
+    /// queue. Everything else is deterministic — retrying a
+    /// `bad_request` or an `admission_denied` reproduces the failure
+    /// and burns an encrypted-fit slot doing it.
+    pub fn retryable(self) -> bool {
+        matches!(self, ErrorCode::Transport | ErrorCode::Overloaded)
+    }
+
     pub fn as_str(self) -> &'static str {
         match self {
             ErrorCode::BadVersion => "bad_version",
@@ -60,6 +71,7 @@ impl ErrorCode {
             ErrorCode::JobFailed => "job_failed",
             ErrorCode::Internal => "internal",
             ErrorCode::Transport => "transport",
+            ErrorCode::ShuttingDown => "shutting_down",
         }
     }
 
@@ -74,6 +86,7 @@ impl ErrorCode {
             "job_failed" => ErrorCode::JobFailed,
             "internal" => ErrorCode::Internal,
             "transport" => ErrorCode::Transport,
+            "shutting_down" => ErrorCode::ShuttingDown,
             _ => return None,
         })
     }
@@ -661,11 +674,15 @@ mod tests {
             ErrorCode::JobFailed,
             ErrorCode::Internal,
             ErrorCode::Transport,
+            ErrorCode::ShuttingDown,
         ];
         for code in all {
             assert_eq!(ErrorCode::from_str(code.as_str()), Some(code));
         }
         assert_eq!(ErrorCode::from_str("bogus"), None);
+        // Retry policy: only transient conditions are retryable.
+        let retryable: Vec<_> = all.iter().filter(|c| c.retryable()).collect();
+        assert_eq!(retryable, [&ErrorCode::Overloaded, &ErrorCode::Transport]);
         let e = WireError::new(ErrorCode::Overloaded, "queue full");
         assert_eq!(e.to_string(), "[overloaded] queue full");
         // WireError implements std::error::Error, so `?` flattens it

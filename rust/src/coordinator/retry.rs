@@ -1,0 +1,302 @@
+//! Retrying wire client: capped exponential backoff with decorrelated
+//! jitter.
+//!
+//! [`RetryPolicy`] turns `(max_attempts, base_ms, cap_ms, seed)` into a
+//! deterministic backoff schedule using the *decorrelated jitter*
+//! recurrence — `sleep[i] = uniform(base, 3·sleep[i-1])`, capped — with
+//! the uniform draws taken from the same counter-indexed splitmix64
+//! stream the fault registry uses ([`faults::mix64`]). Two clients with
+//! different seeds desynchronise (no retry storms); the same seed
+//! replays the exact schedule, which is what makes the policy testable
+//! without sleeping.
+//!
+//! [`RetryingClient`] wraps [`Client`] and retries **only** error codes
+//! the protocol marks retryable ([`ErrorCode::retryable`]: `transport`
+//! and `overloaded`). Everything else — `bad_request`, `job_failed`,
+//! `deadline_exceeded`, `shutting_down`, … — passes through on first
+//! sight: retrying a deterministic rejection is just load. On a
+//! transport error the cached connection is dropped and redialled on
+//! the next attempt.
+//!
+//! Retried submission is only safe when it is idempotent, so
+//! [`RetryingClient::submit`] *requires* a token: if the first attempt
+//! was admitted but its reply was lost, the resubmit re-attaches to the
+//! original job instead of fitting twice.
+
+use std::time::Duration;
+
+use crate::coordinator::job::JobId;
+use crate::coordinator::protocol::{WireError, WireResult};
+use crate::coordinator::service::Client;
+use crate::els::encrypted::{EncryptedFit, FitConfig};
+use crate::els::model::EncryptedDataset;
+use crate::util::faults;
+use crate::util::json::Json;
+
+/// Backoff policy: attempts, base/cap delays and the jitter seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try + retries); at least 1.
+    pub max_attempts: u32,
+    /// Lower bound of every backoff draw, ms.
+    pub base_ms: u64,
+    /// Upper bound (cap) of every backoff draw, ms.
+    pub cap_ms: u64,
+    /// Seed for the decorrelated-jitter draw stream.
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32, base_ms: u64, cap_ms: u64, seed: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            base_ms: base_ms.max(1),
+            cap_ms: cap_ms.max(base_ms.max(1)),
+            seed,
+        }
+    }
+
+    /// The full backoff schedule: `max_attempts - 1` sleeps (one
+    /// between each pair of attempts), fully determined by the seed.
+    pub fn backoff_schedule(&self) -> Vec<Duration> {
+        let mut schedule = Vec::with_capacity(self.max_attempts.saturating_sub(1) as usize);
+        let mut prev = self.base_ms;
+        for i in 0..self.max_attempts.saturating_sub(1) {
+            // Decorrelated jitter: uniform in [base, min(cap, 3*prev)].
+            let hi = prev.saturating_mul(3).min(self.cap_ms).max(self.base_ms);
+            let span = hi - self.base_ms + 1;
+            let sleep = self.base_ms + faults::mix64(self.seed, i as u64) % span;
+            schedule.push(Duration::from_millis(sleep));
+            prev = sleep;
+        }
+        schedule
+    }
+}
+
+impl Default for RetryPolicy {
+    /// 5 attempts, 10ms..2s, fixed seed — override the seed per client
+    /// in production so retries desynchronise.
+    fn default() -> RetryPolicy {
+        RetryPolicy::new(5, 10, 2000, 0x9e37_79b9_7f4a_7c15)
+    }
+}
+
+/// A [`Client`] wrapper that redials and retries retryable failures
+/// according to a [`RetryPolicy`].
+pub struct RetryingClient {
+    addr: String,
+    client: Option<Client>,
+    schedule: Vec<Duration>,
+    retries: u64,
+    sleeper: Box<dyn FnMut(Duration) + Send>,
+}
+
+impl RetryingClient {
+    pub fn new(addr: &str, policy: RetryPolicy) -> RetryingClient {
+        RetryingClient {
+            addr: addr.to_string(),
+            client: None,
+            schedule: policy.backoff_schedule(),
+            retries: 0,
+            sleeper: Box::new(std::thread::sleep),
+        }
+    }
+
+    /// Replace the sleep function — tests pass a recorder so backoff
+    /// behaviour is asserted without wall-clock waits.
+    pub fn with_sleeper(mut self, sleeper: impl FnMut(Duration) + Send + 'static) -> Self {
+        self.sleeper = Box::new(sleeper);
+        self
+    }
+
+    /// Retries performed so far (across all operations).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Run `op` against a (re)dialled connection, retrying per policy.
+    fn with_retry<T>(&mut self, mut op: impl FnMut(&mut Client) -> WireResult<T>) -> WireResult<T> {
+        let attempts = self.schedule.len() + 1;
+        let mut last: Option<WireError> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                let pause = self.schedule[attempt - 1];
+                (self.sleeper)(pause);
+                self.retries += 1;
+            }
+            let res = match self.client.as_mut() {
+                Some(c) => op(c),
+                None => match Client::connect(&self.addr) {
+                    Ok(mut c) => {
+                        let r = op(&mut c);
+                        self.client = Some(c);
+                        r
+                    }
+                    Err(e) => Err(e),
+                },
+            };
+            match res {
+                Ok(v) => return Ok(v),
+                Err(e) if e.code.retryable() => {
+                    if e.code == crate::coordinator::protocol::ErrorCode::Transport {
+                        // The connection is suspect — redial next time.
+                        self.client = None;
+                    }
+                    last = Some(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
+    }
+
+    pub fn ping(&mut self) -> WireResult<()> {
+        self.with_retry(|c| c.ping())
+    }
+
+    /// Retried submission. The token is mandatory: a retry after a lost
+    /// reply re-attaches to the job the first attempt created, so the
+    /// engine never fits the same submission twice.
+    pub fn submit(
+        &mut self,
+        data: &EncryptedDataset,
+        cfg: &FitConfig,
+        cd_updates: Option<usize>,
+        tenant: Option<&str>,
+        deadline_ms: Option<u64>,
+        token: &str,
+    ) -> WireResult<JobId> {
+        self.with_retry(|c| {
+            c.submit_opts(data, cfg, cd_updates, tenant, deadline_ms, Some(token))
+        })
+    }
+
+    /// Wait for and fetch a fit. Safe to retry: the server peeks (the
+    /// job stays tracked until acked), so a retry after a lost reply
+    /// re-reads the same result.
+    pub fn result(&mut self, ctx: &crate::fhe::FvContext, id: JobId) -> WireResult<EncryptedFit> {
+        self.with_retry(|c| c.result(ctx, id))
+    }
+
+    pub fn ack(&mut self, id: JobId) -> WireResult<bool> {
+        self.with_retry(|c| c.ack(id))
+    }
+
+    pub fn health(&mut self) -> WireResult<Json> {
+        self.with_retry(|c| c.health())
+    }
+
+    pub fn metrics_full(&mut self) -> WireResult<Json> {
+        self.with_retry(|c| c.metrics_full())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::ErrorCode;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn backoff_schedule_is_deterministic_jittered_and_capped() {
+        let p = RetryPolicy::new(8, 10, 200, 42);
+        let a = p.backoff_schedule();
+        let b = p.backoff_schedule();
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        assert_eq!(a.len(), 7);
+        for d in &a {
+            let ms = d.as_millis() as u64;
+            assert!((10..=200).contains(&ms), "draw {ms}ms escaped [base, cap]");
+        }
+        let other = RetryPolicy::new(8, 10, 200, 43).backoff_schedule();
+        assert_ne!(a, other, "different seeds must desynchronise");
+        // Not a fixed ladder: at least two distinct values with this
+        // seed (a degenerate all-equal schedule means the jitter died).
+        let distinct: std::collections::BTreeSet<_> = a.iter().collect();
+        assert!(distinct.len() > 1, "schedule {a:?} has no jitter");
+    }
+
+    #[test]
+    fn single_attempt_policy_has_no_backoff() {
+        assert!(RetryPolicy::new(1, 10, 100, 7).backoff_schedule().is_empty());
+        // Constructor clamps a zero-attempt request up to one attempt.
+        assert_eq!(RetryPolicy::new(0, 10, 100, 7).max_attempts, 1);
+    }
+
+    #[test]
+    fn connect_refused_retries_to_exhaustion_with_the_planned_pauses() {
+        // Reserve a port, then free it: every dial refuses.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let policy = RetryPolicy::new(4, 5, 50, 99);
+        let expected = policy.backoff_schedule();
+        let slept: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::new()));
+        let rec = slept.clone();
+        let mut client = RetryingClient::new(&addr, policy)
+            .with_sleeper(move |d| rec.lock().unwrap().push(d));
+        let err = client.ping().expect_err("nothing is listening");
+        assert_eq!(err.code, ErrorCode::Transport);
+        assert!(err.message.starts_with("connect-refused: "), "got '{}'", err.message);
+        assert_eq!(client.retries(), 3, "4 attempts = 3 retries");
+        assert_eq!(*slept.lock().unwrap(), expected, "pauses must follow the schedule");
+    }
+
+    #[test]
+    fn non_retryable_errors_pass_through_without_retry() {
+        // A fake server that answers every request with bad_request.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut w = stream;
+            let mut line = String::new();
+            if reader.read_line(&mut line).unwrap() > 0 {
+                let reply = b"{\"v\":1,\"ok\":false,\"code\":\"bad_request\",\"error\":\"nope\"}\n";
+                w.write_all(reply).unwrap();
+            }
+        });
+        let mut client = RetryingClient::new(&addr, RetryPolicy::new(5, 5, 50, 1))
+            .with_sleeper(|_| panic!("must not sleep for a non-retryable error"));
+        let err = client.ping().expect_err("server said bad_request");
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert_eq!(client.retries(), 0);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn transport_failure_mid_stream_redials_and_recovers() {
+        // First connection dies before replying; the second serves a
+        // real pong. The retrying client must land on Ok with exactly
+        // one retry.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // conn 1: read the request, close without replying.
+            let (stream, _) = listener.accept().unwrap();
+            {
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+            }
+            drop(stream);
+            // conn 2: serve a pong.
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut w = stream;
+            let mut line = String::new();
+            if reader.read_line(&mut line).unwrap() > 0 {
+                w.write_all(b"{\"v\":1,\"ok\":true}\n").unwrap();
+            }
+        });
+        let mut client =
+            RetryingClient::new(&addr, RetryPolicy::new(3, 5, 50, 2)).with_sleeper(|_| {});
+        client.ping().expect("second attempt must succeed");
+        assert_eq!(client.retries(), 1);
+        server.join().unwrap();
+    }
+}

@@ -10,13 +10,14 @@
 //! matter how many unrelated jobs finish.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::els::encrypted::{self, DatasetRef, EncryptedFit};
 use crate::runtime::backend::HeEngine;
 use crate::runtime::exec::{Executor, TimerHandle, TimerWheel};
+use crate::util::faults::{self, FaultKind, FaultSite};
 use crate::util::telemetry::{self, Phase};
 
 use super::admission::{admit, admit_load, AdmissionRequest, LoadState};
@@ -103,6 +104,15 @@ impl<T> TenantQueues<T> {
     }
 }
 
+/// What a drain accomplished: how many queued jobs were bounced
+/// (resolved `Cancelled`, no engine work lost) and whether every
+/// in-flight job reached a terminal state before the timeout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DrainReport {
+    pub bounced: u64,
+    pub drained: bool,
+}
+
 /// The job coordinator.
 pub struct Coordinator {
     engine: Arc<dyn HeEngine>,
@@ -110,8 +120,17 @@ pub struct Coordinator {
     timers: TimerWheel,
     jobs: Mutex<BTreeMap<JobId, Job>>,
     queue: Mutex<TenantQueues<QueuedJob>>,
+    /// Idempotent-submission table: `(tenant, token)` → the job that
+    /// submission created. Lock order: `tokens` strictly before
+    /// `queue`/`jobs` (token-bearing submits hold it across enqueue so
+    /// two racing retries cannot both create a job).
+    tokens: Mutex<BTreeMap<(TenantId, String), JobId>>,
     tenants: TenantRegistry,
     running: AtomicUsize,
+    /// Flipped false by [`begin_shutdown`](Self::begin_shutdown);
+    /// checked under the queue lock so admission and drain serialise.
+    accepting: AtomicBool,
+    started: Instant,
     next_id: AtomicU64,
     cfg: CoordinatorConfig,
     pub metrics: Arc<Metrics>,
@@ -134,8 +153,11 @@ impl Coordinator {
             timers: TimerWheel::new("els-coord", Duration::from_millis(5)),
             jobs: Mutex::new(BTreeMap::new()),
             queue: Mutex::new(TenantQueues::default()),
+            tokens: Mutex::new(BTreeMap::new()),
             tenants: TenantRegistry::new(cfg.cache_budget_bytes, cfg.cache_shards),
             running: AtomicUsize::new(0),
+            accepting: AtomicBool::new(true),
+            started: Instant::now(),
             next_id: AtomicU64::new(1),
             cfg,
             metrics: Arc::new(Metrics::default()),
@@ -164,6 +186,18 @@ impl Coordinator {
     /// executor lane under the tenant's engine view.
     pub fn submit(self: &Arc<Self>, spec: JobSpec) -> WireResult<JobId> {
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        // Idempotent replay: a token-bearing submit holds the token
+        // table for its whole critical section, so a duplicate either
+        // sees the mapping (and re-attaches — no second fit, the ct-mul
+        // counter proves it) or is the one that creates it.
+        let token_key = spec.token.clone().map(|t| (spec.tenant.clone(), t));
+        let mut tokens = token_key.as_ref().map(|_| self.tokens.lock().unwrap());
+        if let (Some(key), Some(tokens)) = (token_key.as_ref(), tokens.as_deref()) {
+            if let Some(&id) = tokens.get(key) {
+                self.metrics.jobs_deduped.fetch_add(1, Ordering::Relaxed);
+                return Ok(id);
+            }
+        }
         let tenant = self.tenants.get_or_create(&spec.tenant);
         tenant.counters.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let req = AdmissionRequest {
@@ -187,6 +221,18 @@ impl Coordinator {
         // Load/deadline admission under the queue lock, so the
         // capacity check and the enqueue are one atomic step.
         let mut queue = self.queue.lock().unwrap();
+        // Drain gate, checked under the same lock `begin_shutdown`
+        // holds while bouncing: either this submit queues before the
+        // drain sweep (and is bounced by it) or it is refused here —
+        // never a job admitted into a draining server unresolved.
+        if !self.accepting.load(Ordering::Acquire) {
+            self.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            tenant.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(WireError::new(
+                ErrorCode::ShuttingDown,
+                "server is draining; resubmit elsewhere",
+            ));
+        }
         let load = LoadState {
             pending: queue.pending(),
             running: self.running.load(Ordering::Relaxed),
@@ -215,23 +261,52 @@ impl Coordinator {
         let tenant_id = spec.tenant.clone();
         queue.push(&tenant_id, QueuedJob { id, spec, timer });
         drop(queue);
+        if let (Some(key), Some(tokens)) = (token_key, tokens.as_deref_mut()) {
+            tokens.insert(key, id);
+        }
         // 1:1 invariant: every queued entry gets exactly one lane task,
         // and every lane task pops exactly one entry (possibly finding
-        // it already expired).
+        // it already expired). A rejected spawn (executor already shut
+        // down — coordinator teardown racing a submit) resolves the job
+        // as cancelled instead of leaving a waiter hanging.
         let me = Arc::clone(self);
-        self.exec.spawn(move || me.run_next());
+        if !self.exec.spawn(move || me.run_next()) {
+            self.cancel_if_queued(id);
+            return Err(WireError::new(
+                ErrorCode::ShuttingDown,
+                "executor stopped before the job could be scheduled",
+            ));
+        }
         Ok(id)
     }
 
     /// Expire `id` if it is still queued (timer-wheel callback; also
-    /// the pop-time check's backend). Never touches a running job.
+    /// the pop-time check's backend). Never touches a running job, and
+    /// re-checks the *actual* deadline — a spurious early timer fire
+    /// (chaos `timer:spurious`) must not expire a live job.
     fn expire_if_queued(&self, id: JobId) {
         let mut jobs = self.jobs.lock().unwrap();
         if let Some(j) = jobs.get_mut(&id) {
-            if matches!(j.state, JobState::Queued) {
+            let due = j.deadline.is_some_and(|d| Instant::now() >= d);
+            if matches!(j.state, JobState::Queued) && due {
                 j.state = JobState::Expired;
                 j.finished = Some(Instant::now());
                 self.metrics.jobs_expired.fetch_add(1, Ordering::Relaxed);
+                j.done.notify();
+            }
+        }
+    }
+
+    /// Resolve a still-queued job as `Cancelled` (drain bounce or
+    /// failed lane handoff): completes the done-event, counts it, and
+    /// never touches a job that reached a lane.
+    fn cancel_if_queued(&self, id: JobId) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(j) = jobs.get_mut(&id) {
+            if matches!(j.state, JobState::Queued) {
+                j.state = JobState::Cancelled;
+                j.finished = Some(Instant::now());
+                self.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
                 j.done.notify();
             }
         }
@@ -270,6 +345,12 @@ impl Coordinator {
         let engine = TenantEngine::new(Arc::clone(&self.engine), Arc::clone(&tenant));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let _span = telemetry::span(Phase::JobExecute);
+            // Chaos `lane:panic`: the job dies mid-execution exactly the
+            // way a backend bug would — the recovery path below must
+            // resolve it to `job_failed` with all state reclaimed.
+            if faults::check(FaultSite::Lane) == Some(FaultKind::Panic) {
+                panic!("injected lane panic");
+            }
             match spec.cd_updates {
                 Some(updates) => {
                     Ok(encrypted::fit_cd(&engine, &spec.data, spec.cfg.nu, updates))
@@ -340,24 +421,39 @@ impl Coordinator {
         }
     }
 
-    /// Remove and return a finished fit.
+    fn terminal_error(id: JobId, state: &JobState) -> WireError {
+        match state {
+            JobState::Failed(msg) => {
+                WireError::new(ErrorCode::JobFailed, format!("job failed: {msg}"))
+            }
+            JobState::Expired => WireError::new(
+                ErrorCode::DeadlineExceeded,
+                format!("{id} expired before execution"),
+            ),
+            JobState::Cancelled => WireError::new(
+                ErrorCode::ShuttingDown,
+                format!("{id} was bounced by a server drain; resubmit"),
+            ),
+            _ => unreachable!("terminal_error on non-error state"),
+        }
+    }
+
+    /// Remove and return a finished fit (in-process consumers: one
+    /// shot, the job is forgotten). Wire consumers use the two-step
+    /// [`peek_result`](Self::peek_result) + [`release`](Self::release)
+    /// so a reply lost in flight can be re-fetched.
     pub fn take_result(&self, id: JobId) -> WireResult<EncryptedFit> {
+        let mut tokens = self.tokens.lock().unwrap();
         let mut jobs = self.jobs.lock().unwrap();
         let terminal = jobs.get(&id).map(|j| j.state.is_terminal());
         match terminal {
             None => Err(WireError::new(ErrorCode::UnknownJob, format!("unknown {id}"))),
             Some(true) => {
                 let job = jobs.remove(&id).unwrap();
+                tokens.retain(|_, v| *v != id);
                 match job.state {
                     JobState::Done(fit) => Ok(fit),
-                    JobState::Failed(msg) => {
-                        Err(WireError::new(ErrorCode::JobFailed, format!("job failed: {msg}")))
-                    }
-                    JobState::Expired => Err(WireError::new(
-                        ErrorCode::DeadlineExceeded,
-                        format!("{id} expired before execution"),
-                    )),
-                    _ => unreachable!(),
+                    other => Err(Self::terminal_error(id, &other)),
                 }
             }
             Some(false) => {
@@ -365,6 +461,115 @@ impl Coordinator {
                 Err(WireError::internal(format!("{id} still {s}")))
             }
         }
+    }
+
+    /// Read a finished fit *without* consuming the job — the wire
+    /// `result` verb. The job stays tracked until the client `ack`s
+    /// ([`release`]), so a reply that dies on the wire (disconnect,
+    /// truncated frame) can be re-fetched by a retry instead of
+    /// landing on `unknown_job`. At-least-once delivery, zero
+    /// recomputation.
+    ///
+    /// [`release`]: Self::release
+    pub fn peek_result(&self, id: JobId) -> WireResult<EncryptedFit> {
+        let jobs = self.jobs.lock().unwrap();
+        match jobs.get(&id) {
+            None => Err(WireError::new(ErrorCode::UnknownJob, format!("unknown {id}"))),
+            Some(j) => match &j.state {
+                JobState::Done(fit) => Ok(fit.clone()),
+                s if s.is_terminal() => Err(Self::terminal_error(id, s)),
+                s => Err(WireError::internal(format!("{id} still {}", s.label()))),
+            },
+        }
+    }
+
+    /// Acknowledge a delivered result: forget the terminal job and any
+    /// idempotency token pointing at it. Idempotent — acking an
+    /// unknown or still-active job is a no-op returning `false`.
+    pub fn release(&self, id: JobId) -> bool {
+        let mut tokens = self.tokens.lock().unwrap();
+        let mut jobs = self.jobs.lock().unwrap();
+        match jobs.get(&id) {
+            Some(j) if j.state.is_terminal() => {
+                jobs.remove(&id);
+                tokens.retain(|_, v| *v != id);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    // ---- drain / health -------------------------------------------------
+
+    /// Stop admission and bounce every queued job as `Cancelled`.
+    /// Running jobs are left to finish (their results stay fetchable).
+    /// Idempotent. Timers for bounced jobs are cancelled, their done
+    /// events complete — no waiter hangs, no handle leaks.
+    pub fn begin_shutdown(&self) {
+        let bounced: Vec<QueuedJob> = {
+            let mut queue = self.queue.lock().unwrap();
+            self.accepting.store(false, Ordering::Release);
+            std::iter::from_fn(|| queue.pop_fair()).collect()
+        };
+        for entry in bounced {
+            if let Some(t) = entry.timer {
+                t.cancel();
+            }
+            self.cancel_if_queued(entry.id);
+        }
+    }
+
+    /// Full drain: [`begin_shutdown`](Self::begin_shutdown), then wait
+    /// up to `timeout` for in-flight jobs to reach terminal states.
+    pub fn shutdown(&self, timeout: Duration) -> DrainReport {
+        let before = self.metrics.jobs_cancelled.load(Ordering::Relaxed);
+        self.begin_shutdown();
+        let bounced = self.metrics.jobs_cancelled.load(Ordering::Relaxed) - before;
+        let deadline = Instant::now() + timeout;
+        let drained = loop {
+            if self.jobs.lock().unwrap().values().all(|j| j.state.is_terminal()) {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        DrainReport { bounced, drained }
+    }
+
+    /// Whether submissions are currently admitted (false once a drain
+    /// has begun).
+    pub fn is_accepting(&self) -> bool {
+        self.accepting.load(Ordering::Acquire)
+    }
+
+    /// Time since the coordinator was constructed.
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Jobs currently executing on lanes.
+    pub fn running_jobs(&self) -> usize {
+        self.running.load(Ordering::Relaxed)
+    }
+
+    /// Number of executor worker lanes.
+    pub fn lanes(&self) -> usize {
+        self.exec.lanes()
+    }
+
+    /// Jobs tracked (any state) — terminal jobs leave on `release`/
+    /// `take_result`, so a steadily growing count means unacked
+    /// results.
+    pub fn tracked_jobs(&self) -> usize {
+        self.jobs.lock().unwrap().len()
+    }
+
+    /// Timer-wheel entries currently parked (the chaos battery asserts
+    /// this returns to zero — no leaked deadline handles).
+    pub fn timers_live(&self) -> usize {
+        self.timers.live_entries()
     }
 }
 
@@ -636,5 +841,119 @@ mod tests {
         for id in ids {
             let _ = coord.take_result(id).unwrap();
         }
+    }
+
+    #[test]
+    fn drain_bounces_queued_jobs_and_refuses_new_submissions() {
+        let mut f = fixture(608, 2);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord = Coordinator::new(native, 1);
+        assert!(coord.is_accepting());
+        // 4 jobs on one lane: the first starts, the rest sit queued
+        // (fits are far slower than the pre-encrypted submit burst).
+        let ids: Vec<JobId> = (0..4)
+            .map(|_| {
+                let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+                coord.submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None)).unwrap()
+            })
+            .collect();
+        let report = coord.shutdown(Duration::from_secs(600));
+        assert!(report.drained, "in-flight jobs must reach terminal states");
+        assert!(report.bounced >= 1, "a 4-deep backlog on one lane must bounce something");
+        assert!(!coord.is_accepting());
+        assert_eq!(coord.queue_depth(), 0, "drain must leave no queued entries");
+        // Deterministic resolution: every job is done or cancelled,
+        // every waiter wakes immediately, cancelled jobs answer with
+        // the structured shutting_down code.
+        let mut done = 0u64;
+        let mut cancelled = 0u64;
+        for id in ids {
+            coord.wait(id, Duration::from_secs(5)).unwrap();
+            match coord.state(id).as_deref() {
+                Some("done") => {
+                    done += 1;
+                    let _ = coord.take_result(id).unwrap();
+                }
+                Some("cancelled") => {
+                    cancelled += 1;
+                    let err = coord.take_result(id).unwrap_err();
+                    assert_eq!(err.code, ErrorCode::ShuttingDown, "{err}");
+                }
+                s => panic!("job left in state {s:?} after drain"),
+            }
+        }
+        assert!(done >= 1, "the running job must be allowed to finish");
+        assert_eq!(cancelled, report.bounced);
+        assert_eq!(
+            coord.metrics.jobs_cancelled.load(Ordering::Relaxed),
+            cancelled
+        );
+        // Admission is closed: a fresh submit bounces structurally.
+        let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let err =
+            coord.submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None)).unwrap_err();
+        assert_eq!(err.code, ErrorCode::ShuttingDown, "{err}");
+        // Second drain is an idempotent no-op.
+        let again = coord.shutdown(Duration::from_secs(5));
+        assert_eq!(again.bounced, 0);
+        assert!(again.drained);
+        assert_eq!(coord.tracked_jobs(), 0, "all results consumed, nothing leaked");
+    }
+
+    #[test]
+    fn idempotent_token_reattaches_without_second_execution() {
+        let mut f = fixture(609, 2);
+        let native =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord = Coordinator::new(native.clone(), 2);
+        let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let id = coord
+            .submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None).with_token("attempt-1"))
+            .unwrap();
+        coord.wait(id, Duration::from_secs(600)).unwrap();
+        // The "retry": same (tenant, token), different payload bytes —
+        // the server answers from the token table without running
+        // anything (the ct-mul counter is the proof).
+        let muls_before = native.stats().snapshot().0;
+        let data2 = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let id2 = coord
+            .submit(JobSpec::new(data2, FitConfig::gd(2, f.nu), None).with_token("attempt-1"))
+            .unwrap();
+        assert_eq!(id2, id, "token retry must re-attach to the original job");
+        assert_eq!(
+            native.stats().snapshot().0,
+            muls_before,
+            "token dedup must not re-execute the fit"
+        );
+        assert_eq!(coord.metrics.jobs_deduped.load(Ordering::Relaxed), 1);
+        // Peek is repeatable (at-least-once delivery)…
+        let a = coord.peek_result(id).unwrap();
+        let b = coord.peek_result(id).unwrap();
+        assert_eq!(a.betas.len(), b.betas.len());
+        // …and release is the explicit goodbye: job and token gone, so
+        // the *same* token now names a fresh job.
+        assert!(coord.release(id));
+        assert!(!coord.release(id), "second ack is a no-op");
+        assert_eq!(coord.peek_result(id).unwrap_err().code, ErrorCode::UnknownJob);
+        let data3 = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let id3 = coord
+            .submit(JobSpec::new(data3, FitConfig::gd(2, f.nu), None).with_token("attempt-1"))
+            .unwrap();
+        assert_ne!(id3, id, "released token must not resurrect the old job");
+        coord.wait(id3, Duration::from_secs(600)).unwrap();
+        let _ = coord.take_result(id3).unwrap();
+        // Different tenants never share a token namespace.
+        let data4 = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let id4 = coord
+            .submit(
+                JobSpec::new(data4, FitConfig::gd(2, f.nu), None)
+                    .with_tenant(TenantId::new("other"))
+                    .with_token("attempt-1"),
+            )
+            .unwrap();
+        assert_ne!(id4, id3);
+        coord.wait(id4, Duration::from_secs(600)).unwrap();
+        let _ = coord.take_result(id4).unwrap();
     }
 }

@@ -6,9 +6,20 @@
 //! mis-parsing a future schema. Requests (one JSON object per line):
 //!
 //! - `{"v":1,"type":"submit","data":{...},"cfg":{...}}` with optional
-//!   `"tenant":"name"` and `"deadline_ms":N` → `{"v":1,"ok":true,"id":N}`
+//!   `"tenant":"name"`, `"deadline_ms":N` and idempotency `"token":"s"`
+//!   → `{"v":1,"ok":true,"id":N}` (a resubmitted `(tenant, token)`
+//!   re-attaches to the original job instead of fitting again)
 //! - `{"v":1,"type":"status","id":N}` → `{"v":1,"ok":true,"state":"running"}`
-//! - `{"v":1,"type":"result","id":N}` → `{"v":1,"ok":true,"fit":{...}}` (waits)
+//! - `{"v":1,"type":"result","id":N}` → `{"v":1,"ok":true,"fit":{...}}`
+//!   (waits; the job stays tracked so a retry after a lost reply can
+//!   fetch it again — `ack` releases it)
+//! - `{"v":1,"type":"ack","id":N}` → `{"v":1,"ok":true,"released":bool}`
+//! - `{"v":1,"type":"health"}` → `{"v":1,"ok":true,"accepting":bool,
+//!   "lanes":N,"queue_depth":N,"running":N,"tracked_jobs":N,
+//!   "timers_live":N,"uptime_ms":N}`
+//! - `{"v":1,"type":"shutdown"}` with optional `"drain_ms":N` (default
+//!   10000) → `{"v":1,"ok":true,"bounced":N,"drained":bool}` — stops
+//!   admission, bounces queued jobs (`shutting_down`), drains in-flight
 //! - `{"v":1,"type":"metrics"}` → `{"v":1,"ok":true,"summary":"...",
 //!   "stats":{...},"snapshot":{...},"histogram":{...},"tenants":[...]}`
 //!   — `snapshot` is the unified
@@ -20,7 +31,12 @@
 //! Error replies are `{"v":1,"ok":false,"code":"...","error":"..."}`
 //! with `code` one of the structured [`proto::ErrorCode`] values;
 //! [`Client`] surfaces them as typed [`WireError`]s (transport
-//! failures map to code `transport`).
+//! failures map to code `transport`, with the io incident class —
+//! connect-refused, connection-reset, truncated-frame, … — prefixed
+//! onto the message so retry policies and operators can tell them
+//! apart). The `wire_read`/`wire_write` chaos sites
+//! ([`crate::util::faults`]) inject io faults, mid-frame disconnects
+//! and partial writes at this layer.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -37,6 +53,7 @@ use crate::coordinator::scheduler::Coordinator;
 use crate::coordinator::tenant::TenantId;
 use crate::els::encrypted::EncryptedFit;
 use crate::els::model::EncryptedDataset;
+use crate::util::faults::{self, FaultKind, FaultSite};
 use crate::util::json::Json;
 use crate::util::telemetry::{self, MetricsSnapshot, Phase};
 
@@ -109,6 +126,20 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client closed
         }
+        // Chaos `wire_read`: the request dies *before* handling, as if
+        // the socket failed mid-read — nothing was admitted, so a
+        // client retry is always safe here.
+        match faults::check(FaultSite::WireRead) {
+            Some(FaultKind::Disconnect) => return Ok(()),
+            Some(FaultKind::IoError) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "injected wire read fault",
+                )
+                .into());
+            }
+            _ => {}
+        }
         // One span per request: handling + reply serialisation.
         let _span = telemetry::span(Phase::ServeReply);
         let response = match handle_request(&coord, line.trim()) {
@@ -120,7 +151,27 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
                 Json::obj(fields)
             }
         };
-        writer.write_all(response.to_string_json().as_bytes())?;
+        let frame = response.to_string_json();
+        // Chaos `wire_write`: the request WAS processed but the reply
+        // is lost or mangled — exactly the window idempotent submit
+        // tokens and the peek-then-ack result protocol exist for.
+        match faults::check(FaultSite::WireWrite) {
+            Some(FaultKind::Disconnect) => return Ok(()),
+            Some(FaultKind::PartialWrite) => {
+                let bytes = frame.as_bytes();
+                writer.write_all(&bytes[..bytes.len() / 2])?;
+                return Ok(()); // close without the newline terminator
+            }
+            Some(FaultKind::IoError) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "injected wire write fault",
+                )
+                .into());
+            }
+            _ => {}
+        }
+        writer.write_all(frame.as_bytes())?;
         writer.write_all(b"\n")?;
     }
 }
@@ -133,6 +184,15 @@ fn bad<T>(r: Result<T>) -> WireResult<T> {
 /// A required request field, or `bad_request`.
 fn field<'a>(req: &'a Json, key: &str) -> WireResult<&'a Json> {
     req.get(key).ok_or_else(|| WireError::bad_request(format!("missing field '{key}'")))
+}
+
+/// The required numeric `"id"` field as a [`JobId`].
+fn job_id(req: &Json) -> WireResult<JobId> {
+    Ok(JobId(
+        field(req, "id")?
+            .as_u64()
+            .ok_or_else(|| WireError::bad_request("'id' must be a number"))?,
+    ))
 }
 
 fn handle_request(coord: &Arc<Coordinator>, line: &str) -> WireResult<Json> {
@@ -164,17 +224,16 @@ fn handle_request(coord: &Arc<Coordinator>, line: &str) -> WireResult<Json> {
             if let Some(ms) = req.get("deadline_ms").and_then(Json::as_u64) {
                 spec = spec.with_deadline_ms(ms);
             }
+            if let Some(tok) = req.get("token").and_then(Json::as_str) {
+                spec = spec.with_token(tok);
+            }
             let id = coord.submit(spec)?;
             let mut fields = reply_base(true);
             fields.push(("id", Json::Num(id.0 as f64)));
             Ok(Json::obj(fields))
         }
         "status" => {
-            let id = JobId(
-                field(&req, "id")?
-                    .as_u64()
-                    .ok_or_else(|| WireError::bad_request("'id' must be a number"))?,
-            );
+            let id = job_id(&req)?;
             let state = coord.state(id).ok_or_else(|| {
                 WireError::new(ErrorCode::UnknownJob, format!("unknown job {id}"))
             })?;
@@ -183,15 +242,39 @@ fn handle_request(coord: &Arc<Coordinator>, line: &str) -> WireResult<Json> {
             Ok(Json::obj(fields))
         }
         "result" => {
-            let id = JobId(
-                field(&req, "id")?
-                    .as_u64()
-                    .ok_or_else(|| WireError::bad_request("'id' must be a number"))?,
-            );
+            // Peek, don't take: the job stays tracked so a retry after
+            // a lost reply can fetch the same fit again. `ack` (below)
+            // is what finally releases it.
+            let id = job_id(&req)?;
             coord.wait(id, Duration::from_secs(3600))?;
-            let fit = coord.take_result(id)?;
+            let fit = coord.peek_result(id)?;
             let mut fields = reply_base(true);
             fields.push(("fit", proto::fit_to_json(&fit)));
+            Ok(Json::obj(fields))
+        }
+        "ack" => {
+            let id = job_id(&req)?;
+            let mut fields = reply_base(true);
+            fields.push(("released", Json::Bool(coord.release(id))));
+            Ok(Json::obj(fields))
+        }
+        "health" => {
+            let mut fields = reply_base(true);
+            fields.push(("accepting", Json::Bool(coord.is_accepting())));
+            fields.push(("lanes", Json::Num(coord.lanes() as f64)));
+            fields.push(("queue_depth", Json::Num(coord.queue_depth() as f64)));
+            fields.push(("running", Json::Num(coord.running_jobs() as f64)));
+            fields.push(("tracked_jobs", Json::Num(coord.tracked_jobs() as f64)));
+            fields.push(("timers_live", Json::Num(coord.timers_live() as f64)));
+            fields.push(("uptime_ms", Json::Num(coord.uptime().as_millis() as f64)));
+            Ok(Json::obj(fields))
+        }
+        "shutdown" => {
+            let drain_ms = req.get("drain_ms").and_then(Json::as_u64).unwrap_or(10_000);
+            let report = coord.shutdown(Duration::from_millis(drain_ms));
+            let mut fields = reply_base(true);
+            fields.push(("bounced", Json::Num(report.bounced as f64)));
+            fields.push(("drained", Json::Bool(report.drained)));
             Ok(Json::obj(fields))
         }
         "metrics" => {
@@ -227,14 +310,33 @@ pub struct Client {
     writer: TcpStream,
 }
 
+/// Classify an io error into the transport incident taxonomy. All of
+/// these map to code `transport`, but a connect-refused (server down)
+/// reads very differently from a truncated frame (server died
+/// mid-reply) in logs and retry decisions, so the class prefixes the
+/// message.
+fn transport_class(e: &std::io::Error) -> &'static str {
+    use std::io::ErrorKind as K;
+    match e.kind() {
+        K::ConnectionRefused => "connect-refused",
+        K::ConnectionReset => "connection-reset",
+        K::ConnectionAborted => "connection-aborted",
+        K::BrokenPipe => "broken-pipe",
+        K::UnexpectedEof => "truncated-frame",
+        K::TimedOut | K::WouldBlock => "timeout",
+        _ => "io",
+    }
+}
+
 fn transport(e: std::io::Error) -> WireError {
-    WireError::transport(e.to_string())
+    WireError::transport(format!("{}: {e}", transport_class(&e)))
 }
 
 impl Client {
     pub fn connect(addr: &str) -> WireResult<Client> {
-        let stream = TcpStream::connect(addr)
-            .map_err(|e| WireError::transport(format!("connecting {addr}: {e}")))?;
+        let stream = TcpStream::connect(addr).map_err(|e| {
+            WireError::transport(format!("{}: connecting {addr}: {e}", transport_class(&e)))
+        })?;
         stream.set_nodelay(true).ok();
         let reader = BufReader::new(stream.try_clone().map_err(transport)?);
         Ok(Client { reader, writer: stream })
@@ -252,9 +354,17 @@ impl Client {
         self.writer.write_all(req.to_string_json().as_bytes()).map_err(transport)?;
         self.writer.write_all(b"\n").map_err(transport)?;
         let mut line = String::new();
-        self.reader.read_line(&mut line).map_err(transport)?;
-        if line.is_empty() {
-            return Err(WireError::transport("server closed the connection"));
+        let n = self.reader.read_line(&mut line).map_err(transport)?;
+        if n == 0 {
+            return Err(WireError::transport("disconnected: server closed the connection"));
+        }
+        if !line.ends_with('\n') {
+            // A frame without its newline terminator means the server
+            // (or the wire) died mid-reply — distinct from a clean
+            // close and from a malformed-but-complete response.
+            return Err(WireError::transport(format!(
+                "truncated-frame: reply ended mid-frame after {n} bytes"
+            )));
         }
         let resp = Json::parse(line.trim())
             .map_err(|e| WireError::transport(format!("malformed response: {e:#}")))?;
@@ -296,6 +406,22 @@ impl Client {
         tenant: Option<&str>,
         deadline_ms: Option<u64>,
     ) -> WireResult<JobId> {
+        self.submit_opts(data, cfg, cd_updates, tenant, deadline_ms, None)
+    }
+
+    /// Full-control submit: tenant, deadline and an idempotency token.
+    /// Resubmitting the same `(tenant, token)` — e.g. retrying after a
+    /// lost reply — re-attaches to the original job without a second
+    /// fit.
+    pub fn submit_opts(
+        &mut self,
+        data: &EncryptedDataset,
+        cfg: &crate::els::encrypted::FitConfig,
+        cd_updates: Option<usize>,
+        tenant: Option<&str>,
+        deadline_ms: Option<u64>,
+        token: Option<&str>,
+    ) -> WireResult<JobId> {
         let mut fields = vec![
             ("data", proto::dataset_to_json(data)),
             ("cfg", proto::cfg_to_json(cfg, cd_updates)),
@@ -305,6 +431,9 @@ impl Client {
         }
         if let Some(ms) = deadline_ms {
             fields.push(("deadline_ms", Json::Num(ms as f64)));
+        }
+        if let Some(tok) = token {
+            fields.push(("token", Json::str(tok)));
         }
         let resp = self.call("submit", fields)?;
         let id = resp
@@ -322,14 +451,50 @@ impl Client {
             .ok_or_else(|| WireError::transport("reply missing 'state'"))
     }
 
-    /// Block until the job finishes and fetch the encrypted fit.
+    /// Block until the job finishes and fetch the encrypted fit. On a
+    /// successful decode the job is acked (released server-side)
+    /// best-effort; a lost ack only means the job lingers until a later
+    /// `ack`, never a client error.
     pub fn result(&mut self, ctx: &crate::fhe::FvContext, id: JobId) -> WireResult<EncryptedFit> {
         let resp = self.call("result", vec![("id", Json::Num(id.0 as f64))])?;
         let fit = resp
             .get("fit")
             .ok_or_else(|| WireError::transport("reply missing 'fit'"))?;
-        proto::fit_from_json(ctx, fit)
-            .map_err(|e| WireError::transport(format!("undecodable fit: {e:#}")))
+        let fit = proto::fit_from_json(ctx, fit)
+            .map_err(|e| WireError::transport(format!("undecodable fit: {e:#}")))?;
+        let _ = self.ack(id);
+        Ok(fit)
+    }
+
+    /// Release a terminal job server-side (prunes its idempotency
+    /// token). Returns whether anything was released.
+    pub fn ack(&mut self, id: JobId) -> WireResult<bool> {
+        let resp = self.call("ack", vec![("id", Json::Num(id.0 as f64))])?;
+        Ok(resp.get("released").and_then(|b| b.as_bool()).unwrap_or(false))
+    }
+
+    /// The server's liveness/pressure report: `accepting`, `lanes`,
+    /// `queue_depth`, `running`, `tracked_jobs`, `timers_live`,
+    /// `uptime_ms`.
+    pub fn health(&mut self) -> WireResult<Json> {
+        self.call("health", vec![])
+    }
+
+    /// Ask the server to drain: admission stops, queued jobs bounce
+    /// with code `shutting_down`, in-flight jobs finish (up to
+    /// `drain_ms`, server default 10000). Returns `(bounced, drained)`.
+    pub fn shutdown_server(&mut self, drain_ms: Option<u64>) -> WireResult<(u64, bool)> {
+        let mut fields = Vec::new();
+        if let Some(ms) = drain_ms {
+            fields.push(("drain_ms", Json::Num(ms as f64)));
+        }
+        let resp = self.call("shutdown", fields)?;
+        let bounced = resp
+            .get("bounced")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| WireError::transport("reply missing 'bounced'"))?;
+        let drained = resp.get("drained").and_then(|b| b.as_bool()).unwrap_or(false);
+        Ok((bounced, drained))
     }
 
     pub fn metrics(&mut self) -> WireResult<String> {
@@ -354,5 +519,99 @@ impl Client {
     /// `histogram`, `tenants`.
     pub fn metrics_full(&mut self) -> WireResult<Json> {
         self.call("metrics", vec![])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::ErrorKind;
+
+    #[test]
+    fn transport_errors_carry_their_incident_class() {
+        let cases = [
+            (ErrorKind::ConnectionRefused, "connect-refused"),
+            (ErrorKind::ConnectionReset, "connection-reset"),
+            (ErrorKind::ConnectionAborted, "connection-aborted"),
+            (ErrorKind::BrokenPipe, "broken-pipe"),
+            (ErrorKind::UnexpectedEof, "truncated-frame"),
+            (ErrorKind::TimedOut, "timeout"),
+            (ErrorKind::NotFound, "io"),
+        ];
+        for (kind, class) in cases {
+            let e = transport(std::io::Error::new(kind, "boom"));
+            assert_eq!(e.code, ErrorCode::Transport);
+            assert!(
+                e.message.starts_with(&format!("{class}: ")),
+                "{kind:?} must classify as {class}, got '{}'",
+                e.message
+            );
+        }
+    }
+
+    #[test]
+    fn connect_refused_is_classified_on_connect() {
+        // Bind an ephemeral port, then free it: connecting afterwards
+        // must refuse, and the client message must say so by class.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = Client::connect(&addr).expect_err("nothing is listening");
+        assert_eq!(err.code, ErrorCode::Transport);
+        assert!(
+            err.message.starts_with("connect-refused: "),
+            "got '{}'",
+            err.message
+        );
+    }
+
+    #[test]
+    fn truncated_reply_frame_is_reported_as_such() {
+        // A fake server that reads one request and replies with half a
+        // frame (no newline) before closing: the client must report a
+        // truncated frame, not a parse error or a clean close.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let mut w = stream;
+            w.write_all(b"{\"v\":1,\"ok\":tr").unwrap();
+            // dropping closes the socket mid-frame
+        });
+        let mut client = Client::connect(&addr).unwrap();
+        let err = client.ping().expect_err("frame was truncated");
+        assert_eq!(err.code, ErrorCode::Transport);
+        assert!(
+            err.message.starts_with("truncated-frame: "),
+            "got '{}'",
+            err.message
+        );
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn clean_close_before_reply_reads_as_disconnect() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            // close without writing anything
+        });
+        let mut client = Client::connect(&addr).unwrap();
+        let err = client.ping().expect_err("server closed before replying");
+        assert_eq!(err.code, ErrorCode::Transport);
+        assert!(
+            err.message.starts_with("disconnected: "),
+            "got '{}'",
+            err.message
+        );
+        server.join().unwrap();
     }
 }

@@ -16,11 +16,12 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::arena::LruBytes;
 use crate::fhe::{Ciphertext, FvContext, Plaintext, PlaintextNtt};
 use crate::runtime::backend::{HeEngine, OpStats};
 use crate::util::error::Result;
+use crate::util::faults::{self, FaultSite};
 use crate::util::json::Json;
+use crate::util::lru::LruBytes;
 
 /// Tenant identity: an opaque caller-chosen string. Jobs submitted
 /// without one land in the `"default"` tenant.
@@ -107,6 +108,12 @@ impl OperandCache {
     ) -> PlaintextNtt {
         let key = operand_key(pt);
         let shard = &self.shards[self.shard_of(&key)];
+        // Chaos `cache:evict`: flush the shard before the lookup. Fits
+        // must stay bit-identical with a cold cache — residency is a
+        // performance property, never a correctness one.
+        if faults::check(FaultSite::Cache).is_some() {
+            let _ = shard.lock().unwrap().evict_all();
+        }
         if let Some(hit) = shard.lock().unwrap().get(&key) {
             return hit.clone();
         }
@@ -134,6 +141,13 @@ impl OperandCache {
 
     pub fn entries(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Forced eviction across every shard (operator hook; also what
+    /// the chaos `cache:evict` fault drives per-shard). Returns the
+    /// number of entries dropped.
+    pub fn evict_all(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().evict_all()).sum()
     }
 }
 

@@ -73,6 +73,9 @@ impl FitConfig {
 }
 
 /// An encrypted fit: coefficient ciphertexts plus decode metadata.
+/// `Clone` because the wire `result` verb peeks (the job keeps the
+/// original until the client acks delivery).
+#[derive(Clone)]
 pub struct EncryptedFit {
     /// β̃ ciphertexts (one per covariate).
     pub betas: Vec<Ciphertext>,

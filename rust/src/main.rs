@@ -11,10 +11,14 @@
 //! els figures  (--all | --id fig4) [--out results]
 //! els selftest [--xla artifacts] [--backend rns|bigint]
 //! els metrics  [--addr HOST:PORT] [--backend rns|bigint]
+//! els health   --addr HOST:PORT
+//! els shutdown --addr HOST:PORT [--drain-ms 10000]
 //! ```
 //!
 //! Set `ELS_TRACE=<path>` on any command to record a Chrome trace-event
-//! JSON of the run (see README § Observability).
+//! JSON of the run (see README § Observability), and
+//! `ELS_FAULTS=<site>:<kind>:<rate>:<seed>[,...]` to arm deterministic
+//! fault injection (README § Resilience).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -48,8 +52,10 @@ fn main() {
             std::process::exit(2);
         }
     };
-    // ELS_TRACE=<path> arms the flight recorder for the whole run.
+    // ELS_TRACE=<path> arms the flight recorder for the whole run;
+    // ELS_FAULTS=<spec> arms deterministic chaos injection.
     els::util::telemetry::init_from_env();
+    els::util::faults::init_from_env();
     let result = match args.command.as_deref() {
         Some("params") => cmd_params(&args),
         Some("keygen") => cmd_keygen(&args),
@@ -58,6 +64,8 @@ fn main() {
         Some("figures") => cmd_figures(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("metrics") => cmd_metrics(&args),
+        Some("health") => cmd_health(&args),
+        Some("shutdown") => cmd_shutdown(&args),
         Some(other) => Err(anyhow!("unknown command '{other}'")),
         None if args.flag("metrics") => cmd_metrics(&args),
         None => {
@@ -85,8 +93,12 @@ commands:
   selftest  end-to-end encrypted fit on this machine
   metrics   print a unified MetricsSnapshot JSON (also: els --metrics);
             with --addr, fetch the live snapshot from a server
+  health    print a running server's health report (--addr)
+  shutdown  drain a running server: stop admission, bounce the queue,
+            wait for in-flight jobs (--addr [--drain-ms 10000])
 
-env: ELS_TRACE=<path> records a Chrome trace of any command
+env: ELS_TRACE=<path> records a Chrome trace of any command;
+     ELS_FAULTS=<site>:<kind>:<rate>:<seed>[,...] arms fault injection
 every option has a default; see the doc comment in rust/src/main.rs.";
 
 fn plan_from_args(args: &Args) -> Result<(PlanRequest, u64)> {
@@ -317,6 +329,31 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     let out = fit(engine.as_ref(), &DatasetRef::Scalar(&data), &FitConfig::gd(2, nu))?;
     eprintln!("[els] op budget of one 6×2, 2-iteration GD fit:");
     println!("{}", out.report.to_json().to_string_json());
+    Ok(())
+}
+
+/// `els health --addr HOST:PORT`: the server's liveness/pressure
+/// report, verbatim (accepting, lanes, queue depth, running, tracked
+/// jobs, live timers, uptime).
+fn cmd_health(args: &Args) -> Result<()> {
+    let addr = args.req("addr")?;
+    let mut client = Client::connect(addr)?;
+    println!("{}", client.health()?.to_string_json());
+    Ok(())
+}
+
+/// `els shutdown --addr HOST:PORT [--drain-ms N]`: ask the server to
+/// drain — admission stops, queued jobs bounce with `shutting_down`,
+/// in-flight jobs get up to the drain budget to finish.
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    let addr = args.req("addr")?;
+    let drain_ms = match args.get_u64("drain-ms", 0)? {
+        0 => None,
+        ms => Some(ms),
+    };
+    let mut client = Client::connect(addr)?;
+    let (bounced, drained) = client.shutdown_server(drain_ms)?;
+    println!("drain: bounced {bounced} queued job(s), in-flight drained = {drained}");
     Ok(())
 }
 

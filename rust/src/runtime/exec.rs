@@ -15,12 +15,15 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::faults::{self, FaultKind, FaultSite};
+
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
 struct ExecShared {
     queue: Mutex<VecDeque<Task>>,
     cv: Condvar,
     shutdown: AtomicBool,
+    task_panics: AtomicU64,
 }
 
 /// Fixed-lane task executor. `spawn` enqueues a closure on the shared
@@ -40,6 +43,7 @@ impl Executor {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            task_panics: AtomicU64::new(0),
         });
         let handles = (0..lanes)
             .map(|i| {
@@ -57,21 +61,38 @@ impl Executor {
         self.lanes.len()
     }
 
-    /// Enqueue a task on the ready queue. Tasks submitted after
-    /// shutdown are dropped (the lanes are already draining out).
-    pub fn spawn(&self, f: impl FnOnce() + Send + 'static) {
+    /// Enqueue a task on the ready queue. Returns `false` (the task is
+    /// rejected, not silently dropped) once shutdown has begun — the
+    /// caller decides how to resolve the work it could not hand off.
+    /// Tasks already queued at shutdown still run: the lanes drain the
+    /// queue before exiting, so every accepted task is executed.
+    #[must_use = "a false return means the task was rejected, not enqueued"]
+    pub fn spawn(&self, f: impl FnOnce() + Send + 'static) -> bool {
         if self.shared.shutdown.load(Ordering::Acquire) {
-            return;
+            return false;
         }
         self.shared.queue.lock().unwrap().push_back(Box::new(f));
         self.shared.cv.notify_one();
+        true
+    }
+
+    /// Begin shutdown without joining the lanes: new `spawn`s are
+    /// rejected from this point on, while already-queued tasks drain.
+    /// Idempotent; `Drop` still joins.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+    }
+
+    /// Tasks whose closure panicked (caught; the lane survives).
+    pub fn task_panics(&self) -> u64 {
+        self.shared.task_panics.load(Ordering::Relaxed)
     }
 }
 
 impl Drop for Executor {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.cv.notify_all();
+        self.shutdown();
         for h in self.lanes.drain(..) {
             let _ = h.join();
         }
@@ -93,7 +114,15 @@ fn lane_loop(sh: &ExecShared) {
             }
         };
         match task {
-            Some(t) => t(),
+            // A panicking task must not take its lane (and every task
+            // queued behind it) down with it: catch, count, continue.
+            // Job-level failure reporting is the coordinator's business
+            // — it wraps engine work in its own catch_unwind.
+            Some(t) => {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(t)).is_err() {
+                    sh.task_panics.fetch_add(1, Ordering::Relaxed);
+                }
+            }
             None => return, // shutdown with an empty queue: lane exits
         }
     }
@@ -113,6 +142,10 @@ struct WheelShared {
     shutdown: AtomicBool,
     start: Instant,
     granularity: Duration,
+    scheduled: AtomicU64,
+    fired: AtomicU64,
+    cancelled: AtomicU64,
+    callback_panics: AtomicU64,
 }
 
 /// Cancellation handle for a scheduled timer. Dropping the handle does
@@ -153,6 +186,10 @@ impl TimerWheel {
             shutdown: AtomicBool::new(false),
             start: Instant::now(),
             granularity,
+            scheduled: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            callback_panics: AtomicU64::new(0),
         });
         let sh = Arc::clone(&shared);
         let tick = std::thread::Builder::new()
@@ -180,8 +217,25 @@ impl TimerWheel {
         };
         let slot = self.slot_of(deadline);
         self.shared.slots.lock().unwrap()[slot].push(entry);
+        self.shared.scheduled.fetch_add(1, Ordering::Relaxed);
         self.shared.cv.notify_one();
         TimerHandle { cancelled }
+    }
+
+    /// Entries currently parked in the wheel (scheduled, not yet fired
+    /// or reaped) — the leak counter the chaos battery asserts on.
+    pub fn live_entries(&self) -> usize {
+        self.shared.slots.lock().unwrap().iter().map(Vec::len).sum()
+    }
+
+    /// `(scheduled, fired, cancelled, callback_panics)` since start.
+    pub fn counts(&self) -> (u64, u64, u64, u64) {
+        (
+            self.shared.scheduled.load(Ordering::Relaxed),
+            self.shared.fired.load(Ordering::Relaxed),
+            self.shared.cancelled.load(Ordering::Relaxed),
+            self.shared.callback_panics.load(Ordering::Relaxed),
+        )
     }
 }
 
@@ -191,6 +245,18 @@ impl Drop for TimerWheel {
         self.shared.cv.notify_all();
         if let Some(h) = self.tick.take() {
             let _ = h.join();
+        }
+        // Entries still parked at drop resolve deterministically as
+        // *cancelled*, never silently vanish: each handle's flag flips
+        // so `is_cancelled()` observers see the resolution, and the
+        // cancelled counter accounts for every scheduled entry
+        // (scheduled == fired + cancelled once the wheel is gone).
+        let mut slots = self.shared.slots.lock().unwrap();
+        for bucket in slots.iter_mut() {
+            for entry in bucket.drain(..) {
+                entry.cancelled.store(true, Ordering::Release);
+                self.shared.cancelled.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -214,7 +280,20 @@ fn wheel_loop(sh: &WheelShared) {
                 while i < bucket.len() {
                     if bucket[i].cancelled.load(Ordering::Acquire) {
                         bucket.swap_remove(i);
+                        sh.cancelled.fetch_add(1, Ordering::Relaxed);
                     } else if bucket[i].deadline <= now {
+                        // Chaos `timer:late`: hold a due entry for one
+                        // more pass — it fires next visit, proving
+                        // consumers tolerate delayed expiry.
+                        if faults::check(FaultSite::Timer) == Some(FaultKind::Late) {
+                            i += 1;
+                        } else {
+                            due.push(bucket.swap_remove(i));
+                        }
+                    } else if faults::check(FaultSite::Timer) == Some(FaultKind::Spurious) {
+                        // Chaos `timer:spurious`: fire before the
+                        // deadline — consumers must re-check real time,
+                        // never trust the wheel's word alone.
                         due.push(bucket.swap_remove(i));
                     } else {
                         i += 1;
@@ -228,7 +307,12 @@ fn wheel_loop(sh: &WheelShared) {
             }
         }
         for entry in due {
-            (entry.f)();
+            sh.fired.fetch_add(1, Ordering::Relaxed);
+            // A panicking expiry callback must not kill the tick thread
+            // (every later deadline would silently never fire).
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(entry.f)).is_err() {
+                sh.callback_panics.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -307,11 +391,11 @@ mod tests {
         for _ in 0..total {
             let c = Arc::clone(&counter);
             let d = Arc::clone(&done);
-            exec.spawn(move || {
+            assert!(exec.spawn(move || {
                 if c.fetch_add(1, Ordering::SeqCst) + 1 == total {
                     d.notify();
                 }
-            });
+            }));
         }
         assert!(done.wait_timeout(Duration::from_secs(10)));
         assert_eq!(counter.load(Ordering::SeqCst), total);
@@ -324,13 +408,49 @@ mod tests {
             let exec = Executor::new("drain", 2);
             for _ in 0..16 {
                 let c = Arc::clone(&counter);
-                exec.spawn(move || {
+                assert!(exec.spawn(move || {
                     c.fetch_add(1, Ordering::SeqCst);
-                });
+                }));
             }
             // Drop joins the lanes; all enqueued tasks must have run.
         }
         assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn executor_rejects_spawn_after_shutdown_but_drains_queued() {
+        // The shutdown contract: accepted work runs, new work is
+        // rejected loudly — nothing is silently dropped either way.
+        let counter = Arc::new(AtomicUsize::new(0));
+        let exec = Executor::new("reject", 1);
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            assert!(exec.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        exec.shutdown();
+        let c = Arc::clone(&counter);
+        assert!(
+            !exec.spawn(move || {
+                c.fetch_add(100, Ordering::SeqCst);
+            }),
+            "spawn after shutdown must be rejected"
+        );
+        drop(exec);
+        assert_eq!(counter.load(Ordering::SeqCst), 8, "queued tasks ran, rejected task did not");
+    }
+
+    #[test]
+    fn executor_lane_survives_task_panic() {
+        let exec = Executor::new("panic", 1);
+        let _ = exec.spawn(|| panic!("injected task panic"));
+        // The single lane must still be alive to run the next task.
+        let ev = Arc::new(Event::new());
+        let e = Arc::clone(&ev);
+        assert!(exec.spawn(move || e.notify()));
+        assert!(ev.wait_timeout(Duration::from_secs(10)), "lane died with the panicking task");
+        assert_eq!(exec.task_panics(), 1);
     }
 
     #[test]
@@ -369,6 +489,64 @@ mod tests {
     }
 
     #[test]
+    fn timer_drop_resolves_pending_entries_as_cancelled() {
+        let fired = Arc::new(AtomicUsize::new(0));
+        let handle;
+        {
+            let wheel = TimerWheel::new("droppy", Duration::from_millis(5));
+            let f = Arc::clone(&fired);
+            handle = wheel.schedule(Instant::now() + Duration::from_secs(3600), move || {
+                f.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(wheel.live_entries(), 1);
+            // Wheel drops here with the entry still parked.
+        }
+        assert!(handle.is_cancelled(), "drop must resolve parked entries as cancelled");
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn timer_accounting_balances() {
+        // One fires, one is cancelled (reaped on a later pass), one
+        // stays parked: scheduled == fired + cancelled + live.
+        let wheel = TimerWheel::new("acct", Duration::from_millis(2));
+        let ev = Arc::new(Event::new());
+        let e = Arc::clone(&ev);
+        wheel.schedule(Instant::now() + Duration::from_millis(5), move || e.notify());
+        let h = wheel.schedule(Instant::now() + Duration::from_secs(3600), || {});
+        h.cancel();
+        let _parked = wheel.schedule(Instant::now() + Duration::from_secs(3600), || {});
+        assert!(ev.wait_timeout(Duration::from_secs(10)));
+        let t0 = Instant::now();
+        loop {
+            let (scheduled, fired, cancelled, _) = wheel.counts();
+            if fired == 1 && cancelled == 1 {
+                assert_eq!(scheduled, 3);
+                assert_eq!(wheel.live_entries(), 1);
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "cancelled entry never reaped");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn timer_callback_panic_does_not_kill_wheel() {
+        let wheel = TimerWheel::new("cbpanic", Duration::from_millis(2));
+        wheel.schedule(Instant::now() + Duration::from_millis(4), || {
+            panic!("injected timer callback panic")
+        });
+        let ev = Arc::new(Event::new());
+        let e = Arc::clone(&ev);
+        wheel.schedule(Instant::now() + Duration::from_millis(20), move || e.notify());
+        assert!(ev.wait_timeout(Duration::from_secs(10)), "wheel thread died with the panic");
+        let (_, fired, _, panics) = wheel.counts();
+        assert_eq!(panics, 1);
+        assert_eq!(fired, 2);
+        assert_eq!(wheel.live_entries(), 0);
+    }
+
+    #[test]
     fn event_wakeup_is_constant_checks() {
         let ev = Arc::new(Event::new());
         let e = Arc::clone(&ev);
@@ -389,5 +567,38 @@ mod tests {
         ev.notify();
         assert!(ev.is_set());
         assert!(ev.wait_timeout(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn event_double_notify_is_idempotent() {
+        // The recovery paths (panic reclaim, drain bounce, expiry) may
+        // race to complete the same job event; a second notify must be
+        // a harmless no-op, never a panic or a state flip.
+        let ev = Arc::new(Event::new());
+        ev.notify();
+        ev.notify();
+        assert!(ev.is_set());
+        let waiters: Vec<_> = (0..4)
+            .map(|_| {
+                let e = Arc::clone(&ev);
+                std::thread::spawn(move || e.wait_timeout(Duration::from_secs(10)))
+            })
+            .collect();
+        for w in waiters {
+            assert!(w.join().unwrap());
+        }
+    }
+
+    #[test]
+    fn event_wait_after_complete_returns_immediately() {
+        let ev = Event::new();
+        ev.notify();
+        let t0 = Instant::now();
+        assert!(ev.wait_timeout(Duration::from_secs(30)));
+        assert!(t0.elapsed() < Duration::from_secs(1), "wait after complete must not block");
+        // A completed event costs exactly one state check per wait.
+        let before = ev.checks();
+        assert!(ev.wait_timeout(Duration::from_secs(30)));
+        assert_eq!(ev.checks(), before + 1);
     }
 }

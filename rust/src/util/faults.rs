@@ -1,0 +1,430 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Chaos testing only proves something when the chaos is *repeatable*:
+//! a failure found under `ELS_FAULTS=wire_write:partial_write:0.15:7`
+//! reproduces bit-for-bit on every run, because each injection site
+//! draws from a seeded counter-indexed splitmix64 stream instead of an
+//! ambient RNG. The registry follows the `util::telemetry` design: a
+//! relaxed-atomic `ENABLED` fast path that makes every probe a no-op
+//! when no faults are armed (counter-asserted by tests), an exclusive
+//! programmatic session for tests ([`FaultSession`] — never mutate
+//! `ELS_FAULTS` in-process; `setenv` races are UB on glibc), and a
+//! process-level [`init_from_env`] for binary entry points.
+//!
+//! Spec grammar (comma-separated):
+//!
+//! ```text
+//! ELS_FAULTS=<site>:<kind>:<rate>:<seed>[,<site>:<kind>:<rate>:<seed>...]
+//! ```
+//!
+//! where `site` is one of `wire_read`, `wire_write`, `lane`, `timer`,
+//! `cache`, `batcher`; `kind` is a site-appropriate fault kind (see
+//! [`FaultKind`]); `rate` is a probability in `[0,1]`; and `seed` is a
+//! u64. Each armed spec keeps its own draw counter, so two sites with
+//! the same seed still see independent decision streams.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Where a fault can be injected. Each variant marks one real seam in
+/// the serving stack where production failures originate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Server-side request read (io error, mid-frame disconnect).
+    WireRead,
+    /// Server-side reply write (io error, partial write, disconnect).
+    WireWrite,
+    /// Executor lane task body (panic).
+    Lane,
+    /// Timer-wheel firing decision (late or spurious fire).
+    Timer,
+    /// Tenant operand cache lookup (forced eviction).
+    Cache,
+    /// Batcher dispatch of a coalesced group (backend failure).
+    Batcher,
+}
+
+/// All sites, in [`FaultSite::index`] order.
+pub const ALL_SITES: [FaultSite; 6] = [
+    FaultSite::WireRead,
+    FaultSite::WireWrite,
+    FaultSite::Lane,
+    FaultSite::Timer,
+    FaultSite::Cache,
+    FaultSite::Batcher,
+];
+
+impl FaultSite {
+    /// Dense index into the per-site counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            FaultSite::WireRead => 0,
+            FaultSite::WireWrite => 1,
+            FaultSite::Lane => 2,
+            FaultSite::Timer => 3,
+            FaultSite::Cache => 4,
+            FaultSite::Batcher => 5,
+        }
+    }
+
+    /// Spec-grammar name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::WireRead => "wire_read",
+            FaultSite::WireWrite => "wire_write",
+            FaultSite::Lane => "lane",
+            FaultSite::Timer => "timer",
+            FaultSite::Cache => "cache",
+            FaultSite::Batcher => "batcher",
+        }
+    }
+
+    fn from_str(s: &str) -> Option<FaultSite> {
+        ALL_SITES.iter().copied().find(|site| site.as_str() == s)
+    }
+
+    /// The fault kinds that make sense at this site.
+    fn allows(self, kind: FaultKind) -> bool {
+        use FaultKind::*;
+        match self {
+            FaultSite::WireRead => matches!(kind, IoError | Disconnect),
+            FaultSite::WireWrite => matches!(kind, IoError | PartialWrite | Disconnect),
+            FaultSite::Lane => matches!(kind, Panic),
+            FaultSite::Timer => matches!(kind, Late | Spurious),
+            FaultSite::Cache => matches!(kind, Evict),
+            FaultSite::Batcher => matches!(kind, Fail),
+        }
+    }
+}
+
+/// What happens when a fault fires at a site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Surface an `io::Error` from the read/write.
+    IoError,
+    /// Write only a prefix of the frame, then stop (truncated reply).
+    PartialWrite,
+    /// Drop the connection mid-frame without writing anything.
+    Disconnect,
+    /// Panic inside the lane task body.
+    Panic,
+    /// Suppress a due timer fire for one wheel pass (fires late).
+    Late,
+    /// Fire a timer before its deadline (spurious early fire).
+    Spurious,
+    /// Force-evict the tenant operand cache before the lookup.
+    Evict,
+    /// Fail the batched dispatch as if the backend errored.
+    Fail,
+}
+
+impl FaultKind {
+    /// Spec-grammar name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::IoError => "io_error",
+            FaultKind::PartialWrite => "partial_write",
+            FaultKind::Disconnect => "disconnect",
+            FaultKind::Panic => "panic",
+            FaultKind::Late => "late",
+            FaultKind::Spurious => "spurious",
+            FaultKind::Evict => "evict",
+            FaultKind::Fail => "fail",
+        }
+    }
+
+    fn from_str(s: &str) -> Option<FaultKind> {
+        use FaultKind::*;
+        [IoError, PartialWrite, Disconnect, Panic, Late, Spurious, Evict, Fail]
+            .into_iter()
+            .find(|k| k.as_str() == s)
+    }
+}
+
+/// One armed fault: fire `kind` at `site` with probability `rate` per
+/// probe, decided by the seeded per-spec draw stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    pub rate: f64,
+    pub seed: u64,
+}
+
+/// Parse the `ELS_FAULTS` grammar. Pure so tests can exercise rejects
+/// without touching process state.
+pub fn parse_spec(s: &str) -> Result<Vec<FaultSpec>, String> {
+    let mut specs = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        let [site, kind, rate, seed] = fields[..] else {
+            return Err(format!("fault spec `{part}`: want <site>:<kind>:<rate>:<seed>"));
+        };
+        let site = FaultSite::from_str(site)
+            .ok_or_else(|| format!("fault spec `{part}`: unknown site `{site}`"))?;
+        let kind = FaultKind::from_str(kind)
+            .ok_or_else(|| format!("fault spec `{part}`: unknown kind `{kind}`"))?;
+        if !site.allows(kind) {
+            return Err(format!(
+                "fault spec `{part}`: kind `{}` not valid at site `{}`",
+                kind.as_str(),
+                site.as_str()
+            ));
+        }
+        let rate: f64 = rate
+            .parse()
+            .map_err(|_| format!("fault spec `{part}`: rate `{rate}` is not a number"))?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(format!("fault spec `{part}`: rate {rate} outside [0,1]"));
+        }
+        let seed: u64 = seed
+            .parse()
+            .map_err(|_| format!("fault spec `{part}`: seed `{seed}` is not a u64"))?;
+        specs.push(FaultSpec { site, kind, rate, seed });
+    }
+    Ok(specs)
+}
+
+/// splitmix64 of `seed + n` — the counter-indexed decision stream. Also
+/// used by the client retry policy for seeded decorrelated jitter.
+pub fn mix64(seed: u64, n: u64) -> u64 {
+    let mut z = seed.wrapping_add(n.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Draw `n` from the `seed` stream and compare against `rate`.
+fn decide(seed: u64, n: u64, rate: f64) -> bool {
+    if rate >= 1.0 {
+        return true;
+    }
+    if rate <= 0.0 {
+        return false;
+    }
+    // Threshold comparison on the full 64-bit draw keeps the decision
+    // exact for the rates chaos specs actually use.
+    mix64(seed, n) < (rate * u64::MAX as f64) as u64
+}
+
+/// One armed spec plus its private draw counter.
+struct SiteState {
+    spec: FaultSpec,
+    draws: AtomicU64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Vec<SiteState>>> = Mutex::new(None);
+static SESSION: Mutex<()> = Mutex::new(());
+
+// The const is only a repeat-expression seed for the static arrays
+// below (the sanctioned pre-inline-const idiom), never borrowed itself.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static CHECKED: [AtomicU64; 6] = [ZERO; 6];
+static INJECTED: [AtomicU64; 6] = [ZERO; 6];
+
+/// Probe a site. `None` on the (overwhelmingly common) no-fault path;
+/// `Some(kind)` tells the caller which failure to act out. When the
+/// registry is disabled this is a single relaxed atomic load — no
+/// counters move, no locks are taken (the chaos no-op test asserts it).
+pub fn check(site: FaultSite) -> Option<FaultKind> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    CHECKED[site.index()].fetch_add(1, Ordering::Relaxed);
+    let plan = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    let states = plan.as_ref()?;
+    for st in states.iter().filter(|st| st.spec.site == site) {
+        let n = st.draws.fetch_add(1, Ordering::Relaxed);
+        if decide(st.spec.seed, n, st.spec.rate) {
+            INJECTED[site.index()].fetch_add(1, Ordering::Relaxed);
+            return Some(st.spec.kind);
+        }
+    }
+    None
+}
+
+/// Whether any faults are armed.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Probes observed at `site` since process start.
+pub fn checked_at(site: FaultSite) -> u64 {
+    CHECKED[site.index()].load(Ordering::Relaxed)
+}
+
+/// Faults fired at `site` since process start.
+pub fn injected_at(site: FaultSite) -> u64 {
+    INJECTED[site.index()].load(Ordering::Relaxed)
+}
+
+/// Total probes observed across all sites.
+pub fn checked_total() -> u64 {
+    CHECKED.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+/// Total faults fired across all sites.
+pub fn injected_total() -> u64 {
+    INJECTED.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+/// Exclusive programmatic fault session — the sanctioned in-process
+/// switch for tests (never mutate `ELS_FAULTS` in-process). Faults are
+/// armed while the session lives and disarmed on drop; concurrent
+/// sessions serialise on an internal mutex so chaos scenarios never
+/// bleed into each other.
+pub struct FaultSession {
+    _session: MutexGuard<'static, ()>,
+}
+
+impl FaultSession {
+    /// Arm `specs` exclusively until the returned guard drops.
+    pub fn activate(specs: &[FaultSpec]) -> FaultSession {
+        let session = SESSION.lock().unwrap_or_else(|e| e.into_inner());
+        let states =
+            specs.iter().map(|&spec| SiteState { spec, draws: AtomicU64::new(0) }).collect();
+        *PLAN.lock().unwrap_or_else(|e| e.into_inner()) = Some(states);
+        ENABLED.store(true, Ordering::Relaxed);
+        FaultSession { _session: session }
+    }
+}
+
+impl Drop for FaultSession {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::Relaxed);
+        *PLAN.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+}
+
+/// Hold to keep injection *disabled* (no session can arm concurrently)
+/// — the disabled-hot-path acceptance test runs under this.
+pub fn exclusion() -> MutexGuard<'static, ()> {
+    SESSION.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static ENV_SPECS: OnceLock<Vec<FaultSpec>> = OnceLock::new();
+
+/// Process-level activation: `ELS_FAULTS=<spec>` arms the registry for
+/// the whole run. Only binary entry points (and the env-driven chaos
+/// smoke test) call this — library code and tests go through
+/// [`FaultSession`]. A malformed spec is a loud startup panic, not a
+/// silently fault-free chaos run.
+pub fn init_from_env() {
+    let specs = ENV_SPECS.get_or_init(|| match std::env::var("ELS_FAULTS") {
+        Ok(s) if !s.is_empty() => {
+            parse_spec(&s).unwrap_or_else(|e| panic!("ELS_FAULTS: {e}"))
+        }
+        _ => Vec::new(),
+    });
+    if !specs.is_empty() {
+        let states =
+            specs.iter().map(|&spec| SiteState { spec, draws: AtomicU64::new(0) }).collect();
+        *PLAN.lock().unwrap_or_else(|e| e.into_inner()) = Some(states);
+        ENABLED.store(true, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_accepts_and_rejects() {
+        let specs =
+            parse_spec("wire_read:io_error:0.25:7, lane:panic:1:13,timer:late:0.5:17").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(
+            specs[0],
+            FaultSpec {
+                site: FaultSite::WireRead,
+                kind: FaultKind::IoError,
+                rate: 0.25,
+                seed: 7
+            }
+        );
+        assert_eq!(specs[1].rate, 1.0);
+        assert!(parse_spec("").unwrap().is_empty());
+        // Structural rejects: wrong arity, unknown site/kind, kind not
+        // valid at site, rate outside [0,1], non-numeric fields.
+        assert!(parse_spec("wire_read:io_error:0.25").is_err());
+        assert!(parse_spec("bogus:io_error:0.25:7").is_err());
+        assert!(parse_spec("wire_read:bogus:0.25:7").is_err());
+        assert!(parse_spec("lane:io_error:0.25:7").is_err());
+        assert!(parse_spec("lane:panic:1.5:7").is_err());
+        assert!(parse_spec("lane:panic:x:7").is_err());
+        assert!(parse_spec("lane:panic:0.5:x").is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        // Same (seed, n) → same decision, always.
+        for n in 0..64 {
+            assert_eq!(decide(42, n, 0.3), decide(42, n, 0.3));
+        }
+        // Extremes are exact.
+        assert!((0..32).all(|n| decide(9, n, 1.0)));
+        assert!((0..32).all(|n| !decide(9, n, 0.0)));
+        // A 30% rate over 10k draws lands near 3k — loose bounds, the
+        // point is the stream is neither all-on nor all-off.
+        let hits = (0..10_000).filter(|&n| decide(1234, n, 0.3)).count();
+        assert!((2_000..4_000).contains(&hits), "30% rate drew {hits}/10000");
+    }
+
+    #[test]
+    fn session_arms_and_disarms_with_counters() {
+        let before_checked = checked_at(FaultSite::Cache);
+        let before_injected = injected_at(FaultSite::Cache);
+        {
+            let _s = FaultSession::activate(&[FaultSpec {
+                site: FaultSite::Cache,
+                kind: FaultKind::Evict,
+                rate: 1.0,
+                seed: 5,
+            }]);
+            assert!(enabled());
+            assert_eq!(check(FaultSite::Cache), Some(FaultKind::Evict));
+            // Other sites stay quiet even while the session is live.
+            assert_eq!(check(FaultSite::Lane), None);
+        }
+        assert!(!enabled());
+        assert_eq!(check(FaultSite::Cache), None, "disarmed registry must not fire");
+        assert_eq!(checked_at(FaultSite::Cache), before_checked + 1);
+        assert_eq!(injected_at(FaultSite::Cache), before_injected + 1);
+    }
+
+    #[test]
+    fn disabled_probe_is_counter_asserted_noop() {
+        let _guard = exclusion();
+        let (c, i) = (checked_total(), injected_total());
+        for _ in 0..1000 {
+            for site in ALL_SITES {
+                assert_eq!(check(site), None);
+            }
+        }
+        assert_eq!(checked_total(), c, "disabled probes must not move counters");
+        assert_eq!(injected_total(), i);
+    }
+
+    #[test]
+    fn draw_streams_are_independent_per_spec() {
+        // Two specs at the same site with rate 1.0 and 0.0: the first
+        // always answers, proving per-spec iteration order is stable;
+        // replaying the session yields the identical decision sequence.
+        let spec_on = FaultSpec {
+            site: FaultSite::Timer,
+            kind: FaultKind::Late,
+            rate: 0.5,
+            seed: 99,
+        };
+        let run = || {
+            let _s = FaultSession::activate(&[spec_on]);
+            (0..32).map(|_| check(FaultSite::Timer).is_some()).collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "replayed session must reproduce the decision stream");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x));
+    }
+}

@@ -1,9 +1,12 @@
 //! Offline-build substrates: errors, JSON, CLI, thread pool, prop/bench
-//! harnesses, and the telemetry flight recorder.
+//! harnesses, the telemetry flight recorder, deterministic fault
+//! injection, and the byte-budgeted LRU.
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod faults;
 pub mod json;
+pub mod lru;
 pub mod pool;
 pub mod prop;
 pub mod telemetry;

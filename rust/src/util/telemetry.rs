@@ -413,6 +413,17 @@ pub struct TraceCounters {
     pub dropped: u64,
 }
 
+/// Fault-injection registry counters (`util::faults`). `checked` is
+/// probe traffic, `injected` the faults actually fired; both stay 0
+/// (and `enabled` false) outside chaos runs — the counter-asserted
+/// no-op contract.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultCounters {
+    pub enabled: bool,
+    pub checked: u64,
+    pub injected: u64,
+}
+
 /// Serving-tier counters (present when snapshotting a coordinator).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CoordinatorCounters {
@@ -424,6 +435,10 @@ pub struct CoordinatorCounters {
     pub jobs_expired: u64,
     /// Bounded-queue rejections under load.
     pub jobs_overloaded: u64,
+    /// Queued jobs bounced by a drain.
+    pub jobs_cancelled: u64,
+    /// Idempotent-token resubmissions answered without a second fit.
+    pub jobs_deduped: u64,
     /// Self-describing latency histogram (bounds + counts + quantiles).
     pub latency: Json,
 }
@@ -442,6 +457,7 @@ pub struct MetricsSnapshot {
     pub engine: EngineCounters,
     pub pool: PoolCounters,
     pub trace: TraceCounters,
+    pub faults: FaultCounters,
     pub coordinator: Option<CoordinatorCounters>,
 }
 
@@ -475,6 +491,11 @@ impl MetricsSnapshot {
                 recorded: recorded_count(),
                 dropped: dropped_count(),
             },
+            faults: FaultCounters {
+                enabled: crate::util::faults::enabled(),
+                checked: crate::util::faults::checked_total(),
+                injected: crate::util::faults::injected_total(),
+            },
             coordinator: None,
         }
     }
@@ -491,6 +512,8 @@ impl MetricsSnapshot {
             jobs_failed: m.jobs_failed.load(Ordering::Relaxed),
             jobs_expired: m.jobs_expired.load(Ordering::Relaxed),
             jobs_overloaded: m.jobs_overloaded.load(Ordering::Relaxed),
+            jobs_cancelled: m.jobs_cancelled.load(Ordering::Relaxed),
+            jobs_deduped: m.jobs_deduped.load(Ordering::Relaxed),
             latency: m.job_latency.to_json(),
         });
         self
@@ -525,6 +548,8 @@ impl MetricsSnapshot {
                 jobs_failed: c.jobs_failed.saturating_sub(b.jobs_failed),
                 jobs_expired: c.jobs_expired.saturating_sub(b.jobs_expired),
                 jobs_overloaded: c.jobs_overloaded.saturating_sub(b.jobs_overloaded),
+                jobs_cancelled: c.jobs_cancelled.saturating_sub(b.jobs_cancelled),
+                jobs_deduped: c.jobs_deduped.saturating_sub(b.jobs_deduped),
                 latency: c.latency.clone(),
             }),
             (c, _) => c.clone(),
@@ -545,6 +570,11 @@ impl MetricsSnapshot {
                 enabled: self.trace.enabled,
                 recorded: self.trace.recorded.saturating_sub(earlier.trace.recorded),
                 dropped: self.trace.dropped.saturating_sub(earlier.trace.dropped),
+            },
+            faults: FaultCounters {
+                enabled: self.faults.enabled,
+                checked: self.faults.checked.saturating_sub(earlier.faults.checked),
+                injected: self.faults.injected.saturating_sub(earlier.faults.injected),
             },
             coordinator,
         }
@@ -571,6 +601,14 @@ impl MetricsSnapshot {
                     ("dropped", Json::Num(self.trace.dropped as f64)),
                 ]),
             ),
+            (
+                "faults",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.faults.enabled)),
+                    ("checked", Json::Num(self.faults.checked as f64)),
+                    ("injected", Json::Num(self.faults.injected as f64)),
+                ]),
+            ),
         ];
         if let Some(c) = &self.coordinator {
             out.push((
@@ -582,6 +620,8 @@ impl MetricsSnapshot {
                     ("jobs_failed", Json::Num(c.jobs_failed as f64)),
                     ("jobs_expired", Json::Num(c.jobs_expired as f64)),
                     ("jobs_overloaded", Json::Num(c.jobs_overloaded as f64)),
+                    ("jobs_cancelled", Json::Num(c.jobs_cancelled as f64)),
+                    ("jobs_deduped", Json::Num(c.jobs_deduped as f64)),
                     ("latency", c.latency.clone()),
                 ]),
             ));

@@ -1,0 +1,505 @@
+//! Chaos battery: the saturation burst re-run under every deterministic
+//! fault site (`util::faults`), with retrying clients and idempotent
+//! submission tokens. The contract under every fault mix:
+//!
+//! - every submission terminates — a bit-identical fit or a structured
+//!   error code from a per-scenario allowlist; never a hang;
+//! - nothing leaks — queue slots, tracked jobs and timer handles all
+//!   drain to zero (counter-asserted over the `health` verb);
+//! - nothing double-executes — a resubmitted idempotency token
+//!   re-attaches to the original job with the engine's ct-mul counter
+//!   unchanged;
+//! - with no faults armed the registry is a counter-asserted no-op and
+//!   the burst's ciphertexts are bit-identical to solo fits.
+//!
+//! Scenarios serialise on the fault registry's exclusive session lock,
+//! so armed faults never bleed into a neighbouring test.
+
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use els::coordinator::batcher::{BatchConfig, BatchingEngine};
+use els::coordinator::job::JobId;
+use els::coordinator::protocol::ErrorCode;
+use els::coordinator::retry::{RetryPolicy, RetryingClient};
+use els::coordinator::scheduler::{Coordinator, CoordinatorConfig};
+use els::coordinator::service::{Client, Server};
+use els::data::synth;
+use els::els::encrypted::{fit, DatasetRef, FitConfig};
+use els::els::exact::QuantisedData;
+use els::els::model::{encrypt_dataset, EncryptedDataset};
+use els::els::stepsize::nu_optimal;
+use els::fhe::keys::keygen;
+use els::fhe::params::{plan, PlanRequest};
+use els::fhe::rng::ChaChaRng;
+use els::fhe::{Ciphertext, FvContext, KeySet};
+use els::math::poly::RnsPoly;
+use els::runtime::backend::{HeEngine, NativeEngine};
+use els::util::faults::{self, FaultKind, FaultSession, FaultSite, FaultSpec};
+use els::util::json::Json;
+
+const CLIENTS: usize = 12;
+const PER_CLIENT: usize = 10;
+const TENANTS: [&str; 3] = ["acme", "globex", "initech"];
+
+/// Residency-normalised ciphertext bits (NTT-resident and coefficient
+/// forms are exact representations of the same ciphertext).
+fn coeff_polys(ctx: &FvContext, betas: &[Ciphertext]) -> Vec<Vec<RnsPoly>> {
+    betas
+        .iter()
+        .map(|ct| ct.polys.iter().map(|p| ctx.ring_q.coeff_form(p).into_owned()).collect())
+        .collect()
+}
+
+struct Fixture {
+    ctx: Arc<FvContext>,
+    keys: KeySet,
+    cfg: FitConfig,
+    datasets: Vec<EncryptedDataset>,
+    solo: Vec<Vec<Vec<RnsPoly>>>,
+}
+
+/// Shared across scenarios: keygen + solo reference fits are the
+/// expensive part and are fault-independent (solo fits run on a
+/// private engine before any session arms).
+fn fixture() -> &'static Fixture {
+    static FX: OnceLock<Fixture> = OnceLock::new();
+    FX.get_or_init(|| {
+        let mut rng = ChaChaRng::from_seed(777);
+        let (x, y) = synth::gaussian_regression(&mut rng, 6, 2, 0.2);
+        let q = QuantisedData::from_f64(&x, &y, 2);
+        let (xq, _) = q.dequantised();
+        let nu = nu_optimal(&xq);
+        let params = plan(&PlanRequest::gd(6, 2, 1, 2, nu)).unwrap();
+        let ctx = FvContext::new(params);
+        let keys = keygen(&ctx, &mut rng);
+        let cfg = FitConfig::gd(1, nu);
+        let datasets: Vec<_> =
+            (0..TENANTS.len()).map(|_| encrypt_dataset(&ctx, &keys.pk, &q, &mut rng)).collect();
+        let solo: Vec<_> = datasets
+            .iter()
+            .map(|d| {
+                let engine = NativeEngine::new(ctx.clone(), Arc::new(keys.rk.clone()));
+                let f = fit(&engine, &DatasetRef::Scalar(d), &cfg).unwrap().fit;
+                coeff_polys(&ctx, &f.betas)
+            })
+            .collect();
+        Fixture { ctx, keys, cfg, datasets, solo }
+    })
+}
+
+/// Poll a predicate over the wire until it holds or ~5 s elapse.
+fn eventually(mut probe: impl FnMut() -> bool, what: &str) {
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_secs(5) {
+        if probe() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+fn health_u64(h: &Json, key: &str) -> u64 {
+    h.get(key).and_then(Json::as_u64).unwrap_or_else(|| panic!("health missing {key}"))
+}
+
+/// The saturation burst under a fault mix. Every submission must
+/// terminate with a bit-identical fit or a code from `allowed`; all
+/// server-side state must drain to zero afterwards. Returns
+/// `(completed, failed, retries)`.
+fn run_scenario(
+    name: &str,
+    specs: &[FaultSpec],
+    allowed: &[ErrorCode],
+    deadline_ms: Option<u64>,
+) -> (usize, usize, u64) {
+    let fx = fixture();
+    let native = Arc::new(NativeEngine::new(fx.ctx.clone(), Arc::new(fx.keys.rk.clone())));
+    let engine = BatchingEngine::new(native.clone(), BatchConfig::default());
+    let coord = Coordinator::with_config(
+        engine.clone(),
+        CoordinatorConfig {
+            lanes: 2,
+            queue_capacity: 8,
+            cache_budget_bytes: 4 << 20,
+            cache_shards: 2,
+        },
+    );
+    let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    let injected_before = faults::injected_total();
+    let session = FaultSession::activate(specs);
+
+    // Outcome per submission: Ok(tenant, betas) or Err(code). Retrying
+    // clients with per-client jitter seeds; tiny real backoffs (1..8ms)
+    // so overload retries give the queue time to drain.
+    type ClientRun = (Vec<Result<(usize, Vec<Vec<RnsPoly>>), ErrorCode>>, Vec<JobId>, u64);
+    let results: Vec<ClientRun> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|c| {
+                    let (addr, fx) = (&addr, fx);
+                    s.spawn(move || {
+                        let t = c % TENANTS.len();
+                        let mut rc =
+                            RetryingClient::new(addr, RetryPolicy::new(6, 1, 8, 5000 + c as u64));
+                        let mut ids = Vec::new();
+                        let mut out = Vec::new();
+                        for j in 0..PER_CLIENT {
+                            let token = format!("{name}-c{c}-j{j}");
+                            match rc.submit(
+                                &fx.datasets[t],
+                                &fx.cfg,
+                                None,
+                                Some(TENANTS[t]),
+                                deadline_ms,
+                                &token,
+                            ) {
+                                Ok(id) => ids.push(id),
+                                Err(e) => out.push(Err(e.code)),
+                            }
+                        }
+                        for &id in &ids {
+                            let r = rc.result(&fx.ctx, id);
+                            // Defensive ack: `result` already acks on
+                            // success, but under write faults that ack
+                            // can be lost — and failed jobs need an
+                            // explicit release. Idempotent either way.
+                            let _ = rc.ack(id);
+                            match r {
+                                Ok(f) => out.push(Ok((t, coeff_polys(&fx.ctx, &f.betas)))),
+                                Err(e) => out.push(Err(e.code)),
+                            }
+                        }
+                        (out, ids, rc.retries())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+    drop(session); // disarm before the drain assertions below
+
+    let retries: u64 = results.iter().map(|(_, _, r)| r).sum();
+    let all_ids: Vec<JobId> = results.iter().flat_map(|(_, ids, _)| ids.iter().copied()).collect();
+    let outcomes: Vec<_> = results.into_iter().flat_map(|(out, _, _)| out).collect();
+    assert_eq!(outcomes.len(), CLIENTS * PER_CLIENT, "[{name}] every submission must terminate");
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for o in &outcomes {
+        match o {
+            Ok((t, betas)) => {
+                completed += 1;
+                assert_eq!(betas, &fx.solo[*t], "[{name}] fit diverged from solo ciphertexts");
+            }
+            Err(code) => {
+                failed += 1;
+                assert!(allowed.contains(code), "[{name}] unexpected terminal code {code}");
+            }
+        }
+    }
+    assert!(completed >= 1, "[{name}] chaos must not starve every job");
+    assert!(
+        faults::injected_total() > injected_before,
+        "[{name}] armed faults never fired — the scenario tested nothing"
+    );
+
+    // Nothing leaks: queue, lanes, tracked jobs and timer handles all
+    // drain to zero once every outcome is acked. A client that
+    // exhausted its retry budget on `result`/`ack` while faults were
+    // armed leaves its job tracked, so each poll re-acks every id
+    // (idempotent, faults now off — running jobs say `false` now and
+    // release on a later poll) before reading `health`: the drain is
+    // deterministic rather than hostage to how unlucky the faults were.
+    let mut probe = Client::connect(&addr).unwrap();
+    eventually(
+        || {
+            for &id in &all_ids {
+                let _ = probe.ack(id);
+            }
+            let h = probe.health().unwrap();
+            health_u64(&h, "queue_depth") == 0
+                && health_u64(&h, "running") == 0
+                && health_u64(&h, "tracked_jobs") == 0
+                && health_u64(&h, "timers_live") == 0
+        },
+        "queue/lanes/jobs/timers to drain",
+    );
+    server.stop();
+    engine.shutdown();
+    (completed, failed, retries)
+}
+
+#[test]
+fn chaos_wire_faults_resolve_via_retry_and_tokens() {
+    let specs = [
+        FaultSpec { site: FaultSite::WireRead, kind: FaultKind::Disconnect, rate: 0.05, seed: 11 },
+        FaultSpec { site: FaultSite::WireRead, kind: FaultKind::IoError, rate: 0.05, seed: 12 },
+        FaultSpec {
+            site: FaultSite::WireWrite,
+            kind: FaultKind::PartialWrite,
+            rate: 0.05,
+            seed: 13,
+        },
+        FaultSpec { site: FaultSite::WireWrite, kind: FaultKind::Disconnect, rate: 0.05, seed: 14 },
+        FaultSpec { site: FaultSite::WireWrite, kind: FaultKind::IoError, rate: 0.05, seed: 15 },
+    ];
+    // Transport/overload errors are retried; a client that exhausts its
+    // budget reports the transient code it last saw.
+    let (completed, _failed, retries) = run_scenario(
+        "wire",
+        &specs,
+        &[ErrorCode::Transport, ErrorCode::Overloaded],
+        None,
+    );
+    assert!(completed >= TENANTS.len(), "wire chaos should still complete most jobs");
+    assert!(retries >= 1, "5% fault rates over 120 jobs must trigger retries");
+}
+
+#[test]
+fn chaos_lane_panics_fail_jobs_without_killing_lanes() {
+    let specs =
+        [FaultSpec { site: FaultSite::Lane, kind: FaultKind::Panic, rate: 0.3, seed: 13 }];
+    let (completed, failed, _) = run_scenario(
+        "lane",
+        &specs,
+        &[ErrorCode::JobFailed, ErrorCode::Overloaded, ErrorCode::Transport],
+        None,
+    );
+    assert!(failed >= 1, "a 30% panic rate over 120 jobs must fail some");
+    assert!(completed >= 1, "panics must be contained per-job, not kill the lanes");
+}
+
+#[test]
+fn chaos_timer_late_and_spurious_fires_are_harmless() {
+    let specs = [
+        FaultSpec { site: FaultSite::Timer, kind: FaultKind::Late, rate: 0.2, seed: 17 },
+        FaultSpec { site: FaultSite::Timer, kind: FaultKind::Spurious, rate: 0.2, seed: 19 },
+    ];
+    // Generous 60s deadlines park a timer per job: spurious fires must
+    // re-check the real deadline (no premature expiry), late fires must
+    // only delay. Every job completes.
+    let (completed, failed, _) = run_scenario(
+        "timer",
+        &specs,
+        &[ErrorCode::Overloaded, ErrorCode::Transport],
+        Some(60_000),
+    );
+    assert!(completed >= TENANTS.len());
+    assert_eq!(
+        completed + failed,
+        CLIENTS * PER_CLIENT,
+        "timer chaos must never lose a submission"
+    );
+}
+
+#[test]
+fn chaos_forced_cache_eviction_never_changes_bits() {
+    let specs =
+        [FaultSpec { site: FaultSite::Cache, kind: FaultKind::Evict, rate: 0.5, seed: 23 }];
+    // Operand-cache residency is a performance property, never a
+    // correctness one: evicting half the lookups changes nothing but
+    // rebuild work. The bit-identity assertion inside run_scenario is
+    // the whole point here.
+    let (completed, _, _) = run_scenario(
+        "cache",
+        &specs,
+        &[ErrorCode::Overloaded, ErrorCode::Transport],
+        None,
+    );
+    assert!(completed >= TENANTS.len());
+}
+
+#[test]
+fn chaos_batcher_dispatch_failures_fail_only_their_jobs() {
+    let specs =
+        [FaultSpec { site: FaultSite::Batcher, kind: FaultKind::Fail, rate: 0.3, seed: 29 }];
+    let (completed, failed, _) = run_scenario(
+        "batcher",
+        &specs,
+        &[ErrorCode::JobFailed, ErrorCode::Overloaded, ErrorCode::Transport],
+        None,
+    );
+    assert!(failed >= 1, "a 30% dispatch-failure rate must fail some jobs");
+    assert!(completed >= 1, "the dispatcher must survive injected failures");
+}
+
+#[test]
+fn idempotent_token_resubmission_over_the_wire_never_recomputes() {
+    let _quiet = faults::exclusion();
+    let fx = fixture();
+    let native = Arc::new(NativeEngine::new(fx.ctx.clone(), Arc::new(fx.keys.rk.clone())));
+    let engine = BatchingEngine::new(native.clone(), BatchConfig::default());
+    let coord = Coordinator::with_config(
+        engine.clone(),
+        CoordinatorConfig {
+            lanes: 2,
+            queue_capacity: 8,
+            cache_budget_bytes: 4 << 20,
+            cache_shards: 2,
+        },
+    );
+    let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let id1 = client
+        .submit_opts(&fx.datasets[0], &fx.cfg, None, Some(TENANTS[0]), None, Some("tok-1"))
+        .unwrap();
+    eventually(
+        || matches!(client.status(id1).unwrap().as_str(), "done" | "failed"),
+        "first submission to finish",
+    );
+    // Simulated lost reply: the client never saw `id1` land, so it
+    // resubmits the same token. Same job id, zero extra engine work.
+    let muls_before = native.stats().snapshot().0;
+    let id2 = client
+        .submit_opts(&fx.datasets[0], &fx.cfg, None, Some(TENANTS[0]), None, Some("tok-1"))
+        .unwrap();
+    assert_eq!(id2, id1, "token resubmission must re-attach to the original job");
+    assert_eq!(
+        native.stats().snapshot().0,
+        muls_before,
+        "token dedup must not re-execute the fit"
+    );
+    // The result survives a re-read (peek, not take) …
+    let f1 = client.result(&fx.ctx, id1).unwrap(); // auto-acks on success
+    assert_eq!(coeff_polys(&fx.ctx, &f1.betas), fx.solo[0]);
+    // … and after the ack both the job and its token are gone: the
+    // same token now names a fresh job.
+    assert!(!client.ack(id1).unwrap(), "auto-ack already released the job");
+    let id3 = client
+        .submit_opts(&fx.datasets[0], &fx.cfg, None, Some(TENANTS[0]), None, Some("tok-1"))
+        .unwrap();
+    assert_ne!(id3, id1, "an acked token must not resurrect the released job");
+    let f3 = client.result(&fx.ctx, id3).unwrap();
+    assert_eq!(coeff_polys(&fx.ctx, &f3.betas), fx.solo[0]);
+
+    let h = client.health().unwrap();
+    assert_eq!(health_u64(&h, "tracked_jobs"), 0, "acked jobs must not leak");
+    server.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn fault_free_burst_is_a_counter_asserted_noop() {
+    // Exclusion guard: no session can arm while this runs, so every
+    // probe must take the disabled fast path — and the serving tier
+    // must behave exactly as the pre-chaos stack did.
+    let _quiet = faults::exclusion();
+    let fx = fixture();
+    let checked_before = faults::checked_total();
+    let injected_before = faults::injected_total();
+
+    let native = Arc::new(NativeEngine::new(fx.ctx.clone(), Arc::new(fx.keys.rk.clone())));
+    let engine = BatchingEngine::new(native.clone(), BatchConfig::default());
+    let coord = Coordinator::with_config(
+        engine.clone(),
+        CoordinatorConfig {
+            lanes: 2,
+            queue_capacity: 16,
+            cache_budget_bytes: 4 << 20,
+            cache_shards: 2,
+        },
+    );
+    let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let mut ids = Vec::new();
+    for t in 0..TENANTS.len() {
+        for j in 0..2 {
+            let token = format!("noop-{t}-{j}");
+            let data = &fx.datasets[t];
+            let id = client
+                .submit_opts(data, &fx.cfg, None, Some(TENANTS[t]), None, Some(&token))
+                .unwrap();
+            ids.push((t, id));
+        }
+    }
+    for (t, id) in ids {
+        let f = client.result(&fx.ctx, id).unwrap();
+        assert_eq!(coeff_polys(&fx.ctx, &f.betas), fx.solo[t], "fault-free bits must match solo");
+    }
+    assert_eq!(
+        faults::checked_total(),
+        checked_before,
+        "disabled probes must not even count — the no-op contract"
+    );
+    assert_eq!(faults::injected_total(), injected_before);
+    server.stop();
+    engine.shutdown();
+}
+
+/// CI smoke: when `ELS_CHAOS_OUT` is set, run a compact wire-fault
+/// burst and write an `els-chaos-v1` snapshot for
+/// `python/tools/chaos_check.py`. `ELS_FAULTS` (if set) supplies the
+/// mix; otherwise a default wire mix applies. A no-op without the env
+/// var, so plain `cargo test` stays hermetic.
+#[test]
+fn chaos_smoke_writes_snapshot_for_ci() {
+    let Ok(out_path) = std::env::var("ELS_CHAOS_OUT") else {
+        eprintln!("chaos_smoke: ELS_CHAOS_OUT unset; skipping");
+        return;
+    };
+    let specs = match std::env::var("ELS_FAULTS") {
+        Ok(s) if !s.is_empty() => faults::parse_spec(&s).expect("ELS_FAULTS"),
+        _ => vec![
+            FaultSpec {
+                site: FaultSite::WireWrite,
+                kind: FaultKind::Disconnect,
+                rate: 0.1,
+                seed: 41,
+            },
+            FaultSpec { site: FaultSite::Lane, kind: FaultKind::Panic, rate: 0.1, seed: 43 },
+        ],
+    };
+    let checked_before = faults::checked_total();
+    let injected_before = faults::injected_total();
+    let (completed, failed, retries) = run_scenario(
+        "smoke",
+        &specs,
+        &[
+            ErrorCode::Transport,
+            ErrorCode::Overloaded,
+            ErrorCode::JobFailed,
+            ErrorCode::DeadlineExceeded,
+        ],
+        None,
+    );
+    let per_site = Json::obj(
+        els::util::faults::ALL_SITES
+            .iter()
+            .map(|&s| (s.as_str(), Json::Num(faults::injected_at(s) as f64)))
+            .collect::<Vec<_>>(),
+    );
+    let doc = Json::obj(vec![
+        ("schema", Json::str("els-chaos-v1")),
+        (
+            "jobs",
+            Json::obj(vec![
+                ("total", Json::Num((CLIENTS * PER_CLIENT) as f64)),
+                ("completed", Json::Num(completed as f64)),
+                ("failed", Json::Num(failed as f64)),
+                ("leaked", Json::Num(0.0)), // run_scenario asserts the drain
+            ]),
+        ),
+        (
+            "faults",
+            Json::obj(vec![
+                (
+                    "checked",
+                    Json::Num((faults::checked_total() - checked_before) as f64),
+                ),
+                (
+                    "injected",
+                    Json::Num((faults::injected_total() - injected_before) as f64),
+                ),
+                ("per_site", per_site),
+            ]),
+        ),
+        ("retries", Json::Num(retries as f64)),
+    ]);
+    std::fs::write(&out_path, doc.to_string_json()).expect("writing ELS_CHAOS_OUT");
+    eprintln!("chaos_smoke: wrote {out_path}");
+}
