@@ -41,11 +41,14 @@ note "coordinator saturation smoke: cargo test --release --test saturation"
 cargo test --release --test saturation
 
 # Chaos battery: the saturation burst re-run under every deterministic
-# fault site (wire, lane, timer, cache, batcher) with retrying clients
-# and idempotent tokens — terminate-or-structured-code, no leaks, no
-# double execution. Then the env-driven smoke scenario writes an
-# els-chaos-v1 snapshot for the dep-free validator: faults must have
-# fired, nothing may leak, and the client must really have retried.
+# fault site (wire, lane, timer, cache, batcher, journal) with retrying
+# clients and idempotent tokens — terminate-or-structured-code, no
+# leaks, no double execution. Includes the restart-recovery scenarios:
+# a journal-backed coordinator crashed mid-burst and rebuilt from its
+# journal dir must recover every accepted job. Then the env-driven
+# smoke scenario writes an els-chaos-v1 snapshot for the dep-free
+# validator: faults must have fired, nothing may leak, and the client
+# must really have retried.
 note "chaos battery: cargo test --release --test chaos"
 cargo test --release --test chaos
 if command -v python3 >/dev/null 2>&1; then
@@ -56,6 +59,17 @@ if command -v python3 >/dev/null 2>&1; then
         cargo test --release --test chaos chaos_smoke_writes_snapshot_for_ci
     python3 python/tools/chaos_check.py "$chaos_file" --expect-retries
     rm -f "$chaos_file"
+
+    # Durability smoke: a short journal-backed burst leaves its
+    # write-ahead journal behind; journal_check.py audits the WAL
+    # byte-for-byte (frame checksums, record schema, full lifecycle).
+    note "journal smoke: ELS_JOURNAL_OUT burst + journal_check.py"
+    journal_dir="$(mktemp -d -t els-journal-XXXXXX)"
+    ELS_JOURNAL_OUT="$journal_dir" \
+        cargo test --release --test chaos journal_smoke_writes_wal_for_ci
+    python3 python/tools/journal_check.py "$journal_dir" \
+        --require accepted,started,done,acked
+    rm -rf "$journal_dir"
 else
     note "SKIPPED: python3 not installed — chaos snapshot gate not run"
 fi

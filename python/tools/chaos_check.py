@@ -32,6 +32,7 @@ KNOWN_SITES = {
     "timer",
     "cache",
     "batcher",
+    "journal",
 }
 
 

@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Validate an `els` write-ahead journal (`journal.wal`).
+
+Dependency-free (stdlib only), in the same discipline as chaos_check.py
+and trace_check.py. The journal is the durability substrate of the
+serving tier (rust/src/coordinator/journal.rs): length-prefixed,
+checksummed frames, each wrapping one lifecycle-record JSON document.
+
+Frame format (little-endian):
+
+    [u32 payload length][u64 FNV-1a 64 checksum of payload][payload]
+
+Checks:
+
+- every complete frame's checksum matches its payload (FNV-1a 64,
+  offset 0xcbf29ce484222325, prime 0x100000001b3);
+- every payload is valid JSON with `v` == 1, a known `event` tag and a
+  non-negative integer `id`;
+- per-event required fields are present with the right shapes
+  (`accepted` carries tenant/cfg/data, `checkpoint` a ckpt document,
+  `done` a fit document, `failed` a structured code);
+- non-`accepted` records referencing an id with no prior `accepted`
+  are reported (replay skips such orphans — a truncation repair can
+  legally produce them, so they warn rather than fail);
+- a torn tail (incomplete or checksum-failing final frame) is a
+  warning, never a failure — recovery truncates it by design;
+- with `--require`, the named events must each appear at least once.
+
+Usage:
+    journal_check.py JOURNAL [--require accepted,done] [--strict-orphans]
+
+JOURNAL is the `journal.wal` file or the journal directory holding it.
+Exit code 0 on success; 1 with a diagnostic on the first violation.
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+JOURNAL_VERSION = 1
+HEADER_LEN = 12
+MAX_RECORD_LEN = 1 << 30
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+KNOWN_EVENTS = {"accepted", "started", "checkpoint", "done", "acked", "failed"}
+
+# Error codes defined by rust/src/coordinator/protocol.rs.
+KNOWN_CODES = {
+    "bad_request",
+    "bad_version",
+    "unknown_job",
+    "job_failed",
+    "job_expired",
+    "deadline_exceeded",
+    "overloaded",
+    "shutting_down",
+    "transport",
+    "internal",
+}
+
+
+def fail(msg):
+    print(f"journal_check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def warn(msg):
+    print(f"journal_check: warning: {msg}", file=sys.stderr)
+
+
+def fnv1a64(data):
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def scan_frames(raw):
+    """Yield (offset, payload bytes) for the clean prefix; mirror the
+    Rust scanner's torn-tail semantics (truncate at the first
+    incomplete/corrupt frame)."""
+    frames = []
+    at = 0
+    torn = None
+    while at < len(raw):
+        rest = raw[at:]
+        if len(rest) < HEADER_LEN:
+            torn = f"incomplete header at byte {at} ({len(rest)} of {HEADER_LEN} bytes)"
+            break
+        length, checksum = struct.unpack_from("<IQ", rest)
+        if length > MAX_RECORD_LEN:
+            torn = f"implausible frame length {length} at byte {at}"
+            break
+        if len(rest) < HEADER_LEN + length:
+            torn = (
+                f"incomplete frame at byte {at} "
+                f"({len(rest) - HEADER_LEN} of {length} payload bytes)"
+            )
+            break
+        payload = rest[HEADER_LEN : HEADER_LEN + length]
+        if fnv1a64(payload) != checksum:
+            torn = f"checksum mismatch at byte {at}"
+            break
+        frames.append((at, payload))
+        at += HEADER_LEN + length
+    return frames, torn
+
+
+def require_field(doc, event, offset, key, kinds, kind_name):
+    v = doc.get(key)
+    if not isinstance(v, kinds) or isinstance(v, bool):
+        fail(f"'{event}' record at byte {offset}: '{key}' must be {kind_name}, got {v!r}")
+    return v
+
+
+def check_record(doc, offset, accepted_ids):
+    if not isinstance(doc, dict):
+        fail(f"record at byte {offset} is not a JSON object")
+    v = doc.get("v")
+    if v != JOURNAL_VERSION:
+        fail(f"record at byte {offset}: version must be {JOURNAL_VERSION}, got {v!r}")
+    event = doc.get("event")
+    if event not in KNOWN_EVENTS:
+        fail(f"record at byte {offset}: unknown event {event!r}")
+    rid = doc.get("id")
+    if not isinstance(rid, (int, float)) or isinstance(rid, bool) or rid < 0 or rid != int(rid):
+        fail(f"'{event}' record at byte {offset}: 'id' must be a non-negative integer")
+    rid = int(rid)
+
+    orphan = False
+    if event == "accepted":
+        require_field(doc, event, offset, "tenant", str, "a string")
+        require_field(doc, event, offset, "cfg", dict, "an object")
+        require_field(doc, event, offset, "data", dict, "an object")
+        tok = doc.get("token")
+        if tok is not None and not isinstance(tok, str):
+            fail(f"'accepted' record at byte {offset}: 'token' must be a string")
+        dl = doc.get("deadline_ms")
+        if dl is not None and (
+            not isinstance(dl, (int, float)) or isinstance(dl, bool) or dl < 0
+        ):
+            fail(f"'accepted' record at byte {offset}: 'deadline_ms' must be non-negative")
+        accepted_ids.add(rid)
+    else:
+        if event == "checkpoint":
+            require_field(doc, event, offset, "ckpt", dict, "an object")
+        elif event == "done":
+            require_field(doc, event, offset, "fit", dict, "an object")
+        elif event == "failed":
+            code = require_field(doc, event, offset, "code", str, "a string")
+            if code not in KNOWN_CODES:
+                fail(f"'failed' record at byte {offset}: unknown error code {code!r}")
+        orphan = rid not in accepted_ids
+    return event, rid, orphan
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("journal", help="journal.wal file, or the journal directory")
+    ap.add_argument(
+        "--require",
+        default="",
+        help="comma-separated events that must each appear at least once",
+    )
+    ap.add_argument(
+        "--strict-orphans",
+        action="store_true",
+        help="fail (instead of warn) on records whose id has no prior 'accepted'",
+    )
+    args = ap.parse_args()
+
+    path = args.journal
+    if os.path.isdir(path):
+        path = os.path.join(path, "journal.wal")
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+
+    frames, torn = scan_frames(raw)
+    if not frames:
+        fail(f"{path} holds no complete records" + (f" ({torn})" if torn else ""))
+
+    counts = {e: 0 for e in KNOWN_EVENTS}
+    accepted_ids = set()
+    orphans = 0
+    for offset, payload in frames:
+        try:
+            doc = json.loads(payload.decode("utf-8"))
+        except (UnicodeDecodeError, ValueError) as e:
+            fail(f"record at byte {offset} is checksummed but not valid JSON: {e}")
+        event, rid, orphan = check_record(doc, offset, accepted_ids)
+        counts[event] += 1
+        if orphan:
+            orphans += 1
+            msg = f"'{event}' record at byte {offset} references id {rid} with no prior 'accepted'"
+            if args.strict_orphans:
+                fail(msg)
+            warn(msg + " (replay skips it)")
+
+    if torn:
+        warn(f"torn tail after {len(frames)} good record(s): {torn}; recovery truncates it")
+
+    for event in filter(None, (e.strip() for e in args.require.split(","))):
+        if event not in KNOWN_EVENTS:
+            fail(f"--require names unknown event {event!r}")
+        if counts[event] == 0:
+            fail(f"--require {event}: no '{event}' record in the journal")
+
+    summary = ", ".join(f"{e}={counts[e]}" for e in sorted(counts) if counts[e])
+    print(
+        f"journal_check: OK: {len(frames)} record(s) over {len(accepted_ids)} job(s) "
+        f"({summary}), {orphans} orphan(s)"
+        + (", torn tail (truncated on recovery)" if torn else "")
+    )
+
+
+if __name__ == "__main__":
+    main()

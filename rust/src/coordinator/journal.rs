@@ -1,0 +1,787 @@
+//! Durable serving: an append-only write-ahead journal of job
+//! lifecycle transitions.
+//!
+//! The paper's premise is that encrypted fits are *expensive* —
+//! hundreds of ciphertext multiplies under §4.5 parameter bounds — so
+//! the serving tier must survive its own process dying without losing
+//! accepted work or recomputing finished iterations. Every lifecycle
+//! transition (`accepted`/`started`/`checkpoint`/`done`/`acked`/
+//! `failed`) is appended to `journal.wal` under `journal_dir` *before*
+//! the transition is acted on, and `Coordinator::recover` folds the
+//! log back into live state on startup.
+//!
+//! # Record format
+//!
+//! ```text
+//! ┌──────────────┬────────────────┬──────────────────────┐
+//! │ len: u32 LE  │ checksum: u64  │ payload: len bytes    │
+//! │ (of payload) │ LE, FNV-1a 64  │ (one JSON document)   │
+//! └──────────────┴────────────────┴──────────────────────┘
+//! ```
+//!
+//! Payloads are the same line-protocol JSON the wire speaks (reusing
+//! `protocol.rs` codecs for ciphertexts, fits and configs), framed
+//! binary so a torn tail is *detectable*: on open the file is scanned
+//! record-by-record and the first incomplete or checksum-failing
+//! record — the classic torn write of a crash mid-append — truncates
+//! the file back to the last good boundary. A torn tail is counted and
+//! logged, never a recovery failure.
+//!
+//! # Fsync discipline
+//!
+//! Every append is followed by `fsync` before the caller proceeds, so
+//! an `accepted` reply implies the job survives a crash, and a `done`
+//! record implies the result is re-servable with zero engine work.
+//! Failed appends repair the tail in-process (truncate back to the
+//! last good boundary) and surface a retryable error — the journal
+//! never silently continues past a record later readers would discard.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::job::{JobId, JobSpec};
+use crate::coordinator::protocol::{
+    cfg_from_json, cfg_to_json, checkpoint_from_json, checkpoint_to_json, dataset_from_json,
+    dataset_to_json, fit_from_json, fit_to_json, record_checksum, ErrorCode,
+};
+use crate::coordinator::tenant::TenantId;
+use crate::els::encrypted::{DescentCheckpoint, EncryptedFit, FitConfig};
+use crate::els::model::EncryptedDataset;
+use crate::fhe::FvContext;
+use crate::util::error::{bail, Context, Result};
+use crate::util::faults::{self, FaultKind, FaultSite};
+use crate::util::json::Json;
+
+/// Journal schema version carried in every record payload.
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// Frame header: payload length (u32 LE) + FNV-1a 64 checksum (u64 LE).
+const HEADER_LEN: usize = 12;
+
+/// Records longer than this are treated as corruption, not as a real
+/// length — a torn length word must not make the scanner "wait" for
+/// gigabytes that never existed.
+const MAX_RECORD_LEN: usize = 1 << 30;
+
+// ---- global counters (telemetry `journal` section) ----------------------
+
+static RECORDS_WRITTEN: AtomicU64 = AtomicU64::new(0);
+static RECORDS_REPLAYED: AtomicU64 = AtomicU64::new(0);
+static RECORDS_TRUNCATED: AtomicU64 = AtomicU64::new(0);
+static CHECKPOINTS_TAKEN: AtomicU64 = AtomicU64::new(0);
+static CHECKPOINTS_RESUMED: AtomicU64 = AtomicU64::new(0);
+static APPEND_ERRORS: AtomicU64 = AtomicU64::new(0);
+
+/// Records appended (and fsynced) since process start.
+pub fn records_written() -> u64 {
+    RECORDS_WRITTEN.load(Ordering::Relaxed)
+}
+
+/// Records replayed by `Journal::open` since process start.
+pub fn records_replayed() -> u64 {
+    RECORDS_REPLAYED.load(Ordering::Relaxed)
+}
+
+/// Torn-tail truncation events (open-time and post-append repair).
+pub fn records_truncated() -> u64 {
+    RECORDS_TRUNCATED.load(Ordering::Relaxed)
+}
+
+/// Mid-fit descent checkpoints journaled since process start.
+pub fn checkpoints_taken() -> u64 {
+    CHECKPOINTS_TAKEN.load(Ordering::Relaxed)
+}
+
+/// Fits resumed from a journaled checkpoint since process start.
+pub fn checkpoints_resumed() -> u64 {
+    CHECKPOINTS_RESUMED.load(Ordering::Relaxed)
+}
+
+/// Appends that failed (io error or injected fault) since start.
+pub fn append_errors() -> u64 {
+    APPEND_ERRORS.load(Ordering::Relaxed)
+}
+
+/// Count one journaled mid-fit checkpoint (scheduler hook).
+pub fn note_checkpoint_taken() {
+    CHECKPOINTS_TAKEN.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count one checkpoint-resumed fit (scheduler recovery).
+pub fn note_checkpoint_resumed() {
+    CHECKPOINTS_RESUMED.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---- byte-level scan (pure; the property-test surface) ------------------
+
+/// Scan raw journal bytes into payload documents. Returns the decoded
+/// payloads, the length of the clean prefix (the byte offset the next
+/// append belongs at), and whether a torn/corrupt tail was found after
+/// that prefix. Pure — property tests replay arbitrary prefixes
+/// without touching the filesystem.
+pub fn scan_bytes(bytes: &[u8]) -> (Vec<Json>, usize, bool) {
+    let mut docs = Vec::new();
+    let mut at = 0usize;
+    while at < bytes.len() {
+        let rest = &bytes[at..];
+        if rest.len() < HEADER_LEN {
+            return (docs, at, true);
+        }
+        let len = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(rest[4..12].try_into().unwrap());
+        if len > MAX_RECORD_LEN || rest.len() < HEADER_LEN + len {
+            return (docs, at, true);
+        }
+        let payload = &rest[HEADER_LEN..HEADER_LEN + len];
+        if record_checksum(payload) != sum {
+            return (docs, at, true);
+        }
+        let text = match std::str::from_utf8(payload) {
+            Ok(t) => t,
+            Err(_) => return (docs, at, true),
+        };
+        let doc = match Json::parse(text) {
+            Ok(d) => d,
+            Err(_) => return (docs, at, true),
+        };
+        docs.push(doc);
+        at += HEADER_LEN + len;
+    }
+    (docs, at, false)
+}
+
+/// Frame one payload document as journal bytes.
+fn frame(payload: &Json) -> Vec<u8> {
+    let body = payload.to_string_json().into_bytes();
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&record_checksum(&body).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+// ---- the journal itself -------------------------------------------------
+
+struct Wal {
+    /// `None` once poisoned: crash simulation (and unrecoverable repair
+    /// failures) stop all writes, as if the process had died.
+    file: Option<File>,
+    /// Byte offset of the last good record boundary.
+    end: u64,
+}
+
+/// An open append-only write-ahead journal (`journal.wal` under the
+/// directory given to [`Journal::open`]).
+pub struct Journal {
+    path: PathBuf,
+    inner: Mutex<Wal>,
+}
+
+impl Journal {
+    /// Open (or create) the journal under `dir`, replaying existing
+    /// records. A torn or corrupt tail is truncated back to the last
+    /// good record boundary — counted and reported, never an error.
+    pub fn open(dir: impl AsRef<Path>) -> Result<(Journal, Vec<Json>)> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        let path = dir.join("journal.wal");
+        let mut file = File::options()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes).context("reading journal")?;
+        let (docs, good_end, torn) = scan_bytes(&bytes);
+        if torn {
+            file.set_len(good_end as u64).context("truncating torn journal tail")?;
+            file.sync_data().context("syncing truncated journal")?;
+            RECORDS_TRUNCATED.fetch_add(1, Ordering::Relaxed);
+        }
+        file.seek(SeekFrom::Start(good_end as u64)).context("seeking journal end")?;
+        RECORDS_REPLAYED.fetch_add(docs.len() as u64, Ordering::Relaxed);
+        let journal =
+            Journal { path, inner: Mutex::new(Wal { file: Some(file), end: good_end as u64 }) };
+        Ok((journal, docs))
+    }
+
+    /// The on-disk path of the journal file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record and fsync it. On failure (real io error or an
+    /// injected `journal` fault) the tail is repaired back to the last
+    /// good boundary and the error surfaces to the caller — an
+    /// unjournaled transition must never be acted on.
+    pub fn append(&self, record: &JournalRecord) -> Result<()> {
+        self.append_json(&record.to_json())
+    }
+
+    /// Append one pre-built payload document — the borrowed-payload
+    /// twin of [`append`](Self::append). The scheduler journals
+    /// `accepted` and `done` through [`accepted_payload`] /
+    /// [`done_payload`] without cloning the dataset or fit into an
+    /// owning [`JournalRecord`].
+    pub(crate) fn append_json(&self, payload: &Json) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let end = inner.end;
+        let Some(file) = inner.file.as_mut() else {
+            bail!("journal closed (crashed or unrepairable)");
+        };
+        let bytes = frame(payload);
+        match faults::check(FaultSite::Journal) {
+            Some(FaultKind::IoError) => {
+                APPEND_ERRORS.fetch_add(1, Ordering::Relaxed);
+                bail!("injected journal io error");
+            }
+            Some(FaultKind::TornWrite) => {
+                // Persist only a prefix — the torn write of a crash —
+                // then repair the tail in-process so later appends (and
+                // later readers) never sit behind a record the scanner
+                // would discard.
+                let cut = (bytes.len() / 2).max(1);
+                let _ = file.write_all(&bytes[..cut]);
+                let _ = file.flush();
+                APPEND_ERRORS.fetch_add(1, Ordering::Relaxed);
+                Self::repair(&mut inner, end);
+                bail!("injected torn journal write (tail repaired)");
+            }
+            _ => {}
+        }
+        if let Err(e) = file.write_all(&bytes).and_then(|()| file.sync_data()) {
+            APPEND_ERRORS.fetch_add(1, Ordering::Relaxed);
+            Self::repair(&mut inner, end);
+            bail!("journal append failed: {e}");
+        }
+        inner.end = end + bytes.len() as u64;
+        RECORDS_WRITTEN.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Truncate back to the last good boundary; poison on failure.
+    fn repair(inner: &mut Wal, end: u64) {
+        let ok = inner.file.as_mut().is_some_and(|f| {
+            f.set_len(end).and_then(|()| f.seek(SeekFrom::Start(end))).is_ok()
+        });
+        if !ok {
+            // Cannot guarantee a clean tail: stop writing entirely.
+            inner.file = None;
+        }
+        RECORDS_TRUNCATED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fsync the journal (the final sync of a graceful drain).
+    pub fn sync(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(file) = inner.file.as_mut() {
+            file.sync_data().context("syncing journal")?;
+        }
+        Ok(())
+    }
+
+    /// Crash simulation: suppress every further write, as if the
+    /// process had died. The file on disk keeps exactly what was
+    /// already fsynced.
+    pub fn poison(&self) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.file = None;
+    }
+
+    /// Crash simulation, torn-write flavour: persist a deliberately
+    /// partial record (a header promising more bytes than follow) and
+    /// then poison the journal — the on-disk state a crash mid-append
+    /// leaves behind. Recovery must truncate it away.
+    pub fn tear_tail(&self) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(file) = inner.file.as_mut() {
+            let torn = frame(&Json::obj(vec![
+                ("v", Json::Num(JOURNAL_VERSION as f64)),
+                ("event", Json::str("torn")),
+            ]));
+            let cut = torn.len() - torn.len() / 3 - 1;
+            let _ = file.write_all(&torn[..cut]);
+            let _ = file.sync_data();
+        }
+        inner.file = None;
+    }
+}
+
+// ---- lifecycle records --------------------------------------------------
+
+/// One journaled job lifecycle transition. `Accepted` carries the full
+/// re-enqueue payload (dataset, config, tenancy, token); the others
+/// reference the job id it introduced.
+pub enum JournalRecord {
+    /// The job was admitted: everything needed to re-run it.
+    Accepted {
+        id: JobId,
+        tenant: TenantId,
+        token: Option<String>,
+        deadline_ms: Option<u64>,
+        cfg: FitConfig,
+        cd_updates: Option<usize>,
+        data: EncryptedDataset,
+    },
+    /// An execution lane picked the job up.
+    Started { id: JobId },
+    /// Mid-fit descent resume point (every k iterations).
+    Checkpoint { id: JobId, ckpt: DescentCheckpoint },
+    /// The fit finished; the result is re-servable from the journal.
+    Done { id: JobId, fit: EncryptedFit },
+    /// The client acknowledged delivery; the job can be forgotten.
+    Acked { id: JobId },
+    /// Terminal failure (panic, engine error, expiry, drain bounce).
+    Failed { id: JobId, code: ErrorCode, message: String },
+}
+
+impl JournalRecord {
+    /// The job this record belongs to.
+    pub fn id(&self) -> JobId {
+        match self {
+            JournalRecord::Accepted { id, .. }
+            | JournalRecord::Started { id }
+            | JournalRecord::Checkpoint { id, .. }
+            | JournalRecord::Done { id, .. }
+            | JournalRecord::Acked { id }
+            | JournalRecord::Failed { id, .. } => *id,
+        }
+    }
+
+    /// The payload `event` tag.
+    pub fn event(&self) -> &'static str {
+        match self {
+            JournalRecord::Accepted { .. } => "accepted",
+            JournalRecord::Started { .. } => "started",
+            JournalRecord::Checkpoint { .. } => "checkpoint",
+            JournalRecord::Done { .. } => "done",
+            JournalRecord::Acked { .. } => "acked",
+            JournalRecord::Failed { .. } => "failed",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            JournalRecord::Accepted { id, tenant, token, deadline_ms, cfg, cd_updates, data } => {
+                accepted_parts(*id, tenant, token.as_deref(), *deadline_ms, cfg, *cd_updates, data)
+            }
+            JournalRecord::Done { id, fit } => done_payload(*id, fit),
+            other => {
+                let mut fields = vec![
+                    ("v", Json::Num(JOURNAL_VERSION as f64)),
+                    ("event", Json::str(other.event())),
+                    ("id", Json::Num(other.id().0 as f64)),
+                ];
+                match other {
+                    JournalRecord::Checkpoint { ckpt, .. } => {
+                        fields.push(("ckpt", checkpoint_to_json(ckpt)));
+                    }
+                    JournalRecord::Failed { code, message, .. } => {
+                        fields.push(("code", Json::str(code.as_str())));
+                        fields.push(("error", Json::str(message)));
+                    }
+                    _ => {}
+                }
+                Json::obj(fields)
+            }
+        }
+    }
+
+    pub fn from_json(ctx: &FvContext, j: &Json) -> Result<JournalRecord> {
+        let v = j.req("v")?.as_u64().context("journal record version")?;
+        if v != JOURNAL_VERSION {
+            bail!("unsupported journal record version {v}");
+        }
+        let id = JobId(j.req("id")?.as_u64().context("journal record id")?);
+        Ok(match j.req("event")?.as_str().context("journal record event")? {
+            "accepted" => {
+                let (cfg, cd_updates) = cfg_from_json(j.req("cfg")?)?;
+                JournalRecord::Accepted {
+                    id,
+                    tenant: TenantId::new(
+                        j.get("tenant").and_then(|t| t.as_str()).unwrap_or("default"),
+                    ),
+                    token: j.get("token").and_then(|t| t.as_str()).map(String::from),
+                    deadline_ms: j.get("deadline_ms").and_then(|d| d.as_u64()),
+                    cfg,
+                    cd_updates,
+                    data: dataset_from_json(ctx, j.req("data")?)?,
+                }
+            }
+            "started" => JournalRecord::Started { id },
+            "checkpoint" => {
+                JournalRecord::Checkpoint { id, ckpt: checkpoint_from_json(ctx, j.req("ckpt")?)? }
+            }
+            "done" => JournalRecord::Done { id, fit: fit_from_json(ctx, j.req("fit")?)? },
+            "acked" => JournalRecord::Acked { id },
+            "failed" => JournalRecord::Failed {
+                id,
+                code: ErrorCode::from_str(j.req("code")?.as_str().context("code")?)
+                    .context("unknown journal error code")?,
+                message: j.get("error").and_then(|e| e.as_str()).unwrap_or("").to_string(),
+            },
+            other => bail!("unknown journal event '{other}'"),
+        })
+    }
+}
+
+// ---- borrowed payload builders (scheduler fast path) --------------------
+
+/// The `accepted` payload for a spec the scheduler still owns — same
+/// document [`JournalRecord::Accepted`] serialises to, built without
+/// cloning the encrypted dataset into an owning record.
+pub(crate) fn accepted_payload(id: JobId, spec: &JobSpec) -> Json {
+    accepted_parts(
+        id,
+        &spec.tenant,
+        spec.token.as_deref(),
+        spec.deadline_ms,
+        &spec.cfg,
+        spec.cd_updates,
+        &spec.data,
+    )
+}
+
+fn accepted_parts(
+    id: JobId,
+    tenant: &TenantId,
+    token: Option<&str>,
+    deadline_ms: Option<u64>,
+    cfg: &FitConfig,
+    cd_updates: Option<usize>,
+    data: &EncryptedDataset,
+) -> Json {
+    let mut fields = vec![
+        ("v", Json::Num(JOURNAL_VERSION as f64)),
+        ("event", Json::str("accepted")),
+        ("id", Json::Num(id.0 as f64)),
+        ("tenant", Json::str(&tenant.0)),
+    ];
+    if let Some(t) = token {
+        fields.push(("token", Json::str(t)));
+    }
+    if let Some(d) = deadline_ms {
+        fields.push(("deadline_ms", Json::Num(d as f64)));
+    }
+    fields.push(("cfg", cfg_to_json(cfg, cd_updates)));
+    fields.push(("data", dataset_to_json(data)));
+    Json::obj(fields)
+}
+
+/// The `done` payload for a fit the scheduler still owns.
+pub(crate) fn done_payload(id: JobId, fit: &EncryptedFit) -> Json {
+    Json::obj(vec![
+        ("v", Json::Num(JOURNAL_VERSION as f64)),
+        ("event", Json::str("done")),
+        ("id", Json::Num(id.0 as f64)),
+        ("fit", fit_to_json(fit)),
+    ])
+}
+
+// ---- replay fold --------------------------------------------------------
+
+/// The folded recovery state of one journaled job.
+pub struct ReplayJob {
+    pub tenant: TenantId,
+    pub token: Option<String>,
+    pub deadline_ms: Option<u64>,
+    pub cfg: FitConfig,
+    pub cd_updates: Option<usize>,
+    pub data: EncryptedDataset,
+    pub started: bool,
+    pub ckpt: Option<DescentCheckpoint>,
+    pub fit: Option<EncryptedFit>,
+    pub failed: Option<(ErrorCode, String)>,
+    pub acked: bool,
+}
+
+/// Journal replay result: per-job folded state plus the id watermark.
+pub struct ReplayState {
+    /// Keyed by raw job id, in id order.
+    pub jobs: BTreeMap<u64, ReplayJob>,
+    /// Highest job id seen (0 when the journal is empty).
+    pub max_id: u64,
+}
+
+/// Fold a record sequence into per-job recovery state. Records for ids
+/// with no surviving `accepted` (possible when an earlier truncation
+/// repair dropped one) are skipped — replay of any journal prefix must
+/// always succeed.
+pub fn replay(records: Vec<JournalRecord>) -> ReplayState {
+    let mut jobs: BTreeMap<u64, ReplayJob> = BTreeMap::new();
+    let mut max_id = 0u64;
+    for rec in records {
+        max_id = max_id.max(rec.id().0);
+        match rec {
+            JournalRecord::Accepted { id, tenant, token, deadline_ms, cfg, cd_updates, data } => {
+                jobs.insert(
+                    id.0,
+                    ReplayJob {
+                        tenant,
+                        token,
+                        deadline_ms,
+                        cfg,
+                        cd_updates,
+                        data,
+                        started: false,
+                        ckpt: None,
+                        fit: None,
+                        failed: None,
+                        acked: false,
+                    },
+                );
+            }
+            JournalRecord::Started { id } => {
+                if let Some(job) = jobs.get_mut(&id.0) {
+                    job.started = true;
+                }
+            }
+            JournalRecord::Checkpoint { id, ckpt } => {
+                if let Some(job) = jobs.get_mut(&id.0) {
+                    job.ckpt = Some(ckpt);
+                }
+            }
+            JournalRecord::Done { id, fit } => {
+                if let Some(job) = jobs.get_mut(&id.0) {
+                    job.fit = Some(fit);
+                }
+            }
+            JournalRecord::Acked { id } => {
+                if let Some(job) = jobs.get_mut(&id.0) {
+                    job.acked = true;
+                }
+            }
+            JournalRecord::Failed { id, code, message } => {
+                if let Some(job) = jobs.get_mut(&id.0) {
+                    job.failed = Some((code, message));
+                }
+            }
+        }
+    }
+    ReplayState { jobs, max_id }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::els::exact::QuantisedData;
+    use crate::els::model::encrypt_dataset;
+    use crate::fhe::keys::keygen;
+    use crate::fhe::params::FvParams;
+    use crate::fhe::rng::ChaChaRng;
+    use crate::util::prop::PropRunner;
+
+    struct World {
+        ctx: Arc<FvContext>,
+        data: EncryptedDataset,
+    }
+
+    fn world(seed: u64) -> World {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(seed);
+        let keys = keygen(&ctx, &mut rng);
+        let q = QuantisedData { x: vec![vec![3, -1], vec![2, 5]], y: vec![7, -4], phi: 1 };
+        let data = encrypt_dataset(&ctx, &keys.pk, &q, &mut rng);
+        World { ctx, data }
+    }
+
+    fn accepted(w: &World, id: u64) -> JournalRecord {
+        JournalRecord::Accepted {
+            id: JobId(id),
+            tenant: TenantId::new("acme"),
+            token: Some(format!("tok-{id}")),
+            deadline_ms: Some(5000),
+            cfg: FitConfig::gd(2, 9),
+            cd_updates: None,
+            data: w.data.clone(),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "els-journal-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn records_roundtrip_through_frames_and_json() {
+        let w = world(901);
+        let dir = tmpdir("roundtrip");
+        let (journal, replayed) = Journal::open(&dir).unwrap();
+        assert!(replayed.is_empty());
+        journal.append(&accepted(&w, 1)).unwrap();
+        journal.append(&JournalRecord::Started { id: JobId(1) }).unwrap();
+        journal
+            .append(&JournalRecord::Failed {
+                id: JobId(1),
+                code: ErrorCode::JobFailed,
+                message: "lane panic".into(),
+            })
+            .unwrap();
+        journal.append(&JournalRecord::Acked { id: JobId(1) }).unwrap();
+        drop(journal);
+        let (_, docs) = Journal::open(&dir).unwrap();
+        assert_eq!(docs.len(), 4);
+        let recs: Vec<JournalRecord> =
+            docs.iter().map(|d| JournalRecord::from_json(&w.ctx, d).unwrap()).collect();
+        assert_eq!(recs[0].event(), "accepted");
+        let state = replay(recs);
+        assert_eq!(state.max_id, 1);
+        let job = &state.jobs[&1];
+        assert_eq!(job.tenant.0, "acme");
+        assert_eq!(job.token.as_deref(), Some("tok-1"));
+        assert!(job.started && job.acked);
+        assert_eq!(job.failed.as_ref().unwrap().0, ErrorCode::JobFailed);
+        assert_eq!(job.data.n(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_truncates_and_appends_continue() {
+        let w = world(902);
+        let dir = tmpdir("torn");
+        let (journal, _) = Journal::open(&dir).unwrap();
+        journal.append(&accepted(&w, 1)).unwrap();
+        journal.append(&JournalRecord::Started { id: JobId(1) }).unwrap();
+        // Crash mid-append: a partial record lands on disk.
+        journal.tear_tail();
+        assert!(
+            journal.append(&JournalRecord::Acked { id: JobId(1) }).is_err(),
+            "poisoned journal must reject writes"
+        );
+        let truncations = records_truncated();
+        let (journal2, docs) = Journal::open(&dir).unwrap();
+        assert_eq!(docs.len(), 2, "torn tail must not cost good records");
+        assert_eq!(records_truncated(), truncations + 1, "truncation is counted");
+        // The repaired journal accepts appends at the clean boundary.
+        journal2.append(&JournalRecord::Acked { id: JobId(1) }).unwrap();
+        drop(journal2);
+        let (_, docs) = Journal::open(&dir).unwrap();
+        assert_eq!(docs.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_checksum_truncates_from_corruption_point() {
+        let w = world(903);
+        let dir = tmpdir("corrupt");
+        let (journal, _) = Journal::open(&dir).unwrap();
+        journal.append(&accepted(&w, 1)).unwrap();
+        let boundary = std::fs::metadata(journal.path()).unwrap().len();
+        journal.append(&JournalRecord::Started { id: JobId(1) }).unwrap();
+        let path = journal.path().to_path_buf();
+        drop(journal);
+        // Flip one payload byte of the second record.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = boundary as usize + HEADER_LEN;
+        bytes[at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, docs) = Journal::open(&dir).unwrap();
+        assert_eq!(docs.len(), 1, "corruption truncates from the corrupt record");
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), boundary);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_faults_fail_append_and_repair_tail() {
+        use crate::util::faults::{FaultSession, FaultSpec};
+        let w = world(904);
+        let dir = tmpdir("faults");
+        let (journal, _) = Journal::open(&dir).unwrap();
+        journal.append(&accepted(&w, 1)).unwrap();
+        for kind in [FaultKind::IoError, FaultKind::TornWrite] {
+            let _s = FaultSession::activate(&[FaultSpec {
+                site: FaultSite::Journal,
+                kind,
+                rate: 1.0,
+                seed: 11,
+            }]);
+            let errs = append_errors();
+            assert!(journal.append(&JournalRecord::Started { id: JobId(1) }).is_err());
+            assert_eq!(append_errors(), errs + 1);
+        }
+        // Disarmed: the repaired tail takes the append cleanly.
+        journal.append(&JournalRecord::Started { id: JobId(1) }).unwrap();
+        drop(journal);
+        let (_, docs) = Journal::open(&dir).unwrap();
+        assert_eq!(docs.len(), 2, "failed appends leave no partial records behind");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_of_any_prefix_twice_is_idempotent() {
+        // The satellite property: for ANY byte prefix of a valid
+        // journal, scanning is total (good records before the cut
+        // survive, the torn tail is flagged, never an error) and
+        // folding the same prefix twice yields the same recovered
+        // state.
+        let w = world(905);
+        let mut bytes = Vec::new();
+        let mut boundaries = vec![0usize];
+        for id in 1..=4u64 {
+            for rec in [
+                accepted(&w, id),
+                JournalRecord::Started { id: JobId(id) },
+                JournalRecord::Done { id: JobId(id), fit: dummy_fit(&w) },
+                JournalRecord::Acked { id: JobId(id) },
+            ] {
+                bytes.extend_from_slice(&frame(&rec.to_json()));
+                boundaries.push(bytes.len());
+            }
+        }
+        let summarise = |prefix: &[u8]| -> (Vec<(u64, bool, bool, bool)>, usize, bool) {
+            let (docs, good_end, torn) = scan_bytes(prefix);
+            let recs: Vec<JournalRecord> =
+                docs.iter().map(|d| JournalRecord::from_json(&w.ctx, d).unwrap()).collect();
+            let state = replay(recs);
+            let jobs = state
+                .jobs
+                .iter()
+                .map(|(id, j)| (*id, j.started, j.fit.is_some(), j.acked))
+                .collect();
+            (jobs, good_end, torn)
+        };
+        let mut run = PropRunner::new("journal_prefix_replay", 200);
+        run.run(|rng| {
+            let cut = (rng.next_u64() as usize) % (bytes.len() + 1);
+            let prefix = &bytes[..cut];
+            let a = summarise(prefix);
+            let b = summarise(prefix);
+            assert_eq!(a, b, "replaying the same prefix twice diverged");
+            let (jobs, good_end, torn) = a;
+            // The clean prefix always ends on a true record boundary,
+            // and a mid-record cut is flagged torn.
+            assert!(boundaries.contains(&good_end), "good_end {good_end} off-boundary");
+            assert_eq!(torn, !boundaries.contains(&cut));
+            assert!(good_end <= cut);
+            // Recovered jobs are exactly those whose `accepted` record
+            // (the first of each job's four) fits in the clean prefix.
+            let full_records = boundaries.iter().filter(|&&b| b > 0 && b <= good_end).count();
+            assert_eq!(jobs.len(), full_records.div_ceil(4), "{jobs:?} vs {full_records} records");
+        });
+    }
+
+    fn dummy_fit(w: &World) -> EncryptedFit {
+        EncryptedFit {
+            betas: vec![w.data.y[0].clone()],
+            divisor: crate::math::bigint::BigUint::from_u64(100),
+            path: None,
+            phi: 1,
+            paper_mmd: 4,
+            noise_depth: 3,
+        }
+    }
+}

@@ -13,6 +13,8 @@
 //!   the byte-budgeted LRU behind the tenant caches.
 //! - [`scheduler`] — the `Coordinator` itself (executor lanes, timer
 //!   wheel, per-tenant fair queues).
+//! - [`journal`] — append-only write-ahead journal of job lifecycle
+//!   transitions; crash/restart recovery replays it.
 //! - [`metrics`] — counters and latency histograms.
 //! - [`protocol`] / [`service`] — versioned wire codec with structured
 //!   error codes, TCP server and client.
@@ -23,6 +25,7 @@ pub mod admission;
 pub mod arena;
 pub mod batcher;
 pub mod job;
+pub mod journal;
 pub mod metrics;
 pub mod protocol;
 pub mod retry;
@@ -32,8 +35,9 @@ pub mod tenant;
 
 pub use batcher::{BatchConfig, BatchingEngine};
 pub use job::{JobId, JobSpec};
+pub use journal::{Journal, JournalRecord};
 pub use protocol::{ErrorCode, WireError, WireResult, PROTOCOL_VERSION};
 pub use retry::{RetryPolicy, RetryingClient};
-pub use scheduler::{Coordinator, CoordinatorConfig, DrainReport};
+pub use scheduler::{Coordinator, CoordinatorConfig, DrainReport, RecoveredCounts};
 pub use service::{Client, Server};
 pub use tenant::{TenantEngine, TenantId, TenantRegistry};

@@ -8,7 +8,9 @@
 
 use crate::util::error::{anyhow, bail, Context, Result};
 
-use crate::els::encrypted::{Accel, EncryptedFit, FitConfig};
+use crate::els::encrypted::{
+    Accel, CheckpointState, DescentCheckpoint, EncryptedFit, FitConfig,
+};
 use crate::els::model::EncryptedDataset;
 use crate::fhe::{Ciphertext, FvContext, RelinKey};
 use crate::math::bigint::BigUint;
@@ -21,6 +23,100 @@ use crate::util::json::Json;
 /// server rejects mismatches with [`ErrorCode::BadVersion`] instead of
 /// mis-parsing a future schema.
 pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Record-codec version stamped (`"v"`) on ciphertext and fit
+/// payloads alongside an FNV-1a record checksum (`"crc"`). Parsers
+/// accept records without either field (pre-durability payloads) but
+/// reject a present-but-wrong version or checksum with a structured
+/// error — a journaled result must never decode to different polys
+/// than were written.
+pub const RECORD_VERSION: u64 = 1;
+
+/// FNV-1a 64 over a byte stream — the record checksum used by the
+/// ciphertext/fit codecs and the write-ahead journal framing (same
+/// constants as `tenant::shard_of`; trivially mirrored in the Python
+/// validators).
+pub fn record_checksum(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.push(bytes);
+    h.0
+}
+
+/// Streaming FNV-1a 64.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+}
+
+/// Content checksum of a ciphertext record: depth, then each poly's
+/// representation tag and raw little-endian limb words (exactly the
+/// bytes the `hex` field spells).
+fn ct_crc(ct: &Ciphertext) -> u64 {
+    let mut h = Fnv::new();
+    h.push(&(ct.ct_depth as u64).to_le_bytes());
+    for p in &ct.polys {
+        h.push(&[if p.rep == Rep::Ntt { b'n' } else { b'c' }]);
+        for w in p.planes.iter().flatten() {
+            h.push(&w.to_le_bytes());
+        }
+    }
+    h.0
+}
+
+/// Content checksum of a fit record: decode metadata plus every
+/// coefficient ciphertext's [`ct_crc`] — a dropped or reordered beta
+/// changes the checksum even though each remaining ct is intact.
+fn fit_crc(fit: &EncryptedFit) -> u64 {
+    let mut h = Fnv::new();
+    h.push(&(fit.phi as u64).to_le_bytes());
+    h.push(&(fit.paper_mmd as u64).to_le_bytes());
+    h.push(&(fit.noise_depth as u64).to_le_bytes());
+    h.push(fit.divisor.to_decimal().as_bytes());
+    for b in &fit.betas {
+        h.push(&ct_crc(b).to_le_bytes());
+    }
+    h.0
+}
+
+/// Checksums serialise as 16 hex chars (LE bytes, same convention as
+/// poly payloads) — `util::json` numbers are f64 and cannot hold u64.
+fn crc_to_json(crc: u64) -> Json {
+    Json::Str(to_hex(std::iter::once(crc)))
+}
+
+/// The optional `"crc"` field of a record (`None` = legacy payload).
+fn crc_from_json(j: &Json, what: &str) -> Result<Option<u64>> {
+    match j.get("crc") {
+        None => Ok(None),
+        Some(c) => {
+            let words = from_hex(c.as_str().context("crc")?)?;
+            if words.len() != 1 {
+                bail!("{what} crc must be exactly 8 bytes");
+            }
+            Ok(Some(words[0]))
+        }
+    }
+}
+
+/// Reject a present-but-unknown record version; absent = legacy.
+fn version_guard(j: &Json, what: &str) -> Result<()> {
+    if let Some(v) = j.get("v") {
+        if v.as_u64() != Some(RECORD_VERSION) {
+            bail!("{what} record version mismatch (supported: {RECORD_VERSION})");
+        }
+    }
+    Ok(())
+}
 
 /// Structured error codes carried on the wire (`"code"` on error
 /// replies) and surfaced through `Client`, so callers match on a code
@@ -208,12 +304,15 @@ pub fn poly_from_json(ctx: &FvContext, j: &Json) -> Result<RnsPoly> {
 
 pub fn ct_to_json(ct: &Ciphertext) -> Json {
     Json::obj(vec![
+        ("v", Json::Num(RECORD_VERSION as f64)),
         ("depth", Json::Num(ct.ct_depth as f64)),
         ("polys", Json::Arr(ct.polys.iter().map(poly_to_json).collect())),
+        ("crc", crc_to_json(ct_crc(ct))),
     ])
 }
 
 pub fn ct_from_json(ctx: &FvContext, j: &Json) -> Result<Ciphertext> {
+    version_guard(j, "ciphertext")?;
     let polys: Result<Vec<RnsPoly>> = j
         .req("polys")?
         .as_arr()
@@ -227,6 +326,12 @@ pub fn ct_from_json(ctx: &FvContext, j: &Json) -> Result<Ciphertext> {
     }
     let mut ct = Ciphertext::new(polys);
     ct.ct_depth = j.get("depth").and_then(|d| d.as_u64()).unwrap_or(0) as u32;
+    if let Some(want) = crc_from_json(j, "ciphertext")? {
+        let got = ct_crc(&ct);
+        if got != want {
+            bail!("ciphertext record checksum mismatch (corrupted or tampered payload)");
+        }
+    }
     Ok(ct)
 }
 
@@ -391,15 +496,18 @@ pub fn cfg_from_json(j: &Json) -> Result<(FitConfig, Option<usize>)> {
 
 pub fn fit_to_json(fit: &EncryptedFit) -> Json {
     Json::obj(vec![
+        ("v", Json::Num(RECORD_VERSION as f64)),
         ("betas", Json::Arr(fit.betas.iter().map(ct_to_json).collect())),
         ("divisor", Json::str(&fit.divisor.to_decimal())),
         ("phi", Json::Num(fit.phi as f64)),
         ("paper_mmd", Json::Num(fit.paper_mmd as f64)),
         ("noise_depth", Json::Num(fit.noise_depth as f64)),
+        ("crc", crc_to_json(fit_crc(fit))),
     ])
 }
 
 pub fn fit_from_json(ctx: &FvContext, j: &Json) -> Result<EncryptedFit> {
+    version_guard(j, "fit")?;
     let betas: Result<Vec<Ciphertext>> = j
         .req("betas")?
         .as_arr()
@@ -407,7 +515,7 @@ pub fn fit_from_json(ctx: &FvContext, j: &Json) -> Result<EncryptedFit> {
         .iter()
         .map(|c| ct_from_json(ctx, c))
         .collect();
-    Ok(EncryptedFit {
+    let fit = EncryptedFit {
         betas: betas?,
         divisor: BigUint::from_decimal(j.req("divisor")?.as_str().context("divisor")?)
             .ok_or_else(|| anyhow!("bad divisor"))?,
@@ -415,6 +523,112 @@ pub fn fit_from_json(ctx: &FvContext, j: &Json) -> Result<EncryptedFit> {
         phi: j.req("phi")?.as_u64().context("phi")? as u32,
         paper_mmd: j.req("paper_mmd")?.as_u64().unwrap_or(0) as u32,
         noise_depth: j.req("noise_depth")?.as_u64().unwrap_or(0) as u32,
+    };
+    if let Some(want) = crc_from_json(j, "fit")? {
+        let got = fit_crc(&fit);
+        if got != want {
+            bail!("fit record checksum mismatch (truncated or tampered record)");
+        }
+    }
+    Ok(fit)
+}
+
+// ---- descent checkpoint codec ------------------------------------------
+
+/// Serialise a mid-fit resume point. Ciphertexts go through
+/// [`ct_to_json`] (representation-tagged, checksummed), so a journaled
+/// checkpoint decodes to bit-identical polys and a resumed fit matches
+/// an uninterrupted one exactly. CD's untouched coordinates serialise
+/// as `null`.
+pub fn checkpoint_to_json(c: &DescentCheckpoint) -> Json {
+    let cts = |v: &[Ciphertext]| Json::Arr(v.iter().map(ct_to_json).collect());
+    let paths =
+        |p: &[Vec<Ciphertext>]| Json::Arr(p.iter().map(|row| cts(row)).collect());
+    let mut fields = vec![
+        ("v", Json::Num(RECORD_VERSION as f64)),
+        ("phi", Json::Num(c.phi as f64)),
+        ("nu", Json::Num(c.nu as f64)),
+        ("done", Json::Num(c.done as f64)),
+    ];
+    match &c.state {
+        CheckpointState::Gd { beta, path } => {
+            fields.push(("algo", Json::str("gd")));
+            fields.push(("beta", cts(beta)));
+            fields.push(("path", paths(path)));
+        }
+        CheckpointState::Nag { beta, s_prev, path } => {
+            fields.push(("algo", Json::str("nag")));
+            fields.push(("beta", cts(beta)));
+            fields.push(("s_prev", cts(s_prev)));
+            fields.push(("path", paths(path)));
+        }
+        CheckpointState::Cd { beta, r } => {
+            fields.push(("algo", Json::str("cd")));
+            fields.push((
+                "beta",
+                Json::Arr(
+                    beta.iter()
+                        .map(|b| b.as_ref().map(ct_to_json).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ));
+            fields.push(("r", cts(r)));
+        }
+    }
+    Json::obj(fields)
+}
+
+pub fn checkpoint_from_json(ctx: &FvContext, j: &Json) -> Result<DescentCheckpoint> {
+    version_guard(j, "checkpoint")?;
+    let cts = |key: &str| -> Result<Vec<Ciphertext>> {
+        j.req(key)?
+            .as_arr()
+            .with_context(|| format!("checkpoint {key}"))?
+            .iter()
+            .map(|c| ct_from_json(ctx, c))
+            .collect()
+    };
+    let paths = || -> Result<Vec<Vec<Ciphertext>>> {
+        j.req("path")?
+            .as_arr()
+            .context("checkpoint path")?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .context("checkpoint path row")?
+                    .iter()
+                    .map(|c| ct_from_json(ctx, c))
+                    .collect()
+            })
+            .collect()
+    };
+    let state = match j.req("algo")?.as_str().context("checkpoint algo")? {
+        "gd" => CheckpointState::Gd { beta: cts("beta")?, path: paths()? },
+        "nag" => CheckpointState::Nag {
+            beta: cts("beta")?,
+            s_prev: cts("s_prev")?,
+            path: paths()?,
+        },
+        "cd" => CheckpointState::Cd {
+            beta: j
+                .req("beta")?
+                .as_arr()
+                .context("checkpoint beta")?
+                .iter()
+                .map(|b| match b {
+                    Json::Null => Ok(None),
+                    other => ct_from_json(ctx, other).map(Some),
+                })
+                .collect::<Result<_>>()?,
+            r: cts("r")?,
+        },
+        other => bail!("unknown checkpoint algorithm '{other}'"),
+    };
+    Ok(DescentCheckpoint {
+        phi: j.req("phi")?.as_u64().context("checkpoint phi")? as u32,
+        nu: j.req("nu")?.as_u64().context("checkpoint nu")?,
+        done: j.req("done")?.as_usize().context("checkpoint done")?,
+        state,
     })
 }
 
@@ -689,6 +903,120 @@ mod tests {
         // into the repo-wide util::error::Error.
         let flat: crate::util::error::Error = e.into();
         assert!(flat.to_string().contains("overloaded"));
+    }
+
+    #[test]
+    fn ct_codec_rejects_tampered_record() {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(707);
+        let keys = keygen(&ctx, &mut rng);
+        let mut ct = ctx.encrypt(&encode_int(9, ctx.d()), &keys.pk, &mut rng);
+        ct.ct_depth = 2;
+        let text = ct_to_json(&ct).to_string_json();
+        assert!(text.contains("\"crc\":\""), "records carry a checksum");
+        assert!(text.contains("\"v\":1"), "records carry a version tag");
+        // A tampered byte (depth flipped, polys untouched and still
+        // canonical) fails the checksum with a structured error.
+        let tampered = text.replacen("\"depth\":2", "\"depth\":1", 1);
+        let err = ct_from_json(&ctx, &Json::parse(&tampered).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // An unknown record version is rejected outright.
+        let future = text.replacen("\"v\":1", "\"v\":9", 1);
+        let err = ct_from_json(&ctx, &Json::parse(&future).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+        // Legacy records (no v/crc) still parse.
+        let mut legacy = Json::parse(&text).unwrap();
+        if let Json::Obj(m) = &mut legacy {
+            m.remove("crc");
+            m.remove("v");
+        }
+        assert_eq!(ct_from_json(&ctx, &legacy).unwrap().polys, ct.polys);
+    }
+
+    #[test]
+    fn fit_codec_rejects_truncated_record() {
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(708);
+        let keys = keygen(&ctx, &mut rng);
+        let betas: Vec<_> = [4i64, -7]
+            .iter()
+            .map(|&v| ctx.encrypt(&encode_int(v, ctx.d()), &keys.pk, &mut rng))
+            .collect();
+        let fit = EncryptedFit {
+            betas,
+            divisor: BigUint::from_u64(1234),
+            path: None,
+            phi: 2,
+            paper_mmd: 4,
+            noise_depth: 3,
+        };
+        let j = fit_to_json(&fit);
+        let back = fit_from_json(&ctx, &j).unwrap();
+        assert_eq!(back.betas.len(), 2);
+        assert_eq!(back.betas[1].polys, fit.betas[1].polys);
+        // Dropping a beta leaves every remaining ct intact but fails
+        // the fit-level checksum — truncation is not silent.
+        let mut truncated = j.clone();
+        if let Json::Obj(m) = &mut truncated {
+            if let Some(Json::Arr(b)) = m.get_mut("betas") {
+                b.pop();
+            }
+        }
+        let err = fit_from_json(&ctx, &truncated).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // So does a tampered divisor.
+        let bad = j.to_string_json().replacen("\"divisor\":\"1234\"", "\"divisor\":\"1235\"", 1);
+        assert!(fit_from_json(&ctx, &Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        use crate::els::encrypted::{CheckpointState, DescentCheckpoint};
+        let ctx = FvContext::new(FvParams::custom(256, 2, 16));
+        let mut rng = ChaChaRng::from_seed(709);
+        let keys = keygen(&ctx, &mut rng);
+        let mut enc = |v: i64| ctx.encrypt(&encode_int(v, ctx.d()), &keys.pk, &mut rng);
+        let (b0, b1, r0) = (enc(3), enc(-5), enc(11));
+        let gd = DescentCheckpoint {
+            phi: 2,
+            nu: 9,
+            done: 1,
+            state: CheckpointState::Gd {
+                beta: vec![b0.clone(), b1.clone()],
+                path: vec![vec![b0.clone(), b1.clone()]],
+            },
+        };
+        let j = checkpoint_to_json(&gd).to_string_json();
+        let back = checkpoint_from_json(&ctx, &Json::parse(&j).unwrap()).unwrap();
+        assert_eq!((back.phi, back.nu, back.done), (2, 9, 1));
+        let CheckpointState::Gd { beta, path } = &back.state else {
+            panic!("state variant changed in roundtrip");
+        };
+        assert_eq!(beta[0].polys, b0.polys);
+        assert_eq!(path[0][1].polys, b1.polys);
+        // CD state: None coordinates survive as nulls.
+        let cd = DescentCheckpoint {
+            phi: 1,
+            nu: 4,
+            done: 1,
+            state: CheckpointState::Cd {
+                beta: vec![Some(b0.clone()), None],
+                r: vec![r0.clone()],
+            },
+        };
+        let j = checkpoint_to_json(&cd).to_string_json();
+        let back = checkpoint_from_json(&ctx, &Json::parse(&j).unwrap()).unwrap();
+        let CheckpointState::Cd { beta, r } = &back.state else {
+            panic!("state variant changed in roundtrip");
+        };
+        assert_eq!(beta[0].as_ref().unwrap().polys, b0.polys);
+        assert!(beta[1].is_none());
+        assert_eq!(r[0].polys, r0.polys);
+        assert!(checkpoint_from_json(
+            &ctx,
+            &Json::parse(&j.replacen("\"algo\":\"cd\"", "\"algo\":\"xx\"", 1)).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

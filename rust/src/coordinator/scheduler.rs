@@ -10,18 +10,21 @@
 //! matter how many unrelated jobs finish.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::els::encrypted::{self, DatasetRef, EncryptedFit};
+use crate::els::encrypted::{self, CheckpointHook, DatasetRef, DescentCheckpoint, EncryptedFit};
 use crate::runtime::backend::HeEngine;
 use crate::runtime::exec::{Executor, TimerHandle, TimerWheel};
+use crate::util::error::{Context, Result};
 use crate::util::faults::{self, FaultKind, FaultSite};
 use crate::util::telemetry::{self, Phase};
 
 use super::admission::{admit, admit_load, AdmissionRequest, LoadState};
 use super::job::{Job, JobId, JobSpec, JobState};
+use super::journal::{self, Journal, JournalRecord};
 use super::metrics::Metrics;
 use super::protocol::{ErrorCode, WireError, WireResult};
 use super::tenant::{TenantEngine, TenantId, TenantRegistry};
@@ -38,6 +41,10 @@ pub struct CoordinatorConfig {
     pub cache_budget_bytes: usize,
     /// Operand-cache shards per tenant.
     pub cache_shards: usize,
+    /// Journal a descent resume point every this many iterations
+    /// (0 disables mid-fit checkpoints). Only a journal-backed
+    /// coordinator ([`Coordinator::recover`]) checkpoints at all.
+    pub checkpoint_every: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -47,16 +54,19 @@ impl Default for CoordinatorConfig {
             queue_capacity: 64,
             cache_budget_bytes: 8 << 20,
             cache_shards: 4,
+            checkpoint_every: 1,
         }
     }
 }
 
 /// A queued execution: the spec plus the deadline timer to cancel on
-/// pickup.
+/// pickup, and — for journal-recovered jobs — the checkpoint to
+/// resume from instead of starting at iteration one.
 struct QueuedJob {
     id: JobId,
     spec: JobSpec,
     timer: Option<TimerHandle>,
+    resume: Option<DescentCheckpoint>,
 }
 
 /// Per-tenant FIFO queues drained by a rotating round-robin cursor:
@@ -113,6 +123,30 @@ pub struct DrainReport {
     pub drained: bool,
 }
 
+/// What [`Coordinator::recover`] rebuilt from the journal.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveredCounts {
+    /// Accepted-but-unfinished jobs put back on the queue.
+    pub requeued: u64,
+    /// Of the requeued, how many resume from a journaled checkpoint
+    /// instead of restarting at iteration one.
+    pub resumed: u64,
+    /// Completed-but-unacked results re-served straight from the
+    /// journal — zero engine work.
+    pub restored: u64,
+    /// Failed/expired/bounced-but-unacked jobs restored terminal, so
+    /// the client's retry fetches the original structured error.
+    pub failed: u64,
+}
+
+impl RecoveredCounts {
+    /// Total journaled jobs brought back to life (the `recovered`
+    /// health field).
+    pub fn total(&self) -> u64 {
+        self.requeued + self.restored + self.failed
+    }
+}
+
 /// The job coordinator.
 pub struct Coordinator {
     engine: Arc<dyn HeEngine>,
@@ -132,6 +166,13 @@ pub struct Coordinator {
     accepting: AtomicBool,
     started: Instant,
     next_id: AtomicU64,
+    /// Write-ahead journal of lifecycle transitions; `None` for a
+    /// non-durable coordinator (`new`/`with_config`). Attached by
+    /// [`recover`](Self::recover), which doubles as the journal-enabled
+    /// constructor.
+    journal: Option<Journal>,
+    /// What `recover` rebuilt (all zero for a fresh coordinator).
+    recovered: RecoveredCounts,
     cfg: CoordinatorConfig,
     pub metrics: Arc<Metrics>,
 }
@@ -147,6 +188,82 @@ impl Coordinator {
     }
 
     pub fn with_config(engine: Arc<dyn HeEngine>, cfg: CoordinatorConfig) -> Arc<Self> {
+        Self::build(engine, cfg, None, RecoveredCounts::default(), 1)
+    }
+
+    /// Open (or create) the journal under `journal_dir` and rebuild
+    /// live state from it: queued jobs re-enqueue, in-flight jobs
+    /// resume from their last checkpoint, completed-but-unacked
+    /// results are re-served from the journal with zero engine work,
+    /// and unacked failures stay fetchable as their original
+    /// structured errors. Doubles as the journal-enabled constructor —
+    /// on an empty directory it recovers nothing and simply journals
+    /// from here on.
+    ///
+    /// Recovered deadlines restart with their full original budget:
+    /// the journal records the *requested* `deadline_ms`, and charging
+    /// a job for wall-clock the dead process consumed would expire
+    /// work the client is still entitled to.
+    pub fn recover(
+        engine: Arc<dyn HeEngine>,
+        cfg: CoordinatorConfig,
+        journal_dir: impl AsRef<Path>,
+    ) -> Result<Arc<Self>> {
+        let (journal, docs) = Journal::open(journal_dir)?;
+        let records = docs
+            .iter()
+            .map(|d| JournalRecord::from_json(engine.ctx(), d))
+            .collect::<Result<Vec<_>>>()
+            .context("decoding journal records")?;
+        let state = journal::replay(records);
+        let mut recovered = RecoveredCounts::default();
+        for job in state.jobs.values() {
+            if job.acked {
+                continue;
+            }
+            if job.fit.is_some() {
+                recovered.restored += 1;
+            } else if job.failed.is_some() {
+                recovered.failed += 1;
+            } else {
+                recovered.requeued += 1;
+                if job.ckpt.is_some() {
+                    recovered.resumed += 1;
+                }
+            }
+        }
+        let me = Self::build(engine, cfg, Some(journal), recovered, state.max_id + 1);
+        for (raw_id, rj) in state.jobs {
+            if rj.acked {
+                continue;
+            }
+            let id = JobId(raw_id);
+            if let Some(tok) = rj.token.clone() {
+                me.tokens.lock().unwrap().insert((rj.tenant.clone(), tok), id);
+            }
+            if let Some(fit) = rj.fit {
+                me.restore_terminal(id, &rj.tenant, JobState::Done(fit));
+            } else if let Some((code, message)) = rj.failed {
+                let state = match code {
+                    ErrorCode::DeadlineExceeded => JobState::Expired,
+                    ErrorCode::ShuttingDown => JobState::Cancelled,
+                    _ => JobState::Failed(message),
+                };
+                me.restore_terminal(id, &rj.tenant, state);
+            } else {
+                me.requeue_recovered(id, rj);
+            }
+        }
+        Ok(me)
+    }
+
+    fn build(
+        engine: Arc<dyn HeEngine>,
+        cfg: CoordinatorConfig,
+        journal: Option<Journal>,
+        recovered: RecoveredCounts,
+        next_id: u64,
+    ) -> Arc<Self> {
         Arc::new(Coordinator {
             engine,
             exec: Executor::new("els-coord", cfg.lanes.max(1)),
@@ -158,10 +275,43 @@ impl Coordinator {
             running: AtomicUsize::new(0),
             accepting: AtomicBool::new(true),
             started: Instant::now(),
-            next_id: AtomicU64::new(1),
+            next_id: AtomicU64::new(next_id),
+            journal,
+            recovered,
             cfg,
             metrics: Arc::new(Metrics::default()),
         })
+    }
+
+    /// Re-insert a journaled terminal job (done- or failed-but-
+    /// unacked): fetchable immediately, zero engine work.
+    fn restore_terminal(&self, id: JobId, tenant: &TenantId, state: JobState) {
+        let mut job = Job::new(id, tenant.clone(), None);
+        job.state = state;
+        job.finished = Some(Instant::now());
+        job.done.notify();
+        self.jobs.lock().unwrap().insert(id, job);
+    }
+
+    /// Put a recovered accepted-but-unfinished job back on the queue,
+    /// resuming from its last journaled checkpoint if one survived.
+    fn requeue_recovered(self: &Arc<Self>, id: JobId, rj: journal::ReplayJob) {
+        let journal::ReplayJob { tenant, token, deadline_ms, cfg, cd_updates, data, ckpt, .. } = rj;
+        let mut spec = JobSpec::new(data, cfg, cd_updates).with_tenant(tenant);
+        spec.deadline_ms = deadline_ms;
+        spec.token = token;
+        let deadline = spec.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        self.jobs.lock().unwrap().insert(id, Job::new(id, spec.tenant.clone(), deadline));
+        let timer = deadline.map(|d| {
+            let me = Arc::clone(self);
+            self.timers.schedule(d, move || me.expire_if_queued(id))
+        });
+        let tenant_id = spec.tenant.clone();
+        self.queue.lock().unwrap().push(&tenant_id, QueuedJob { id, spec, timer, resume: ckpt });
+        let me = Arc::clone(self);
+        if !self.exec.spawn(move || me.run_next()) {
+            self.cancel_if_queued(id);
+        }
     }
 
     pub fn engine(&self) -> &Arc<dyn HeEngine> {
@@ -251,6 +401,22 @@ impl Coordinator {
             return Err(e);
         }
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        // WAL-first: the `accepted` record must be durable before any
+        // state the client could observe exists. A journal that cannot
+        // append is a server that cannot promise durability, so the
+        // submit bounces retryable instead of taking work it might
+        // silently lose. (The fsync runs under the queue lock — that
+        // serialises admission behind durability, which is the point.)
+        if let Some(journal) = &self.journal {
+            if let Err(e) = journal.append_json(&journal::accepted_payload(id, &spec)) {
+                self.metrics.jobs_overloaded.fetch_add(1, Ordering::Relaxed);
+                tenant.counters.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(WireError::new(
+                    ErrorCode::Overloaded,
+                    format!("journal append failed; resubmit: {e}"),
+                ));
+            }
+        }
         let deadline = spec.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         let job = Job::new(id, spec.tenant.clone(), deadline);
         self.jobs.lock().unwrap().insert(id, job);
@@ -259,7 +425,7 @@ impl Coordinator {
             self.timers.schedule(d, move || me.expire_if_queued(id))
         });
         let tenant_id = spec.tenant.clone();
-        queue.push(&tenant_id, QueuedJob { id, spec, timer });
+        queue.push(&tenant_id, QueuedJob { id, spec, timer, resume: None });
         drop(queue);
         if let (Some(key), Some(tokens)) = (token_key, tokens.as_deref_mut()) {
             tokens.insert(key, id);
@@ -285,15 +451,31 @@ impl Coordinator {
     /// re-checks the *actual* deadline — a spurious early timer fire
     /// (chaos `timer:spurious`) must not expire a live job.
     fn expire_if_queued(&self, id: JobId) {
-        let mut jobs = self.jobs.lock().unwrap();
-        if let Some(j) = jobs.get_mut(&id) {
-            let due = j.deadline.is_some_and(|d| Instant::now() >= d);
-            if matches!(j.state, JobState::Queued) && due {
-                j.state = JobState::Expired;
-                j.finished = Some(Instant::now());
-                self.metrics.jobs_expired.fetch_add(1, Ordering::Relaxed);
-                j.done.notify();
+        let expired = {
+            let mut jobs = self.jobs.lock().unwrap();
+            match jobs.get_mut(&id) {
+                Some(j)
+                    if matches!(j.state, JobState::Queued)
+                        && j.deadline.is_some_and(|d| Instant::now() >= d) =>
+                {
+                    j.state = JobState::Expired;
+                    j.finished = Some(Instant::now());
+                    self.metrics.jobs_expired.fetch_add(1, Ordering::Relaxed);
+                    j.done.notify();
+                    true
+                }
+                _ => false,
             }
+        };
+        if expired {
+            // Terminal record (fail-open, after the lock): recovery
+            // must not re-run a job whose client was already told
+            // `deadline_exceeded`.
+            self.journal_note(&JournalRecord::Failed {
+                id,
+                code: ErrorCode::DeadlineExceeded,
+                message: format!("{id} expired before execution"),
+            });
         }
     }
 
@@ -301,14 +483,25 @@ impl Coordinator {
     /// failed lane handoff): completes the done-event, counts it, and
     /// never touches a job that reached a lane.
     fn cancel_if_queued(&self, id: JobId) {
-        let mut jobs = self.jobs.lock().unwrap();
-        if let Some(j) = jobs.get_mut(&id) {
-            if matches!(j.state, JobState::Queued) {
-                j.state = JobState::Cancelled;
-                j.finished = Some(Instant::now());
-                self.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
-                j.done.notify();
+        let cancelled = {
+            let mut jobs = self.jobs.lock().unwrap();
+            match jobs.get_mut(&id) {
+                Some(j) if matches!(j.state, JobState::Queued) => {
+                    j.state = JobState::Cancelled;
+                    j.finished = Some(Instant::now());
+                    self.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+                    j.done.notify();
+                    true
+                }
+                _ => false,
             }
+        };
+        if cancelled {
+            self.journal_note(&JournalRecord::Failed {
+                id,
+                code: ErrorCode::ShuttingDown,
+                message: format!("{id} was bounced by a server drain; resubmit"),
+            });
         }
     }
 
@@ -319,7 +512,7 @@ impl Coordinator {
             let _span = telemetry::span(Phase::JobQueue);
             self.queue.lock().unwrap().pop_fair()
         };
-        let Some(QueuedJob { id, spec, timer }) = entry else {
+        let Some(QueuedJob { id, spec, timer, resume }) = entry else {
             return;
         };
         if let Some(t) = timer {
@@ -341,8 +534,15 @@ impl Coordinator {
             j.state = JobState::Running;
         }
         self.running.fetch_add(1, Ordering::Relaxed);
+        // Fail-open lifecycle record: losing `started` only means
+        // recovery re-queues the job as if no lane had picked it up.
+        self.journal_note(&JournalRecord::Started { id });
+        if resume.is_some() {
+            journal::note_checkpoint_resumed();
+        }
         let tenant = self.tenants.get_or_create(&spec.tenant);
         let engine = TenantEngine::new(Arc::clone(&self.engine), Arc::clone(&tenant));
+        let ckpt_every = if self.journal.is_some() { self.cfg.checkpoint_every } else { 0 };
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let _span = telemetry::span(Phase::JobExecute);
             // Chaos `lane:panic`: the job dies mid-execution exactly the
@@ -351,20 +551,73 @@ impl Coordinator {
             if faults::check(FaultSite::Lane) == Some(FaultKind::Panic) {
                 panic!("injected lane panic");
             }
+            // Journal a resume point every `checkpoint_every`
+            // iterations: a crash mid-fit redoes only the tail. A
+            // checkpoint that fails to append is dropped, not fatal —
+            // the previous one still bounds the redo.
+            let mut sink = |ckpt: DescentCheckpoint| {
+                if let Some(j) = &self.journal {
+                    if j.append(&JournalRecord::Checkpoint { id, ckpt }).is_ok() {
+                        journal::note_checkpoint_taken();
+                    }
+                }
+            };
             match spec.cd_updates {
                 Some(updates) => {
-                    Ok(encrypted::fit_cd(&engine, &spec.data, spec.cfg.nu, updates))
+                    let mut hook = (ckpt_every > 0)
+                        .then(|| CheckpointHook { every: ckpt_every, sink: Box::new(&mut sink) });
+                    encrypted::fit_cd_with_checkpoints(
+                        &engine,
+                        &spec.data,
+                        spec.cfg.nu,
+                        updates,
+                        resume.as_ref(),
+                        hook.as_mut(),
+                    )
                 }
-                None => encrypted::fit(&engine, &DatasetRef::Scalar(&spec.data), &spec.cfg)
-                    .map(|outcome| outcome.fit),
+                None => {
+                    let hook = (ckpt_every > 0)
+                        .then(|| CheckpointHook { every: ckpt_every, sink: Box::new(&mut sink) });
+                    encrypted::fit_with_checkpoints(
+                        &engine,
+                        &DatasetRef::Scalar(&spec.data),
+                        &spec.cfg,
+                        resume.as_ref(),
+                        hook,
+                    )
+                    .map(|outcome| outcome.fit)
+                }
             }
         }));
         self.running.fetch_sub(1, Ordering::Relaxed);
+        let outcome: std::result::Result<EncryptedFit, String> = match result {
+            Ok(Ok(fit)) => Ok(fit),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(e) => Err(e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "job panicked".to_string())),
+        };
+        // Journal the outcome *before* publishing it: a `done` a
+        // client could observe (and ack) must already be re-servable.
+        match &outcome {
+            Ok(fit) => {
+                if let Some(j) = &self.journal {
+                    let _ = j.append_json(&journal::done_payload(id, fit));
+                }
+            }
+            Err(msg) => self.journal_note(&JournalRecord::Failed {
+                id,
+                code: ErrorCode::JobFailed,
+                message: msg.clone(),
+            }),
+        }
         let mut jobs = self.jobs.lock().unwrap();
         if let Some(j) = jobs.get_mut(&id) {
             j.finished = Some(Instant::now());
-            match result {
-                Ok(Ok(fit)) => {
+            match outcome {
+                Ok(fit) => {
                     self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
                     tenant.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
                     if let Some(lat) = j.latency() {
@@ -372,17 +625,8 @@ impl Coordinator {
                     }
                     j.state = JobState::Done(fit);
                 }
-                Ok(Err(e)) => {
+                Err(msg) => {
                     self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                    j.state = JobState::Failed(e.to_string());
-                }
-                Err(e) => {
-                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                    let msg = e
-                        .downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
-                        .unwrap_or_else(|| "job panicked".to_string());
                     j.state = JobState::Failed(msg);
                 }
             }
@@ -443,23 +687,31 @@ impl Coordinator {
     /// [`peek_result`](Self::peek_result) + [`release`](Self::release)
     /// so a reply lost in flight can be re-fetched.
     pub fn take_result(&self, id: JobId) -> WireResult<EncryptedFit> {
-        let mut tokens = self.tokens.lock().unwrap();
-        let mut jobs = self.jobs.lock().unwrap();
-        let terminal = jobs.get(&id).map(|j| j.state.is_terminal());
-        match terminal {
-            None => Err(WireError::new(ErrorCode::UnknownJob, format!("unknown {id}"))),
-            Some(true) => {
-                let job = jobs.remove(&id).unwrap();
-                tokens.retain(|_, v| *v != id);
-                match job.state {
-                    JobState::Done(fit) => Ok(fit),
-                    other => Err(Self::terminal_error(id, &other)),
+        let taken = {
+            let mut tokens = self.tokens.lock().unwrap();
+            let mut jobs = self.jobs.lock().unwrap();
+            let terminal = jobs.get(&id).map(|j| j.state.is_terminal());
+            match terminal {
+                None => {
+                    return Err(WireError::new(ErrorCode::UnknownJob, format!("unknown {id}")))
+                }
+                Some(true) => {
+                    let job = jobs.remove(&id).unwrap();
+                    tokens.retain(|_, v| *v != id);
+                    job
+                }
+                Some(false) => {
+                    let s = jobs.get(&id).unwrap().state.label();
+                    return Err(WireError::internal(format!("{id} still {s}")));
                 }
             }
-            Some(false) => {
-                let s = jobs.get(&id).unwrap().state.label();
-                Err(WireError::internal(format!("{id} still {s}")))
-            }
+        };
+        // The job is forgotten in-memory: journal the ack (after the
+        // locks, fail-open) so recovery forgets it too.
+        self.journal_note(&JournalRecord::Acked { id });
+        match taken.state {
+            JobState::Done(fit) => Ok(fit),
+            other => Err(Self::terminal_error(id, &other)),
         }
     }
 
@@ -487,16 +739,22 @@ impl Coordinator {
     /// idempotency token pointing at it. Idempotent — acking an
     /// unknown or still-active job is a no-op returning `false`.
     pub fn release(&self, id: JobId) -> bool {
-        let mut tokens = self.tokens.lock().unwrap();
-        let mut jobs = self.jobs.lock().unwrap();
-        match jobs.get(&id) {
-            Some(j) if j.state.is_terminal() => {
-                jobs.remove(&id);
-                tokens.retain(|_, v| *v != id);
-                true
+        let released = {
+            let mut tokens = self.tokens.lock().unwrap();
+            let mut jobs = self.jobs.lock().unwrap();
+            match jobs.get(&id) {
+                Some(j) if j.state.is_terminal() => {
+                    jobs.remove(&id);
+                    tokens.retain(|_, v| *v != id);
+                    true
+                }
+                _ => false,
             }
-            _ => false,
+        };
+        if released {
+            self.journal_note(&JournalRecord::Acked { id });
         }
+        released
     }
 
     // ---- drain / health -------------------------------------------------
@@ -535,6 +793,12 @@ impl Coordinator {
             }
             std::thread::sleep(Duration::from_millis(2));
         };
+        // The final sync of a graceful drain: everything journaled
+        // (including the bounce records above) is on disk before the
+        // caller tears the process down.
+        if let Some(j) = &self.journal {
+            let _ = j.sync();
+        }
         DrainReport { bounced, drained }
     }
 
@@ -570,6 +834,47 @@ impl Coordinator {
     /// this returns to zero — no leaked deadline handles).
     pub fn timers_live(&self) -> usize {
         self.timers.live_entries()
+    }
+
+    // ---- durability -----------------------------------------------------
+
+    /// Fail-open append for mid-lifecycle records (`started`,
+    /// `failed`, `acked`): the journal already counts the error
+    /// (`journal_append_errors`), and the worst case of a lost record
+    /// is recovery redoing work the record would have skipped — never
+    /// a wrong answer, thanks to token dedup and idempotent replay.
+    fn journal_note(&self, rec: &JournalRecord) {
+        if let Some(j) = &self.journal {
+            let _ = j.append(rec);
+        }
+    }
+
+    /// The attached journal, if this coordinator is durable.
+    pub fn journal(&self) -> Option<&Journal> {
+        self.journal.as_ref()
+    }
+
+    /// What [`recover`](Self::recover) rebuilt from the journal (all
+    /// zero for a coordinator that started fresh).
+    pub fn recovered(&self) -> RecoveredCounts {
+        self.recovered
+    }
+
+    /// Chaos-harness crash simulation: the moral equivalent of
+    /// `kill -9` without losing the test process. Journal writes stop
+    /// dead — with a deliberately torn record left on disk, the
+    /// signature of dying mid-append — the executor drops its ready
+    /// queue without running it, and admission closes. Fits already
+    /// executing on lanes cannot be preempted; they finish in the
+    /// background, but their journal appends no longer land, exactly
+    /// like the writes of a dead process. The journal directory is
+    /// left ready for [`recover`](Self::recover).
+    pub fn crash(&self) {
+        self.accepting.store(false, Ordering::Release);
+        if let Some(j) = &self.journal {
+            j.tear_tail();
+        }
+        self.exec.abort();
     }
 }
 
@@ -899,6 +1204,137 @@ mod tests {
         assert_eq!(again.bounced, 0);
         assert!(again.drained);
         assert_eq!(coord.tracked_jobs(), 0, "all results consumed, nothing leaked");
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "els-sched-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn recovery_restores_unacked_results_with_zero_engine_work() {
+        use crate::coordinator::protocol::fit_to_json;
+        let mut f = fixture(610, 2);
+        let dir = tmpdir("restore");
+        let native_a =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        // `recover` on an empty directory doubles as the journal-
+        // enabled constructor.
+        let coord_a =
+            Coordinator::recover(native_a, CoordinatorConfig::default(), &dir).unwrap();
+        assert_eq!(coord_a.recovered().total(), 0, "empty journal recovers nothing");
+        let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let id = coord_a
+            .submit(JobSpec::new(data, FitConfig::gd(2, f.nu), None).with_token("durable-1"))
+            .unwrap();
+        coord_a.wait(id, Duration::from_secs(600)).unwrap();
+        let fit_a = coord_a.peek_result(id).unwrap(); // delivered, never acked
+        coord_a.crash();
+        // Rebuild on a FRESH engine: re-serving the unacked result
+        // must cost zero engine work, and the fresh engine's ct-mul
+        // counter proves it.
+        let native_b =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord_b =
+            Coordinator::recover(native_b.clone(), CoordinatorConfig::default(), &dir).unwrap();
+        assert_eq!(coord_b.recovered().restored, 1);
+        assert_eq!(coord_b.recovered().requeued, 0);
+        let fit_b = coord_b.peek_result(id).unwrap();
+        assert_eq!(
+            fit_to_json(&fit_b).to_string_json(),
+            fit_to_json(&fit_a).to_string_json(),
+            "re-served fit must be bit-identical to the original"
+        );
+        assert_eq!(native_b.stats().snapshot().0, 0, "re-serving must do zero engine work");
+        // The idempotency token survived recovery: a client retry
+        // re-attaches instead of paying for a second fit.
+        let data2 = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let id2 = coord_b
+            .submit(JobSpec::new(data2, FitConfig::gd(2, f.nu), None).with_token("durable-1"))
+            .unwrap();
+        assert_eq!(id2, id, "recovered token table must dedup the retry");
+        assert_eq!(native_b.stats().snapshot().0, 0);
+        // Ack, drain, recover once more: the acked job stays gone.
+        assert!(coord_b.release(id));
+        coord_b.shutdown(Duration::from_secs(60));
+        let native_c =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord_c =
+            Coordinator::recover(native_c, CoordinatorConfig::default(), &dir).unwrap();
+        assert_eq!(coord_c.recovered().total(), 0, "acked jobs must not be resurrected");
+        assert_eq!(coord_c.peek_result(id).unwrap_err().code, ErrorCode::UnknownJob);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_resumes_mid_fit_from_journaled_checkpoint() {
+        use crate::coordinator::protocol::fit_to_json;
+        let mut f = fixture(611, 3);
+        let dir = tmpdir("resume");
+        let native_a =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let data = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let cfg = FitConfig::gd(3, f.nu);
+        // Reference: an uninterrupted fit, capturing the resume points
+        // exactly as a journaling lane would have.
+        let mut ckpts = Vec::new();
+        let hook = CheckpointHook { every: 1, sink: Box::new(|c| ckpts.push(c)) };
+        let reference = encrypted::fit_with_checkpoints(
+            native_a.as_ref(),
+            &DatasetRef::Scalar(&data),
+            &cfg,
+            None,
+            Some(hook),
+        )
+        .unwrap()
+        .fit;
+        let full_muls = native_a.stats().snapshot().0;
+        assert_eq!(ckpts.len(), 2, "3-iteration fit checkpoints at k=1 and k=2");
+        // Forge the journal a crash mid-iteration-3 leaves behind:
+        // accepted, started, checkpoints — and no `done`.
+        let spec = JobSpec::new(data, cfg, None).with_token("resume-1");
+        let (wal, _) = Journal::open(&dir).unwrap();
+        wal.append_json(&journal::accepted_payload(JobId(7), &spec)).unwrap();
+        wal.append(&JournalRecord::Started { id: JobId(7) }).unwrap();
+        for ckpt in &ckpts {
+            wal.append(&JournalRecord::Checkpoint { id: JobId(7), ckpt: ckpt.clone() }).unwrap();
+        }
+        drop(wal);
+        let resumed_before = journal::checkpoints_resumed();
+        let native_b =
+            Arc::new(NativeEngine::new(f.ctx.clone(), Arc::new(f.keys.rk.clone())));
+        let coord_b =
+            Coordinator::recover(native_b.clone(), CoordinatorConfig::default(), &dir).unwrap();
+        assert_eq!(coord_b.recovered().requeued, 1);
+        assert_eq!(coord_b.recovered().resumed, 1);
+        coord_b.wait(JobId(7), Duration::from_secs(600)).unwrap();
+        let fit = coord_b.peek_result(JobId(7)).unwrap();
+        assert_eq!(
+            fit_to_json(&fit).to_string_json(),
+            fit_to_json(&reference).to_string_json(),
+            "resumed fit must be bit-identical to the uninterrupted run"
+        );
+        assert!(journal::checkpoints_resumed() > resumed_before);
+        // Resuming from k=2 of 3 redoes only the tail, not the whole
+        // fit: strictly fewer ct-muls than the full reference run.
+        let resumed_muls = native_b.stats().snapshot().0;
+        assert!(
+            resumed_muls < full_muls,
+            "resume redid the whole fit ({resumed_muls} vs {full_muls} ct-muls)"
+        );
+        // The id watermark survived: new work gets fresh ids.
+        let data2 = encrypt_dataset(&f.ctx, &f.keys.pk, &f.q, &mut f.rng);
+        let id2 = coord_b.submit(JobSpec::new(data2, FitConfig::gd(3, f.nu), None)).unwrap();
+        assert!(id2.0 > 7, "recovered id watermark must advance past journaled ids");
+        coord_b.wait(id2, Duration::from_secs(600)).unwrap();
+        let _ = coord_b.take_result(id2).unwrap();
+        assert!(coord_b.release(JobId(7)));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! - `{"v":1,"type":"ack","id":N}` → `{"v":1,"ok":true,"released":bool}`
 //! - `{"v":1,"type":"health"}` → `{"v":1,"ok":true,"accepting":bool,
 //!   "lanes":N,"queue_depth":N,"running":N,"tracked_jobs":N,
-//!   "timers_live":N,"uptime_ms":N}`
+//!   "timers_live":N,"uptime_ms":N,"journal":bool,"recovered":N}` —
+//!   `journal` says whether the coordinator is journal-backed,
+//!   `recovered` counts jobs rebuilt from the journal at startup
+//!   (requeued + restored + failed; 0 for fresh or journal-less starts)
 //! - `{"v":1,"type":"shutdown"}` with optional `"drain_ms":N` (default
 //!   10000) → `{"v":1,"ok":true,"bounced":N,"drained":bool}` — stops
 //!   admission, bounces queued jobs (`shutting_down`), drains in-flight
@@ -267,6 +270,8 @@ fn handle_request(coord: &Arc<Coordinator>, line: &str) -> WireResult<Json> {
             fields.push(("tracked_jobs", Json::Num(coord.tracked_jobs() as f64)));
             fields.push(("timers_live", Json::Num(coord.timers_live() as f64)));
             fields.push(("uptime_ms", Json::Num(coord.uptime().as_millis() as f64)));
+            fields.push(("journal", Json::Bool(coord.journal().is_some())));
+            fields.push(("recovered", Json::Num(coord.recovered().total() as f64)));
             Ok(Json::obj(fields))
         }
         "shutdown" => {
@@ -475,7 +480,8 @@ impl Client {
 
     /// The server's liveness/pressure report: `accepting`, `lanes`,
     /// `queue_depth`, `running`, `tracked_jobs`, `timers_live`,
-    /// `uptime_ms`.
+    /// `uptime_ms`, `journal` (journal-backed?), `recovered` (jobs
+    /// rebuilt from the journal at startup).
     pub fn health(&mut self) -> WireResult<Json> {
         self.call("health", vec![])
     }

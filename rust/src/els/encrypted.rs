@@ -30,7 +30,7 @@ use crate::fhe::encoding::{encode_biguint, Encoder};
 use crate::fhe::{Ciphertext, FvContext, PlaintextNtt, SecretKey};
 use crate::math::bigint::BigUint;
 use crate::runtime::backend::HeEngine;
-use crate::util::error::Result;
+use crate::util::error::{bail, Result};
 use crate::util::telemetry::{self, MetricsSnapshot, Phase};
 
 use super::mmd;
@@ -172,6 +172,80 @@ pub struct FitOutcome {
     pub report: MetricsSnapshot,
 }
 
+// ---- mid-fit checkpoints ------------------------------------------------
+
+/// The per-algorithm loop state a resume needs. All scaling constants
+/// are deterministic functions of `(φ, ν, K)` and are re-derived on
+/// resume — only ciphertext state is carried.
+#[derive(Clone)]
+pub enum CheckpointState {
+    /// ELS-GD (and the VWT variant — VWT differs only post-loop):
+    /// iterate plus the kept path so far.
+    Gd { beta: Vec<Ciphertext>, path: Vec<Vec<Ciphertext>> },
+    /// ELS-NAG: iterate, previous s-sequence, kept path so far.
+    Nag { beta: Vec<Ciphertext>, s_prev: Vec<Ciphertext>, path: Vec<Vec<Ciphertext>> },
+    /// ELS-CD: per-coordinate iterate (`None` = not yet touched) and
+    /// the incremental residual.
+    Cd { beta: Vec<Option<Ciphertext>>, r: Vec<Ciphertext> },
+}
+
+/// An opaque mid-fit resume point: everything a descent loop needs to
+/// continue from iteration `done + 1` and produce a fit bit-identical
+/// to an uninterrupted run. Emitted by [`fit_with_checkpoints`] through
+/// a [`CheckpointHook`]; journaled by the coordinator.
+#[derive(Clone)]
+pub struct DescentCheckpoint {
+    /// Quantisation exponent of the dataset the fit ran on.
+    pub phi: u32,
+    /// Inverse step size ν of the config the fit ran under.
+    pub nu: u64,
+    /// Completed iterations (GD/NAG) or coordinate updates (CD).
+    pub done: usize,
+    /// Algorithm-specific ciphertext state.
+    pub state: CheckpointState,
+}
+
+impl DescentCheckpoint {
+    /// Guard a resume against a config it was not taken under — a
+    /// mismatched ν or φ would silently decode garbage.
+    fn validate(&self, phi: u32, nu: u64, total: usize) -> Result<()> {
+        if self.phi != phi {
+            bail!("checkpoint phi {} does not match dataset phi {phi}", self.phi);
+        }
+        if self.nu != nu {
+            bail!("checkpoint nu {} does not match config nu {nu}", self.nu);
+        }
+        if self.done > total {
+            bail!("checkpoint at iteration {} beyond configured {total}", self.done);
+        }
+        Ok(())
+    }
+}
+
+/// Checkpoint emission: after every `every` completed iterations
+/// (except the last — a finished fit journals `done`, not a
+/// checkpoint) the sink receives the current resume point.
+pub struct CheckpointHook<'a> {
+    /// Take a checkpoint every this many iterations (0 = never).
+    pub every: usize,
+    /// Receives each emitted checkpoint (e.g. a journal append).
+    pub sink: Box<dyn FnMut(DescentCheckpoint) + 'a>,
+}
+
+/// Shared every-k emission gate for the four descent loops.
+fn take_checkpoint(
+    hook: &mut Option<&mut CheckpointHook<'_>>,
+    done: usize,
+    total: usize,
+    make: impl FnOnce() -> DescentCheckpoint,
+) {
+    if let Some(h) = hook.as_deref_mut() {
+        if h.every > 0 && done % h.every == 0 && done < total {
+            (h.sink)(make());
+        }
+    }
+}
+
 /// Fit by ELS-GD (eq. 10), optionally with VWT (eq. 18) or NAG
 /// (eqs. 20a/20b) acceleration, on either ciphertext layout. This is
 /// the one fit entry point: the layout is carried by the
@@ -179,20 +253,48 @@ pub struct FitOutcome {
 /// op-budget report. Fails only when a packed dataset meets an engine
 /// that cannot rotate (no Galois keys).
 pub fn fit(engine: &dyn HeEngine, data: &DatasetRef, cfg: &FitConfig) -> Result<FitOutcome> {
+    fit_with_checkpoints(engine, data, cfg, None, None)
+}
+
+/// [`fit`] with the durability seam: resume from a prior
+/// [`DescentCheckpoint`] and/or emit checkpoints through a
+/// [`CheckpointHook`] while iterating. A resumed fit is bit-identical
+/// to an uninterrupted one — descent is deterministic, ciphertexts
+/// round-trip exactly, and scaling state re-derives from `(φ, ν, K)`.
+/// Checkpoints cover the per-value layout (the one the serving tier
+/// journals); a packed fit with a resume point or hook is an error.
+pub fn fit_with_checkpoints(
+    engine: &dyn HeEngine,
+    data: &DatasetRef,
+    cfg: &FitConfig,
+    resume: Option<&DescentCheckpoint>,
+    mut hook: Option<CheckpointHook<'_>>,
+) -> Result<FitOutcome> {
     let before = MetricsSnapshot::capture(engine.ctx(), engine.stats());
     let fit = match data {
-        DatasetRef::Scalar(d) => fit_scalar(engine, d, cfg),
-        DatasetRef::Packed(d) => fit_packed_inner(engine, d, cfg)?,
+        DatasetRef::Scalar(d) => fit_scalar(engine, d, cfg, resume, hook.as_mut())?,
+        DatasetRef::Packed(d) => {
+            if resume.is_some() || hook.is_some() {
+                bail!("descent checkpoints support the per-value layout only");
+            }
+            fit_packed_inner(engine, d, cfg)?
+        }
     };
     let after = MetricsSnapshot::capture(engine.ctx(), engine.stats());
     Ok(FitOutcome { fit, report: after.diff(&before) })
 }
 
-/// Per-value fit dispatch (infallible: never rotates).
-fn fit_scalar(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
+/// Per-value fit dispatch (fails only on a mismatched resume point).
+fn fit_scalar(
+    engine: &dyn HeEngine,
+    data: &EncryptedDataset,
+    cfg: &FitConfig,
+    resume: Option<&DescentCheckpoint>,
+    hook: Option<&mut CheckpointHook<'_>>,
+) -> Result<EncryptedFit> {
     match cfg.accel {
-        Accel::None | Accel::Vwt => fit_gd(engine, data, cfg),
-        Accel::Nag => fit_nag(engine, data, cfg),
+        Accel::None | Accel::Vwt => fit_gd(engine, data, cfg, resume, hook),
+        Accel::Nag => fit_nag(engine, data, cfg, resume, hook),
     }
 }
 
@@ -392,17 +494,37 @@ fn fit_nag_packed(
     })
 }
 
-fn fit_gd(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
+fn fit_gd(
+    engine: &dyn HeEngine,
+    data: &EncryptedDataset,
+    cfg: &FitConfig,
+    resume: Option<&DescentCheckpoint>,
+    mut hook: Option<&mut CheckpointHook<'_>>,
+) -> Result<EncryptedFit> {
     let ctx = engine.ctx();
     let p = data.p();
     let s = GdScaling::new(data.phi, cfg.nu);
     let keep_path = cfg.keep_path || cfg.accel == Accel::Vwt;
-    let mut beta: Vec<Ciphertext> = Vec::new();
-    let mut path: Vec<Vec<Ciphertext>> = Vec::new();
+    let (mut beta, mut path, start) = match resume {
+        Some(c) => {
+            c.validate(data.phi, cfg.nu, cfg.iters)?;
+            let CheckpointState::Gd { beta, path } = &c.state else {
+                bail!("checkpoint algorithm mismatch (expected gd state)");
+            };
+            if c.done > 0 && beta.len() != p {
+                bail!("checkpoint iterate arity {} != covariates {p}", beta.len());
+            }
+            if keep_path && path.len() != c.done {
+                bail!("checkpoint path holds {} iterates, expected {}", path.len(), c.done);
+            }
+            (beta.clone(), path.clone(), c.done)
+        }
+        None => (Vec::new(), Vec::new(), 0),
+    };
     // The carry constant is iteration-invariant: NTT-cached once for
     // the whole fit (P multiplies per iteration, K iterations).
     let cc_pt = engine.prepare_plaintext(&encode_biguint(&s.c_carry(), ctx.d()));
-    for k in 1..=cfg.iters {
+    for k in start + 1..=cfg.iters {
         let _iter = telemetry::span(Phase::DescentIteration);
         let g = gradient_step(engine, data, &beta, &s.c_y(k));
         beta = if beta.is_empty() {
@@ -415,6 +537,15 @@ fn fit_gd(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> En
         if keep_path {
             path.push(beta.clone());
         }
+        take_checkpoint(&mut hook, k, cfg.iters, || DescentCheckpoint {
+            phi: data.phi,
+            nu: cfg.nu,
+            done: k,
+            state: CheckpointState::Gd {
+                beta: beta.clone(),
+                path: if keep_path { path.clone() } else { Vec::new() },
+            },
+        });
     }
     let (betas, divisor, paper) = if cfg.accel == Accel::Vwt {
         // β̃_vwt = Σ_{k≥k*} w_k·β̃^[k] at the unified K-scale.
@@ -436,26 +567,45 @@ fn fit_gd(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> En
     } else {
         (beta, s.divisor(cfg.iters), mmd::paper_mmd(Accel::None, cfg.iters))
     };
-    EncryptedFit {
+    Ok(EncryptedFit {
         noise_depth: betas.iter().map(|b| b.ct_depth).max().unwrap_or(0),
         betas,
         divisor,
         path: if cfg.keep_path { Some(path) } else { None },
         phi: data.phi,
         paper_mmd: paper,
-    }
+    })
 }
 
-fn fit_nag(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> EncryptedFit {
+fn fit_nag(
+    engine: &dyn HeEngine,
+    data: &EncryptedDataset,
+    cfg: &FitConfig,
+    resume: Option<&DescentCheckpoint>,
+    mut hook: Option<&mut CheckpointHook<'_>>,
+) -> Result<EncryptedFit> {
     let ctx = engine.ctx();
     let p = data.p();
     let s = NagScaling::new(data.phi, cfg.nu, cfg.iters);
     // Iteration-invariant carry constant: cached once for the fit.
     let cc_pt = engine.prepare_plaintext(&encode_biguint(&s.c_carry(), ctx.d()));
-    let mut beta: Vec<Ciphertext> = Vec::new();
-    let mut s_prev: Vec<Ciphertext> = vec![zero_ct(ctx); p];
-    let mut path: Vec<Vec<Ciphertext>> = Vec::new();
-    for k in 1..=cfg.iters {
+    let (mut beta, mut s_prev, mut path, start) = match resume {
+        Some(c) => {
+            c.validate(data.phi, cfg.nu, cfg.iters)?;
+            let CheckpointState::Nag { beta, s_prev, path } = &c.state else {
+                bail!("checkpoint algorithm mismatch (expected nag state)");
+            };
+            if s_prev.len() != p || (c.done > 0 && beta.len() != p) {
+                bail!("checkpoint iterate arity mismatch ({} covariates)", p);
+            }
+            if cfg.keep_path && path.len() != c.done {
+                bail!("checkpoint path holds {} iterates, expected {}", path.len(), c.done);
+            }
+            (beta.clone(), s_prev.clone(), path.clone(), c.done)
+        }
+        None => (Vec::new(), vec![zero_ct(ctx); p], Vec::new(), 0),
+    };
+    for k in start + 1..=cfg.iters {
         let _iter = telemetry::span(Phase::DescentIteration);
         let g = gradient_step(engine, data, &beta, &s.c_y(k));
         // s̃^[k] = c_carry·β̃^[k−1] + g
@@ -491,15 +641,25 @@ fn fit_nag(engine: &dyn HeEngine, data: &EncryptedDataset, cfg: &FitConfig) -> E
         if cfg.keep_path {
             path.push(beta.clone());
         }
+        take_checkpoint(&mut hook, k, cfg.iters, || DescentCheckpoint {
+            phi: data.phi,
+            nu: cfg.nu,
+            done: k,
+            state: CheckpointState::Nag {
+                beta: beta.clone(),
+                s_prev: s_prev.clone(),
+                path: path.clone(),
+            },
+        });
     }
-    EncryptedFit {
+    Ok(EncryptedFit {
         noise_depth: beta.iter().map(|b| b.ct_depth).max().unwrap_or(0),
         betas: beta,
         divisor: s.divisor(cfg.iters),
         path: if cfg.keep_path { Some(path) } else { None },
         phi: data.phi,
         paper_mmd: mmd::paper_mmd(Accel::Nag, cfg.iters),
-    }
+    })
 }
 
 /// Fit by ELS-CD (eq. 7, incremental-residual form, cyclic schedule).
@@ -510,15 +670,40 @@ pub fn fit_cd(
     nu: u64,
     updates: usize,
 ) -> EncryptedFit {
+    fit_cd_with_checkpoints(engine, data, nu, updates, None, None)
+        .expect("resume-free CD fit is infallible")
+}
+
+/// [`fit_cd`] with the durability seam (resume point + checkpoint
+/// hook); fails only on a mismatched resume point.
+pub fn fit_cd_with_checkpoints(
+    engine: &dyn HeEngine,
+    data: &EncryptedDataset,
+    nu: u64,
+    updates: usize,
+    resume: Option<&DescentCheckpoint>,
+    mut hook: Option<&mut CheckpointHook<'_>>,
+) -> Result<EncryptedFit> {
     let ctx = engine.ctx();
     let (n, p) = (data.n(), data.p());
     let s = CdScaling::new(data.phi, nu);
     // The step constant is update-invariant and multiplies P + N
     // ciphertexts per update: cached once for the whole fit.
     let c_pt = engine.prepare_plaintext(&encode_biguint(&s.c_step(), ctx.d()));
-    let mut beta: Vec<Option<Ciphertext>> = vec![None; p];
-    let mut r: Vec<Ciphertext> = data.y.to_vec();
-    for u in 1..=updates {
+    let (mut beta, mut r, start) = match resume {
+        Some(c) => {
+            c.validate(data.phi, nu, updates)?;
+            let CheckpointState::Cd { beta, r } = &c.state else {
+                bail!("checkpoint algorithm mismatch (expected cd state)");
+            };
+            if beta.len() != p || r.len() != n {
+                bail!("checkpoint arity mismatch ({p} covariates, {n} residuals)");
+            }
+            (beta.clone(), r.clone(), c.done)
+        }
+        None => (vec![None; p], data.y.to_vec(), 0),
+    };
+    for u in start + 1..=updates {
         let _iter = telemetry::span(Phase::DescentIteration);
         let j = (u - 1) % p;
         // ĝ_j = Σ_i X̃_ij·r̃_i — one fused group (one relinearisation
@@ -544,17 +729,23 @@ pub fn fit_cd(
         r = (0..n)
             .map(|i| engine.sub(&engine.mul_plain_prepared(&r[i], &c_pt), &xg[i]))
             .collect();
+        take_checkpoint(&mut hook, u, updates, || DescentCheckpoint {
+            phi: data.phi,
+            nu,
+            done: u,
+            state: CheckpointState::Cd { beta: beta.clone(), r: r.clone() },
+        });
     }
     let betas: Vec<Ciphertext> =
         beta.into_iter().map(|b| b.unwrap_or_else(|| zero_ct(ctx))).collect();
-    EncryptedFit {
+    Ok(EncryptedFit {
         noise_depth: betas.iter().map(|b| b.ct_depth).max().unwrap_or(0),
         betas,
         divisor: s.divisor(updates),
         path: None,
         phi: data.phi,
         paper_mmd: mmd::paper_mmd_cd(updates.div_ceil(p), p),
-    }
+    })
 }
 
 /// Secret-key holder: decrypt and rescale the fitted coefficients.
@@ -693,6 +884,122 @@ mod tests {
         let dec = decrypt_coefficients(&s.ctx, &s.keys.sk, &fit);
         let expect = exact::cd_exact(&s.q, s.nu, 2).decode_last();
         assert!(linf(&dec, &expect) < 1e-9, "{dec:?} vs {expect:?}");
+    }
+
+    fn assert_fit_identical(a: &EncryptedFit, b: &EncryptedFit, tag: &str) {
+        assert_eq!(a.betas.len(), b.betas.len(), "{tag}: coefficient count");
+        for (j, (x, y)) in a.betas.iter().zip(&b.betas).enumerate() {
+            assert_eq!(x.polys, y.polys, "{tag}: β_{j} polys differ");
+            assert_eq!(x.ct_depth, y.ct_depth, "{tag}: β_{j} depth differs");
+        }
+        assert_eq!(a.divisor, b.divisor, "{tag}: divisor");
+        assert_eq!(a.paper_mmd, b.paper_mmd, "{tag}: paper_mmd");
+        assert_eq!(a.noise_depth, b.noise_depth, "{tag}: noise_depth");
+    }
+
+    #[test]
+    fn resumed_fits_are_bit_identical_to_uninterrupted() {
+        // The durability acceptance criterion: for every descent loop,
+        // resuming from ANY mid-fit checkpoint reproduces the
+        // uninterrupted fit bit-for-bit — same ciphertext polys, same
+        // depth, same decode metadata.
+        for (algo, accel) in
+            [(Algo::Gd, Accel::None), (Algo::GdVwt, Accel::Vwt), (Algo::Nag, Accel::Nag)]
+        {
+            let s = setup(321, 5, 2, 3, algo);
+            let cfg = FitConfig::gd(3, s.nu).with_accel(accel);
+            let reference =
+                super::fit(&s.engine, &DatasetRef::Scalar(&s.data), &cfg).unwrap().fit;
+            let mut ckpts: Vec<DescentCheckpoint> = Vec::new();
+            let hook =
+                CheckpointHook { every: 1, sink: Box::new(|c| ckpts.push(c)) };
+            let hooked = fit_with_checkpoints(
+                &s.engine,
+                &DatasetRef::Scalar(&s.data),
+                &cfg,
+                None,
+                Some(hook),
+            )
+            .unwrap()
+            .fit;
+            assert_fit_identical(&hooked, &reference, "hooked run");
+            assert_eq!(ckpts.len(), 2, "every=1 over 3 iterations emits at k=1,2");
+            for c in &ckpts {
+                let resumed = fit_with_checkpoints(
+                    &s.engine,
+                    &DatasetRef::Scalar(&s.data),
+                    &cfg,
+                    Some(c),
+                    None,
+                )
+                .unwrap()
+                .fit;
+                assert_fit_identical(
+                    &resumed,
+                    &reference,
+                    &format!("{accel:?} resumed at {}", c.done),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resumed_cd_fit_is_bit_identical() {
+        let s = setup(323, 6, 2, 2, Algo::Cd);
+        let reference = fit_cd(&s.engine, &s.data, s.nu, 2);
+        let mut ckpts: Vec<DescentCheckpoint> = Vec::new();
+        let mut hook = CheckpointHook { every: 1, sink: Box::new(|c| ckpts.push(c)) };
+        let hooked =
+            fit_cd_with_checkpoints(&s.engine, &s.data, s.nu, 2, None, Some(&mut hook))
+                .unwrap();
+        drop(hook);
+        assert_fit_identical(&hooked, &reference, "hooked cd run");
+        assert_eq!(ckpts.len(), 1, "every=1 over 2 updates emits at u=1");
+        let resumed =
+            fit_cd_with_checkpoints(&s.engine, &s.data, s.nu, 2, Some(&ckpts[0]), None)
+                .unwrap();
+        assert_fit_identical(&resumed, &reference, "cd resumed at 1");
+    }
+
+    #[test]
+    fn checkpoint_resume_validates_config() {
+        let s = setup(322, 5, 2, 2, Algo::Gd);
+        let cfg = FitConfig::gd(2, s.nu);
+        let mut ckpts: Vec<DescentCheckpoint> = Vec::new();
+        let hook = CheckpointHook { every: 1, sink: Box::new(|c| ckpts.push(c)) };
+        fit_with_checkpoints(&s.engine, &DatasetRef::Scalar(&s.data), &cfg, None, Some(hook))
+            .unwrap();
+        let c = &ckpts[0];
+        // A checkpoint taken under a different ν must not resume.
+        let bad_nu = FitConfig::gd(2, s.nu + 1);
+        assert!(fit_with_checkpoints(
+            &s.engine,
+            &DatasetRef::Scalar(&s.data),
+            &bad_nu,
+            Some(c),
+            None
+        )
+        .is_err());
+        // Nor may a GD checkpoint resume a NAG fit.
+        let nag = FitConfig::gd(2, s.nu).with_accel(Accel::Nag);
+        assert!(fit_with_checkpoints(
+            &s.engine,
+            &DatasetRef::Scalar(&s.data),
+            &nag,
+            Some(c),
+            None
+        )
+        .is_err());
+        // Nor beyond the configured iteration budget.
+        let short = FitConfig::gd(ckpts.last().unwrap().done - 1, s.nu);
+        assert!(fit_with_checkpoints(
+            &s.engine,
+            &DatasetRef::Scalar(&s.data),
+            &short,
+            Some(ckpts.last().unwrap()),
+            None
+        )
+        .is_err());
     }
 
     struct PackedSetup {

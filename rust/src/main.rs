@@ -6,6 +6,7 @@
 //! els keygen   --n 28 --p 2 --iters 2 --nu 30 --out keys.json [--seed 7]
 //! els serve    --keys keys.json [--addr 127.0.0.1:7461] [--xla artifacts] [--backend rns|bigint]
 //!              [--lanes 4] [--queue-cap 64] [--cache-mb 8]
+//!              [--journal-dir DIR] [--checkpoint-every K] [--drain-ms 10000]
 //! els client   --keys keys.json --addr HOST:PORT [--n 8 --p 2 --iters 2] [--accel vwt]
 //!              [--tenant NAME] [--deadline-ms N]
 //! els figures  (--all | --id fig4) [--out results]
@@ -87,7 +88,10 @@ const USAGE: &str = "els — encrypted least squares (Esperança, Aslett & Holme
 commands:
   params    plan FV parameters for a regression job (§4.5)
   keygen    plan parameters and write a key file
-  serve     run the coordinator service
+  serve     run the coordinator service; --journal-dir DIR makes it
+            durable (write-ahead journal + crash/restart recovery,
+            checkpointing fits every --checkpoint-every iterations);
+            SIGTERM/SIGINT drain gracefully (--drain-ms budget)
   client    submit an encrypted job (synthetic demo data)
   figures   regenerate the paper's tables and figures as CSV
   selftest  end-to-end encrypted fit on this machine
@@ -218,6 +222,29 @@ fn make_engine(
     }
 }
 
+/// Set by the `SIGTERM`/`SIGINT` handler; the serve loop polls it and
+/// drains the coordinator when it flips. Async-signal-safe: the handler
+/// only stores a relaxed atomic.
+static STOP_REQUESTED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_stop_handler() {
+    extern "C" fn on_stop(_sig: i32) {
+        STOP_REQUESTED.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+    // Dep-free raw libc binding: SIGINT=2, SIGTERM=15 (POSIX).
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(2, on_stop);
+        signal(15, on_stop);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_stop_handler() {}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let (ctx, keys) = load_keys(args)?;
     let inner = make_engine(args, ctx.clone(), &keys.rk)?;
@@ -235,20 +262,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_capacity: args.get_usize("queue-cap", 64)?,
         cache_budget_bytes: args.get_usize("cache-mb", 8)? << 20,
         cache_shards: 4,
+        checkpoint_every: args.get_usize("checkpoint-every", 1)?,
     };
-    let coord = Coordinator::with_config(engine, cfg);
+    // `--journal-dir` makes the coordinator durable: every accepted job
+    // hits the write-ahead journal before its id is returned, and a
+    // restart replays the log — queued jobs re-run, checkpointed fits
+    // resume, finished-but-unacked results are served from the journal.
+    let coord = match args.get("journal-dir") {
+        Some(dir) => {
+            let c = Coordinator::recover(engine, cfg, dir)
+                .with_context(|| format!("recovering journal from {dir}"))?;
+            let r = c.recovered();
+            println!(
+                "journal {dir}: recovered {} job(s) ({} requeued, {} resumed \
+                 from checkpoints, {} restored, {} failed)",
+                r.total(),
+                r.requeued,
+                r.resumed,
+                r.restored,
+                r.failed
+            );
+            c
+        }
+        None => Coordinator::with_config(engine, cfg),
+    };
+    install_stop_handler();
     let addr = args.get("addr").unwrap_or("127.0.0.1:7461");
-    let server = Server::start(coord, addr)?;
+    let server = Server::start(coord.clone(), addr)?;
     println!(
         "els coordinator listening on {} (d={}, {} q-primes, {lanes} lanes)",
         server.addr,
         ctx.d(),
         ctx.params.q_count
     );
-    println!("press Ctrl-C to stop");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    println!("SIGTERM or Ctrl-C drains and stops");
+    while !STOP_REQUESTED.load(std::sync::atomic::Ordering::Relaxed) {
+        if !coord.is_accepting() && coord.queue_depth() == 0 && coord.running_jobs() == 0 {
+            // A wire `shutdown` already drained the coordinator — no
+            // point spinning on a dead service.
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
+    // Graceful termination: stop admission, bounce queued jobs with
+    // `shutting_down` (retryable against a replacement server), let
+    // in-flight fits finish within the drain budget, then sync the
+    // journal so a restart sees every lifecycle record.
+    let drain = std::time::Duration::from_millis(args.get_u64("drain-ms", 10_000)?);
+    let report = coord.shutdown(drain);
+    println!(
+        "drain: bounced {} queued job(s), in-flight drained = {}",
+        report.bounced, report.drained
+    );
+    Ok(())
 }
 
 fn cmd_client(args: &Args) -> Result<()> {

@@ -84,6 +84,18 @@ impl Executor {
         self.shared.cv.notify_all();
     }
 
+    /// Crash-simulation shutdown: reject new spawns AND drop every
+    /// queued task *without running it* — the executor analogue of the
+    /// process dying with work on the ready queue. Tasks already
+    /// executing on lanes run to completion (threads cannot be
+    /// preempted); `Drop` still joins. The graceful path is
+    /// [`shutdown`](Self::shutdown), which drains instead of dropping.
+    pub fn abort(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.queue.lock().unwrap().clear();
+        self.shared.cv.notify_all();
+    }
+
     /// Tasks whose closure panicked (caught; the lane survives).
     pub fn task_panics(&self) -> u64 {
         self.shared.task_panics.load(Ordering::Relaxed)
@@ -439,6 +451,34 @@ mod tests {
         );
         drop(exec);
         assert_eq!(counter.load(Ordering::SeqCst), 8, "queued tasks ran, rejected task did not");
+    }
+
+    #[test]
+    fn executor_abort_drops_queued_tasks_without_running() {
+        // The crash contract is the inverse of the drain contract:
+        // nothing on the ready queue runs after an abort.
+        let counter = Arc::new(AtomicUsize::new(0));
+        let exec = Executor::new("abort", 1);
+        let gate = Arc::new(Event::new());
+        // Park the single lane on a gated task, queue work behind it.
+        let g = Arc::clone(&gate);
+        assert!(exec.spawn(move || {
+            g.wait_timeout(Duration::from_secs(30));
+        }));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            assert!(exec.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        exec.abort();
+        let c = Arc::clone(&counter);
+        assert!(!exec.spawn(move || {
+            c.fetch_add(100, Ordering::SeqCst);
+        }));
+        gate.notify();
+        drop(exec); // joins the lane
+        assert_eq!(counter.load(Ordering::SeqCst), 0, "aborted queue must not run");
     }
 
     #[test]

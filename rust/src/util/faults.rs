@@ -18,7 +18,7 @@
 //! ```
 //!
 //! where `site` is one of `wire_read`, `wire_write`, `lane`, `timer`,
-//! `cache`, `batcher`; `kind` is a site-appropriate fault kind (see
+//! `cache`, `batcher`, `journal`; `kind` is a site-appropriate fault kind (see
 //! [`FaultKind`]); `rate` is a probability in `[0,1]`; and `seed` is a
 //! u64. Each armed spec keeps its own draw counter, so two sites with
 //! the same seed still see independent decision streams.
@@ -42,16 +42,19 @@ pub enum FaultSite {
     Cache,
     /// Batcher dispatch of a coalesced group (backend failure).
     Batcher,
+    /// Write-ahead journal append (io error, torn partial write).
+    Journal,
 }
 
 /// All sites, in [`FaultSite::index`] order.
-pub const ALL_SITES: [FaultSite; 6] = [
+pub const ALL_SITES: [FaultSite; 7] = [
     FaultSite::WireRead,
     FaultSite::WireWrite,
     FaultSite::Lane,
     FaultSite::Timer,
     FaultSite::Cache,
     FaultSite::Batcher,
+    FaultSite::Journal,
 ];
 
 impl FaultSite {
@@ -64,6 +67,7 @@ impl FaultSite {
             FaultSite::Timer => 3,
             FaultSite::Cache => 4,
             FaultSite::Batcher => 5,
+            FaultSite::Journal => 6,
         }
     }
 
@@ -76,6 +80,7 @@ impl FaultSite {
             FaultSite::Timer => "timer",
             FaultSite::Cache => "cache",
             FaultSite::Batcher => "batcher",
+            FaultSite::Journal => "journal",
         }
     }
 
@@ -93,6 +98,7 @@ impl FaultSite {
             FaultSite::Timer => matches!(kind, Late | Spurious),
             FaultSite::Cache => matches!(kind, Evict),
             FaultSite::Batcher => matches!(kind, Fail),
+            FaultSite::Journal => matches!(kind, IoError | TornWrite),
         }
     }
 }
@@ -116,6 +122,8 @@ pub enum FaultKind {
     Evict,
     /// Fail the batched dispatch as if the backend errored.
     Fail,
+    /// Persist only a prefix of the journal record (torn tail).
+    TornWrite,
 }
 
 impl FaultKind {
@@ -130,12 +138,13 @@ impl FaultKind {
             FaultKind::Spurious => "spurious",
             FaultKind::Evict => "evict",
             FaultKind::Fail => "fail",
+            FaultKind::TornWrite => "torn_write",
         }
     }
 
     fn from_str(s: &str) -> Option<FaultKind> {
         use FaultKind::*;
-        [IoError, PartialWrite, Disconnect, Panic, Late, Spurious, Evict, Fail]
+        [IoError, PartialWrite, Disconnect, Panic, Late, Spurious, Evict, Fail, TornWrite]
             .into_iter()
             .find(|k| k.as_str() == s)
     }
@@ -221,8 +230,8 @@ static SESSION: Mutex<()> = Mutex::new(());
 // below (the sanctioned pre-inline-const idiom), never borrowed itself.
 #[allow(clippy::declare_interior_mutable_const)]
 const ZERO: AtomicU64 = AtomicU64::new(0);
-static CHECKED: [AtomicU64; 6] = [ZERO; 6];
-static INJECTED: [AtomicU64; 6] = [ZERO; 6];
+static CHECKED: [AtomicU64; 7] = [ZERO; 7];
+static INJECTED: [AtomicU64; 7] = [ZERO; 7];
 
 /// Probe a site. `None` on the (overwhelmingly common) no-fault path;
 /// `Some(kind)` tells the caller which failure to act out. When the
@@ -351,6 +360,9 @@ mod tests {
         assert!(parse_spec("wire_read:io_error:0.25").is_err());
         assert!(parse_spec("bogus:io_error:0.25:7").is_err());
         assert!(parse_spec("wire_read:bogus:0.25:7").is_err());
+        assert!(parse_spec("journal:torn_write:0.2:7").is_ok());
+        assert!(parse_spec("journal:io_error:0.2:7").is_ok());
+        assert!(parse_spec("journal:panic:0.2:7").is_err());
         assert!(parse_spec("lane:io_error:0.25:7").is_err());
         assert!(parse_spec("lane:panic:1.5:7").is_err());
         assert!(parse_spec("lane:panic:x:7").is_err());

@@ -424,6 +424,19 @@ pub struct FaultCounters {
     pub injected: u64,
 }
 
+/// Write-ahead journal counters (`coordinator::journal`). Process-wide
+/// like the pool/trace sections; all zero when no journal-backed
+/// coordinator has run — the durability tier's no-op contract.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct JournalCounters {
+    pub records_written: u64,
+    pub records_replayed: u64,
+    pub records_truncated: u64,
+    pub checkpoints_taken: u64,
+    pub checkpoints_resumed: u64,
+    pub append_errors: u64,
+}
+
 /// Serving-tier counters (present when snapshotting a coordinator).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CoordinatorCounters {
@@ -458,6 +471,7 @@ pub struct MetricsSnapshot {
     pub pool: PoolCounters,
     pub trace: TraceCounters,
     pub faults: FaultCounters,
+    pub journal: JournalCounters,
     pub coordinator: Option<CoordinatorCounters>,
 }
 
@@ -495,6 +509,14 @@ impl MetricsSnapshot {
                 enabled: crate::util::faults::enabled(),
                 checked: crate::util::faults::checked_total(),
                 injected: crate::util::faults::injected_total(),
+            },
+            journal: JournalCounters {
+                records_written: crate::coordinator::journal::records_written(),
+                records_replayed: crate::coordinator::journal::records_replayed(),
+                records_truncated: crate::coordinator::journal::records_truncated(),
+                checkpoints_taken: crate::coordinator::journal::checkpoints_taken(),
+                checkpoints_resumed: crate::coordinator::journal::checkpoints_resumed(),
+                append_errors: crate::coordinator::journal::append_errors(),
             },
             coordinator: None,
         }
@@ -576,6 +598,32 @@ impl MetricsSnapshot {
                 checked: self.faults.checked.saturating_sub(earlier.faults.checked),
                 injected: self.faults.injected.saturating_sub(earlier.faults.injected),
             },
+            journal: JournalCounters {
+                records_written: self
+                    .journal
+                    .records_written
+                    .saturating_sub(earlier.journal.records_written),
+                records_replayed: self
+                    .journal
+                    .records_replayed
+                    .saturating_sub(earlier.journal.records_replayed),
+                records_truncated: self
+                    .journal
+                    .records_truncated
+                    .saturating_sub(earlier.journal.records_truncated),
+                checkpoints_taken: self
+                    .journal
+                    .checkpoints_taken
+                    .saturating_sub(earlier.journal.checkpoints_taken),
+                checkpoints_resumed: self
+                    .journal
+                    .checkpoints_resumed
+                    .saturating_sub(earlier.journal.checkpoints_resumed),
+                append_errors: self
+                    .journal
+                    .append_errors
+                    .saturating_sub(earlier.journal.append_errors),
+            },
             coordinator,
         }
     }
@@ -607,6 +655,20 @@ impl MetricsSnapshot {
                     ("enabled", Json::Bool(self.faults.enabled)),
                     ("checked", Json::Num(self.faults.checked as f64)),
                     ("injected", Json::Num(self.faults.injected as f64)),
+                ]),
+            ),
+            (
+                "journal",
+                Json::obj(vec![
+                    ("records_written", Json::Num(self.journal.records_written as f64)),
+                    ("records_replayed", Json::Num(self.journal.records_replayed as f64)),
+                    ("records_truncated", Json::Num(self.journal.records_truncated as f64)),
+                    ("checkpoints_taken", Json::Num(self.journal.checkpoints_taken as f64)),
+                    (
+                        "checkpoints_resumed",
+                        Json::Num(self.journal.checkpoints_resumed as f64),
+                    ),
+                    ("append_errors", Json::Num(self.journal.append_errors as f64)),
                 ]),
             ),
         ];
@@ -773,6 +835,9 @@ mod tests {
         let parsed = Json::parse(&diff.to_json().to_string_json()).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_str(), Some("els-metrics-v1"));
         assert!(parsed.get("rings").unwrap().get("q").is_some());
+        let journal = parsed.get("journal").unwrap();
+        assert!(journal.get("records_written").unwrap().as_u64().is_some());
+        assert!(journal.get("checkpoints_resumed").unwrap().as_u64().is_some());
     }
 
     #[test]

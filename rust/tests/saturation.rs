@@ -75,6 +75,7 @@ fn saturation_every_job_completes_or_rejects_structurally() {
             queue_capacity: 8,
             cache_budget_bytes: 4 << 20,
             cache_shards: 2,
+            checkpoint_every: 1,
         },
     );
     let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
